@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts, decode one prompt with SpecBranch on
+//! the real tiny model pair, and compare against autoregressive decoding.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use specbranch::backend::pjrt::PjrtBackend;
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, Manifest};
+use specbranch::engines;
+use specbranch::token::Tokenizer;
+use specbranch::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    let backend = PjrtBackend::start(&dir)?;
+    println!(
+        "loaded artifacts from {} (vocab={}, block={})",
+        dir.display(),
+        backend.manifest().vocab,
+        backend.manifest().block
+    );
+
+    let tok = Tokenizer::new();
+    let prompt = "the only way to do great work is to";
+    let cfg = EngineConfig {
+        max_new_tokens: 48,
+        gamma: 4,
+        // Greedy draft sampling maximises acceptance on the tiny real pair
+        // (the paper's baselines also run draft temperature 0, App. E.3).
+        draft_temperature: 0.0,
+        ..Default::default()
+    };
+
+    for engine_id in [EngineId::Autoregressive, EngineId::SpecBranch] {
+        let engine = engines::build(engine_id, cfg.clone());
+        let mut session = backend.new_session(7);
+        let t0 = std::time::Instant::now();
+        let out = engine.generate(session.as_mut(), &tok.encode(prompt), &mut Pcg32::new(7));
+        let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        println!("\n[{}]", engine_id.name());
+        println!("  completion : {}", tok.decode(&out.tokens));
+        println!(
+            "  {} tokens in {:.0} ms ({:.1} tok/s), M={:.2}, RB={:.0}%",
+            out.tokens.len(),
+            wall_ms,
+            out.tokens.len() as f64 * 1000.0 / wall_ms,
+            out.stats.mean_accepted(),
+            100.0 * out.stats.rollback_rate()
+        );
+    }
+    Ok(())
+}

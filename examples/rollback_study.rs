@@ -1,0 +1,57 @@
+//! Domain study: how rollback destroys parallel SD on poorly aligned pairs
+//! and how SpecBranch recovers it (the paper's Fig. 1c + Fig. 5 story),
+//! runnable entirely on the calibrated simulator.
+//!
+//!     cargo run --release --example rollback_study
+
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use specbranch::engines;
+use specbranch::metrics::energy_kj;
+use specbranch::util::prng::Pcg32;
+
+fn main() {
+    println!("rollback study: Vicuna 68M&13B (poorly aligned) vs Deepseek (well aligned)\n");
+    for pair in [PairId::Vicuna68m13b, PairId::Deepseek13b33b] {
+        let p = ModelPair::get(pair);
+        println!("== {} (alpha={}, c={}) ==", p.name, p.alpha, p.c);
+        println!(
+            "{:<14} {:>8} {:>8} {:>8} {:>10} {:>10}",
+            "engine", "speedup", "M", "RB", "branchWst", "energy kJ"
+        );
+        let cfg = SimConfig::new(p.clone(), Task::get(TaskId::MtBench));
+        let backend = SimBackend::new(cfg);
+        let e_cfg = EngineConfig {
+            gamma: (p.c as usize).min(8),
+            max_new_tokens: 400,
+            ..Default::default()
+        };
+        let ar = {
+            let e = engines::build(EngineId::Autoregressive, e_cfg.clone());
+            let mut s = backend.new_session(1);
+            e.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(1)).stats
+        };
+        for id in [
+            EngineId::Sps,
+            EngineId::AdaEdl,
+            EngineId::Lookahead,
+            EngineId::Pearl,
+            EngineId::SpecBranch,
+        ] {
+            let e = engines::build(id, e_cfg.clone());
+            let mut s = backend.new_session(1);
+            let out = e.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(1));
+            println!(
+                "{:<14} {:>7.2}x {:>8.2} {:>7.0}% {:>10} {:>10.2}",
+                id.name(),
+                out.stats.speedup_vs(&ar),
+                out.stats.mean_accepted(),
+                100.0 * out.stats.rollback_rate(),
+                out.stats.branch_wasted_tokens,
+                energy_kj(&out.stats, &p),
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,96 @@
+//! End-to-end serving driver (DESIGN.md §6): start the coordinator + TCP
+//! server over the REAL model pair (PJRT artifacts), submit a batch of
+//! prompts through the network client, and report per-request latency,
+//! throughput and the SD quality metrics — proving all layers compose:
+//! Pallas kernel → JAX model → HLO artifact → PJRT runtime → engine →
+//! coordinator → server → client.
+//!
+//!     make artifacts && cargo run --release --example serve_demo
+
+use specbranch::backend::pjrt::PjrtBackend;
+use specbranch::config::{EngineConfig, EngineId, Manifest};
+use specbranch::coordinator::Coordinator;
+use specbranch::server::{Client, Server};
+use specbranch::util::stats::{percentile, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+
+    // Two decode workers, each with its own handle to the shared
+    // draft/target worker threads.
+    let backend = PjrtBackend::start(&dir)?;
+    let backends: Vec<Box<dyn specbranch::backend::Backend + Send>> = vec![
+        Box::new(backend.clone()),
+        Box::new(backend.clone()),
+    ];
+    let coord = Coordinator::start(
+        backends,
+        EngineId::SpecBranch,
+        EngineConfig {
+            max_new_tokens: 40,
+            gamma: 4,
+            draft_temperature: 0.0,
+            ..Default::default()
+        },
+    );
+    let server = Server::bind("127.0.0.1:0", coord)?;
+    let addr = server.local_addr();
+    std::thread::spawn(move || server.serve(None));
+
+    let prompts = [
+        "the quick brown fox jumps over",
+        "to be or not to be, that is",
+        "all happy families are alike; every",
+        "in the beginning there was a",
+        "it was the best of times, it",
+        "a journey of a thousand miles",
+        "ask not what your country can",
+        "the only way to do great work",
+    ];
+
+    println!("serve_demo: {} requests against {addr}\n", prompts.len());
+    let mut client = Client::connect(&addr.to_string())?;
+    let mut latencies = Vec::new();
+    let mut tokens_total = 0u64;
+    let t0 = std::time::Instant::now();
+    for p in prompts {
+        let t1 = std::time::Instant::now();
+        let reply = client.generate(p, 40)?;
+        let ms = t1.elapsed().as_secs_f64() * 1000.0;
+        latencies.push(ms);
+        let gen = reply
+            .stats
+            .get("generated")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        tokens_total += gen;
+        println!(
+            "  [{:>5.0} ms] {:<36} -> {}…",
+            ms,
+            p,
+            &reply.text.chars().take(32).collect::<String>()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = client.metrics()?;
+    client.quit()?;
+
+    let s: Summary = latencies.iter().copied().collect();
+    println!("\n== serving report ==");
+    println!(
+        "requests: {}   tokens: {}   wall: {:.2}s   throughput: {:.1} tok/s",
+        latencies.len(),
+        tokens_total,
+        wall,
+        tokens_total as f64 / wall
+    );
+    println!(
+        "latency ms: mean {:.0}  p50 {:.0}  p95 {:.0}  max {:.0}",
+        s.mean(),
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 95.0),
+        s.max()
+    );
+    println!("coordinator metrics: {metrics}");
+    Ok(())
+}

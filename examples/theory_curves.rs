@@ -1,0 +1,44 @@
+//! Reproduce the paper's analytical plots (Fig. 2 + §4.1) as text curves:
+//! Theorem-1 latency under rollback across γ and α, the ideal parallel-SD
+//! speedup, and where the engine's pipeline-aware retain cap lands.
+//!
+//!     cargo run --release --example theory_curves
+
+use specbranch::theory;
+
+fn main() {
+    let c = 8.0;
+    let t = 1.0;
+    println!("Theorem 1: per-token latency (t=1, c={c})\n");
+    print!("{:>6}", "gamma");
+    for alpha in [0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        print!("{:>9}", format!("a={alpha}"));
+    }
+    println!();
+    for gamma in 1..=16 {
+        print!("{gamma:>6}");
+        for alpha in [0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            print!("{:>9.2}", theory::t_psd_rollback(alpha, gamma as f64, c, t));
+        }
+        println!();
+    }
+
+    println!("\nArgmin γ* and the engine's pipeline-aware retain cap b*:");
+    println!("{:>6} {:>10} {:>10}", "alpha", "gamma*", "b* (engine)");
+    for alpha in [0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        println!(
+            "{:>6} {:>10} {:>10}",
+            alpha,
+            theory::optimal_gamma(alpha, c, t, 16),
+            theory::optimal_branch_retain(alpha, c, 16)
+        );
+    }
+
+    println!("\nIdeal parallel-SD speedup over vanilla SD (γ sweep at c=8):");
+    for gamma in [2.0, 4.0, 8.0, 12.0, 16.0] {
+        println!(
+            "  gamma={gamma:>4}: {:.2}x",
+            theory::psd_over_sd_speedup(gamma, c)
+        );
+    }
+}

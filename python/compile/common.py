@@ -1,0 +1,102 @@
+"""Shared configuration for the SpecBranch compile path (L1 + L2).
+
+Everything here is build-time only: these configs describe the tiny
+draft/target transformer pair that stands in for the paper's model pairs
+(see DESIGN.md §3), the AOT shape contract consumed by the Rust runtime,
+and deterministic PRNG helpers.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shape contract shared with rust/src/runtime (see artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+
+VOCAB = 64           # symbol alphabet (small enough that the order-2 corpus
+                     # chain is actually learnable from a ~240k-token corpus)
+SEQ_MAX = 160        # static KV-cache length (PJRT requires fixed shapes)
+GAMMA_MAX = 8        # max draft tokens verified in a single target call
+HRAD_K = 4           # number of trailing target layers feeding H-RAD
+HRAD_CLASSES = 3     # {0: all-reject, 1: use-confidence, 2: all-accept}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one decoder-only transformer."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int = VOCAB
+    seq_max: int = SEQ_MAX
+
+    @property
+    def kv_shape(self):
+        """KV cache shape threaded through every decode/verify call."""
+        return (self.n_layers, 2, self.n_heads, self.seq_max, self.d_head)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# The "paper pair": target plays the large model, draft the small one. The
+# draft is deliberately lower-capacity (fewer layers, narrower) so that after
+# training on the same corpus its distribution only partially matches the
+# target's -- that mismatch is exactly what produces realistic acceptance
+# rates for speculative decoding.
+TARGET = ModelConfig(name="target", n_layers=4, d_model=128, n_heads=4,
+                     d_head=32, d_ff=256)
+DRAFT = ModelConfig(name="draft", n_layers=2, d_model=64, n_heads=4,
+                    d_head=16, d_ff=128)
+
+
+@dataclass(frozen=True)
+class HradConfig:
+    """H-RAD 3-class MLP (paper Eq. 4-6, App. E.4)."""
+
+    k_layers: int = HRAD_K          # K hidden states from the target
+    d_model: int = TARGET.d_model
+    d_emb: int = DRAFT.d_model      # new-token embedding comes from the draft
+    hidden1: int = 256
+    hidden2: int = 64
+    classes: int = HRAD_CLASSES
+
+    @property
+    def d_in(self) -> int:
+        return self.k_layers * self.d_model + self.d_emb
+
+    def to_dict(self):
+        d = asdict(self)
+        d["d_in"] = self.d_in
+        return d
+
+
+HRAD = HradConfig()
+
+
+def key(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def split_keys(seed: int, n: int):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params, dtype):
+    return jax.tree_util.tree_map(lambda p: p.astype(dtype), params)
+
+
+def assert_finite(tree, what: str = "tree"):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not bool(jnp.all(jnp.isfinite(leaf))):
+            raise FloatingPointError(f"non-finite values in {what}")

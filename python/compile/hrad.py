@@ -1,0 +1,240 @@
+"""H-RAD: hybrid rollback-aware draft-structure predictor (paper §5.1).
+
+A 3-class MLP over [last-K target hidden states ⊕ next-token draft
+embedding] (Eq. 4-5):
+    s_t = 0  all-reject   (hard signal)
+    s_t = 1  use draft-model confidence (soft signal)
+    s_t = 2  all-accept   (hard signal)
+
+Training (paper App. E.4, adapted): we harvest (z_t, s_t) pairs by running
+actual speculative-decoding rounds with the trained tiny pair, label each
+round by its verification outcome, then train offline with class
+re-weighting + label smoothing (stand-in for the paper's SMOTE -- same
+purpose: the all-accept/all-reject classes dominate the truncated-geometric
+outcome distribution). Converges in well under a minute on CPU.
+
+The trained MLP is AOT-exported (aot.py) and invoked from Rust once per
+draft round -- its cost must stay negligible (paper: 0.38% of step time).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: common.HradConfig, seed: int = 3):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    nrm = lambda k, s, sc: (jax.random.normal(k, s) * sc).astype(jnp.float32)
+    return {
+        "w1": nrm(k1, (cfg.d_in, cfg.hidden1), cfg.d_in ** -0.5),
+        "b1": jnp.zeros((cfg.hidden1,), jnp.float32),
+        "w2": nrm(k2, (cfg.hidden1, cfg.hidden2), cfg.hidden1 ** -0.5),
+        "b2": jnp.zeros((cfg.hidden2,), jnp.float32),
+        "w3": nrm(k3, (cfg.hidden2, cfg.classes), cfg.hidden2 ** -0.5),
+        "b3": jnp.zeros((cfg.classes,), jnp.float32),
+    }
+
+
+def mlp_logits(mlp, z):
+    h = jax.nn.relu(z @ mlp["w1"] + mlp["b1"])
+    h = jax.nn.relu(h @ mlp["w2"] + mlp["b2"])
+    return h @ mlp["w3"] + mlp["b3"]
+
+
+def make_apply_fn(mlp, draft_emb):
+    """Closure for AOT export: (features (K*d,), token i32) -> probs (3,).
+
+    The next-token embedding lookup (paper's e_t) happens inside so the Rust
+    side only ships raw features + the token id.
+    """
+    def fn(features, token):
+        e = draft_emb[token]
+        z = jnp.concatenate([features, e])
+        return jax.nn.softmax(mlp_logits(mlp, z[None, :])[0])
+
+    d_feat = draft_emb.shape[1]
+    k_d = None  # for doc only
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Trace harvesting: run real SD rounds with the tiny pair
+# ---------------------------------------------------------------------------
+
+def harvest_traces(draft_params, target_params, prompts, *, gamma: int = 6,
+                   max_new: int = 64, seed: int = 11, temperature: float = 1.0,
+                   log=print):
+    """Run chain speculative decoding and label every round.
+
+    Returns (features (N, K*d_target), token_ids (N,), labels (N,)) where the
+    features are the target's last-K hidden states at the last verified
+    position *before* the round (exactly what Rust will feed at runtime).
+    """
+    d_cfg, t_cfg = common.DRAFT, common.TARGET
+    g = gamma
+    draft_step = jax.jit(functools.partial(
+        model.step, draft_params, d_cfg, use_pallas=False))
+    target_step = jax.jit(functools.partial(
+        model.step, target_params, t_cfg, use_pallas=False))
+
+    rng = np.random.default_rng(seed)
+    feats, toks, labels = [], [], []
+
+    for pi, prompt in enumerate(prompts):
+        prompt = list(map(int, prompt))
+        d_kv, t_kv = model.empty_kv(d_cfg), model.empty_kv(t_cfg)
+        # Prefill both models on the prompt (single block each; prompts are
+        # short enough to fit one call when padded to len(prompt)).
+        p = jnp.asarray(prompt, jnp.int32)
+        _, _, d_kv = draft_step(p, d_kv, jnp.int32(0))
+        t_logits, t_hid, t_kv = target_step(p, t_kv, jnp.int32(0))
+        cur = len(prompt)
+        ctx = list(prompt)
+        last_feat = np.asarray(t_hid[-1])          # features at last position
+        produced = 0
+        while produced < max_new and cur + g + 1 < t_cfg.seq_max:
+            # --- draft proposes g tokens ---
+            qs, proposal = [], []
+            dcur = cur
+            for i in range(g):
+                tok = jnp.asarray([ctx[-1] if i == 0 else proposal[-1]], jnp.int32)
+                lg, _, d_kv = draft_step(tok, d_kv, jnp.int32(dcur))
+                if temperature <= 0.0:
+                    # Greedy drafting (the serving default on the tiny pair).
+                    q = np.zeros(lg.shape[-1]); q[int(jnp.argmax(lg[0]))] = 1.0
+                    nxt = int(jnp.argmax(lg[0]))
+                else:
+                    q = np.asarray(jax.nn.softmax(lg[0] / temperature))
+                    nxt = int(rng.choice(len(q), p=q / q.sum()))
+                qs.append(q)
+                proposal.append(nxt)
+                dcur += 1
+            # --- target verifies the block [last_ctx_token + proposal[:-1]]
+            block = jnp.asarray([ctx[-1]] + proposal[:-1], jnp.int32)
+            t_logits, t_hid, t_kv = target_step(block, t_kv, jnp.int32(cur - 1))
+            ps = np.asarray(jax.nn.softmax(t_logits, axis=-1))  # (g, V)
+            # --- Match (greedy target would always accept argmax; use the
+            # stochastic rule to get realistic accept/reject statistics) ---
+            n_acc = 0
+            for i in range(g):
+                if temperature <= 0.0:
+                    ok = proposal[i] == int(np.argmax(ps[i]))
+                else:
+                    pi_, qi_ = ps[i, proposal[i]], qs[i][proposal[i]]
+                    ok = rng.random() < min(1.0, pi_ / max(qi_, 1e-9))
+                if ok:
+                    n_acc += 1
+                else:
+                    break
+            label = 2 if n_acc == g else (0 if n_acc == 0 else 1)
+            feats.append(last_feat.copy())
+            toks.append(proposal[0])
+            labels.append(label)
+            # --- advance context by accepted tokens + one corrected token ---
+            if n_acc == g:
+                accepted = proposal
+            else:
+                resid = np.maximum(ps[n_acc] - qs[n_acc], 0.0)
+                if resid.sum() <= 0:
+                    resid = ps[n_acc]
+                corrected = int(rng.choice(len(resid), p=resid / resid.sum()))
+                accepted = proposal[:n_acc] + [corrected]
+            ctx.extend(accepted)
+            produced += len(accepted)
+            cur += len(accepted)
+            # Refresh features at the new last verified position: the verify
+            # call covered block positions cur-1..cur+g-2 (before advance);
+            # the row for the last *accepted* token is n_acc (0-indexed into
+            # the block, clipped).
+            row = min(len(accepted) - 1, g - 1)
+            last_feat = np.asarray(t_hid[row])
+            # Draft cache may now contain garbage past cur; that is fine by
+            # the masking contract, but its logical length must be rewound.
+            # (The jnp cache itself is static storage; only `dcur` mattered.)
+        if log and pi % 8 == 0:
+            log(f"[hrad-harvest] prompt {pi}/{len(prompts)} samples={len(labels)}")
+
+    return (np.stack(feats).astype(np.float32), np.asarray(toks, np.int32),
+            np.asarray(labels, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Offline training
+# ---------------------------------------------------------------------------
+
+def train_mlp(cfg: common.HradConfig, draft_emb, feats, toks, labels, *,
+              epochs: int = 20, batch: int = 32, lr: float = 1e-3,
+              smoothing: float = 0.1, seed: int = 5, log=print):
+    """Train the 3-class MLP; returns (mlp_params, final_accuracy)."""
+    mlp = init_mlp(cfg, seed)
+    emb = np.asarray(draft_emb)
+    z = np.concatenate([feats, emb[toks]], axis=1).astype(np.float32)
+    y = labels
+
+    # Class re-weighting (SMOTE stand-in): inverse-frequency weights.
+    counts = np.bincount(y, minlength=cfg.classes).astype(np.float64)
+    weights = (counts.sum() / np.maximum(counts, 1.0))
+    weights = weights / weights.mean()
+    w = jnp.asarray(weights, jnp.float32)
+
+    opt_m = jax.tree_util.tree_map(jnp.zeros_like, mlp)
+    opt_v = jax.tree_util.tree_map(jnp.zeros_like, mlp)
+
+    @jax.jit
+    def step_fn(mlp, opt_m, opt_v, t, zb, yb):
+        def loss_fn(mlp):
+            logits = mlp_logits(mlp, zb)
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(yb, cfg.classes)
+            soft = onehot * (1 - smoothing) + smoothing / cfg.classes
+            per = -jnp.sum(soft * logp, axis=-1) * w[yb]
+            return jnp.mean(per)
+
+        loss, grads = jax.value_and_grad(loss_fn)(mlp)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        opt_m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt_m, grads)
+        opt_v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_v, grads)
+        ms = 1.0 / (1 - b1 ** t)
+        vs = 1.0 / (1 - b2 ** t)
+        mlp = jax.tree_util.tree_map(
+            lambda p, m, v: p - lr * (m * ms) / (jnp.sqrt(v * vs) + eps),
+            mlp, opt_m, opt_v)
+        return mlp, opt_m, opt_v, loss
+
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    t = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            t += 1
+            mlp, opt_m, opt_v, loss = step_fn(
+                mlp, opt_m, opt_v, jnp.float32(t),
+                jnp.asarray(z[idx]), jnp.asarray(y[idx]))
+        if log and (ep % 5 == 0 or ep == epochs - 1):
+            acc = evaluate(mlp, z, y)
+            log(f"[hrad-train] epoch {ep:2d} loss {float(loss):.4f} acc {acc:.3f}")
+    return mlp, evaluate(mlp, z, y)
+
+
+def evaluate(mlp, z, y):
+    pred = np.asarray(jnp.argmax(mlp_logits(mlp, jnp.asarray(z)), axis=-1))
+    return float((pred == y).mean())
+
+
+def confusion(mlp, z, y, classes: int = 3):
+    pred = np.asarray(jnp.argmax(mlp_logits(mlp, jnp.asarray(z)), axis=-1))
+    cm = np.zeros((classes, classes), dtype=np.int64)
+    for t, p in zip(y, pred):
+        cm[t, p] += 1
+    return cm

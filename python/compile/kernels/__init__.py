@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles."""
+from . import attention, ffn, ref  # noqa: F401

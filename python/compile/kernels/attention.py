@@ -1,0 +1,147 @@
+"""L1: fused decode/verify attention as a Pallas kernel (flash-style).
+
+This is the paper's compute hot-spot: every SpecBranch step is either a
+draft decode (Tq = 1 against the draft KV cache) or a target verify
+(Tq = GAMMA_MAX + 1 draft tokens against the target KV cache). Both are the
+same computation -- masked attention of a short query block against a long
+static KV cache -- so one kernel serves both models.
+
+Hardware adaptation (DESIGN.md §2): the paper runs on A100s where this would
+be a CUDA flash-attention with threadblock tiling over KV. On TPU the same
+insight maps to:
+  * grid = (heads, kv_blocks); each step streams one (BLOCK_K, D) KV tile
+    HBM -> VMEM via BlockSpec (the role shared memory plays on GPU),
+  * online-softmax running max/denominator kept in VMEM across the kv_block
+    grid dimension (output revisiting), so the full (Tq, S) score matrix is
+    never materialised,
+  * tiles padded to MXU-friendly multiples (BLOCK_K a multiple of 128 lanes
+    when S allows; D is the head dim and rides the sublane axis).
+
+Must be lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md). Numerics are pinned to
+ref.attention_ref by python/tests/test_attention_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, n_kv_blocks: int):
+    """One (head, kv_block) grid step of online-softmax attention.
+
+    Block shapes:
+      q_ref:    (Tq, D)        -- whole query block for this head
+      k_ref:    (BLOCK_K, D)   -- one KV tile
+      v_ref:    (BLOCK_K, D)
+      bias_ref: (Tq, BLOCK_K)  -- additive mask tile (causal + cache length)
+      o_ref:    (Tq, D)        -- final output (written on the last kv step)
+      m_ref:    (Tq, 1)        -- running max      (revisited across kv steps)
+      l_ref:    (Tq, 1)        -- running sum      (revisited)
+      acc_ref:  (Tq, D)        -- running numerator (revisited)
+    """
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+
+    # (Tq, BLOCK_K) scores for this tile.
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + bias_ref[...].astype(jnp.float32)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new)                        # (Tq, BLOCK_K)
+    correction = jnp.exp(m_prev - m_new)          # (Tq, 1)
+    l_new = l_prev * correction + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc = acc_ref[...] * correction + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finalize():
+        # Fully-masked rows (l == 0) can only happen for padded queries; emit
+        # zeros there rather than NaN so downstream slicing stays clean.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def attention(q, k, v, bias, *, block_k: int = DEFAULT_BLOCK_K):
+    """Fused masked attention: softmax(q·kᵀ/√D + bias)·v, one batch element.
+
+    Args / returns exactly match ref.attention_ref: q (H, Tq, D),
+    k/v (H, S, D), bias (Tq, S) additive; returns (H, Tq, D) f32.
+    """
+    h, tq, d = q.shape
+    _, s, _ = k.shape
+    if s % block_k != 0:
+        # Static shapes only: pad KV + bias up to a whole number of tiles.
+        pad = block_k - s % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        s += pad
+    n_kv_blocks = s // block_k
+
+    grid = (h, n_kv_blocks)
+    out_shapes = [
+        jax.ShapeDtypeStruct((h, tq, d), jnp.float32),  # o
+        jax.ShapeDtypeStruct((h, tq, 1), jnp.float32),  # m (scratch-as-output)
+        jax.ShapeDtypeStruct((h, tq, 1), jnp.float32),  # l
+        jax.ShapeDtypeStruct((h, tq, d), jnp.float32),  # acc
+    ]
+    o, _, _, _ = pl.pallas_call(
+        functools.partial(_attn_kernel, n_kv_blocks=n_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, tq, d), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda hh, kb: (hh, kb, 0)),
+            pl.BlockSpec((None, block_k, d), lambda hh, kb: (hh, kb, 0)),
+            pl.BlockSpec((tq, block_k), lambda hh, kb: (0, kb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, tq, d), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((None, tq, 1), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((None, tq, 1), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((None, tq, d), lambda hh, kb: (hh, 0, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v, bias)
+    return o
+
+
+def decode_bias(tq: int, s: int, cur_len, dtype=jnp.float32):
+    """Additive mask for a Tq-token query block appended at position cur_len.
+
+    Query row i sits at absolute position cur_len + i and may attend to all
+    cache slots <= that position. Slots >= cur_len + tq are always padding.
+    """
+    rows = jnp.arange(tq)[:, None]
+    cols = jnp.arange(s)[None, :]
+    visible = cols <= (cur_len + rows)
+    return jnp.where(visible, 0.0, NEG_INF).astype(dtype)

@@ -1,0 +1,60 @@
+"""L1: fused transformer FFN (x·W1 + b1 → GELU → ·W2 + b2) as a Pallas kernel.
+
+The second hot matmul of every decode/verify step. On GPU this is two GEMMs
+with an elementwise epilogue fused by cuBLASLt; on TPU we express it as a
+single Pallas kernel so the (row-tile, d_ff) intermediate lives entirely in
+VMEM and never round-trips to HBM. Grid is over row tiles of the token
+block; weights are small enough (d_model·d_ff ≤ 128·256 f32 = 128 KiB) to
+sit in VMEM for every grid step, which is the TPU analogue of keeping them
+resident in L2 on the GPU.
+
+interpret=True (CPU PJRT); numerics pinned to ref.ffn_ref by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_T = 8
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = jax.lax.dot_general(x, w1_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = h + b1_ref[...][None, :]
+    h = ref.gelu_ref(h)
+    o = jax.lax.dot_general(h, w2_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = (o + b2_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def ffn(x, w1, b1, w2, b2, *, block_t: int = DEFAULT_BLOCK_T):
+    """Fused FFN over a (T, d_model) token block; returns (T, d_model) f32."""
+    t, d_model = x.shape
+    d_ff = w1.shape[1]
+    if t % block_t != 0:
+        pad = block_t - t % block_t
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    tp = x.shape[0]
+    grid = (tp // block_t,)
+    o = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_model), lambda i: (i, 0)),
+            pl.BlockSpec((d_model, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff,), lambda i: (0,)),
+            pl.BlockSpec((d_ff, d_model), lambda i: (0, 0)),
+            pl.BlockSpec((d_model,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d_model), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d_model), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w1, b1, w2, b2)
+    return o[:t]

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+asserts allclose between the two across shape/dtype sweeps (hypothesis).
+These references are also what the L2 training loop uses (interpret-mode
+Pallas is too slow to train with), so kernel == ref is what guarantees the
+AOT-exported graph computes the same function the models were trained as.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, bias):
+    """Masked multi-head attention, one batch element.
+
+    Args:
+      q:    (H, Tq, D) queries.
+      k:    (H, S, D) keys (full static cache; padding masked via ``bias``).
+      v:    (H, S, D) values.
+      bias: (Tq, S) additive mask, 0 for visible and a large negative value
+            for masked positions. Encodes both causality and cache length.
+
+    Returns:
+      (H, Tq, D) attention output in f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("htd,hsd->hts", q, k) * scale + bias[None, :, :]
+    weights = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", weights, v)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-6):
+    """RMSNorm over the last axis: x * gamma / rms(x)."""
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma
+
+
+def gelu_ref(h):
+    """tanh-approximated GELU (matches the fused FFN kernel)."""
+    return 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h ** 3)))
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """2-layer MLP with tanh-GELU, matching kernels/ffn.py."""
+    x = x.astype(jnp.float32)
+    return gelu_ref(x @ w1 + b1) @ w2 + b2
+
+
+def softmax_ref(logits, axis=-1):
+    m = jnp.max(logits, axis=axis, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)

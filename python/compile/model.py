@@ -1,0 +1,195 @@
+"""L2: decoder-only transformer (draft + target) in JAX.
+
+Two code paths over the same parameters:
+  * ``use_pallas=True``  -- attention/FFN via the L1 Pallas kernels; this is
+    what aot.py lowers to HLO for the Rust runtime (request path).
+  * ``use_pallas=False`` -- pure-jnp reference ops (kernels/ref.py); used for
+    training (interpret-mode Pallas is too slow to train through) and as the
+    oracle in pytest. Kernel == ref equality is asserted by python/tests.
+
+Shape contract with rust/src/runtime (artifacts/manifest.json):
+  decode/verify step(tokens (G,) i32, kv (L,2,H,S,D) f32, cur_len i32[1])
+    -> logits (G, V) f32, hiddens (G, K*d_model) f32, new_kv
+All shapes static; ``cur_len`` masks the live prefix of the KV cache, and
+cache slots >= cur_len are garbage by contract (masked by the bias, then
+overwritten by later writes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import attention as attn_k
+from .kernels import ffn as ffn_k
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: common.ModelConfig, seed: int):
+    """Init a parameter pytree (dict) with scaled-normal weights."""
+    keys = iter(jax.random.split(jax.random.PRNGKey(seed), 4 + 8 * cfg.n_layers))
+    d, dh, h, dff, v = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.d_ff, cfg.vocab
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+    params = {
+        "emb": nrm(next(keys), (v, d), 0.02),
+        "pos": nrm(next(keys), (cfg.seq_max, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "unemb": nrm(next(keys), (d, v), 0.02),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": nrm(next(keys), (d, h * dh), d ** -0.5),
+            "wk": nrm(next(keys), (d, h * dh), d ** -0.5),
+            "wv": nrm(next(keys), (d, h * dh), d ** -0.5),
+            "wo": nrm(next(keys), (h * dh, d), (h * dh) ** -0.5),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w1": nrm(next(keys), (d, dff), d ** -0.5),
+            "b1": jnp.zeros((dff,), jnp.float32),
+            "w2": nrm(next(keys), (dff, d), dff ** -0.5),
+            "b2": jnp.zeros((d,), jnp.float32),
+        })
+    return params
+
+
+def empty_kv(cfg: common.ModelConfig):
+    return jnp.zeros(cfg.kv_shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(layer, x, kv_layer, cur_len, cfg, use_pallas):
+    """Attention over a (T, d) block appended at position cur_len.
+
+    kv_layer: (2, H, S, D) cache for this layer. Returns (out (T, d),
+    new_kv_layer). New K/V rows are written at cur_len..cur_len+T-1.
+    """
+    t = x.shape[0]
+    h, dh, s = cfg.n_heads, cfg.d_head, cfg.seq_max
+    xn = ref.rmsnorm_ref(x, layer["ln1"])
+    q = (xn @ layer["wq"]).reshape(t, h, dh).transpose(1, 0, 2)   # (H,T,D)
+    k_new = (xn @ layer["wk"]).reshape(t, h, dh).transpose(1, 0, 2)
+    v_new = (xn @ layer["wv"]).reshape(t, h, dh).transpose(1, 0, 2)
+
+    # Scatter new K/V into the static cache at cur_len.
+    k_cache = _update_cache(kv_layer[0], k_new, cur_len)
+    v_cache = _update_cache(kv_layer[1], v_new, cur_len)
+
+    bias = attn_k.decode_bias(t, s, cur_len)
+    if use_pallas:
+        o = attn_k.attention(q, k_cache, v_cache, bias)
+    else:
+        o = ref.attention_ref(q, k_cache, v_cache, bias)
+    o = o.transpose(1, 0, 2).reshape(t, h * dh) @ layer["wo"]
+    return x + o, jnp.stack([k_cache, v_cache])
+
+
+def _update_cache(cache, new, cur_len):
+    """cache (H, S, D) <- new (H, T, D) written at [:, cur_len:cur_len+T, :]."""
+    return jax.lax.dynamic_update_slice(cache, new, (0, cur_len, 0))
+
+
+def _ffn_block(layer, x, use_pallas):
+    xn = ref.rmsnorm_ref(x, layer["ln2"])
+    if use_pallas:
+        o = ffn_k.ffn(xn, layer["w1"], layer["b1"], layer["w2"], layer["b2"])
+    else:
+        o = ref.ffn_ref(xn, layer["w1"], layer["b1"], layer["w2"], layer["b2"])
+    return x + o
+
+
+# ---------------------------------------------------------------------------
+# Decode / verify step (the AOT-exported function)
+# ---------------------------------------------------------------------------
+
+def step(params, cfg: common.ModelConfig, tokens, kv, cur_len, *,
+         use_pallas: bool, k_hidden: int = common.HRAD_K):
+    """Process a (G,) token block appended at cur_len against the KV cache.
+
+    Returns:
+      logits:  (G, V) next-token logits for each position.
+      hiddens: (G, K*d) concatenated post-block activations of the last K
+               layers (H-RAD explicit features, paper Eq. 4).
+      new_kv:  updated cache (L, 2, H, S, D).
+    """
+    cur_len = jnp.asarray(cur_len, jnp.int32).reshape(())
+    t = tokens.shape[0]
+    pos = jax.lax.dynamic_slice_in_dim(params["pos"], cur_len, t, axis=0)
+    x = params["emb"][tokens] + pos
+
+    new_kv = []
+    per_layer = []
+    for li, layer in enumerate(params["layers"]):
+        x, kv_l = _attn_block(layer, x, kv[li], cur_len, cfg, use_pallas)
+        x = _ffn_block(layer, x, use_pallas)
+        new_kv.append(kv_l)
+        per_layer.append(x)
+
+    k_hidden = min(k_hidden, cfg.n_layers)
+    hiddens = jnp.concatenate(per_layer[-k_hidden:], axis=-1)  # (G, K*d)
+
+    xf = ref.rmsnorm_ref(x, params["ln_f"])
+    logits = xf @ params["unemb"]
+    return logits, hiddens, jnp.stack(new_kv)
+
+
+def make_step_fn(params, cfg: common.ModelConfig, g: int, *, use_pallas: bool):
+    """Close over params (baked as HLO constants) and fix the block size g."""
+
+    def fn(tokens, kv, cur_len):
+        return step(params, cfg, tokens, kv, cur_len, use_pallas=use_pallas)
+
+    spec_tok = jax.ShapeDtypeStruct((g,), jnp.int32)
+    spec_kv = jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32)
+    spec_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (spec_tok, spec_kv, spec_len)
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (full sequences, no cache)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: common.ModelConfig, tokens):
+    """Causal LM forward over (B, T) token batch -> (B, T, V) logits.
+
+    Pure-jnp path (training never touches Pallas; see module docstring).
+    """
+    b, t = tokens.shape
+    x = params["emb"][tokens] + params["pos"][None, :t, :]
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(t)[None, :]
+    bias = jnp.where(cols <= rows, 0.0, attn_k.NEG_INF).astype(jnp.float32)
+
+    h, dh = cfg.n_heads, cfg.d_head
+    for layer in params["layers"]:
+        xn = ref.rmsnorm_ref(x, layer["ln1"])
+        q = (xn @ layer["wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = (xn @ layer["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = (xn @ layer["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        o = jax.vmap(ref.attention_ref, in_axes=(0, 0, 0, None))(q, k, v, bias)
+        x = x + o.transpose(0, 2, 1, 3).reshape(b, t, h * dh) @ layer["wo"]
+        xn = ref.rmsnorm_ref(x, layer["ln2"])
+        x = x + ref.ffn_ref(xn, layer["w1"], layer["b1"], layer["w2"], layer["b2"])
+
+    xf = ref.rmsnorm_ref(x, params["ln_f"])
+    return xf @ params["unemb"]
+
+
+def xent_loss(params, cfg, batch):
+    """Mean next-token cross-entropy over a (B, T+1) batch."""
+    inputs, labels = batch[:, :-1], batch[:, 1:]
+    logits = forward_train(params, cfg, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,76 @@
+"""Build-time training of the tiny draft/target pair (L2).
+
+The paper uses off-the-shelf LLaMA/Vicuna/Deepseek pairs; offline we train
+two transformers of different capacity on the same synthetic corpus
+(corpus.py) so that the draft only partially matches the target -- the
+capacity gap is what produces realistic speculative-decoding acceptance
+rates. Runs once under ``make artifacts`` (cached in artifacts/).
+
+Plain Adam, jitted pure-jnp forward (kernels/ref.py); a few hundred steps
+per model on CPU.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, corpus, model
+
+
+def adam_init(params):
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_lm(cfg: common.ModelConfig, tokens: np.ndarray, *, steps: int,
+             batch: int = 16, seq: int = 64, seed: int = 0, lr: float = 3e-3,
+             log_every: int = 100, log=print):
+    """Train one LM on the corpus; returns (params, final_loss)."""
+    params = model.init_params(cfg, seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def train_step(params, opt, batch_tokens):
+        loss, grads = jax.value_and_grad(model.xent_loss)(params, cfg, batch_tokens)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    it = corpus.batches(tokens, batch, seq, seed + 100)
+    t0 = time.time()
+    loss = None
+    for i in range(steps):
+        b = jnp.asarray(next(it))
+        params, opt, loss = train_step(params, opt, b)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log(f"[train {cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params, float(loss)
+
+
+def save_params(path: str, params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    np.savez(path, n=len(flat), treedef=str(treedef),
+             **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+
+
+def load_params(path: str, like):
+    """Load params saved by save_params, using ``like``'s treedef."""
+    data = np.load(path)
+    flat = [jnp.asarray(data[f"p{i}"]) for i in range(int(data["n"]))]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, flat)

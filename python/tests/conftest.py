@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.dirname(HERE))

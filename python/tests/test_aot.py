@@ -1,0 +1,59 @@
+"""AOT export self-check: HLO text round-trips and matches the manifest.
+Runs against the cached artifacts when present (fast); otherwise exports a
+minimal function to a temp dir."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, common, model
+
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))), "artifacts")
+
+
+def test_hlo_text_contains_full_constants(tmp_path):
+    cfg = common.ModelConfig(name="m", n_layers=1, d_model=16, n_heads=2,
+                             d_head=8, d_ff=32, vocab=16, seq_max=24)
+    params = model.init_params(cfg, 0)
+    fn, specs = model.make_step_fn(params, cfg, 1, use_pallas=True)
+    path = tmp_path / "m.hlo.txt"
+    aot.lower_and_write(fn, specs, str(path), log=lambda *a: None)
+    text = path.read_text()
+    assert "ENTRY" in text
+    assert "{...}" not in text, "large constants must not be elided"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_configs():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    assert man["vocab"] == common.VOCAB
+    assert man["seq_max"] == common.SEQ_MAX
+    assert man["block"] == common.GAMMA_MAX + 1
+    for ep, spec in man["entry_points"].items():
+        path = os.path.join(ART, spec["file"])
+        assert os.path.exists(path), f"{ep} artifact missing"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "params_target.npz")),
+                    reason="artifacts not built")
+def test_trained_pair_has_capacity_gap():
+    """The draft must be measurably weaker than the target (that is the
+    whole point of the pair), but both must beat the uniform baseline."""
+    from compile import corpus, train
+    t_params = train.load_params(os.path.join(ART, "params_target.npz"),
+                                 model.init_params(common.TARGET, 0))
+    d_params = train.load_params(os.path.join(ART, "params_draft.npz"),
+                                 model.init_params(common.DRAFT, 1))
+    toks = corpus.sample_tokens(0, 4000)
+    batch = jnp.asarray(toks[:33 * 8].reshape(8, 33))
+    t_loss = float(model.xent_loss(t_params, common.TARGET, batch))
+    d_loss = float(model.xent_loss(d_params, common.DRAFT, batch))
+    uniform = np.log(common.VOCAB)
+    assert t_loss < d_loss < uniform, (t_loss, d_loss, uniform)

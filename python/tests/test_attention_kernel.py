@@ -1,0 +1,87 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle,
+including hypothesis sweeps over shapes/dtypes (the CORE L1 signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def run_both(h, tq, s, d, cur_len, block_k=128, dtype=jnp.float32, seed=0):
+    q = rand(seed, (h, tq, d), dtype)
+    k = rand(seed + 1, (h, s, d), dtype)
+    v = rand(seed + 2, (h, s, d), dtype)
+    bias = A.decode_bias(tq, s, cur_len)
+    got = A.attention(q, k, v, bias, block_k=block_k)
+    want = ref.attention_ref(q, k, v, bias)
+    return np.asarray(got), np.asarray(want)
+
+
+def test_decode_shape_matches_ref():
+    got, want = run_both(4, 1, 160, 32, cur_len=37)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_verify_block_matches_ref():
+    got, want = run_both(4, 9, 160, 32, cur_len=80)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_non_multiple_kv_length_pads():
+    got, want = run_both(2, 3, 100, 16, cur_len=50)  # 100 % 128 != 0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_small_block_k_tiling():
+    got, want = run_both(2, 4, 64, 16, cur_len=30, block_k=16)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cur_len_zero_masks_history():
+    # Only the query's own (causal) positions are visible.
+    got, want = run_both(2, 2, 32, 8, cur_len=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_inputs_close_to_f32_ref():
+    q = rand(5, (2, 2, 16), jnp.bfloat16)
+    k = rand(6, (2, 64, 16), jnp.bfloat16)
+    v = rand(7, (2, 64, 16), jnp.bfloat16)
+    bias = A.decode_bias(2, 64, 20)
+    got = np.asarray(A.attention(q, k, v, bias, block_k=32))
+    want = np.asarray(ref.attention_ref(q, k, v, bias))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_decode_bias_semantics():
+    b = np.asarray(A.decode_bias(3, 8, 2))
+    # Row i sits at position 2+i: may see columns <= 2+i.
+    for i in range(3):
+        for j in range(8):
+            visible = j <= 2 + i
+            assert (b[i, j] == 0.0) == visible, (i, j)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    tq=st.integers(1, 9),
+    d=st.sampled_from([8, 16, 32]),
+    s_blocks=st.integers(1, 3),
+    block_k=st.sampled_from([16, 32, 128]),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shapes(h, tq, d, s_blocks, block_k, frac, seed):
+    s = block_k * s_blocks
+    cur_len = min(int(frac * (s - tq)), s - tq)
+    got, want = run_both(h, tq, s, d, cur_len, block_k=block_k, seed=seed)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,44 @@
+"""Corpus generator: determinism and learnability structure."""
+
+import numpy as np
+
+from compile import common, corpus
+
+
+def test_deterministic():
+    a = corpus.sample_tokens(3, 500)
+    b = corpus.sample_tokens(3, 500)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_tokens_in_vocab():
+    t = corpus.sample_tokens(1, 1000)
+    assert t.min() >= 0 and t.max() < common.VOCAB
+
+
+def test_chain_is_predictable():
+    """An order-2 oracle should predict most next tokens (the corpus must
+    be learnable, else the draft/target pair cannot align)."""
+    succ, probs = corpus.build_chain(0)
+    toks = corpus.sample_tokens(0, 3000)
+    hits = 0
+    for i in range(2, len(toks)):
+        a, b = toks[i - 2], toks[i - 1]
+        top = succ[a, b, np.argmax(probs[a, b])]
+        hits += int(top == toks[i])
+    rate = hits / (len(toks) - 2)
+    assert rate > 0.5, f"top-1 predictability {rate}"
+
+
+def test_batches_shapes():
+    toks = corpus.sample_tokens(2, 5000)
+    it = corpus.batches(toks, batch=4, seq=16, seed=0)
+    b = next(it)
+    assert b.shape == (4, 17)
+
+
+def test_prompts_are_windows():
+    toks = corpus.sample_tokens(2, 5000)
+    ps = corpus.prompts(toks, 5, 12, 0)
+    assert len(ps) == 5
+    assert all(len(p) == 12 for p in ps)

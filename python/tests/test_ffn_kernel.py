@@ -1,0 +1,48 @@
+"""L1 correctness: fused FFN Pallas kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ffn as F
+from compile.kernels import ref
+
+
+def make(seed, t, d, dff):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (t, d))
+    w1 = jax.random.normal(ks[1], (d, dff)) * d ** -0.5
+    b1 = jax.random.normal(ks[2], (dff,)) * 0.1
+    w2 = jax.random.normal(ks[3], (dff, d)) * dff ** -0.5
+    b2 = jax.random.normal(ks[4], (d,)) * 0.1
+    return x, w1, b1, w2, b2
+
+
+def test_matches_ref_exact_tile():
+    args = make(0, 8, 64, 128)
+    np.testing.assert_allclose(
+        np.asarray(F.ffn(*args)), np.asarray(ref.ffn_ref(*args)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_matches_ref_ragged_rows():
+    args = make(1, 9, 128, 256)  # 9 % 8 != 0 -> pad path
+    np.testing.assert_allclose(
+        np.asarray(F.ffn(*args)), np.asarray(ref.ffn_ref(*args)),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 24),
+    d=st.sampled_from([16, 64, 128]),
+    dff=st.sampled_from([32, 128, 256]),
+    block_t=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shapes(t, d, dff, block_t, seed):
+    args = make(seed, t, d, dff)
+    got = np.asarray(F.ffn(*args, block_t=block_t))
+    want = np.asarray(ref.ffn_ref(*args))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig10_optimal_gamma` — regenerates the paper's fig10 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig10(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig19_staleness` — regenerates the paper's fig19 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig19(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig1b_token_dist` — regenerates the paper's fig1b experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig1b(Scale::from_env());
+}

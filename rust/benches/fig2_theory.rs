@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig2_theory` — regenerates the paper's fig2 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig2(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig5_rollback` — regenerates the paper's fig5 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig5(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig6_ablation` — regenerates the paper's fig6 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig6(Scale::from_env());
+}

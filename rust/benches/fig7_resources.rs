@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig7_resources` — regenerates the paper's fig7 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::fig7(Scale::from_env());
+}

@@ -1,0 +1,98 @@
+//! Microbenchmarks of the L3 hot path (perf pass, EXPERIMENTS.md §Perf):
+//! per-round engine overhead on the sim backend with zeroed model
+//! latencies — what remains is pure coordinator/engine work, which the
+//! paper requires to be negligible next to the models.
+
+use std::time::Instant;
+
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use specbranch::engines;
+use specbranch::sampling;
+use specbranch::util::prng::Pcg32;
+
+fn bench_engine_overhead(id: EngineId, rounds_tokens: usize) -> (f64, u64) {
+    let mut pair = ModelPair::get(PairId::Vicuna68m13b);
+    // Zero virtual latency: wall time measures engine-side work only.
+    pair.draft_ms = 0.0;
+    let cfg = SimConfig::new(pair, Task::get(TaskId::MtBench));
+    let backend = SimBackend::new(cfg);
+    let engine = engines::build(
+        id,
+        EngineConfig { gamma: 6, max_new_tokens: rounds_tokens, ..Default::default() },
+    );
+    let mut session = backend.new_session(1);
+    let t0 = Instant::now();
+    let out = engine.generate(session.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(1));
+    (t0.elapsed().as_secs_f64() * 1e6, out.stats.rounds)
+}
+
+fn bench_sampling_kernels() {
+    let mut rng = Pcg32::new(3);
+    let dist: Vec<f32> = (0..64).map(|_| rng.next_f32() + 0.01).collect();
+    let sum: f32 = dist.iter().sum();
+    let dist: Vec<f32> = dist.iter().map(|x| x / sum).collect();
+    let n = 200_000;
+
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n {
+        acc += sampling::sample(&dist, &mut rng) as u64;
+    }
+    println!(
+        "sampling::sample             {:>8.1} ns/op (checksum {acc})",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
+
+    let t0 = Instant::now();
+    let mut out = Vec::new();
+    for _ in 0..n {
+        sampling::softmax(&dist, 1.0, &mut out);
+    }
+    println!(
+        "sampling::softmax(64)        {:>8.1} ns/op",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(sampling::top_k_indices(&dist, 4));
+    }
+    println!(
+        "sampling::top_k_indices(4)   {:>8.1} ns/op",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
+
+    let mut res = Vec::new();
+    let q: Vec<f32> = dist.iter().rev().cloned().collect();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        sampling::residual(&dist, &q, &mut res);
+    }
+    println!(
+        "sampling::residual(64)       {:>8.1} ns/op",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks (engine-side work only) ==");
+    bench_sampling_kernels();
+    println!();
+    for id in [
+        EngineId::Autoregressive,
+        EngineId::Sps,
+        EngineId::Pearl,
+        EngineId::SpecBranch,
+    ] {
+        let (us, rounds) = bench_engine_overhead(id, 2000);
+        println!(
+            "{:<24} {:>9.1} us total, {:>7.2} us/round ({} rounds)",
+            format!("{id:?}"),
+            us,
+            us / rounds.max(1) as f64,
+            rounds
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table12_memory_pp` — regenerates the paper's table12 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table12(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table2_main_results` — regenerates the paper's table2 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table2(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table3_specbench` — regenerates the paper's table3 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table3(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table4_threshold` — regenerates the paper's table4 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table4(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table5_layers` — regenerates the paper's table5 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table5(Scale::from_env());
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table6_lossless` — regenerates the paper's table6 experiment.
+//! Scale via SB_BENCH_FAST=1 for smoke runs.
+use specbranch::bench_harness::{experiments, Scale};
+
+fn main() {
+    experiments::table6(Scale::from_env());
+}

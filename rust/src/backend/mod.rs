@@ -1,0 +1,134 @@
+//! Execution backends: the engine-facing model abstraction.
+//!
+//! Every decoding engine (AR, SpS, AdaEDL, Lookahead, PEARL, SpecBranch)
+//! is written once against [`Session`] and runs unchanged on:
+//!
+//! * [`pjrt::PjrtBackend`] — the real tiny transformer pair, compiled from
+//!   `artifacts/*.hlo.txt` and executed via the PJRT CPU client, with the
+//!   draft and target models on separate worker threads so drafting and
+//!   verification genuinely overlap (the paper's branch parallelism);
+//! * [`sim::SimBackend`] — a calibrated statistical stand-in for the
+//!   paper's four A100 pairs: a synthetic aligned LM pair whose
+//!   draft/target distributions have exactly the acceptance rate α the
+//!   calibration asks for, plus a two-resource virtual clock reproducing
+//!   the `T_q = t`, `T_p = c·t` latency geometry of §4.
+//!
+//! ### Timing model
+//! Sessions carry a two-track clock (draft resource, target resource).
+//! `draft_forward` blocks the engine and occupies the draft track;
+//! `verify_submit` occupies the target track *without* blocking (the
+//! engine keeps drafting — that is the pipeline of Fig. 1a); and
+//! `verify_wait` joins. The same code path therefore reproduces vanilla
+//! SD's mutual-waiting bubbles and parallel SD's overlap, for both real
+//! and virtual time.
+
+pub mod pjrt;
+pub mod sim;
+
+use crate::metrics::DecodeStats;
+use crate::sampling::Token;
+
+/// Identifies one draft-side branch within a session. Branch 0 is the main
+/// chain created by `prefill`.
+pub type BranchId = usize;
+
+/// Handle for an in-flight target verification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyTicket(pub u64);
+
+/// Result of a target verification block.
+#[derive(Clone, Debug)]
+pub struct VerifyOut {
+    /// `ps[i]` = target distribution conditioned on prefix ⊕ tokens[..i]
+    /// (i.e. the distribution the i-th block token is judged against is
+    /// `ps[i]`'s *predecessor*; see engines for the exact indexing).
+    pub ps: Vec<Vec<f32>>,
+    /// H-RAD feature vector per block position (backend-specific encoding;
+    /// feed rows back into `hrad_predict` of the same session only).
+    pub features: Vec<Vec<f32>>,
+}
+
+/// One decoding session (single request). Not thread-safe; one engine
+/// drives one session.
+pub trait Session {
+    fn vocab(&self) -> usize;
+
+    /// Largest verify block the backend accepts (γ_max + 1).
+    fn block(&self) -> usize;
+
+    /// Speed ratio c = T_p / T_q of this backend (engines size γ with it).
+    fn speed_ratio(&self) -> f64;
+
+    /// Process the prompt on both models. Must be called exactly once,
+    /// first. After prefill the draft main branch and the target have both
+    /// consumed `prompt[..len-1]`, so the next draft/verify block starts
+    /// with the last prompt token.
+    fn prefill(&mut self, prompt: &[Token]);
+
+    /// One draft forward on `branch`: consume `token`, return the draft
+    /// distribution q for the next position. Occupies the draft track.
+    fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32>;
+
+    /// Batched draft forward across branches (the paper runs k parallel
+    /// branches as one batch on the draft device, so a batched step costs
+    /// barely more than a single one). The sim backend models that batch
+    /// economy; the PJRT backend executes per-branch.
+    fn draft_forward_batch(
+        &mut self,
+        branches: &[BranchId],
+        tokens: &[Token],
+    ) -> Vec<Vec<f32>>;
+
+    /// Fork a draft branch (shared prefix; O(small)).
+    fn draft_fork(&mut self, branch: BranchId) -> BranchId;
+
+    /// Release a losing branch.
+    fn draft_release(&mut self, branch: BranchId);
+
+    /// Roll a branch back to `len` consumed tokens (rollback of doomed
+    /// proposals).
+    fn draft_len(&self, branch: BranchId) -> usize;
+    fn draft_rollback(&mut self, branch: BranchId, len: usize);
+
+    /// Submit a verification block to the target model. `tokens[0]` must be
+    /// the last committed token. Occupies the target track; returns
+    /// immediately (the engine may keep drafting).
+    fn verify_submit(&mut self, tokens: &[Token]) -> VerifyTicket;
+
+    /// Join a verification; advances session time to its completion.
+    fn verify_wait(&mut self, ticket: VerifyTicket) -> VerifyOut;
+
+    /// Commit tokens to the target context (accepted prefix + correction).
+    fn target_commit(&mut self, tokens: &[Token]);
+
+    /// Roll the target back to `len` committed tokens.
+    fn target_len(&self) -> usize;
+    fn target_rollback(&mut self, len: usize);
+
+    /// H-RAD 3-class prediction from a feature row of this session's
+    /// `VerifyOut` plus the candidate next token. Returns class
+    /// probabilities `[p_reject, p_confidence, p_accept]`.
+    fn hrad_predict(&mut self, features: &[f32], next_token: Token) -> [f32; 3];
+
+    /// Account an engine-side overhead (e.g. pipeline-parallel
+    /// communication, Table 12): advances the clock without occupying
+    /// either model resource.
+    fn overhead(&mut self, ms: f64);
+
+    /// Committed output tokens so far (prompt + generated).
+    fn committed(&self) -> &[Token];
+
+    /// Mutable decode statistics (engines update the algorithmic counters;
+    /// the session updates the timing fields).
+    fn stats_mut(&mut self) -> &mut DecodeStats;
+    fn take_stats(&mut self) -> DecodeStats;
+
+    /// Remaining KV capacity (tokens) before the static cache is full.
+    fn capacity_left(&self) -> usize;
+}
+
+/// A backend constructs sessions.
+pub trait Backend {
+    fn new_session(&self, seed: u64) -> Box<dyn Session>;
+    fn name(&self) -> String;
+}

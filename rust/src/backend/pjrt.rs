@@ -1,0 +1,575 @@
+//! PJRT backend: the real tiny transformer pair, served from the AOT
+//! artifacts through the `xla` crate's CPU PJRT client.
+//!
+//! Process topology mirrors the paper's deployment (draft and target on
+//! separate devices): two worker threads, one owning the draft-model
+//! executables (`draft_step`, `draft_chunk`, `hrad_mlp`), one owning the
+//! target executable (`target_verify`). Each thread constructs its own
+//! PJRT client + executables (the `xla` wrappers hold raw pointers and are
+//! not `Send`), and owns every session's KV tensors for its model, so the
+//! only data crossing threads is tokens, distributions and feature rows.
+//! `verify_submit` posts to the target thread and returns immediately —
+//! the engine keeps drafting while verification runs, which is exactly the
+//! paper's branch parallelism, in real wall-clock time.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Manifest;
+use crate::kvcache::TensorKv;
+use crate::metrics::DecodeStats;
+use crate::runtime::{Arg, Runtime};
+use crate::sampling::{self, Token};
+
+use super::{Backend, BranchId, Session, VerifyOut, VerifyTicket};
+
+// ---------------------------------------------------------------------------
+// Worker protocol
+// ---------------------------------------------------------------------------
+
+enum DraftCmd {
+    NewSession { id: u64 },
+    DropSession { id: u64 },
+    /// Feed `tokens` to the main branch without sampling (prompt prefill).
+    Prefill { id: u64, tokens: Vec<Token>, reply: Sender<Reply<()>> },
+    Forward { id: u64, branch: BranchId, token: Token, reply: Sender<Reply<Vec<f32>>> },
+    Fork { id: u64, branch: BranchId, reply: Sender<Reply<BranchId>> },
+    Release { id: u64, branch: BranchId },
+    Rollback { id: u64, branch: BranchId, len: usize },
+    Hrad { features: Vec<f32>, token: Token, reply: Sender<Reply<[f32; 3]>> },
+    Shutdown,
+}
+
+enum TargetCmd {
+    NewSession { id: u64 },
+    DropSession { id: u64 },
+    Prefill { id: u64, tokens: Vec<Token>, reply: Sender<Reply<()>> },
+    Verify { id: u64, tokens: Vec<Token>, reply: Sender<Reply<VerifyOut>> },
+    Commit { id: u64, n: usize },
+    Rollback { id: u64, len: usize },
+    Shutdown,
+}
+
+struct Reply<T> {
+    value: T,
+    busy_us: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Draft worker
+// ---------------------------------------------------------------------------
+
+struct DraftSession {
+    /// Branch id -> (kv, consumed length). Slot None = released.
+    branches: Vec<Option<TensorKv>>,
+}
+
+fn draft_worker(
+    manifest_dir: std::path::PathBuf,
+    rx: Receiver<DraftCmd>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let rt = Runtime::load(&manifest_dir)?;
+    let step = rt.compile("draft_step").context("compiling draft_step")?;
+    let chunk = rt.compile("draft_chunk").context("compiling draft_chunk")?;
+    let hrad = rt.compile("hrad_mlp").context("compiling hrad_mlp")?;
+    let warm = step
+        .warmup()
+        .and_then(|_| chunk.warmup())
+        .and_then(|_| hrad.warmup())
+        .context("warming draft executables");
+    let _ = ready.send(warm.as_ref().map(|_| ()).map_err(|e| anyhow::anyhow!("{e:#}")));
+    warm?;
+    let kv_elems = step.inputs[1].elems();
+    let seq_max = rt.manifest.seq_max;
+    let block = rt.manifest.block;
+    let vocab = rt.manifest.vocab;
+
+    let mut sessions: HashMap<u64, DraftSession> = HashMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            DraftCmd::NewSession { id } => {
+                sessions.insert(
+                    id,
+                    DraftSession { branches: vec![Some(TensorKv::zeros(kv_elems, seq_max))] },
+                );
+            }
+            DraftCmd::DropSession { id } => {
+                sessions.remove(&id);
+            }
+            DraftCmd::Prefill { id, tokens, reply } => {
+                let t0 = Instant::now();
+                let sess = sessions.get_mut(&id).expect("unknown draft session");
+                let kv = sess.branches[0].as_mut().unwrap();
+                for chunk_toks in tokens.chunks(block) {
+                    let mut padded: Vec<i32> =
+                        chunk_toks.iter().map(|&t| t as i32).collect();
+                    padded.resize(block, 0);
+                    let out = chunk
+                        .run(&[
+                            Arg::I32(&padded),
+                            Arg::F32(&kv.data),
+                            Arg::ScalarI32(kv.len as i32),
+                        ])
+                        .expect("draft_chunk failed");
+                    kv.data = out.into_iter().nth(2).unwrap();
+                    kv.advance(chunk_toks.len());
+                }
+                let _ = reply.send(Reply { value: (), busy_us: t0.elapsed().as_micros() as u64 });
+            }
+            DraftCmd::Forward { id, branch, token, reply } => {
+                let t0 = Instant::now();
+                let sess = sessions.get_mut(&id).expect("unknown draft session");
+                let kv = sess.branches[branch].as_mut().expect("released branch");
+                let out = step
+                    .run(&[
+                        Arg::I32(&[token as i32]),
+                        Arg::F32(&kv.data),
+                        Arg::ScalarI32(kv.len as i32),
+                    ])
+                    .expect("draft_step failed");
+                let mut it = out.into_iter();
+                let logits = it.next().unwrap();
+                let _hiddens = it.next();
+                kv.data = it.next().unwrap();
+                kv.advance(1);
+                let mut q = Vec::with_capacity(vocab);
+                sampling::softmax(&logits[..vocab], 1.0, &mut q);
+                let _ = reply.send(Reply { value: q, busy_us: t0.elapsed().as_micros() as u64 });
+            }
+            DraftCmd::Fork { id, branch, reply } => {
+                let sess = sessions.get_mut(&id).expect("unknown draft session");
+                let kv = sess.branches[branch].as_ref().expect("released branch").clone();
+                sess.branches.push(Some(kv));
+                let new_id = sess.branches.len() - 1;
+                let _ = reply.send(Reply { value: new_id, busy_us: 0 });
+            }
+            DraftCmd::Release { id, branch } => {
+                if let Some(sess) = sessions.get_mut(&id) {
+                    sess.branches[branch] = None;
+                }
+            }
+            DraftCmd::Rollback { id, branch, len } => {
+                let sess = sessions.get_mut(&id).expect("unknown draft session");
+                sess.branches[branch].as_mut().expect("released branch").truncate(len);
+            }
+            DraftCmd::Hrad { features, token, reply } => {
+                let t0 = Instant::now();
+                let out = hrad
+                    .run(&[Arg::F32(&features), Arg::ScalarI32(token as i32)])
+                    .expect("hrad_mlp failed");
+                let probs = &out[0];
+                let value = [probs[0], probs[1], probs[2]];
+                let _ = reply.send(Reply { value, busy_us: t0.elapsed().as_micros() as u64 });
+            }
+            DraftCmd::Shutdown => break,
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Target worker
+// ---------------------------------------------------------------------------
+
+struct TargetSession {
+    kv: TensorKv,
+}
+
+fn target_worker(
+    manifest_dir: std::path::PathBuf,
+    rx: Receiver<TargetCmd>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let rt = Runtime::load(&manifest_dir)?;
+    let verify = rt.compile("target_verify").context("compiling target_verify")?;
+    let warm = verify.warmup().context("warming target_verify");
+    let _ = ready.send(warm.as_ref().map(|_| ()).map_err(|e| anyhow::anyhow!("{e:#}")));
+    warm?;
+    let kv_elems = verify.inputs[1].elems();
+    let seq_max = rt.manifest.seq_max;
+    let block = rt.manifest.block;
+    let vocab = rt.manifest.vocab;
+    let feat_dim = verify.outputs[1].shape[1];
+
+    let mut sessions: HashMap<u64, TargetSession> = HashMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            TargetCmd::NewSession { id } => {
+                sessions.insert(id, TargetSession { kv: TensorKv::zeros(kv_elems, seq_max) });
+            }
+            TargetCmd::DropSession { id } => {
+                sessions.remove(&id);
+            }
+            TargetCmd::Prefill { id, tokens, reply } => {
+                let t0 = Instant::now();
+                let sess = sessions.get_mut(&id).expect("unknown target session");
+                for chunk_toks in tokens.chunks(block) {
+                    let mut padded: Vec<i32> =
+                        chunk_toks.iter().map(|&t| t as i32).collect();
+                    padded.resize(block, 0);
+                    let out = verify
+                        .run(&[
+                            Arg::I32(&padded),
+                            Arg::F32(&sess.kv.data),
+                            Arg::ScalarI32(sess.kv.len as i32),
+                        ])
+                        .expect("target_verify failed");
+                    sess.kv.data = out.into_iter().nth(2).unwrap();
+                    sess.kv.advance(chunk_toks.len());
+                }
+                let _ = reply.send(Reply { value: (), busy_us: t0.elapsed().as_micros() as u64 });
+            }
+            TargetCmd::Verify { id, tokens, reply } => {
+                let t0 = Instant::now();
+                let sess = sessions.get_mut(&id).expect("unknown target session");
+                let n = tokens.len();
+                let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+                padded.resize(block, 0);
+                let out = verify
+                    .run(&[
+                        Arg::I32(&padded),
+                        Arg::F32(&sess.kv.data),
+                        Arg::ScalarI32(sess.kv.len as i32),
+                    ])
+                    .expect("target_verify failed");
+                let mut it = out.into_iter();
+                let logits = it.next().unwrap();
+                let hiddens = it.next().unwrap();
+                sess.kv.data = it.next().unwrap();
+                // KV advance is deferred to Commit: only the accepted prefix
+                // becomes part of the context (slots beyond stay garbage).
+                let mut ps = Vec::with_capacity(n);
+                let mut features = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut p = Vec::with_capacity(vocab);
+                    sampling::softmax(&logits[i * vocab..(i + 1) * vocab], 1.0, &mut p);
+                    ps.push(p);
+                    features.push(hiddens[i * feat_dim..(i + 1) * feat_dim].to_vec());
+                }
+                let _ = reply.send(Reply {
+                    value: VerifyOut { ps, features },
+                    busy_us: t0.elapsed().as_micros() as u64,
+                });
+            }
+            TargetCmd::Commit { id, n } => {
+                let sess = sessions.get_mut(&id).expect("unknown target session");
+                sess.kv.advance(n);
+            }
+            TargetCmd::Rollback { id, len } => {
+                let sess = sessions.get_mut(&id).expect("unknown target session");
+                sess.kv.truncate(len);
+            }
+            TargetCmd::Shutdown => break,
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Backend + Session
+// ---------------------------------------------------------------------------
+
+pub struct PjrtBackend {
+    manifest: Manifest,
+    draft_tx: Sender<DraftCmd>,
+    target_tx: Sender<TargetCmd>,
+    next_session: std::sync::atomic::AtomicU64,
+    /// Measured speed ratio c (target verify ms / draft step ms).
+    speed_ratio: std::sync::Mutex<f64>,
+}
+
+impl PjrtBackend {
+    /// Spawn the two model workers and load/compile the artifacts.
+    pub fn start(dir: impl AsRef<std::path::Path>) -> Result<std::sync::Arc<PjrtBackend>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let (draft_tx, draft_rx) = channel();
+        let (target_tx, target_rx) = channel();
+        let (dready_tx, dready_rx) = channel();
+        let (tready_tx, tready_rx) = channel();
+        let d_dir = dir.clone();
+        std::thread::Builder::new()
+            .name("draft-worker".into())
+            .spawn(move || {
+                if let Err(e) = draft_worker(d_dir, draft_rx, dready_tx) {
+                    eprintln!("draft worker died: {e:#}");
+                }
+            })?;
+        let t_dir = dir.clone();
+        std::thread::Builder::new()
+            .name("target-worker".into())
+            .spawn(move || {
+                if let Err(e) = target_worker(t_dir, target_rx, tready_tx) {
+                    eprintln!("target worker died: {e:#}");
+                }
+            })?;
+        // Block until both workers compiled + warmed their executables so
+        // the JIT cost never lands on a request.
+        dready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("draft worker died during startup"))??;
+        tready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("target worker died during startup"))??;
+        Ok(std::sync::Arc::new(PjrtBackend {
+            manifest,
+            draft_tx,
+            target_tx,
+            next_session: std::sync::atomic::AtomicU64::new(0),
+            speed_ratio: std::sync::Mutex::new(4.0),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn new_pjrt_session(&self) -> PjrtSession {
+        let id = self
+            .next_session
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.draft_tx.send(DraftCmd::NewSession { id }).expect("draft worker gone");
+        self.target_tx.send(TargetCmd::NewSession { id }).expect("target worker gone");
+        PjrtSession {
+            id,
+            manifest_block: self.manifest.block,
+            manifest_vocab: self.manifest.vocab,
+            seq_max: self.manifest.seq_max,
+            draft_tx: self.draft_tx.clone(),
+            target_tx: self.target_tx.clone(),
+            committed: Vec::new(),
+            branch_lens: vec![0],
+            pending: HashMap::new(),
+            next_ticket: 0,
+            stats: DecodeStats::with_hist(self.manifest.gamma_max),
+            started: Instant::now(),
+            speed_ratio: *self.speed_ratio.lock().unwrap(),
+        }
+    }
+}
+
+impl Backend for std::sync::Arc<PjrtBackend> {
+    fn new_session(&self, _seed: u64) -> Box<dyn Session> {
+        Box::new(self.new_pjrt_session())
+    }
+
+    fn name(&self) -> String {
+        "pjrt:tiny-pair".to_string()
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        let _ = self.draft_tx.send(DraftCmd::Shutdown);
+        let _ = self.target_tx.send(TargetCmd::Shutdown);
+    }
+}
+
+pub struct PjrtSession {
+    id: u64,
+    manifest_block: usize,
+    manifest_vocab: usize,
+    seq_max: usize,
+    draft_tx: Sender<DraftCmd>,
+    target_tx: Sender<TargetCmd>,
+    committed: Vec<Token>,
+    /// Consumed length per branch (branch 0 = main).
+    branch_lens: Vec<usize>,
+    pending: HashMap<u64, (Receiver<Reply<VerifyOut>>, usize)>,
+    next_ticket: u64,
+    stats: DecodeStats,
+    started: Instant,
+    speed_ratio: f64,
+}
+
+impl PjrtSession {
+    fn wall_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1000.0
+    }
+}
+
+impl Session for PjrtSession {
+    fn vocab(&self) -> usize {
+        self.manifest_vocab
+    }
+
+    fn block(&self) -> usize {
+        self.manifest_block
+    }
+
+    fn speed_ratio(&self) -> f64 {
+        self.speed_ratio
+    }
+
+    fn prefill(&mut self, prompt: &[Token]) {
+        assert!(self.committed.is_empty(), "prefill called twice");
+        assert!(!prompt.is_empty());
+        self.committed.extend_from_slice(prompt);
+        let consumed = &prompt[..prompt.len() - 1];
+        let (dtx, drx) = channel();
+        let (ttx, trx) = channel();
+        self.draft_tx
+            .send(DraftCmd::Prefill { id: self.id, tokens: consumed.to_vec(), reply: dtx })
+            .expect("draft worker gone");
+        self.target_tx
+            .send(TargetCmd::Prefill { id: self.id, tokens: consumed.to_vec(), reply: ttx })
+            .expect("target worker gone");
+        let d = drx.recv().expect("draft prefill reply");
+        let t = trx.recv().expect("target prefill reply");
+        self.stats.draft_busy_ms += d.busy_us as f64 / 1000.0;
+        self.stats.target_busy_ms += t.busy_us as f64 / 1000.0;
+        self.branch_lens[0] = consumed.len();
+    }
+
+    fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32> {
+        let (tx, rx) = channel();
+        self.draft_tx
+            .send(DraftCmd::Forward { id: self.id, branch, token, reply: tx })
+            .expect("draft worker gone");
+        let r = rx.recv().expect("draft forward reply");
+        self.stats.draft_busy_ms += r.busy_us as f64 / 1000.0;
+        self.stats.draft_forwards += 1;
+        self.branch_lens[branch] += 1;
+        r.value
+    }
+
+    fn draft_forward_batch(&mut self, branches: &[BranchId], tokens: &[Token]) -> Vec<Vec<f32>> {
+        branches
+            .iter()
+            .zip(tokens)
+            .map(|(&b, &t)| self.draft_forward(b, t))
+            .collect()
+    }
+
+    fn draft_fork(&mut self, branch: BranchId) -> BranchId {
+        let (tx, rx) = channel();
+        self.draft_tx
+            .send(DraftCmd::Fork { id: self.id, branch, reply: tx })
+            .expect("draft worker gone");
+        let r = rx.recv().expect("fork reply");
+        self.branch_lens.push(self.branch_lens[branch]);
+        self.stats.branches_spawned += 1;
+        debug_assert_eq!(r.value, self.branch_lens.len() - 1);
+        r.value
+    }
+
+    fn draft_release(&mut self, branch: BranchId) {
+        assert!(branch != 0);
+        self.draft_tx
+            .send(DraftCmd::Release { id: self.id, branch })
+            .expect("draft worker gone");
+    }
+
+    fn draft_len(&self, branch: BranchId) -> usize {
+        self.branch_lens[branch]
+    }
+
+    fn draft_rollback(&mut self, branch: BranchId, len: usize) {
+        self.draft_tx
+            .send(DraftCmd::Rollback { id: self.id, branch, len })
+            .expect("draft worker gone");
+        self.branch_lens[branch] = len;
+    }
+
+    fn verify_submit(&mut self, tokens: &[Token]) -> VerifyTicket {
+        assert!(!tokens.is_empty() && tokens.len() <= self.manifest_block);
+        debug_assert_eq!(tokens[0], *self.committed.last().expect("verify before prefill"));
+        let (tx, rx) = channel();
+        self.target_tx
+            .send(TargetCmd::Verify { id: self.id, tokens: tokens.to_vec(), reply: tx })
+            .expect("target worker gone");
+        self.stats.target_forwards += 1;
+        let ticket = VerifyTicket(self.next_ticket);
+        self.next_ticket += 1;
+        self.pending.insert(ticket.0, (rx, tokens.len()));
+        ticket
+    }
+
+    fn verify_wait(&mut self, ticket: VerifyTicket) -> VerifyOut {
+        let (rx, _n) = self.pending.remove(&ticket.0).expect("unknown ticket");
+        let r = rx.recv().expect("verify reply");
+        self.stats.target_busy_ms += r.busy_us as f64 / 1000.0;
+        self.stats.elapsed_ms = self.wall_ms();
+        r.value
+    }
+
+    fn target_commit(&mut self, tokens: &[Token]) {
+        self.committed.extend_from_slice(tokens);
+        self.target_tx
+            .send(TargetCmd::Commit { id: self.id, n: tokens.len() })
+            .expect("target worker gone");
+        self.stats.elapsed_ms = self.wall_ms();
+        // Peak KV accounting at real (tiny) scale.
+        let live_branches = self.branch_lens.len();
+        let kv = crate::metrics::kv_bytes_per_token(4, 4, 32) * self.committed.len()
+            + crate::metrics::kv_bytes_per_token(2, 4, 16)
+                * self.branch_lens.iter().sum::<usize>().max(1)
+            + live_branches; // tie-break so growth is visible
+        self.stats.peak_kv_bytes = self.stats.peak_kv_bytes.max(kv);
+    }
+
+    fn target_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    fn target_rollback(&mut self, len: usize) {
+        assert!(len <= self.committed.len());
+        // The model-side KV length counts *consumed* tokens (committed − 1).
+        self.committed.truncate(len);
+        self.target_tx
+            .send(TargetCmd::Rollback { id: self.id, len: len.saturating_sub(1) })
+            .expect("target worker gone");
+    }
+
+    fn hrad_predict(&mut self, features: &[f32], next_token: Token) -> [f32; 3] {
+        let (tx, rx) = channel();
+        self.draft_tx
+            .send(DraftCmd::Hrad {
+                features: features.to_vec(),
+                token: next_token,
+                reply: tx,
+            })
+            .expect("draft worker gone");
+        let r = rx.recv().expect("hrad reply");
+        self.stats.hrad_calls += 1;
+        self.stats.hrad_ms += r.busy_us as f64 / 1000.0;
+        r.value
+    }
+
+    fn overhead(&mut self, ms: f64) {
+        std::thread::sleep(std::time::Duration::from_micros((ms * 1000.0) as u64));
+    }
+
+    fn committed(&self) -> &[Token] {
+        &self.committed
+    }
+
+    fn stats_mut(&mut self) -> &mut DecodeStats {
+        &mut self.stats
+    }
+
+    fn take_stats(&mut self) -> DecodeStats {
+        self.stats.elapsed_ms = self.wall_ms();
+        std::mem::take(&mut self.stats)
+    }
+
+    fn capacity_left(&self) -> usize {
+        let max_branch = self.branch_lens.iter().copied().max().unwrap_or(0);
+        self.seq_max
+            .saturating_sub(self.committed.len().max(max_branch))
+            .saturating_sub(self.manifest_block + 2)
+    }
+}
+
+impl Drop for PjrtSession {
+    fn drop(&mut self) {
+        let _ = self.draft_tx.send(DraftCmd::DropSession { id: self.id });
+        let _ = self.target_tx.send(TargetCmd::DropSession { id: self.id });
+    }
+}

@@ -1,0 +1,700 @@
+//! One regeneration function per paper table/figure (DESIGN.md §5).
+//!
+//! Absolute numbers come from the calibrated simulator, so they are
+//! *shape* reproductions: method ordering, rough factors and crossovers
+//! must match the paper; the exact values depend on the A100 testbed we
+//! do not have. EXPERIMENTS.md records paper-vs-measured for every entry.
+
+use crate::backend::sim::{SimBackend, SimConfig};
+use crate::backend::Backend;
+use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use crate::engines;
+use crate::hrad;
+use crate::metrics;
+use crate::theory;
+use crate::util::prng::Pcg32;
+use crate::util::stats::{fit_trunc_geometric, trunc_geometric_pmf, tv_distance, Histogram};
+
+use super::report::{emit, f2, fx, pct, Table};
+use super::runner::{default_gamma, Runner, Scale};
+
+const METHODS: [EngineId; 5] = EngineId::ALL_BASELINES;
+
+fn engine_label(e: EngineId) -> &'static str {
+    match e {
+        EngineId::Sps => "SpS",
+        EngineId::AdaEdl => "AdaEDL",
+        EngineId::Lookahead => "Lookahead",
+        EngineId::Pearl => "PEARL",
+        EngineId::SpecBranch => "SpecBranch",
+        EngineId::Autoregressive => "Vanilla",
+        EngineId::SpecBranchNoBranch => "SB w/o branch",
+        EngineId::SpecBranchNoHrad => "SB w/o H-RAD",
+        EngineId::SpecBranchPp => "SpecBranch(PP)",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: main results (4 pairs × HumanEval/GSM8K/CNN-DM × 5 methods)
+// ---------------------------------------------------------------------------
+
+pub fn table2(scale: Scale) {
+    let mut runner = Runner::new(scale);
+    let mut t = Table::new(
+        "Table 2 — main results (M = mean accepted len, speedup vs AR, tokens/s)",
+        &["pair", "method", "HumanEval M", "HE spd", "GSM8K M", "GS spd",
+          "CNN/DM M", "CD spd", "tok/s", "avg spd"],
+    );
+    for pair in ModelPair::PAPER_PAIRS {
+        for method in METHODS {
+            let cfg = runner.engine_cfg(pair);
+            let mut cells = vec![
+                ModelPair::get(pair).name.to_string(),
+                engine_label(method).to_string(),
+            ];
+            let mut spd_sum = 0.0;
+            let mut tps_sum = 0.0;
+            for task in Task::MAIN {
+                let e = runner.evaluate(pair, task, method, &cfg);
+                cells.push(f2(e.mean_accepted()));
+                cells.push(fx(e.speedup));
+                spd_sum += e.speedup;
+                tps_sum += e.tokens_per_sec;
+            }
+            cells.push(f2(tps_sum / 3.0));
+            cells.push(fx(spd_sum / 3.0));
+            t.row(cells);
+        }
+    }
+    emit("table2_main_results", &[t]);
+}
+
+// ---------------------------------------------------------------------------
+// Table 3/8: Spec-Bench (6 subtasks × 4 pairs)
+// ---------------------------------------------------------------------------
+
+pub fn table3(scale: Scale) {
+    let mut runner = Runner::new(scale);
+    let mut tables = Vec::new();
+    for pair in ModelPair::PAPER_PAIRS {
+        let mut t = Table::new(
+            &format!("Table 3/8 — Spec-Bench, {}", ModelPair::get(pair).name),
+            &["method", "MT-B", "QA", "Sum", "Math", "RAG", "Trans", "avg spd"],
+        );
+        for method in METHODS {
+            let cfg = runner.engine_cfg(pair);
+            let mut cells = vec![engine_label(method).to_string()];
+            let mut sum = 0.0;
+            for task in Task::SPEC_BENCH {
+                let e = runner.evaluate(pair, task, method, &cfg);
+                cells.push(fx(e.speedup));
+                sum += e.speedup;
+            }
+            cells.push(fx(sum / 6.0));
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    emit("table3_specbench", &tables);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1(b) + Fig 12/13: accepted-length distribution ≈ truncated geometric
+// ---------------------------------------------------------------------------
+
+pub fn fig1b(scale: Scale) {
+    let runner = Runner::new(scale);
+    let mut tables = Vec::new();
+    for (pair, gammas) in [
+        (PairId::Vicuna68m13b, [4usize, 8]),
+        (PairId::Deepseek13b33b, [4, 8]),
+    ] {
+        for gamma in gammas {
+            let mut cfg = runner.engine_cfg(pair);
+            cfg.gamma = gamma;
+            let stats = runner.run_engine(pair, TaskId::MtBench, EngineId::Sps, &cfg);
+            let hist = stats.accepted_hist.as_ref().unwrap();
+            let pmf = hist.pmf();
+            let alpha_fit = fit_trunc_geometric(hist);
+            let model = trunc_geometric_pmf(alpha_fit, gamma);
+            let mut t = Table::new(
+                &format!(
+                    "Fig 1b/12/13 — accepted-length dist, {} γ={gamma} (fit α={alpha_fit:.3}, TV={:.3})",
+                    ModelPair::get(pair).name,
+                    tv_distance(
+                        &pmf.iter().take(gamma + 1).cloned().collect::<Vec<_>>(),
+                        &model
+                    ),
+                ),
+                &["k", "empirical", "trunc-geometric"],
+            );
+            for k in 0..=gamma {
+                t.row(vec![
+                    k.to_string(),
+                    pct(pmf.get(k).copied().unwrap_or(0.0)),
+                    pct(model[k]),
+                ]);
+            }
+            tables.push(t);
+        }
+    }
+    emit("fig1b_token_dist", &tables);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2: Theorem-1 latency curves + simulated overlay
+// ---------------------------------------------------------------------------
+
+pub fn fig2(scale: Scale) {
+    let c = 8.0;
+    let t_ms = 2.0;
+    let mut tables = Vec::new();
+    let mut curve = Table::new(
+        "Fig 2 — Theorem 1 per-token latency (c=8, t=2ms)",
+        &["gamma", "a=0.4", "a=0.5", "a=0.6", "a=0.7", "a=0.8", "a=0.9"],
+    );
+    for gamma in 1..=16usize {
+        let mut cells = vec![gamma.to_string()];
+        for alpha in [0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            cells.push(f2(theory::t_psd_rollback(alpha, gamma as f64, c, t_ms)));
+        }
+        curve.row(cells);
+    }
+    tables.push(curve);
+
+    let mut mins = Table::new(
+        "Fig 2 — argmin γ* (theory) vs γ ≤ c check vs simulated best",
+        &["alpha", "gamma* theory", "<= c", "sim best gamma", "sim ms/token"],
+    );
+    for alpha in [0.4, 0.6, 0.8] {
+        let g_star = theory::optimal_gamma(alpha, c, t_ms, 16);
+        // Simulated sweep: vanilla parallel rounds in the sim backend don't
+        // take a free-form α, so synthesise via a custom pair-less sweep:
+        let (best_g, best_ms) = simulate_gamma_sweep(alpha, c, t_ms, 16, scale);
+        mins.row(vec![
+            f2(alpha),
+            g_star.to_string(),
+            (g_star as f64 <= c).to_string(),
+            best_g.to_string(),
+            f2(best_ms),
+        ]);
+    }
+    tables.push(mins);
+    emit("fig2_theory", &tables);
+}
+
+/// Monte-Carlo of the Theorem-1 round process (γ drafts, retry on
+/// rollback) — validates the closed form rather than re-deriving it.
+fn simulate_gamma_sweep(alpha: f64, c: f64, t: f64, gmax: usize, scale: Scale) -> (usize, f64) {
+    let rounds = 400 * scale.requests.max(1);
+    let mut best = (1usize, f64::INFINITY);
+    let mut rng = Pcg32::new(42);
+    for gamma in 1..=gmax {
+        let mut tokens = 0.0;
+        let mut time = 0.0;
+        for _ in 0..rounds {
+            // Two pipelined rounds per Theorem-1 retry cycle.
+            let mut accepted = 0;
+            for _ in 0..gamma {
+                if rng.coin(alpha) {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            let full = accepted == gamma;
+            tokens += accepted as f64 + if full { gamma as f64 * alpha } else { 0.0 };
+            time += 2.0 * (gamma as f64 * t).max(c * t);
+            if full {
+                tokens += 0.0;
+            }
+        }
+        let per_tok = time / tokens.max(1e-9);
+        if per_tok < best.1 {
+            best = (gamma, per_tok);
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 / Fig 11 / Fig 1(c): rollback rates
+// ---------------------------------------------------------------------------
+
+pub fn fig5(scale: Scale) {
+    let runner = Runner::new(scale);
+    let mut tables = Vec::new();
+    for task in [TaskId::HumanEval, TaskId::Gsm8k, TaskId::CnnDm, TaskId::MtBench] {
+        let mut t = Table::new(
+            &format!("Fig 5/11 — rollback rate on {}", Task::get(task).name),
+            &["pair", "SpS", "AdaEDL", "Lookahead", "PEARL", "SpecBranch"],
+        );
+        for pair in ModelPair::PAPER_PAIRS {
+            let cfg = runner.engine_cfg(pair);
+            let mut cells = vec![ModelPair::get(pair).name.to_string()];
+            for method in METHODS {
+                let stats = runner.run_engine(pair, task, method, &cfg);
+                cells.push(pct(stats.rollback_rate()));
+            }
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    emit("fig5_rollback", &tables);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: component ablation + Fig 3(d) drafting-scheme comparison
+// ---------------------------------------------------------------------------
+
+pub fn fig6(scale: Scale) {
+    let mut runner = Runner::new(scale);
+    let mut t = Table::new(
+        "Fig 6 — component ablation (Spec-Bench avg speedup)",
+        &["pair", "full", "w/o branch", "w/o H-RAD", "PEARL"],
+    );
+    for pair in [PairId::Vicuna68m13b, PairId::Llama318b70b] {
+        let cfg = runner.engine_cfg(pair);
+        let mut avg = |engine: EngineId, runner: &mut Runner| -> f64 {
+            Task::SPEC_BENCH
+                .iter()
+                .map(|&task| runner.evaluate(pair, task, engine, &cfg).speedup)
+                .sum::<f64>()
+                / 6.0
+        };
+        let full = avg(EngineId::SpecBranch, &mut runner);
+        let nb = avg(EngineId::SpecBranchNoBranch, &mut runner);
+        let nh = avg(EngineId::SpecBranchNoHrad, &mut runner);
+        let pearl = avg(EngineId::Pearl, &mut runner);
+        t.row(vec![
+            ModelPair::get(pair).name.to_string(),
+            fx(full),
+            fx(nb),
+            fx(nh),
+            fx(pearl),
+        ]);
+    }
+    emit("fig6_ablation", &[t]);
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: stop-threshold ε sensitivity (implicit vs H-RAD)
+// ---------------------------------------------------------------------------
+
+pub fn table4(scale: Scale) {
+    let mut runner = Runner::new(scale);
+    let pair = PairId::Llama68m7b;
+    let task = TaskId::HumanEval;
+    let mut t = Table::new(
+        "Table 4 — stop threshold ε (LLaMA 68M&7B, HumanEval, tokens/s)",
+        &["eps", "implicit (AdaEDL)", "hybrid (SB w/o branch)", "SpecBranch"],
+    );
+    for eps in [0.1, 0.2, 0.4, 0.6, 0.8, 0.9] {
+        let mut cfg = runner.engine_cfg(pair);
+        cfg.epsilon = eps;
+        let imp = runner.evaluate(pair, task, EngineId::AdaEdl, &cfg);
+        let hyb = runner.evaluate(pair, task, EngineId::SpecBranchNoBranch, &cfg);
+        let full = runner.evaluate(pair, task, EngineId::SpecBranch, &cfg);
+        t.row(vec![
+            f2(eps),
+            f2(imp.tokens_per_sec),
+            f2(hyb.tokens_per_sec),
+            f2(full.tokens_per_sec),
+        ]);
+    }
+    emit("table4_threshold", &[t]);
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: H-RAD feature layers K
+// ---------------------------------------------------------------------------
+
+pub fn table5(scale: Scale) {
+    let mut tables = Vec::new();
+    let mut t = Table::new(
+        "Table 5 — H-RAD feature layers K (LLaMA 68M&7B; tokens/s + accuracy)",
+        &["K", "HumanEval tok/s", "GSM8K tok/s", "CNN/DM tok/s", "pred acc"],
+    );
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let mut runner = Runner::new(scale);
+        // Tune the sim's H-RAD fidelity to K.
+        runner.tune = match k {
+            1 => |c: &mut SimConfig| c.hrad_k = 1,
+            2 => |c: &mut SimConfig| c.hrad_k = 2,
+            4 => |c: &mut SimConfig| c.hrad_k = 4,
+            8 => |c: &mut SimConfig| c.hrad_k = 8,
+            16 => |c: &mut SimConfig| c.hrad_k = 16,
+            _ => |c: &mut SimConfig| c.hrad_k = 32,
+        };
+        let pair = PairId::Llama68m7b;
+        let cfg = runner.engine_cfg(pair);
+        let mut cells = vec![k.to_string()];
+        for task in Task::MAIN {
+            let e = runner.evaluate(pair, task, EngineId::SpecBranch, &cfg);
+            cells.push(f2(e.tokens_per_sec));
+        }
+        let mut sim_cfg = SimConfig::new(
+            ModelPair::get(pair),
+            Task::get(TaskId::HumanEval),
+        );
+        sim_cfg.hrad_k = k;
+        let acc = hrad::measure_accuracy(&SimBackend::new(sim_cfg), 6, 200 * scale.requests, 3)
+            .accuracy();
+        cells.push(pct(acc));
+        t.row(cells);
+    }
+    tables.push(t);
+    emit("table5_layers", &tables);
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: losslessness across temperatures
+// ---------------------------------------------------------------------------
+
+pub fn table6(scale: Scale) {
+    let mut tables = Vec::new();
+    let mut t = Table::new(
+        "Table 6 — losslessness across temperatures (GSM8K)",
+        &["pair", "T", "greedy-exact", "TV(SB, target)", "speedup"],
+    );
+    for pair in [PairId::Vicuna68m13b, PairId::Llama318b70b] {
+        for temp in [0.0, 0.5, 1.0] {
+            let mut runner = Runner::new(scale);
+            let mut cfg = runner.engine_cfg(pair);
+            cfg.target_temperature = temp;
+            let e = runner.evaluate(pair, TaskId::Gsm8k, EngineId::SpecBranch, &cfg);
+            let (exact, tv) = losslessness_check(pair, temp, scale);
+            t.row(vec![
+                ModelPair::get(pair).name.to_string(),
+                f2(temp),
+                if temp == 0.0 { exact.to_string() } else { "-".into() },
+                if temp > 0.0 { format!("{tv:.4}") } else { "-".into() },
+                fx(e.speedup),
+            ]);
+        }
+    }
+    tables.push(t);
+    emit("table6_lossless", &tables);
+}
+
+/// Greedy: SpecBranch's token stream must equal AR's exactly. Sampling:
+/// total-variation distance between SpecBranch's empirical next-token
+/// distribution and the target's, at a fixed context, must be small.
+fn losslessness_check(pair: PairId, temp: f64, scale: Scale) -> (bool, f64) {
+    let cfg = SimConfig::new(ModelPair::get(pair), Task::get(TaskId::Gsm8k));
+    let backend = SimBackend::new(cfg);
+    if temp == 0.0 {
+        let e_cfg = EngineConfig {
+            gamma: default_gamma(pair),
+            max_new_tokens: 60,
+            target_temperature: 0.0,
+            ..Default::default()
+        };
+        let ar = engines::build(EngineId::Autoregressive, e_cfg.clone());
+        let sb = engines::build(EngineId::SpecBranch, e_cfg);
+        let mut s1 = backend.new_session(5);
+        let a = ar.generate(s1.as_mut(), &[1, 2, 3], &mut Pcg32::new(1));
+        let mut s2 = backend.new_session(5);
+        let b = sb.generate(s2.as_mut(), &[1, 2, 3], &mut Pcg32::new(2));
+        let n = a.tokens.len().min(b.tokens.len());
+        (a.tokens[..n] == b.tokens[..n], 0.0)
+    } else {
+        // Empirical first-token distribution over many seeded runs.
+        let trials = 600 * scale.requests.max(1);
+        let vocab = 64usize;
+        let mut sb_counts = vec![0u64; vocab];
+        let mut tgt_counts = vec![0u64; vocab];
+        let e_cfg = EngineConfig {
+            gamma: default_gamma(pair),
+            max_new_tokens: 2,
+            target_temperature: temp,
+            ..Default::default()
+        };
+        let sb = engines::build(EngineId::SpecBranch, e_cfg.clone());
+        let ar = engines::build(EngineId::Autoregressive, e_cfg);
+        for i in 0..trials {
+            let mut s = backend.new_session(9);
+            let out = sb.generate(s.as_mut(), &[1, 2, 3], &mut Pcg32::new(1000 + i as u64));
+            if let Some(&tok) = out.tokens.first() {
+                sb_counts[tok as usize] += 1;
+            }
+            let mut s = backend.new_session(9);
+            let out = ar.generate(s.as_mut(), &[1, 2, 3], &mut Pcg32::new(5000 + i as u64));
+            if let Some(&tok) = out.tokens.first() {
+                tgt_counts[tok as usize] += 1;
+            }
+        }
+        let to_pmf = |c: &[u64]| -> Vec<f64> {
+            let n: u64 = c.iter().sum();
+            c.iter().map(|&x| x as f64 / n.max(1) as f64).collect()
+        };
+        (true, tv_distance(&to_pmf(&sb_counts), &to_pmf(&tgt_counts)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7 + Tables 9/10/11: memory, energy, per-module time
+// ---------------------------------------------------------------------------
+
+pub fn fig7(scale: Scale) {
+    let mut tables = Vec::new();
+
+    // (a) memory vs number of branches k (LLaMA-3.1, HumanEval).
+    let mut mem = Table::new(
+        "Fig 7a — memory vs branches k (LLaMA-3.1 8B&70B, HumanEval)",
+        &["k_max", "peak KV GB", "total GB", "vs weights"],
+    );
+    let pair = PairId::Llama318b70b;
+    for k in [1usize, 2, 4, 8, 16] {
+        let runner = Runner::new(scale);
+        let mut cfg = runner.engine_cfg(pair);
+        cfg.k_max = k;
+        let stats = runner.run_engine(pair, TaskId::HumanEval, EngineId::SpecBranch, &cfg);
+        let kv_gb = stats.peak_kv_bytes as f64 / 1e9;
+        let total = metrics::memory_gb(&ModelPair::get(pair), stats.peak_kv_bytes);
+        let weights = metrics::memory_gb(&ModelPair::get(pair), 0);
+        mem.row(vec![
+            k.to_string(),
+            format!("{kv_gb:.2}"),
+            format!("{total:.1}"),
+            pct(total / weights - 1.0),
+        ]);
+    }
+    tables.push(mem);
+
+    // (b) energy (Tables 10/11).
+    for task in [TaskId::HumanEval, TaskId::Gsm8k] {
+        let mut en = Table::new(
+            &format!("Fig 7b / Tables 10-11 — energy (kJ) on {}", Task::get(task).name),
+            &["pair", "SpS", "PEARL", "SpecBranch"],
+        );
+        for pair in ModelPair::PAPER_PAIRS {
+            let runner = Runner::new(scale);
+            let cfg = runner.engine_cfg(pair);
+            let mut cells = vec![ModelPair::get(pair).name.to_string()];
+            for method in [EngineId::Sps, EngineId::Pearl, EngineId::SpecBranch] {
+                let stats = runner.run_engine(pair, task, method, &cfg);
+                cells.push(f2(metrics::energy_kj(&stats, &ModelPair::get(pair))));
+            }
+            en.row(cells);
+        }
+        tables.push(en);
+    }
+
+    // (c) per-module time (Table 9).
+    let mut tm = Table::new(
+        "Fig 7c / Table 9 — per-module time per step (ms)",
+        &["pair", "H-RAD", "draft stage", "verify stage", "hrad % of step"],
+    );
+    for pair in ModelPair::PAPER_PAIRS {
+        let runner = Runner::new(scale);
+        let cfg = runner.engine_cfg(pair);
+        let stats = runner.run_engine(pair, TaskId::HumanEval, EngineId::SpecBranch, &cfg);
+        let rounds = stats.rounds.max(1) as f64;
+        let hrad_ms = stats.hrad_ms / stats.hrad_calls.max(1) as f64;
+        let draft_ms = stats.draft_busy_ms / rounds;
+        let verify_ms = stats.target_busy_ms / rounds;
+        let step_ms = stats.elapsed_ms / rounds;
+        tm.row(vec![
+            ModelPair::get(pair).name.to_string(),
+            format!("{hrad_ms:.2}"),
+            format!("{draft_ms:.1}"),
+            format!("{verify_ms:.1}"),
+            pct(hrad_ms / step_ms.max(1e-9)),
+        ]);
+    }
+    tables.push(tm);
+    emit("fig7_resources", &tables);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10: optimal draft length over iterations
+// ---------------------------------------------------------------------------
+
+pub fn fig10(scale: Scale) {
+    let pair = PairId::Vicuna68m13b;
+    let cfg = SimConfig::new(ModelPair::get(pair), Task::get(TaskId::MtBench));
+    let backend = SimBackend::new(cfg);
+    let e_cfg = EngineConfig {
+        gamma: 8,
+        max_new_tokens: 60 * scale.requests.max(1),
+        ..Default::default()
+    };
+    let engine = engines::build(EngineId::Sps, e_cfg);
+    let mut s = backend.new_session(17);
+    let out = engine.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(3));
+    // Per-round accepted lengths are the "optimal γ had you known" trace.
+    let hist = out.stats.accepted_hist.as_ref().unwrap();
+    let mut t = Table::new(
+        "Fig 10 — accepted-length variability across iterations (Vicuna, γ=8)",
+        &["accepted k", "rounds", "share"],
+    );
+    for (k, &c) in hist.counts().iter().enumerate() {
+        t.row(vec![
+            k.to_string(),
+            c.to_string(),
+            pct(c as f64 / hist.total().max(1) as f64),
+        ]);
+    }
+    let mut spread = Table::new(
+        "Fig 10 — dispersion (motivates adaptive γ)",
+        &["mean", "p10", "p90", "fit alpha"],
+    );
+    let samples: Vec<f64> = hist
+        .counts()
+        .iter()
+        .enumerate()
+        .flat_map(|(k, &c)| std::iter::repeat(k as f64).take(c as usize))
+        .collect();
+    spread.row(vec![
+        f2(hist.mean()),
+        f2(crate::util::stats::percentile(&samples, 10.0)),
+        f2(crate::util::stats::percentile(&samples, 90.0)),
+        format!("{:.3}", fit_trunc_geometric(hist)),
+    ]);
+    emit("fig10_optimal_gamma", &[t, spread]);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 19 + Fig 3c: predictor accuracy vs staleness / scheme
+// ---------------------------------------------------------------------------
+
+pub fn fig19(scale: Scale) {
+    let rounds = 200 * scale.requests.max(1);
+    let mut t = Table::new(
+        "Fig 19 — H-RAD accuracy vs feature staleness (LLaMA 68M&7B, HumanEval)",
+        &["staleness (rounds)", "accuracy"],
+    );
+    for stale in 0..=4u32 {
+        let mut cfg = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::HumanEval),
+        );
+        cfg.hrad_staleness = stale;
+        let acc = hrad::measure_accuracy(&SimBackend::new(cfg), 6, rounds, 5).accuracy();
+        t.row(vec![stale.to_string(), pct(acc)]);
+    }
+
+    // Fig 3c: implicit / explicit / hybrid accuracy comparison. The sim
+    // exposes the hybrid predictor; implicit = confidence-threshold-only
+    // classifier; explicit = bucket-only (K-layer features without the
+    // confidence fallback): reuse measure_accuracy with degraded configs.
+    let mut t2 = Table::new(
+        "Fig 3c — predictor accuracy by scheme (proxy)",
+        &["scheme", "accuracy"],
+    );
+    let mk = |k: usize, stale: u32| {
+        let mut cfg = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::HumanEval),
+        );
+        cfg.hrad_k = k;
+        cfg.hrad_staleness = stale;
+        SimBackend::new(cfg)
+    };
+    let implicit = hrad::measure_accuracy(&mk(0, 0), 6, rounds, 7).accuracy();
+    let explicit = hrad::measure_accuracy(&mk(4, 2), 6, rounds, 7).accuracy();
+    let hybrid = hrad::measure_accuracy(&mk(4, 0), 6, rounds, 7).accuracy();
+    t2.row(vec!["implicit (confidence)".into(), pct(implicit)]);
+    t2.row(vec!["explicit (stale features)".into(), pct(explicit)]);
+    t2.row(vec!["hybrid (H-RAD)".into(), pct(hybrid)]);
+    emit("fig19_staleness", &[t, t2]);
+}
+
+// ---------------------------------------------------------------------------
+// Table 12/13: memory-constrained PP + single-GPU w/o branch
+// ---------------------------------------------------------------------------
+
+pub fn table12(scale: Scale) {
+    let mut runner = Runner::new(scale);
+    let pair = PairId::Deepseek13b33b;
+    let mut t = Table::new(
+        "Table 12 — PP variant under memory constraints (Deepseek, Spec-Bench)",
+        &["method", "MT-B", "QA", "Sum", "Math", "RAG", "Trans", "avg", "retention"],
+    );
+    let mut collect = |engine: EngineId, runner: &mut Runner| -> Vec<f64> {
+        let cfg = runner.engine_cfg(pair);
+        Task::SPEC_BENCH
+            .iter()
+            .map(|&task| runner.evaluate(pair, task, engine, &cfg).speedup)
+            .collect()
+    };
+    let sps = collect(EngineId::Sps, &mut runner);
+    let full = collect(EngineId::SpecBranch, &mut runner);
+    let pp = collect(EngineId::SpecBranchPp, &mut runner);
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    for (name, v) in [("SpS", &sps), ("SpecBranch", &full), ("SpecBranch(PP)", &pp)] {
+        let mut cells = vec![name.to_string()];
+        cells.extend(v.iter().map(|&s| fx(s)));
+        cells.push(fx(avg(v)));
+        cells.push(if name == "SpecBranch(PP)" {
+            pct(avg(&pp) / avg(&full))
+        } else {
+            "-".into()
+        });
+        t.row(cells);
+    }
+
+    // Table 13: single-GPU — SpecBranch w/o branch vs PEARL (degenerate).
+    let pair13 = PairId::Vicuna68m13b;
+    let mut t13 = Table::new(
+        "Table 13 — single GPU (Vicuna, Spec-Bench): w/o branch vs PEARL-as-SpS",
+        &["method", "MT-B", "QA", "Sum", "Math", "RAG", "Trans", "avg"],
+    );
+    let mut collect13 = |engine: EngineId, runner: &mut Runner| -> Vec<f64> {
+        let cfg = runner.engine_cfg(pair13);
+        Task::SPEC_BENCH
+            .iter()
+            .map(|&task| runner.evaluate(pair13, task, engine, &cfg).speedup)
+            .collect()
+    };
+    let pearl_sps = collect13(EngineId::Sps, &mut runner);
+    let nb = collect13(EngineId::SpecBranchNoBranch, &mut runner);
+    for (name, v) in [("PEARL(SpS)", &pearl_sps), ("SB w/o branch", &nb)] {
+        let mut cells = vec![name.to_string()];
+        cells.extend(v.iter().map(|&s| fx(s)));
+        cells.push(fx(avg(v)));
+        t13.row(cells);
+    }
+    emit("table12_memory_pp", &[t, t13]);
+}
+
+// ---------------------------------------------------------------------------
+// Smoke test of every experiment at fast scale
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_experiment_runs_at_fast_scale() {
+        let s = Scale::fast();
+        table2(s);
+        table3(s);
+        fig1b(s);
+        fig2(s);
+        fig5(s);
+        fig6(s);
+        table4(s);
+        table5(s);
+        table6(s);
+        fig7(s);
+        fig10(s);
+        fig19(s);
+        table12(s);
+    }
+
+    #[test]
+    fn table2_ordering_holds() {
+        // The paper's headline ordering on one representative pair.
+        let mut r = Runner::new(Scale::fast());
+        let pair = PairId::Deepseek13b33b;
+        let cfg = r.engine_cfg(pair);
+        let sps = r.evaluate(pair, TaskId::HumanEval, EngineId::Sps, &cfg).speedup;
+        let ours = r
+            .evaluate(pair, TaskId::HumanEval, EngineId::SpecBranch, &cfg)
+            .speedup;
+        assert!(ours > sps, "SpecBranch {ours:.2} vs SpS {sps:.2}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§6 + appendices) from the calibrated simulation backend.
+//! One `cargo bench` target per experiment wraps the functions here; each
+//! prints the paper-shaped table and saves JSON under
+//! `target/bench_reports/` (quoted by EXPERIMENTS.md).
+
+pub mod experiments;
+pub mod report;
+pub mod runner;
+
+pub use runner::{Runner, Scale};

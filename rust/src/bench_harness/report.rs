@@ -1,0 +1,143 @@
+//! Report formatting + persistence for the bench harness: aligned text
+//! tables (what `cargo bench` prints) and JSON files under
+//! `target/bench_reports/` (what EXPERIMENTS.md quotes).
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::util::json::{self, Value};
+
+/// A simple aligned text table.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "header",
+                json::arr(self.header.iter().map(|h| json::s(h)).collect()),
+            ),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| json::arr(r.iter().map(|c| json::s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Where bench reports land.
+pub fn report_dir() -> PathBuf {
+    let dir = PathBuf::from("target/bench_reports");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Persist a report value as pretty JSON; returns the path.
+pub fn save(name: &str, value: &Value) -> PathBuf {
+    let path = report_dir().join(format!("{name}.json"));
+    if let Ok(mut f) = std::fs::File::create(&path) {
+        let _ = f.write_all(value.to_string_pretty().as_bytes());
+        let _ = f.write_all(b"\n");
+    }
+    path
+}
+
+/// Save a set of tables under one experiment name and print them.
+pub fn emit(name: &str, tables: &[Table]) {
+    for t in tables {
+        t.print();
+        println!();
+    }
+    let v = json::arr(tables.iter().map(|t| t.to_json()).collect());
+    let path = save(name, &v);
+    println!("[report saved to {}]", path.display());
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(vec!["xxxx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("xxxx  y"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("demo", &["col"]);
+        t.row(vec!["v".into()]);
+        let v = t.to_json();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("demo"));
+    }
+}

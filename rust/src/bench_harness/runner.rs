@@ -1,0 +1,178 @@
+//! Shared bench runner: evaluate an engine on a (pair, task) workload and
+//! report paper metrics, with the AR baseline cached per configuration.
+
+use std::collections::HashMap;
+
+use crate::backend::sim::{SimBackend, SimConfig};
+use crate::backend::Backend;
+use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use crate::engines;
+use crate::metrics::DecodeStats;
+use crate::util::prng::Pcg32;
+
+/// Workload scale; `fast()` keeps `cargo test`-driven smoke runs quick.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub requests: usize,
+    pub max_new: usize,
+}
+
+impl Scale {
+    pub fn full() -> Scale {
+        Scale { requests: 8, max_new: 220 }
+    }
+
+    pub fn fast() -> Scale {
+        Scale { requests: 2, max_new: 80 }
+    }
+
+    /// From the environment: `SB_BENCH_FAST=1` selects the smoke scale.
+    pub fn from_env() -> Scale {
+        if std::env::var("SB_BENCH_FAST").is_ok() {
+            Scale::fast()
+        } else {
+            Scale::full()
+        }
+    }
+}
+
+/// Aggregated result of one (pair, task, engine) evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub pair: PairId,
+    pub task: TaskId,
+    pub engine: EngineId,
+    pub stats: DecodeStats,
+    pub speedup: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl EvalResult {
+    pub fn mean_accepted(&self) -> f64 {
+        self.stats.mean_accepted()
+    }
+
+    pub fn rollback_rate(&self) -> f64 {
+        self.stats.rollback_rate()
+    }
+}
+
+/// Default γ for a pair: the paper sizes γ against the speed ratio c.
+pub fn default_gamma(pair: PairId) -> usize {
+    (ModelPair::get(pair).c as usize).clamp(2, 8)
+}
+
+/// Bench runner with a cached AR baseline per (pair, task, scale).
+pub struct Runner {
+    scale: Scale,
+    seed: u64,
+    ar_cache: HashMap<(PairId, TaskId), DecodeStats>,
+    /// Extra knobs applied to every SimConfig (hrad layers etc.).
+    pub tune: fn(&mut SimConfig),
+}
+
+fn no_tune(_: &mut SimConfig) {}
+
+impl Runner {
+    pub fn new(scale: Scale) -> Runner {
+        Runner { scale, seed: 0xBEE5, ar_cache: HashMap::new(), tune: no_tune }
+    }
+
+    pub fn scale(&self) -> Scale {
+        self.scale
+    }
+
+    fn backend(&self, pair: PairId, task: TaskId) -> SimBackend {
+        let mut cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+        (self.tune)(&mut cfg);
+        SimBackend::new(cfg)
+    }
+
+    /// Run an engine over the workload; merged stats across requests.
+    pub fn run_engine(
+        &self,
+        pair: PairId,
+        task: TaskId,
+        engine_id: EngineId,
+        cfg: &EngineConfig,
+    ) -> DecodeStats {
+        let backend = self.backend(pair, task);
+        let engine = engines::build(engine_id, cfg.clone());
+        let task_cfg = Task::get(task);
+        let mut merged = DecodeStats::with_hist(cfg.gamma.max(8));
+        for r in 0..self.scale.requests {
+            let seed = self.seed ^ (r as u64 * 7919);
+            let mut rng = Pcg32::new(seed);
+            let prompt: Vec<u32> = (0..task_cfg.prompt_len.min(48).max(4))
+                .map(|_| rng.below(60))
+                .collect();
+            let mut session = backend.new_session(seed);
+            let out = engine.generate(session.as_mut(), &prompt, &mut rng);
+            merged.merge(&out.stats);
+        }
+        merged
+    }
+
+    /// AR baseline for the same workload (cached).
+    pub fn ar_baseline(&mut self, pair: PairId, task: TaskId, cfg: &EngineConfig) -> DecodeStats {
+        if let Some(s) = self.ar_cache.get(&(pair, task)) {
+            return s.clone();
+        }
+        let stats = self.run_engine(pair, task, EngineId::Autoregressive, cfg);
+        self.ar_cache.insert((pair, task), stats.clone());
+        stats
+    }
+
+    /// Full paper-metric evaluation of one engine.
+    pub fn evaluate(
+        &mut self,
+        pair: PairId,
+        task: TaskId,
+        engine_id: EngineId,
+        cfg: &EngineConfig,
+    ) -> EvalResult {
+        let stats = self.run_engine(pair, task, engine_id, cfg);
+        let ar = self.ar_baseline(pair, task, cfg);
+        EvalResult {
+            pair,
+            task,
+            engine: engine_id,
+            speedup: stats.speedup_vs(&ar),
+            tokens_per_sec: stats.tokens_per_sec(),
+            stats,
+        }
+    }
+
+    pub fn engine_cfg(&self, pair: PairId) -> EngineConfig {
+        EngineConfig {
+            gamma: default_gamma(pair),
+            max_new_tokens: self.scale.max_new,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_produces_sane_numbers() {
+        let mut r = Runner::new(Scale::fast());
+        let cfg = r.engine_cfg(PairId::Deepseek13b33b);
+        let e = r.evaluate(PairId::Deepseek13b33b, TaskId::HumanEval, EngineId::SpecBranch, &cfg);
+        assert!(e.speedup > 1.0, "speedup {}", e.speedup);
+        assert!(e.mean_accepted() >= 1.0);
+        assert!(e.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn ar_cache_hit_is_identical() {
+        let mut r = Runner::new(Scale::fast());
+        let cfg = r.engine_cfg(PairId::Llama68m7b);
+        let a = r.ar_baseline(PairId::Llama68m7b, TaskId::Qa, &cfg);
+        let b = r.ar_baseline(PairId::Llama68m7b, TaskId::Qa, &cfg);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert_eq!(a.elapsed_ms, b.elapsed_ms);
+    }
+}

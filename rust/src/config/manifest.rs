@@ -1,0 +1,172 @@
+//! Artifacts manifest: the shape contract written by `python/compile/aot.py`
+//! and consumed by [`crate::runtime`].
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor in an entry point's signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled function.
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub seq_max: usize,
+    pub gamma_max: usize,
+    /// Verify/chunk block size (γ_max + 1).
+    pub block: usize,
+    pub hrad_d_in: usize,
+    pub hrad_k: usize,
+    pub target_layers: usize,
+    pub target_d_model: usize,
+    pub entry_points: Vec<EntryPoint>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(dir, &v)
+    }
+
+    /// Default artifacts directory: `$SPECBRANCH_ARTIFACTS` or `<cwd>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SPECBRANCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    fn from_json(dir: PathBuf, v: &Value) -> Result<Manifest> {
+        let usize_at = |path: &str| -> Result<usize> {
+            v.get(path)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing '{path}'"))
+        };
+        let mut entry_points = Vec::new();
+        let eps = v
+            .get("entry_points")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entry_points"))?;
+        for (name, ep) in eps {
+            let file = ep
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            entry_points.push(EntryPoint {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: parse_specs(ep.get("inputs"))?,
+                outputs: parse_specs(ep.get("outputs"))?,
+            });
+        }
+        Ok(Manifest {
+            vocab: usize_at("vocab")?,
+            seq_max: usize_at("seq_max")?,
+            gamma_max: usize_at("gamma_max")?,
+            block: usize_at("block")?,
+            hrad_d_in: usize_at("hrad.d_in")?,
+            hrad_k: usize_at("hrad.k_layers")?,
+            target_layers: usize_at("target.n_layers")?,
+            target_d_model: usize_at("target.d_model")?,
+            entry_points,
+            dir,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.entry_points
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no entry point '{name}' in manifest"))
+    }
+}
+
+fn parse_specs(v: Option<&Value>) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("bad tensor spec list"))?;
+    arr.iter()
+        .map(|item| {
+            let t = item.as_arr().ok_or_else(|| anyhow!("bad tensor spec"))?;
+            let name = t
+                .first()
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing name"))?;
+            let dtype = t
+                .get(1)
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?;
+            let shape = t
+                .get(2)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name: name.to_string(), dtype: dtype.to_string(), shape })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "vocab": 64, "seq_max": 160, "gamma_max": 8, "block": 9,
+      "hrad": {"k_layers": 4, "d_in": 576},
+      "target": {"n_layers": 4, "d_model": 128},
+      "draft": {"n_layers": 2, "d_model": 64},
+      "entry_points": {
+        "draft_step": {
+          "file": "draft_step.hlo.txt",
+          "inputs": [["tokens", "i32", [1]], ["kv", "f32", [2,2,4,160,16]],
+                     ["cur_len", "i32", []]],
+          "outputs": [["logits", "f32", [1, 64]], ["hiddens", "f32", [1,128]],
+                      ["kv", "f32", [2,2,4,160,16]]]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &v).unwrap();
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.block, 9);
+        assert_eq!(m.hrad_d_in, 576);
+        let ep = m.entry("draft_step").unwrap();
+        assert_eq!(ep.inputs.len(), 3);
+        assert_eq!(ep.inputs[1].elems(), 2 * 2 * 4 * 160 * 16);
+        assert_eq!(ep.outputs[0].shape, vec![1, 64]);
+        assert!(m.entry("nope").is_err());
+    }
+}

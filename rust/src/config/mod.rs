@@ -1,0 +1,134 @@
+//! Configuration system: model-pair registry, engine/task configs, and the
+//! artifacts manifest (shape contract with the Python compile path).
+
+pub mod manifest;
+pub mod pairs;
+pub mod tasks;
+
+pub use manifest::Manifest;
+pub use pairs::{ModelPair, PairId};
+pub use tasks::{Task, TaskId};
+
+/// Engine selection (paper Table 2 row set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineId {
+    /// Vanilla autoregressive decoding (the 1.00x baseline).
+    Autoregressive,
+    /// Vanilla speculative decoding (SpS, Chen et al. 2023).
+    Sps,
+    /// Entropy-threshold early-stopping drafts (AdaEDL).
+    AdaEdl,
+    /// N-gram trajectory-cache speculation, no draft model (Lookahead).
+    Lookahead,
+    /// Parallel SD with pre/post-verify, static draft length (PEARL).
+    Pearl,
+    /// This paper: H-RAD + rollback-aware branch parallelism.
+    SpecBranch,
+    /// Ablation: SpecBranch without branch resampling (Fig. 6, Table 13).
+    SpecBranchNoBranch,
+    /// Ablation: SpecBranch without H-RAD (Fig. 6).
+    SpecBranchNoHrad,
+    /// Memory-constrained pipeline-parallel variant (Table 12).
+    SpecBranchPp,
+}
+
+impl EngineId {
+    pub const ALL_BASELINES: [EngineId; 5] = [
+        EngineId::Sps,
+        EngineId::AdaEdl,
+        EngineId::Lookahead,
+        EngineId::Pearl,
+        EngineId::SpecBranch,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineId::Autoregressive => "autoregressive",
+            EngineId::Sps => "sps",
+            EngineId::AdaEdl => "adaedl",
+            EngineId::Lookahead => "lookahead",
+            EngineId::Pearl => "pearl",
+            EngineId::SpecBranch => "specbranch",
+            EngineId::SpecBranchNoBranch => "specbranch-no-branch",
+            EngineId::SpecBranchNoHrad => "specbranch-no-hrad",
+            EngineId::SpecBranchPp => "specbranch-pp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineId> {
+        Some(match s {
+            "ar" | "autoregressive" => EngineId::Autoregressive,
+            "sps" | "sd" => EngineId::Sps,
+            "adaedl" => EngineId::AdaEdl,
+            "lookahead" => EngineId::Lookahead,
+            "pearl" => EngineId::Pearl,
+            "specbranch" => EngineId::SpecBranch,
+            "specbranch-no-branch" => EngineId::SpecBranchNoBranch,
+            "specbranch-no-hrad" => EngineId::SpecBranchNoHrad,
+            "specbranch-pp" => EngineId::SpecBranchPp,
+            _ => return None,
+        })
+    }
+}
+
+/// Tunables shared by every engine (paper §6 implementation details).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Static draft length γ (SpS/PEARL) or γ_max cap (adaptive engines).
+    pub gamma: usize,
+    /// Implicit confidence threshold ε (Eq. 6 soft signal; Table 4 sweep).
+    pub epsilon: f64,
+    /// Max branches k_max at a branch point (Eq. 7; paper caps at 6).
+    pub k_max: usize,
+    /// Draft sampling temperature (paper: 1.0 for top-k branch sampling).
+    pub draft_temperature: f64,
+    /// Target sampling temperature (paper main results: 0 = greedy).
+    pub target_temperature: f64,
+    /// Lookahead n-gram size.
+    pub ngram: usize,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+    /// Number of target feature layers K consumed by H-RAD (Table 5).
+    pub hrad_k: usize,
+    /// Deterministic seed.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            gamma: 6,
+            epsilon: 0.4,
+            k_max: 4,
+            draft_temperature: 1.0,
+            target_temperature: 0.0,
+            ngram: 3,
+            max_new_tokens: 128,
+            hrad_k: 4,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_id_roundtrip() {
+        for e in [
+            EngineId::Autoregressive,
+            EngineId::Sps,
+            EngineId::AdaEdl,
+            EngineId::Lookahead,
+            EngineId::Pearl,
+            EngineId::SpecBranch,
+            EngineId::SpecBranchNoBranch,
+            EngineId::SpecBranchNoHrad,
+            EngineId::SpecBranchPp,
+        ] {
+            assert_eq!(EngineId::parse(e.name()), Some(e), "{}", e.name());
+        }
+        assert_eq!(EngineId::parse("nope"), None);
+    }
+}

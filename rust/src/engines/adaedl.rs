@@ -1,0 +1,129 @@
+//! AdaEDL (Agrawal et al. 2024): entropy-based early draft stopping.
+//!
+//! Identical to vanilla SD except the draft chain terminates as soon as the
+//! entropy-based lower bound on the acceptance probability,
+//! `1 − sqrt(λ·H(q))` (§4.2), drops below the stop threshold ε. An
+//! *implicit* dynamic-draft method: no extra model, but a per-task
+//! threshold to tune (Table 4's sensitivity study).
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::common::{commit_round, has_room, pending_tokens, propose_chain};
+use super::{Engine, GenerateOut};
+
+/// λ in the acceptance lower bound. The paper's default (0.15) is tuned
+/// for 32k-token vocabularies; the 64-symbol testbed's entropy range is
+/// narrower, so λ is recalibrated to keep the signal within the ε sweep
+/// of Table 4.
+const LAMBDA: f64 = 0.40;
+
+pub struct AdaEdl {
+    cfg: EngineConfig,
+}
+
+impl AdaEdl {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// The entropy-based acceptance lower bound for one draft distribution.
+    pub fn signal(q: &[f32]) -> f64 {
+        1.0 - (LAMBDA * sampling::entropy(q)).sqrt()
+    }
+}
+
+impl Engine for AdaEdl {
+    fn id(&self) -> EngineId {
+        EngineId::AdaEdl
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma = self.cfg.gamma.min(session.block() - 1);
+        let epsilon = self.cfg.epsilon;
+        let mut produced = 0usize;
+
+        while produced < self.cfg.max_new_tokens && has_room(session, gamma) {
+            let pending = pending_tokens(session, 0);
+            let proposal = propose_chain(
+                session,
+                0,
+                &pending,
+                gamma,
+                self.cfg.draft_temperature,
+                rng,
+                |q, _| Self::signal(q) < epsilon,
+            );
+            let mut block = vec![*session.committed().last().unwrap()];
+            block.extend_from_slice(&proposal.tokens);
+            let ticket = session.verify_submit(&block);
+            let v = session.verify_wait(ticket);
+            let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+                .iter()
+                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+                .collect();
+            let r = sampling::match_verify(
+                &proposal.tokens,
+                &proposal.qs,
+                &ps[..proposal.len()],
+                Some(&ps[proposal.len()]),
+                rng,
+            );
+            let next = r.next_token.expect("chain verify always yields a next token");
+            produced += commit_round(session, 0, &proposal, r.n_accepted, next, 0);
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+    use crate::engines::sps::Sps;
+
+    #[test]
+    fn signal_decreases_with_entropy() {
+        let peaked = vec![0.97f32, 0.01, 0.01, 0.01];
+        let flat = vec![0.25f32; 4];
+        assert!(AdaEdl::signal(&peaked) > AdaEdl::signal(&flat));
+    }
+
+    #[test]
+    fn reduces_rollback_vs_sps_on_poorly_aligned_pair() {
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Vicuna68m13b),
+            Task::get(TaskId::CnnDm),
+        );
+        let backend = SimBackend::new(cfg);
+        let e_cfg = EngineConfig {
+            gamma: 8,
+            epsilon: 0.4,
+            max_new_tokens: 200,
+            ..Default::default()
+        };
+        let mut s1 = backend.new_session(1);
+        let ada = AdaEdl::new(e_cfg.clone()).generate(s1.as_mut(), &[1, 2], &mut Pcg32::new(1));
+        let mut s2 = backend.new_session(1);
+        let sps = Sps::new(e_cfg).generate(s2.as_mut(), &[1, 2], &mut Pcg32::new(1));
+        assert!(
+            ada.stats.rollback_rate() < sps.stats.rollback_rate(),
+            "AdaEDL RB {:.3} should beat SpS RB {:.3}",
+            ada.stats.rollback_rate(),
+            sps.stats.rollback_rate()
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Vanilla autoregressive decoding — the paper's 1.00× baseline.
+//!
+//! One target forward per token; the draft model never runs. Every other
+//! engine's wall-time speedup is reported against this engine on the same
+//! backend.
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::{Engine, GenerateOut};
+
+pub struct Autoregressive {
+    cfg: EngineConfig,
+}
+
+impl Autoregressive {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl Engine for Autoregressive {
+    fn id(&self) -> EngineId {
+        EngineId::Autoregressive
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let mut out = Vec::new();
+        while out.len() < self.cfg.max_new_tokens && session.capacity_left() > 2 {
+            let last = *session.committed().last().unwrap();
+            let ticket = session.verify_submit(&[last]);
+            let v = session.verify_wait(ticket);
+            let p = sampling::apply_temperature(&v.ps[0], self.cfg.target_temperature);
+            let tok = sampling::sample(&p, rng);
+            session.target_commit(&[tok]);
+            out.push(tok);
+            let stats = session.stats_mut();
+            stats.rounds += 1;
+            stats.generated_tokens += 1;
+        }
+        GenerateOut { tokens: out, stats: session.take_stats() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+
+    #[test]
+    fn generates_requested_tokens_at_target_rate() {
+        let pair = ModelPair::get(PairId::Llama68m7b);
+        let cfg = SimConfig::new(pair.clone(), Task::get(TaskId::MtBench));
+        let backend = SimBackend::new(cfg);
+        let mut session = backend.new_session(0);
+        let engine = Autoregressive::new(EngineConfig {
+            max_new_tokens: 50,
+            ..Default::default()
+        });
+        let mut rng = Pcg32::new(0);
+        let out = engine.generate(session.as_mut(), &[1, 2, 3], &mut rng);
+        assert_eq!(out.tokens.len(), 50);
+        // AR decode speed = 1000 / T_p tokens/s (modulo prefill).
+        let tps = out.stats.tokens_per_sec();
+        let expect = 1000.0 / pair.target_ms();
+        assert!(
+            (tps - expect).abs() / expect < 0.1,
+            "tps {tps} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Deepseek13b33b),
+            Task::get(TaskId::Gsm8k),
+        );
+        let backend = SimBackend::new(cfg);
+        let engine = Autoregressive::new(EngineConfig {
+            max_new_tokens: 30,
+            target_temperature: 0.0,
+            ..Default::default()
+        });
+        let mut a = backend.new_session(7);
+        let mut b = backend.new_session(7);
+        let out_a = engine.generate(a.as_mut(), &[5, 6, 7], &mut Pcg32::new(1));
+        let out_b = engine.generate(b.as_mut(), &[5, 6, 7], &mut Pcg32::new(2));
+        assert_eq!(out_a.tokens, out_b.tokens, "greedy must ignore rng");
+    }
+}

@@ -1,0 +1,175 @@
+//! Shared engine plumbing: the draft-proposal loop and the
+//! commit/rollback bookkeeping every chain-style engine uses.
+
+use crate::backend::{BranchId, Session};
+use crate::metrics::DecodeStats;
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+/// A drafted chain continuation: proposed tokens plus the (already
+/// temperature-adjusted) draft distribution each was sampled from.
+#[derive(Clone, Debug, Default)]
+pub struct Proposal {
+    pub tokens: Vec<Token>,
+    pub qs: Vec<Vec<f32>>,
+    /// Raw (temperature-1) confidence max q(x) per proposed position.
+    pub confidences: Vec<f64>,
+}
+
+impl Proposal {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Draft up to `gamma` tokens on `branch`.
+///
+/// `pending` are committed-but-unconsumed tokens the draft must catch up on
+/// first (at least the last committed token); the distribution returned by
+/// consuming the final pending token is the proposal distribution for the
+/// first new position. `stop` may cut the chain early (implicit methods):
+/// it sees the *raw* q distribution and the number of tokens proposed so
+/// far, and is consulted before each proposal beyond the first.
+pub fn propose_chain(
+    session: &mut dyn Session,
+    branch: BranchId,
+    pending: &[Token],
+    gamma: usize,
+    draft_temperature: f64,
+    rng: &mut Pcg32,
+    mut stop: impl FnMut(&[f32], usize) -> bool,
+) -> Proposal {
+    assert!(!pending.is_empty(), "pending must include the last committed token");
+    let mut q_raw = Vec::new();
+    for &tok in pending {
+        q_raw = session.draft_forward(branch, tok);
+    }
+    let mut out = Proposal::default();
+    for i in 0..gamma {
+        if i > 0 && stop(&q_raw, i) {
+            break;
+        }
+        let q = sampling::apply_temperature(&q_raw, draft_temperature);
+        let tok = sampling::sample(&q, rng);
+        out.confidences.push(sampling::confidence(&q_raw));
+        out.tokens.push(tok);
+        out.qs.push(q);
+        if i + 1 < gamma {
+            q_raw = session.draft_forward(branch, tok);
+        }
+    }
+    out
+}
+
+/// Post-verification bookkeeping shared by the chain engines: commit the
+/// accepted prefix + the follow-up token, roll the draft branch back so its
+/// consumed length equals `committed − 1`, and account rollback tokens.
+///
+/// Returns the number of output tokens committed this round.
+pub fn commit_round(
+    session: &mut dyn Session,
+    branch: BranchId,
+    proposal: &Proposal,
+    n_accepted: usize,
+    next_token: Token,
+    stats_extra_rollback: u64,
+) -> usize {
+    let mut commit: Vec<Token> = proposal.tokens[..n_accepted].to_vec();
+    commit.push(next_token);
+    session.target_commit(&commit);
+    let new_committed = session.target_len();
+    // Draft consumed must equal committed − 1 (the trailing committed token
+    // is unconsumed and will seed the next proposal chain).
+    let want = new_committed - 1;
+    if session.draft_len(branch) > want {
+        session.draft_rollback(branch, want);
+    }
+    let rejected = (proposal.len() - n_accepted) as u64;
+    let stats: &mut DecodeStats = session.stats_mut();
+    stats.rounds += 1;
+    stats.proposed_tokens += proposal.len() as u64;
+    stats.rollback_tokens += rejected + stats_extra_rollback;
+    stats.generated_tokens += commit.len() as u64;
+    if n_accepted == proposal.len() {
+        stats.all_accept_rounds += 1;
+    }
+    if let Some(h) = stats.accepted_hist.as_mut() {
+        h.add(n_accepted);
+    }
+    commit.len()
+}
+
+/// Tokens committed to the target but not yet consumed by the draft branch
+/// — what the next proposal chain must catch up on. Always non-empty once
+/// the invariant `draft_len ≤ committed − 1` holds (it contains at least
+/// the last committed token; two tokens after a fully-accepted round whose
+/// final draft token was never consumed).
+pub fn pending_tokens(session: &dyn Session, branch: BranchId) -> Vec<Token> {
+    let consumed = session.draft_len(branch);
+    let committed = session.committed();
+    debug_assert!(consumed < committed.len(), "draft ran past committed");
+    committed[consumed..].to_vec()
+}
+
+/// True when the session can still fit one more verification round.
+pub fn has_room(session: &dyn Session, gamma: usize) -> bool {
+    session.capacity_left() > gamma + 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+
+    fn sim_session() -> Box<dyn Session> {
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::MtBench),
+        );
+        SimBackend::new(cfg).new_session(1)
+    }
+
+    #[test]
+    fn propose_chain_returns_gamma_tokens() {
+        let mut s = sim_session();
+        s.prefill(&[1, 2, 3, 4]);
+        let mut rng = Pcg32::new(0);
+        let p = propose_chain(s.as_mut(), 0, &[4], 5, 1.0, &mut rng, |_, _| false);
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.qs.len(), 5);
+        assert_eq!(p.confidences.len(), 5);
+        // Draft consumed = 3 (prefill) + 1 (pending) + 4 (all but last proposal).
+        assert_eq!(s.draft_len(0), 8);
+    }
+
+    #[test]
+    fn propose_chain_early_stop() {
+        let mut s = sim_session();
+        s.prefill(&[1, 2, 3, 4]);
+        let mut rng = Pcg32::new(0);
+        let p = propose_chain(s.as_mut(), 0, &[4], 8, 1.0, &mut rng, |_, i| i >= 2);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn commit_round_aligns_draft_to_committed() {
+        let mut s = sim_session();
+        s.prefill(&[1, 2, 3, 4]);
+        let mut rng = Pcg32::new(0);
+        let p = propose_chain(s.as_mut(), 0, &[4], 4, 1.0, &mut rng, |_, _| false);
+        let n = commit_round(s.as_mut(), 0, &p, 2, 9, 0);
+        assert_eq!(n, 3); // 2 accepted + correction
+        assert_eq!(s.target_len(), 7);
+        assert_eq!(s.draft_len(0), 6);
+        let st = s.stats_mut();
+        assert_eq!(st.rounds, 1);
+        assert_eq!(st.rollback_tokens, 2);
+        assert_eq!(st.generated_tokens, 3);
+    }
+}

@@ -1,0 +1,202 @@
+//! Lookahead decoding (Fu et al. 2024), trajectory-cache flavour: n-gram
+//! speculation with **no draft model**.
+//!
+//! The engine maintains a cache from n-gram contexts (the last `n` tokens)
+//! to previously observed continuations; at each step it chains cache hits
+//! into a speculative run and has the target verify it greedily (the q
+//! distribution of an n-gram "draft" is a point mass, so `Match` reduces to
+//! exact-match against the target sample). With no cache hit it degrades
+//! to one-token AR steps — which is why the paper reports it weakest
+//! (Table 2) on tasks with little verbatim repetition.
+
+use std::collections::HashMap;
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::{Engine, GenerateOut};
+
+pub struct Lookahead {
+    cfg: EngineConfig,
+}
+
+impl Lookahead {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+/// N-gram trajectory cache.
+pub struct NgramCache {
+    n: usize,
+    map: HashMap<Vec<Token>, Token>,
+}
+
+impl NgramCache {
+    pub fn new(n: usize) -> Self {
+        Self { n: n.max(1), map: HashMap::new() }
+    }
+
+    /// Ingest a token stream, recording every (n-gram → next) pair.
+    /// Later occurrences overwrite earlier ones (recency wins).
+    pub fn ingest(&mut self, stream: &[Token]) {
+        if stream.len() <= self.n {
+            return;
+        }
+        for w in stream.windows(self.n + 1) {
+            self.map.insert(w[..self.n].to_vec(), w[self.n]);
+        }
+    }
+
+    /// Chain up to `max_len` continuations for the given context suffix.
+    pub fn lookup_chain(&self, context: &[Token], max_len: usize) -> Vec<Token> {
+        if context.len() < self.n {
+            return Vec::new();
+        }
+        let mut key: Vec<Token> = context[context.len() - self.n..].to_vec();
+        let mut out = Vec::new();
+        while out.len() < max_len {
+            match self.map.get(&key) {
+                Some(&next) => {
+                    out.push(next);
+                    key.remove(0);
+                    key.push(next);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Engine for Lookahead {
+    fn id(&self) -> EngineId {
+        EngineId::Lookahead
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma = self.cfg.gamma.min(session.block() - 1);
+        let vocab = session.vocab();
+        let mut cache = NgramCache::new(self.cfg.ngram);
+        cache.ingest(prompt);
+        let mut produced = 0usize;
+
+        while produced < self.cfg.max_new_tokens && session.capacity_left() > gamma + 2 {
+            let committed = session.committed().to_vec();
+            let speculation = cache.lookup_chain(&committed, gamma);
+
+            let mut block = vec![*committed.last().unwrap()];
+            block.extend_from_slice(&speculation);
+            let ticket = session.verify_submit(&block);
+            let v = session.verify_wait(ticket);
+            let ps: Vec<Vec<f32>> = v
+                .ps
+                .iter()
+                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+                .collect();
+
+            // Point-mass drafts: accept speculation[i] iff it matches the
+            // target's own sample at that position.
+            let mut commit: Vec<Token> = Vec::new();
+            let mut n_accepted = 0usize;
+            let mut rejected = false;
+            for (i, &spec_tok) in speculation.iter().enumerate() {
+                let t = sampling::sample(&ps[i], rng);
+                if t == spec_tok {
+                    commit.push(spec_tok);
+                    n_accepted += 1;
+                } else {
+                    commit.push(t); // target's own token replaces the miss
+                    rejected = true;
+                    break;
+                }
+            }
+            if !rejected {
+                // Everything matched (or nothing speculated): sample the
+                // bonus token from the last distribution.
+                let t = sampling::sample(&ps[speculation.len()], rng);
+                commit.push(t);
+            }
+
+            session.target_commit(&commit);
+            produced += commit.len();
+            cache.ingest(session.committed());
+
+            let stats = session.stats_mut();
+            stats.rounds += 1;
+            stats.proposed_tokens += speculation.len() as u64;
+            stats.rollback_tokens += (speculation.len() - n_accepted) as u64;
+            stats.generated_tokens += commit.len() as u64;
+            if n_accepted == speculation.len() {
+                stats.all_accept_rounds += 1;
+            }
+            if let Some(h) = stats.accepted_hist.as_mut() {
+                h.add(n_accepted);
+            }
+            let _ = vocab;
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+
+    #[test]
+    fn ngram_cache_chains() {
+        let mut c = NgramCache::new(2);
+        c.ingest(&[1, 2, 3, 1, 2, 3, 1, 2]);
+        // context ..1,2 -> 3; ..2,3 -> 1; ..3,1 -> 2
+        assert_eq!(c.lookup_chain(&[5, 1, 2], 4), vec![3, 1, 2, 3]);
+        assert!(c.lookup_chain(&[9, 9, 9], 4).is_empty());
+        assert!(c.lookup_chain(&[1], 4).is_empty());
+    }
+
+    #[test]
+    fn generates_and_finds_some_repeats() {
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::Math), // repetitive task
+        );
+        let backend = SimBackend::new(cfg);
+        let mut s = backend.new_session(2);
+        let engine = Lookahead::new(EngineConfig {
+            gamma: 5,
+            ngram: 2,
+            max_new_tokens: 200,
+            target_temperature: 0.0,
+            ..Default::default()
+        });
+        let out = engine.generate(s.as_mut(), &[1, 2, 3, 4, 5, 6], &mut Pcg32::new(4));
+        assert!(out.tokens.len() >= 200);
+        // On a repetitive stream the cache must land at least some hits.
+        assert!(
+            out.stats.proposed_tokens > 0,
+            "no speculation ever proposed"
+        );
+        assert!(out.stats.mean_accepted() >= 1.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Decoding engines: the paper's method plus every baseline in Table 2.
+//!
+//! All engines are written once against [`crate::backend::Session`] and run
+//! unchanged on the real PJRT pair and the calibrated simulator:
+//!
+//! | engine | paper | drafting | verification |
+//! |---|---|---|---|
+//! | [`ar::Autoregressive`] | 1.00× baseline | none | 1 token/step |
+//! | [`sps::Sps`] | Chen et al. '23 | static γ | serialized |
+//! | [`adaedl::AdaEdl`] | Agrawal et al. '24 | entropy early-stop | serialized |
+//! | [`lookahead::Lookahead`] | Fu et al. '24 | n-gram cache | serialized |
+//! | [`pearl::Pearl`] | Liu et al. '24 | static γ | pre/post-verify overlap |
+//! | [`specbranch::SpecBranch`] | **this paper** | H-RAD hybrid | branch-parallel + Alg. 2 |
+
+pub mod adaedl;
+pub mod ar;
+pub mod common;
+pub mod lookahead;
+pub mod pearl;
+pub mod specbranch;
+pub mod sps;
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::metrics::DecodeStats;
+use crate::sampling::Token;
+use crate::util::prng::Pcg32;
+
+/// Result of one generation request.
+#[derive(Clone, Debug)]
+pub struct GenerateOut {
+    /// Generated tokens (prompt excluded).
+    pub tokens: Vec<Token>,
+    pub stats: DecodeStats,
+}
+
+/// A decoding engine: drives one [`Session`] to continue one prompt.
+pub trait Engine: Send + Sync {
+    fn id(&self) -> EngineId;
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut;
+}
+
+/// Construct an engine by id.
+pub fn build(id: EngineId, cfg: EngineConfig) -> Box<dyn Engine> {
+    match id {
+        EngineId::Autoregressive => Box::new(ar::Autoregressive::new(cfg)),
+        EngineId::Sps => Box::new(sps::Sps::new(cfg)),
+        EngineId::AdaEdl => Box::new(adaedl::AdaEdl::new(cfg)),
+        EngineId::Lookahead => Box::new(lookahead::Lookahead::new(cfg)),
+        EngineId::Pearl => Box::new(pearl::Pearl::new(cfg)),
+        EngineId::SpecBranch => Box::new(specbranch::SpecBranch::new(cfg)),
+        EngineId::SpecBranchNoBranch => {
+            Box::new(specbranch::SpecBranch::ablation(cfg, false, true, false))
+        }
+        EngineId::SpecBranchNoHrad => {
+            Box::new(specbranch::SpecBranch::ablation(cfg, true, false, false))
+        }
+        EngineId::SpecBranchPp => {
+            Box::new(specbranch::SpecBranch::ablation(cfg, true, true, true))
+        }
+    }
+}

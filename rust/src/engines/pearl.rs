@@ -1,0 +1,211 @@
+//! PEARL (Liu et al. 2024): parallel speculative decoding with pre-verify
+//! and post-verify, static draft length.
+//!
+//! The two-stage pipeline of Fig. 1(a):
+//! * **pre-verify** — while the draft produces the rest of a segment, the
+//!   target verifies the segment's *first* token in parallel, catching
+//!   immediate rejections one stage early;
+//! * **post-verify** — while the target verifies segment `S_k`, the draft
+//!   optimistically produces segment `S_{k+1}` assuming full acceptance.
+//!
+//! The paper's critique (§1) is visible in this implementation: the
+//! speculative next segment is useful only under **All-Accept**; any
+//! mid-sequence rejection dooms every post-verify token ("doomed tokens"),
+//! so rollback grows with misalignment — exactly what SpecBranch's
+//! rollback-aware branching removes.
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::common::{commit_round, has_room, propose_chain};
+use super::{Engine, GenerateOut};
+
+pub struct Pearl {
+    cfg: EngineConfig,
+}
+
+impl Pearl {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl Engine for Pearl {
+    fn id(&self) -> EngineId {
+        EngineId::Pearl
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma = self.cfg.gamma.min(session.block() - 1);
+        let t_draft = self.cfg.draft_temperature;
+        let t_target = self.cfg.target_temperature;
+        let mut produced = 0usize;
+
+        // Draft phase with pre-verify: propose the first token, launch its
+        // verification, keep drafting the remaining γ−1 in parallel.
+        'outer: while produced < self.cfg.max_new_tokens && has_room(session, 2 * gamma) {
+            let last = *session.committed().last().unwrap();
+            let first = propose_chain(session, 0, &[last], 1, t_draft, rng, |_, _| false);
+            let pre_ticket = session.verify_submit(&[last, first.tokens[0]]);
+            let rest = propose_chain(
+                session,
+                0,
+                &[first.tokens[0]],
+                gamma - 1,
+                t_draft,
+                rng,
+                |_, _| false,
+            );
+            let mut segment = first.clone();
+            segment.tokens.extend(rest.tokens);
+            segment.qs.extend(rest.qs);
+            segment.confidences.extend(rest.confidences);
+
+            let pre = session.verify_wait(pre_ticket);
+            let p0 = sampling::apply_temperature(&pre.ps[0], t_target);
+            let r0 = sampling::match_verify(
+                &segment.tokens[..1],
+                &segment.qs[..1],
+                std::slice::from_ref(&p0),
+                None,
+                rng,
+            );
+            if r0.n_accepted == 0 {
+                // Pre-verify caught the rejection: the γ−1 post tokens are
+                // doomed before the big verification even starts.
+                produced += commit_round(session, 0, &segment, 0, r0.next_token.unwrap(), 0);
+                continue 'outer;
+            }
+
+            // Verify phase with post-verify drafting: verify the segment
+            // while optimistically drafting the next one. The segment's
+            // first token was already accepted by pre-verify — don't re-draw
+            // its acceptance in the first big verification.
+            let mut pre_accepted = 1usize;
+            loop {
+                let mut block = vec![*session.committed().last().unwrap()];
+                block.extend_from_slice(&segment.tokens);
+                let ticket = session.verify_submit(&block);
+                // Post-verify: draft S_{k+1} during verification, assuming
+                // full acceptance of S_k.
+                let next_segment = propose_chain(
+                    session,
+                    0,
+                    &[*segment.tokens.last().unwrap()],
+                    gamma,
+                    t_draft,
+                    rng,
+                    |_, _| false,
+                );
+                let v = session.verify_wait(ticket);
+                let ps: Vec<Vec<f32>> = v.ps[..segment.len() + 1]
+                    .iter()
+                    .map(|p| sampling::apply_temperature(p, t_target))
+                    .collect();
+                let r0 = sampling::match_verify(
+                    &segment.tokens[pre_accepted..],
+                    &segment.qs[pre_accepted..],
+                    &ps[pre_accepted..segment.len()],
+                    None,
+                    rng,
+                );
+                let r = sampling::MatchResult {
+                    n_accepted: pre_accepted + r0.n_accepted,
+                    next_token: r0.next_token,
+                };
+                pre_accepted = 0;
+                if r.n_accepted == segment.len() {
+                    // All-Accept: S_{k+1} remains valid; commit S_k and the
+                    // pipeline rolls on (no resample needed, §5.2).
+                    session.target_commit(&segment.tokens);
+                    let stats = session.stats_mut();
+                    stats.rounds += 1;
+                    stats.proposed_tokens += segment.len() as u64;
+                    stats.generated_tokens += segment.len() as u64;
+                    stats.all_accept_rounds += 1;
+                    if let Some(h) = stats.accepted_hist.as_mut() {
+                        h.add(segment.len());
+                    }
+                    produced += segment.len();
+                    segment = next_segment;
+                    if produced >= self.cfg.max_new_tokens || !has_room(session, 2 * gamma) {
+                        break 'outer;
+                    }
+                } else {
+                    // Mid-sequence rejection: every post-verify token of
+                    // S_{k+1} is doomed (the paper's headline rollback).
+                    let doomed = next_segment.len() as u64;
+                    produced += commit_round(
+                        session,
+                        0,
+                        &segment,
+                        r.n_accepted,
+                        r.next_token.unwrap(),
+                        doomed,
+                    );
+                    session.stats_mut().proposed_tokens += doomed;
+                    continue 'outer;
+                }
+            }
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+    use crate::engines::{ar::Autoregressive, sps::Sps};
+
+    fn bench_pair(pair: PairId, task: TaskId) -> (f64, f64, f64) {
+        let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+        let backend = SimBackend::new(cfg);
+        let gamma = (ModelPair::get(pair).c as usize).min(8);
+        let e_cfg = EngineConfig { gamma, max_new_tokens: 250, ..Default::default() };
+        let prompt = [1, 2, 3, 4];
+
+        let mut s = backend.new_session(1);
+        let ar = Autoregressive::new(e_cfg.clone()).generate(s.as_mut(), &prompt, &mut Pcg32::new(1));
+        let mut s = backend.new_session(1);
+        let sps = Sps::new(e_cfg.clone()).generate(s.as_mut(), &prompt, &mut Pcg32::new(1));
+        let mut s = backend.new_session(1);
+        let pearl = Pearl::new(e_cfg).generate(s.as_mut(), &prompt, &mut Pcg32::new(1));
+        (
+            sps.stats.speedup_vs(&ar.stats),
+            pearl.stats.speedup_vs(&ar.stats),
+            pearl.stats.rollback_rate(),
+        )
+    }
+
+    #[test]
+    fn beats_sps_on_well_aligned_pair() {
+        // Table 2 Deepseek rows: PEARL ≫ SpS when α is high.
+        let (sps, pearl, _) = bench_pair(PairId::Deepseek13b33b, TaskId::HumanEval);
+        assert!(
+            pearl > sps * 1.1,
+            "PEARL {pearl:.2}x should clearly beat SpS {sps:.2}x"
+        );
+    }
+
+    #[test]
+    fn still_beats_ar_on_poorly_aligned_pair() {
+        let (_, pearl, rb) = bench_pair(PairId::Vicuna68m13b, TaskId::CnnDm);
+        assert!(pearl > 1.0, "PEARL {pearl:.2}x");
+        // ... but with heavy rollback (Fig. 5: 66–90% for PEARL).
+        assert!(rb > 0.3, "expected high rollback, got {rb:.2}");
+    }
+}

@@ -1,0 +1,675 @@
+//! SpecBranch — the paper's method (§5): H-RAD hybrid drafting +
+//! rollback-aware branch parallelism with Branch Speculative Sampling.
+//!
+//! The engine is the paper's two-stage state machine (Fig. 9):
+//!
+//! * **Draft stage** (first round, and after every rollback): H-RAD
+//!   predicts the draft structure *a priori* from the (possibly stale)
+//!   target features; the draft proposes a chain W while the target idles.
+//! * **Branch stage** (steady state): H-RAD re-evaluates W *a posteriori*
+//!   with the fresh features of the verification that just completed
+//!   (Eq. 4–6), yielding `s_t ∈ {0,1,2}`:
+//!     - `s=0` (all-reject): retain nothing; branch at W's first token;
+//!     - `s=1` (soft): retain the confident prefix `q > ε`; branch at the
+//!       first unconfident token (Fig. 4 case 1);
+//!     - `s=2` (all-accept): retain all of W; branch at the next position.
+//!   The retained prefix is submitted for verification; **while it
+//!   verifies**, `k = max(1, ⌊k_max·(1−q(x_b))⌋)` branches (Eq. 7) fork
+//!   from the shared KV prefix, each continuing from one Top-k candidate
+//!   of the branch-point distribution. When verification lands, the chain
+//!   prefix is `Match`-verified and the branch point is resolved with
+//!   Branch Speculative Sampling (Alg. 2) — the winning branch's run-ahead
+//!   becomes the next round's W, so the pipeline keeps flowing without the
+//!   doomed-token verification PEARL pays for (§1).
+//!
+//! Ablations (Fig. 6, Tables 12/13) are flags on the same engine:
+//! `no branch` (k=1, serialized — H-RAD + vanilla SD), `no H-RAD`
+//! (confidence-only branch points, static budget), and `pp` (pipeline
+//! parallelism for memory-constrained deployments: per-round communication
+//! overhead + halved branch budget).
+
+use crate::backend::{BranchId, Session, VerifyOut};
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::common::{has_room, pending_tokens, propose_chain, Proposal};
+use super::{Engine, GenerateOut};
+
+pub struct SpecBranch {
+    cfg: EngineConfig,
+    use_branches: bool,
+    use_hrad: bool,
+    pp_mode: bool,
+}
+
+/// Per-round communication overhead of the PP variant (ms) — inter-GPU
+/// transfer of half-segment drafts (App. G.1).
+const PP_COMM_MS: f64 = 0.6;
+
+impl SpecBranch {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg, use_branches: true, use_hrad: true, pp_mode: false }
+    }
+
+    /// Ablation constructor: disable branch resampling and/or H-RAD, or
+    /// enable the memory-constrained pipeline-parallel variant.
+    pub fn ablation(cfg: EngineConfig, branches: bool, hrad: bool, pp: bool) -> Self {
+        Self { cfg, use_branches: branches, use_hrad: hrad, pp_mode: pp }
+    }
+
+    fn gamma_max(&self, session: &dyn Session) -> usize {
+        self.cfg.gamma.min(session.block() - 1)
+    }
+
+    /// H-RAD classification; `None` features (first round) defaults to the
+    /// soft signal, and the no-H-RAD ablation always uses confidence.
+    fn classify(
+        &self,
+        session: &mut dyn Session,
+        features: Option<&[f32]>,
+        next_token: Token,
+    ) -> usize {
+        if !self.use_hrad {
+            return 1;
+        }
+        match features {
+            None => 1,
+            Some(f) => {
+                let probs = session.hrad_predict(f, next_token);
+                let mut best = 0;
+                for i in 1..3 {
+                    if probs[i] > probs[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Branch-drafting budget per branch while one verification runs:
+    /// the speed ratio c bounds total draft steps (§5.2), shared across
+    /// the k batched branches (batch economy ≈ free), halved in PP mode.
+    fn branch_budget(&self, session: &dyn Session, _k: usize) -> usize {
+        let c = session.speed_ratio().max(1.0);
+        let steps = if self.pp_mode { (c / 2.0).floor() } else { c.floor() };
+        (steps as usize).clamp(1, self.gamma_max(session))
+    }
+}
+
+/// One spawned branch: its id, its branch-point candidate, and its
+/// run-ahead proposal.
+struct BranchState {
+    id: BranchId,
+    candidate: Token,
+    run_ahead: Proposal,
+}
+
+impl Engine for SpecBranch {
+    fn id(&self) -> EngineId {
+        if self.pp_mode {
+            EngineId::SpecBranchPp
+        } else if !self.use_branches {
+            EngineId::SpecBranchNoBranch
+        } else if !self.use_hrad {
+            EngineId::SpecBranchNoHrad
+        } else {
+            EngineId::SpecBranch
+        }
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        if self.use_branches {
+            self.generate_parallel(session, prompt, rng)
+        } else {
+            self.generate_serial(session, prompt, rng)
+        }
+    }
+}
+
+impl SpecBranch {
+    /// The full branch-parallel pipeline.
+    fn generate_parallel(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma_max = self.gamma_max(session);
+        let eps = self.cfg.epsilon;
+        let t_draft = self.cfg.draft_temperature;
+        let t_target = self.cfg.target_temperature;
+
+        let mut main: BranchId = 0;
+        let mut produced = 0usize;
+        // Running acceptance estimate (EMA of draft confidences) feeding
+        // the Theorem-1-derived planning caps.
+        let mut alpha_ema = 0.6f64;
+        // Winning-branch run-ahead from the previous round (the W of §5.2).
+        let mut wins = Proposal::default();
+        // Whether `wins` was drafted as a branch run-ahead (its discarded
+        // tail is branch-structure waste, excluded from RB per App. E.3)
+        // or on the main chain in the draft stage (tail counts as RB).
+        let mut wins_from_branch = false;
+        // Features of the last completed verification, at the last accepted
+        // position (posterior H-RAD input).
+        let mut features: Option<Vec<f32>> = None;
+
+        while produced < self.cfg.max_new_tokens && has_room(session, 2 * gamma_max) {
+            // ---------------- Draft stage (Fig. 9 left) ----------------
+            // Entered at the first round and after every rollback. H-RAD
+            // predicts the structure *a priori*: under the soft/all-accept
+            // signals the draft proposes a chain W while the target idles
+            // (the serialization cost rollback inherently pays); under the
+            // hard all-reject signal it skips straight to branching at the
+            // first token (Fig. 4 case 3) so the pipeline refills without a
+            // serial drafting phase.
+            if wins.is_empty() {
+                let last = *session.committed().last().unwrap();
+                let s_t = self.classify(session, features.as_deref(), last);
+                let pending = vec![last];
+                let cap = crate::theory::optimal_branch_retain(
+                    alpha_ema.clamp(0.05, 0.98),
+                    session.speed_ratio(),
+                    gamma_max,
+                );
+                let gamma = if s_t == 0 { 1 } else { cap.max(1) };
+                let confidence_stop = s_t == 1;
+                wins = propose_chain(session, main, &pending, gamma, t_draft, rng, |q, _| {
+                    confidence_stop && sampling::confidence(q) < eps
+                });
+                wins_from_branch = false;
+            }
+            // Every W flows through the branch stage exactly once: count it
+            // into the chain-draft total here (adopted run-aheads included).
+            session.stats_mut().proposed_tokens += wins.len() as u64;
+
+            // ---------------- Branch stage (Fig. 9 right) ----------------
+            let s_t = if wins.is_empty() {
+                0
+            } else {
+                self.classify(session, features.as_deref(), wins.tokens[0])
+            };
+            // Branch index b: how much of W we retain (Eq. 6), capped by
+            // the Theorem-1 optimal draft length for the locally estimated
+            // acceptance rate (Fig. 2: retaining past γ*(α, c) only feeds
+            // rollback accumulation).
+            let alpha_est = if wins.is_empty() {
+                alpha_ema
+            } else {
+                let mean = wins.confidences.iter().sum::<f64>() / wins.len() as f64;
+                alpha_ema = 0.8 * alpha_ema + 0.2 * mean;
+                mean
+            };
+            let b_cap = crate::theory::optimal_branch_retain(
+                alpha_est.clamp(0.05, 0.98),
+                session.speed_ratio(),
+                gamma_max,
+            );
+            let b = match s_t {
+                0 => 0,
+                2 => wins.len().min(b_cap.max(2)),
+                _ => wins
+                    .confidences
+                    .iter()
+                    .position(|&c| c < eps)
+                    .unwrap_or(wins.len())
+                    .min(b_cap),
+            };
+
+            // Branch-point draft distribution q(x_b).
+            let (q_b, conf_b) = if b < wins.len() {
+                (wins.qs[b].clone(), wins.confidences[b])
+            } else {
+                // Branch at the *next* position: catch the draft up to the
+                // last committed token (W may be empty after an all-reject
+                // re-entry) and take the next distribution.
+                let consumed = session.draft_len(main);
+                let mut q_raw = Vec::new();
+                if consumed < session.target_len() {
+                    // Post-rollback (W empty): replay the committed tokens
+                    // the draft has not seen yet.
+                    let catch_up: Vec<Token> = session.committed()[consumed..].to_vec();
+                    for &t in &catch_up {
+                        q_raw = session.draft_forward(main, t);
+                    }
+                } else {
+                    // W fully retained (s=2): consume its final token.
+                    q_raw = session.draft_forward(main, *wins.tokens.last().unwrap());
+                }
+                let conf = sampling::confidence(&q_raw);
+                (sampling::apply_temperature(&q_raw, t_draft), conf)
+            };
+
+            // Submit the retained prefix for verification.
+            let retained: Vec<Token> = wins.tokens[..b].to_vec();
+            let mut block = vec![*session.committed().last().unwrap()];
+            block.extend_from_slice(&retained);
+            let ticket = session.verify_submit(&block);
+
+            // ---- Branch resampling while the target verifies (Eq. 7) ----
+            let committed_len = session.target_len();
+            let fork_len = committed_len + b; // tokens consumed up to x_b
+            if session.draft_len(main) > fork_len {
+                session.draft_rollback(main, fork_len);
+            }
+            let k = if self.use_branches {
+                sampling::adaptive_branch_width(conf_b, self.cfg.k_max)
+            } else {
+                1
+            };
+            let candidates: Vec<Token> =
+                sampling::top_k_indices(&q_b, k).into_iter().map(|i| i as Token).collect();
+            let k = candidates.len();
+            let mut branch_ids: Vec<BranchId> = vec![main];
+            for _ in 1..k {
+                branch_ids.push(session.draft_fork(main));
+            }
+            // Feed each branch its candidate (one batched draft step), then
+            // run-ahead `budget` tokens per branch, batched across branches.
+            // Run-ahead length: c-bounded (the verification window is
+            // T_p = c·t regardless of this round's class), with per-branch
+            // confidence early stopping — drafting past the next branch
+            // point only manufactures rollback (Algorithm 1's
+            // "γ = Predictor(...)" applied to the branch stage).
+            let budget = self.branch_budget(session, k).min(b_cap + 1);
+            let mut qs_next = session.draft_forward_batch(&branch_ids, &candidates);
+            let mut branches: Vec<BranchState> = branch_ids
+                .iter()
+                .zip(&candidates)
+                .map(|(&id, &candidate)| BranchState {
+                    id,
+                    candidate,
+                    run_ahead: Proposal::default(),
+                })
+                .collect();
+            let mut active: Vec<bool> = vec![true; k];
+            for _step in 0..budget {
+                let mut step_ids = Vec::with_capacity(k);
+                let mut toks = Vec::with_capacity(k);
+                for (i, (bs, q_raw)) in branches.iter_mut().zip(&qs_next).enumerate() {
+                    if !active[i] {
+                        continue;
+                    }
+                    let conf = sampling::confidence(q_raw);
+                    if self.use_hrad && _step > 0 && conf < eps {
+                        active[i] = false; // next branch point reached
+                        continue;
+                    }
+                    let q = sampling::apply_temperature(q_raw, t_draft);
+                    let tok = sampling::sample(&q, rng);
+                    bs.run_ahead.confidences.push(conf);
+                    bs.run_ahead.tokens.push(tok);
+                    bs.run_ahead.qs.push(q);
+                    step_ids.push(bs.id);
+                    toks.push(tok);
+                }
+                if step_ids.is_empty() {
+                    break;
+                }
+                if _step + 1 < budget {
+                    let fresh = session.draft_forward_batch(&step_ids, &toks);
+                    // Scatter refreshed distributions back to active slots.
+                    let mut it = fresh.into_iter();
+                    for (i, bs) in branches.iter().enumerate() {
+                        if active[i] && step_ids.contains(&bs.id) {
+                            qs_next[i] = it.next().unwrap();
+                        }
+                    }
+                }
+            }
+            if self.pp_mode {
+                session.overhead(PP_COMM_MS);
+            }
+
+            // ---------------- Join verification ----------------
+            let v: VerifyOut = session.verify_wait(ticket);
+            let ps: Vec<Vec<f32>> = v.ps[..b + 1]
+                .iter()
+                .map(|p| sampling::apply_temperature(p, t_target))
+                .collect();
+            let r = sampling::match_verify(&retained, &wins.qs[..b], &ps[..b], None, rng);
+
+            // W beyond x_b: chain rollback if W was main-chain drafted,
+            // branch-structure waste if it was a run-ahead (App. E.3).
+            let discarded_tail = (wins.len() - b) as u64;
+            let (tail_rb, tail_bw) = if wins_from_branch {
+                (0, discarded_tail)
+            } else {
+                (discarded_tail, 0)
+            };
+            let branch_tokens: u64 = branches.iter().map(|s| s.run_ahead.len() as u64).sum();
+
+            if r.n_accepted < b {
+                // ---- Mid-chain rejection: global rollback (Fig. 1a) ----
+                for bs in &branches {
+                    if bs.id != main {
+                        session.draft_release(bs.id);
+                    }
+                }
+                let mut commit = retained[..r.n_accepted].to_vec();
+                commit.push(r.next_token.unwrap());
+                session.target_commit(&commit);
+                session.draft_rollback(main, session.target_len() - 1);
+                produced += commit.len();
+                let row = r.n_accepted.min(v.features.len().saturating_sub(1));
+                features = v.features.get(row).cloned();
+                wins = Proposal::default();
+                let stats = session.stats_mut();
+                stats.rounds += 1;
+                stats.generated_tokens += commit.len() as u64;
+                stats.rollback_tokens += (b - r.n_accepted) as u64 + tail_rb;
+                stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
+                if let Some(h) = stats.accepted_hist.as_mut() {
+                    h.add(r.n_accepted);
+                }
+                continue;
+            }
+
+            // ---- Chain fully accepted: resolve the branch point (Alg. 2) ----
+            let p_bp = &ps[b];
+            let qs_cand: Vec<Vec<f32>> = (0..k).map(|_| q_b.clone()).collect();
+            let (bp_token, winner) =
+                sampling::branch_speculative_sample(p_bp, &candidates, &qs_cand, rng);
+
+            let mut commit = retained.clone();
+            commit.push(bp_token);
+            session.target_commit(&commit);
+            produced += commit.len();
+            let row = b.min(v.features.len().saturating_sub(1));
+            features = v.features.get(row).cloned();
+
+            match winner {
+                Some(j) => {
+                    // Adopt the winning branch; its run-ahead is next W.
+                    let losing_tokens: u64 = branches
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| *i != j)
+                        .map(|(_, s)| s.run_ahead.len() as u64 + 1)
+                        .sum();
+                    // Drop every losing branch. Branch 0 is permanent (the
+                    // session's root); if it loses, park it rolled back so
+                    // its storage stays bounded instead of releasing it.
+                    for (i, bs) in branches.iter().enumerate() {
+                        if i == j {
+                            continue;
+                        }
+                        if bs.id == 0 {
+                            let park = (session.target_len() - 1).min(session.draft_len(0));
+                            session.draft_rollback(0, park);
+                        } else {
+                            session.draft_release(bs.id);
+                        }
+                    }
+                    let win = branches.swap_remove(j);
+                    debug_assert_eq!(win.candidate, bp_token);
+                    main = win.id;
+                    wins = win.run_ahead;
+                    wins_from_branch = true;
+                    let hist_bucket = b.min(session.block() - 1);
+                    let stats = session.stats_mut();
+                    stats.rounds += 1;
+                    stats.generated_tokens += commit.len() as u64;
+                    stats.rollback_tokens += tail_rb;
+                    stats.branch_wasted_tokens += losing_tokens + tail_bw;
+                    stats.all_accept_rounds += 1;
+                    if let Some(h) = stats.accepted_hist.as_mut() {
+                        h.add(hist_bucket);
+                    }
+                }
+                None => {
+                    // No branch matched the target: rollback to draft stage.
+                    for bs in &branches {
+                        if bs.id != main {
+                            session.draft_release(bs.id);
+                        }
+                    }
+                    session.draft_rollback(main, session.target_len() - 1);
+                    wins = Proposal::default();
+                    let hist_bucket = b.min(session.block() - 1);
+                    let stats = session.stats_mut();
+                    stats.rounds += 1;
+                    stats.generated_tokens += commit.len() as u64;
+                    stats.rollback_tokens += tail_rb;
+                    stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
+                    if let Some(h) = stats.accepted_hist.as_mut() {
+                        h.add(hist_bucket);
+                    }
+                }
+            }
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+
+    /// The `w/o branch` ablation (Fig. 6, Table 13): H-RAD adaptive draft
+    /// lengths bolted onto the serialized draft-then-verify loop.
+    fn generate_serial(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma_max = self.gamma_max(session);
+        let eps = self.cfg.epsilon;
+        let mut produced = 0usize;
+        let mut features: Option<Vec<f32>> = None;
+
+        while produced < self.cfg.max_new_tokens && has_room(session, gamma_max) {
+            let last = *session.committed().last().unwrap();
+            let s_t = self.classify(session, features.as_deref(), last);
+            let gamma = if s_t == 0 { 1 } else { gamma_max };
+            let confidence_stop = s_t == 1;
+            let pending = pending_tokens(session, 0);
+            let proposal = propose_chain(
+                session,
+                0,
+                &pending,
+                gamma,
+                self.cfg.draft_temperature,
+                rng,
+                |q, _| confidence_stop && sampling::confidence(q) < eps,
+            );
+            session.stats_mut().proposed_tokens += proposal.len() as u64;
+            let mut block = vec![last];
+            block.extend_from_slice(&proposal.tokens);
+            let ticket = session.verify_submit(&block);
+            let v = session.verify_wait(ticket);
+            let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+                .iter()
+                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+                .collect();
+            let r = sampling::match_verify(
+                &proposal.tokens,
+                &proposal.qs,
+                &ps[..proposal.len()],
+                Some(&ps[proposal.len()]),
+                rng,
+            );
+            let next = r.next_token.expect("chain verify yields a token");
+            let mut commit = proposal.tokens[..r.n_accepted].to_vec();
+            commit.push(next);
+            session.target_commit(&commit);
+            let want = session.target_len() - 1;
+            if session.draft_len(0) > want {
+                session.draft_rollback(0, want);
+            }
+            produced += commit.len();
+            let row = r.n_accepted.min(v.features.len().saturating_sub(1));
+            features = v.features.get(row).cloned();
+            let stats = session.stats_mut();
+            stats.rounds += 1;
+            stats.generated_tokens += commit.len() as u64;
+            stats.rollback_tokens += (proposal.len() - r.n_accepted) as u64;
+            if r.n_accepted == proposal.len() {
+                stats.all_accept_rounds += 1;
+            }
+            if let Some(h) = stats.accepted_hist.as_mut() {
+                h.add(r.n_accepted);
+            }
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+    use crate::engines::{ar::Autoregressive, pearl::Pearl, sps::Sps};
+
+    fn run_engine(
+        engine: &dyn Engine,
+        pair: PairId,
+        task: TaskId,
+        n: usize,
+        seed: u64,
+    ) -> GenerateOut {
+        let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+        let backend = SimBackend::new(cfg);
+        let mut s = backend.new_session(seed);
+        engine.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(seed))
+    }
+
+    fn e_cfg(pair: PairId, n: usize) -> EngineConfig {
+        EngineConfig {
+            gamma: (ModelPair::get(pair).c as usize).min(8),
+            max_new_tokens: n,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn produces_requested_tokens() {
+        let pair = PairId::Vicuna68m13b;
+        let eng = SpecBranch::new(e_cfg(pair, 150));
+        let out = run_engine(&eng, pair, TaskId::MtBench, 150, 3);
+        assert!(out.tokens.len() >= 150);
+        assert!(out.stats.rounds > 0);
+        assert!(out.stats.branches_spawned > 0, "no branches ever spawned");
+        assert!(out.stats.hrad_calls > 0, "H-RAD never consulted");
+    }
+
+    /// Average an engine's speedup vs AR across several request seeds.
+    fn mean_speedup(engine: &dyn Engine, pair: PairId, task: TaskId, n: usize) -> (f64, f64) {
+        let mut s_sum = 0.0;
+        let mut rb_sum = 0.0;
+        let seeds = [3u64, 7, 11, 19];
+        for &seed in &seeds {
+            let ar = run_engine(&Autoregressive::new(e_cfg(pair, n)), pair, task, n, seed);
+            let out = run_engine(engine, pair, task, n, seed);
+            s_sum += out.stats.speedup_vs(&ar.stats);
+            rb_sum += out.stats.rollback_rate();
+        }
+        (s_sum / seeds.len() as f64, rb_sum / seeds.len() as f64)
+    }
+
+    #[test]
+    fn beats_pearl_on_poorly_aligned_pair() {
+        // Paper Table 2 + Fig. 5: rollback awareness wins when α is low.
+        let pair = PairId::Vicuna68m13b;
+        let task = TaskId::CnnDm;
+        let n = 300;
+        let (s_pearl, rb_pearl) = mean_speedup(&Pearl::new(e_cfg(pair, n)), pair, task, n);
+        let (s_ours, rb_ours) = mean_speedup(&SpecBranch::new(e_cfg(pair, n)), pair, task, n);
+        assert!(
+            s_ours > s_pearl,
+            "SpecBranch {s_ours:.2}x must beat PEARL {s_pearl:.2}x (poor alignment)"
+        );
+        assert!(
+            rb_ours < rb_pearl,
+            "RB ours {rb_ours:.2} vs pearl {rb_pearl:.2}"
+        );
+    }
+
+    #[test]
+    fn beats_sps_everywhere() {
+        for (pair, task) in [
+            (PairId::Llama68m7b, TaskId::HumanEval),
+            (PairId::Deepseek13b33b, TaskId::Gsm8k),
+        ] {
+            let n = 250;
+            let (s_sps, _) = mean_speedup(&Sps::new(e_cfg(pair, n)), pair, task, n);
+            let (s_ours, _) = mean_speedup(&SpecBranch::new(e_cfg(pair, n)), pair, task, n);
+            assert!(
+                s_ours > s_sps,
+                "{pair:?}/{task:?}: ours {s_ours:.2}x vs sps {s_sps:.2}x"
+            );
+        }
+    }
+
+    #[test]
+    fn ablations_run_and_degrade() {
+        let pair = PairId::Vicuna68m13b;
+        let task = TaskId::MtBench;
+        let n = 250;
+        let (s_full, _) = mean_speedup(&SpecBranch::new(e_cfg(pair, n)), pair, task, n);
+        let (s_nb, _) = mean_speedup(
+            &SpecBranch::ablation(e_cfg(pair, n), false, true, false), pair, task, n);
+        let (s_nh, _) = mean_speedup(
+            &SpecBranch::ablation(e_cfg(pair, n), true, false, false), pair, task, n);
+        assert!(s_full > 1.0 && s_nb > 1.0 && s_nh > 1.0);
+        // Removing either component must not help beyond run-to-run noise
+        // (Fig. 6; the deltas on Vicuna are small in the paper as well).
+        assert!(s_full >= s_nb * 0.93, "full {s_full:.2} vs no-branch {s_nb:.2}");
+        assert!(s_full >= s_nh * 0.93, "full {s_full:.2} vs no-hrad {s_nh:.2}");
+    }
+
+    #[test]
+    fn pp_variant_retains_most_performance() {
+        // Table 12: PP keeps ~90% of SpecBranch's speedup.
+        let pair = PairId::Deepseek13b33b;
+        let task = TaskId::MtBench;
+        let n = 250;
+        let ar = run_engine(&Autoregressive::new(e_cfg(pair, n)), pair, task, n, 2);
+        let full = run_engine(&SpecBranch::new(e_cfg(pair, n)), pair, task, n, 2);
+        let pp = run_engine(
+            &SpecBranch::ablation(e_cfg(pair, n), true, true, true),
+            pair, task, n, 2,
+        );
+        let s_full = full.stats.speedup_vs(&ar.stats);
+        let s_pp = pp.stats.speedup_vs(&ar.stats);
+        let retain = s_pp / s_full;
+        assert!(
+            (0.6..=1.01).contains(&retain),
+            "PP retention {retain:.2} (full {s_full:.2}, pp {s_pp:.2})"
+        );
+    }
+
+    #[test]
+    fn greedy_output_matches_autoregressive_prefix() {
+        // Losslessness under greedy decoding: SpecBranch must emit exactly
+        // the AR token stream (same backend, temperature 0).
+        let pair = PairId::Llama68m7b;
+        let cfg = SimConfig::new(ModelPair::get(pair), Task::get(TaskId::Gsm8k));
+        let backend = SimBackend::new(cfg);
+        let e = EngineConfig {
+            gamma: 6,
+            max_new_tokens: 80,
+            target_temperature: 0.0,
+            ..Default::default()
+        };
+        let mut s1 = backend.new_session(4);
+        let ar = Autoregressive::new(e.clone()).generate(s1.as_mut(), &[2, 3, 4], &mut Pcg32::new(1));
+        let mut s2 = backend.new_session(4);
+        let ours = SpecBranch::new(e).generate(s2.as_mut(), &[2, 3, 4], &mut Pcg32::new(99));
+        let n = ar.tokens.len().min(ours.tokens.len());
+        assert_eq!(&ar.tokens[..n], &ours.tokens[..n], "greedy streams must match");
+    }
+}

@@ -1,0 +1,137 @@
+//! Vanilla speculative decoding (SpS; Leviathan et al. / Chen et al.).
+//!
+//! The draft-then-verify loop of §3: the draft proposes a static-γ chain,
+//! the target verifies it in one forward, `Match` accepts a prefix and
+//! resamples on rejection. Draft and target strictly alternate — the
+//! mutual-waiting bubbles of Fig. 1(a) that parallel SD removes.
+
+use crate::backend::Session;
+use crate::config::{EngineConfig, EngineId};
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+use super::common::{commit_round, has_room, pending_tokens, propose_chain};
+use super::{Engine, GenerateOut};
+
+pub struct Sps {
+    cfg: EngineConfig,
+}
+
+impl Sps {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl Engine for Sps {
+    fn id(&self) -> EngineId {
+        EngineId::Sps
+    }
+
+    fn generate(
+        &self,
+        session: &mut dyn Session,
+        prompt: &[Token],
+        rng: &mut Pcg32,
+    ) -> GenerateOut {
+        session.prefill(prompt);
+        let gamma = self.cfg.gamma.min(session.block() - 1);
+        let mut produced = 0usize;
+
+        while produced < self.cfg.max_new_tokens && has_room(session, gamma) {
+            let pending = pending_tokens(session, 0);
+            let proposal = propose_chain(
+                session,
+                0,
+                &pending,
+                gamma,
+                self.cfg.draft_temperature,
+                rng,
+                |_, _| false,
+            );
+            // Serialized verification: submit then immediately wait.
+            let mut block = vec![*session.committed().last().unwrap()];
+            block.extend_from_slice(&proposal.tokens);
+            let ticket = session.verify_submit(&block);
+            let v = session.verify_wait(ticket);
+            let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+                .iter()
+                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+                .collect();
+            let r = sampling::match_verify(
+                &proposal.tokens,
+                &proposal.qs,
+                &ps[..proposal.len()],
+                Some(&ps[proposal.len()]),
+                rng,
+            );
+            let next = r.next_token.expect("chain verify always yields a next token");
+            produced += commit_round(session, 0, &proposal, r.n_accepted, next, 0);
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt.len()..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+    use crate::engines::ar::Autoregressive;
+    use crate::util::stats::fit_trunc_geometric;
+
+    fn run(pair: PairId, task: TaskId, gamma: usize, n: usize) -> GenerateOut {
+        let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+        let backend = SimBackend::new(cfg);
+        let mut s = backend.new_session(3);
+        let engine = Sps::new(EngineConfig {
+            gamma,
+            max_new_tokens: n,
+            ..Default::default()
+        });
+        engine.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(5))
+    }
+
+    #[test]
+    fn produces_tokens_and_counts_rounds() {
+        let out = run(PairId::Llama68m7b, TaskId::MtBench, 6, 120);
+        assert!(out.tokens.len() >= 120);
+        assert!(out.stats.rounds > 0);
+        assert!(out.stats.mean_accepted() >= 1.0);
+        assert!(out.stats.rollback_rate() <= 1.0);
+    }
+
+    #[test]
+    fn accepted_length_is_trunc_geometric() {
+        // Fig. 1(b): accepted counts fit a truncated geometric whose α is
+        // close to the pair/task calibration.
+        let out = run(PairId::Vicuna68m13b, TaskId::MtBench, 8, 600);
+        let hist = out.stats.accepted_hist.as_ref().unwrap();
+        let alpha_fit = fit_trunc_geometric(hist);
+        let want = Task::get(TaskId::MtBench)
+            .effective_alpha(ModelPair::get(PairId::Vicuna68m13b).alpha);
+        assert!(
+            (alpha_fit - want).abs() < 0.1,
+            "fitted α {alpha_fit:.3} vs calibrated {want:.3}"
+        );
+    }
+
+    #[test]
+    fn beats_autoregressive_wall_time() {
+        let pair = PairId::Deepseek13b33b;
+        let cfg = SimConfig::new(ModelPair::get(pair), Task::get(TaskId::HumanEval));
+        let backend = SimBackend::new(cfg);
+        let e_cfg = EngineConfig { gamma: 4, max_new_tokens: 150, ..Default::default() };
+
+        let mut s1 = backend.new_session(1);
+        let sps = Sps::new(e_cfg.clone()).generate(s1.as_mut(), &[1, 2, 3], &mut Pcg32::new(1));
+        let mut s2 = backend.new_session(1);
+        let ar = Autoregressive::new(e_cfg).generate(s2.as_mut(), &[1, 2, 3], &mut Pcg32::new(1));
+        let speedup = sps.stats.speedup_vs(&ar.stats);
+        assert!(speedup > 1.5, "SpS speedup {speedup:.2} too low for a well-aligned pair");
+    }
+}

@@ -1,0 +1,229 @@
+//! H-RAD domain types + offline predictor evaluation (paper §5.1).
+//!
+//! The predictor itself lives behind [`crate::backend::Session::hrad_predict`]
+//! (the AOT-compiled MLP on the PJRT backend; the calibrated noisy oracle on
+//! the sim backend). This module holds the pure decision logic shared by the
+//! engine and the analysis benches (Fig. 3c, Table 5, Fig. 19).
+
+use crate::backend::Backend;
+use crate::sampling::{self, Token};
+use crate::util::prng::Pcg32;
+
+/// The three-class hybrid signal of Eq. 5/6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// Hard signal: discard the whole draft (s_t = 0).
+    AllReject,
+    /// Soft signal: fall back to per-token confidence thresholding (s_t = 1).
+    Confidence,
+    /// Hard signal: retain the whole draft (s_t = 2).
+    AllAccept,
+}
+
+impl Signal {
+    pub fn from_class(c: usize) -> Signal {
+        match c {
+            0 => Signal::AllReject,
+            2 => Signal::AllAccept,
+            _ => Signal::Confidence,
+        }
+    }
+
+    pub fn from_probs(probs: &[f32; 3]) -> Signal {
+        let mut best = 0;
+        for i in 1..3 {
+            if probs[i] > probs[best] {
+                best = i;
+            }
+        }
+        Signal::from_class(best)
+    }
+
+    pub fn class(&self) -> usize {
+        match self {
+            Signal::AllReject => 0,
+            Signal::Confidence => 1,
+            Signal::AllAccept => 2,
+        }
+    }
+}
+
+/// The hybrid retention rule `H_t` (Eq. 6): how many of the `confidences`
+/// drafted tokens to retain before the branch point.
+pub fn retained_len(signal: Signal, confidences: &[f64], epsilon: f64) -> usize {
+    match signal {
+        Signal::AllReject => 0,
+        Signal::AllAccept => confidences.len(),
+        Signal::Confidence => confidences
+            .iter()
+            .position(|&c| c < epsilon)
+            .unwrap_or(confidences.len()),
+    }
+}
+
+/// Realized round outcome → ground-truth class (how H-RAD training labels
+/// rounds, python/compile/hrad.py).
+pub fn realized_class(n_accepted: usize, gamma: usize) -> usize {
+    if n_accepted == 0 {
+        0
+    } else if n_accepted >= gamma {
+        2
+    } else {
+        1
+    }
+}
+
+/// Offline predictor-accuracy measurement (Fig. 3c / Table 5 / Fig. 19):
+/// run `rounds` vanilla-SD rounds on a fresh session, compare the H-RAD
+/// prediction made *before* each round against the realized outcome.
+pub fn measure_accuracy(
+    backend: &dyn Backend,
+    gamma: usize,
+    rounds: usize,
+    seed: u64,
+) -> PredictorReport {
+    let mut session = backend.new_session(seed);
+    let mut rng = Pcg32::new(seed ^ 0x5EED);
+    session.prefill(&[1, 2, 3, 4]);
+    let mut report = PredictorReport::default();
+    let mut features: Option<Vec<f32>> = None;
+
+    for _ in 0..rounds {
+        if session.capacity_left() < gamma + 3 {
+            break;
+        }
+        // Catch the draft up on committed-but-unconsumed tokens, then
+        // draft a fixed-γ chain.
+        let pending: Vec<Token> =
+            session.committed()[session.draft_len(0)..].to_vec();
+        let mut q_raw = Vec::new();
+        for &t in &pending {
+            q_raw = session.draft_forward(0, t);
+        }
+        let mut tokens: Vec<Token> = Vec::with_capacity(gamma);
+        let mut qs = Vec::with_capacity(gamma);
+        for i in 0..gamma {
+            let q = q_raw.clone();
+            let tok = sampling::sample(&q, &mut rng);
+            tokens.push(tok);
+            qs.push(q);
+            if i + 1 < gamma {
+                q_raw = session.draft_forward(0, tok);
+            }
+        }
+        // Predict before verification (when features exist).
+        let predicted = features
+            .as_deref()
+            .map(|f| Signal::from_probs(&session.hrad_predict(f, tokens[0])).class());
+
+        let mut block = vec![*session.committed().last().unwrap()];
+        block.extend_from_slice(&tokens);
+        let ticket = session.verify_submit(&block);
+        let v = session.verify_wait(ticket);
+        // Greedy verification — the calibrated setting (App. E.3).
+        let ps: Vec<Vec<f32>> = v.ps[..gamma + 1]
+            .iter()
+            .map(|p| sampling::apply_temperature(p, 0.0))
+            .collect();
+        let r = sampling::match_verify(&tokens, &qs, &ps[..gamma], Some(&ps[gamma]), &mut rng);
+        let truth = realized_class(r.n_accepted, gamma);
+        if let Some(pred) = predicted {
+            report.total += 1;
+            report.confusion[truth][pred] += 1;
+            if pred == truth {
+                report.correct += 1;
+            }
+        }
+        let mut commit = tokens[..r.n_accepted].to_vec();
+        commit.push(r.next_token.unwrap());
+        session.target_commit(&commit);
+        let want = session.target_len() - 1;
+        if session.draft_len(0) > want {
+            session.draft_rollback(0, want);
+        }
+        let row = r.n_accepted.min(v.features.len() - 1);
+        features = Some(v.features[row].clone());
+    }
+    report
+}
+
+/// Accuracy + confusion matrix of a predictor evaluation run.
+#[derive(Clone, Debug, Default)]
+pub struct PredictorReport {
+    pub total: u64,
+    pub correct: u64,
+    /// `confusion[truth][predicted]`.
+    pub confusion: [[u64; 3]; 3],
+}
+
+impl PredictorReport {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+
+    #[test]
+    fn retention_rule() {
+        let conf = [0.9, 0.8, 0.3, 0.9];
+        assert_eq!(retained_len(Signal::AllReject, &conf, 0.5), 0);
+        assert_eq!(retained_len(Signal::AllAccept, &conf, 0.5), 4);
+        assert_eq!(retained_len(Signal::Confidence, &conf, 0.5), 2);
+        assert_eq!(retained_len(Signal::Confidence, &[0.9, 0.9], 0.5), 2);
+    }
+
+    #[test]
+    fn signal_roundtrip() {
+        for c in 0..3 {
+            assert_eq!(Signal::from_class(c).class(), c);
+        }
+        assert_eq!(Signal::from_probs(&[0.7, 0.2, 0.1]), Signal::AllReject);
+        assert_eq!(Signal::from_probs(&[0.1, 0.2, 0.7]), Signal::AllAccept);
+    }
+
+    #[test]
+    fn realized_class_matches_paper_labels() {
+        assert_eq!(realized_class(0, 6), 0);
+        assert_eq!(realized_class(3, 6), 1);
+        assert_eq!(realized_class(6, 6), 2);
+    }
+
+    #[test]
+    fn accuracy_improves_with_more_feature_layers() {
+        // Table 5's mechanism: more layers → less predictor noise → higher
+        // accuracy. Compare K=1 against K=16 on the same pair/task.
+        let make = |k: usize| {
+            let mut cfg = SimConfig::new(
+                ModelPair::get(PairId::Llama68m7b),
+                Task::get(TaskId::HumanEval),
+            );
+            cfg.hrad_k = k;
+            SimBackend::new(cfg)
+        };
+        let acc1 = measure_accuracy(&make(1), 6, 400, 3).accuracy();
+        let acc16 = measure_accuracy(&make(16), 6, 400, 3).accuracy();
+        assert!(
+            acc16 > acc1,
+            "accuracy should improve with K: K=1 {acc1:.3} vs K=16 {acc16:.3}"
+        );
+    }
+
+    #[test]
+    fn accuracy_beats_chance() {
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Vicuna68m13b),
+            Task::get(TaskId::MtBench),
+        );
+        let rep = measure_accuracy(&SimBackend::new(cfg), 6, 400, 1);
+        assert!(rep.total > 100);
+        assert!(rep.accuracy() > 0.40, "accuracy {:.3}", rep.accuracy());
+    }
+}

@@ -1,0 +1,390 @@
+//! KV-cache management: shared-prefix branch forking (paper §5.2, App. G.3).
+//!
+//! Two layers:
+//! * [`BlockCache`] — a paged, ref-counted block manager (vLLM-style).
+//!   Branches fork in O(1) by sharing prefix blocks (copy-on-write at block
+//!   granularity), which is what keeps SpecBranch's k parallel branches at
+//!   `O(k·γ)` extra memory instead of the `O(k^γ)` of dense token trees
+//!   (App. G.3, Fig. 17). It also powers the Fig. 7(a) memory traces.
+//! * [`TensorKv`] — the concrete f32 cache buffer threaded through the AOT
+//!   artifacts by the PJRT backend (static `(L,2,H,S,D)` storage + logical
+//!   length; slots `>= len` are garbage by the masking contract).
+
+use std::collections::HashMap;
+
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Handle to one branch's logical KV sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeqId(pub u64);
+
+#[derive(Clone, Debug)]
+struct Block {
+    refcount: u32,
+}
+
+#[derive(Clone, Debug)]
+struct Sequence {
+    /// Block ids covering the sequence, in order.
+    blocks: Vec<u32>,
+    /// Logical token length.
+    len: usize,
+}
+
+/// Paged KV cache with ref-counted prefix sharing.
+///
+/// Tracks *placement*, not tensor payloads: the unit of accounting is one
+/// block of [`BLOCK_TOKENS`] tokens × `bytes_per_token`.
+#[derive(Debug)]
+pub struct BlockCache {
+    bytes_per_token: usize,
+    blocks: HashMap<u32, Block>,
+    seqs: HashMap<SeqId, Sequence>,
+    next_block: u32,
+    next_seq: u64,
+    /// High-water mark of allocated blocks (Fig. 7a trace).
+    peak_blocks: usize,
+}
+
+impl BlockCache {
+    pub fn new(bytes_per_token: usize) -> Self {
+        Self {
+            bytes_per_token,
+            blocks: HashMap::new(),
+            seqs: HashMap::new(),
+            next_block: 0,
+            next_seq: 0,
+            peak_blocks: 0,
+        }
+    }
+
+    /// Create an empty sequence.
+    pub fn create(&mut self) -> SeqId {
+        let id = SeqId(self.next_seq);
+        self.next_seq += 1;
+        self.seqs.insert(id, Sequence { blocks: Vec::new(), len: 0 });
+        id
+    }
+
+    fn alloc_block(&mut self) -> u32 {
+        let id = self.next_block;
+        self.next_block += 1;
+        self.blocks.insert(id, Block { refcount: 1 });
+        self.peak_blocks = self.peak_blocks.max(self.blocks.len());
+        id
+    }
+
+    /// Append `n` tokens to a sequence, allocating blocks as needed.
+    /// If the tail block is shared, it is copied first (copy-on-write).
+    pub fn append(&mut self, seq: SeqId, n: usize) {
+        let (mut len, mut blocks) = {
+            let s = self.seqs.get(&seq).expect("unknown seq");
+            (s.len, s.blocks.clone())
+        };
+        // CoW the tail block if we will write into it and it is shared.
+        if len % BLOCK_TOKENS != 0 {
+            let tail = *blocks.last().unwrap();
+            if self.blocks[&tail].refcount > 1 {
+                self.blocks.get_mut(&tail).unwrap().refcount -= 1;
+                let copy = self.alloc_block();
+                *blocks.last_mut().unwrap() = copy;
+            }
+        }
+        let mut remaining = n;
+        while remaining > 0 {
+            let room = if len % BLOCK_TOKENS == 0 { 0 } else { BLOCK_TOKENS - len % BLOCK_TOKENS };
+            if room == 0 {
+                let b = self.alloc_block();
+                blocks.push(b);
+                let take = remaining.min(BLOCK_TOKENS);
+                len += take;
+                remaining -= take;
+            } else {
+                let take = remaining.min(room);
+                len += take;
+                remaining -= take;
+            }
+        }
+        let s = self.seqs.get_mut(&seq).unwrap();
+        s.len = len;
+        s.blocks = blocks;
+    }
+
+    /// Fork a sequence: the child shares every prefix block (O(1) in data
+    /// moved; refcounts bumped).
+    pub fn fork(&mut self, seq: SeqId) -> SeqId {
+        let parent = self.seqs.get(&seq).expect("unknown seq").clone();
+        for b in &parent.blocks {
+            self.blocks.get_mut(b).unwrap().refcount += 1;
+        }
+        let id = SeqId(self.next_seq);
+        self.next_seq += 1;
+        self.seqs.insert(id, parent);
+        id
+    }
+
+    /// Truncate a sequence to `len` tokens (rollback), freeing blocks that
+    /// fall wholly beyond the new length.
+    pub fn truncate(&mut self, seq: SeqId, len: usize) {
+        let s = self.seqs.get_mut(&seq).expect("unknown seq");
+        assert!(len <= s.len, "truncate beyond length");
+        let keep = len.div_ceil(BLOCK_TOKENS);
+        let drop: Vec<u32> = s.blocks.split_off(keep);
+        s.len = len;
+        for b in drop {
+            let blk = self.blocks.get_mut(&b).unwrap();
+            blk.refcount -= 1;
+            if blk.refcount == 0 {
+                self.blocks.remove(&b);
+            }
+        }
+    }
+
+    /// Drop a sequence entirely (losing branch after verification).
+    pub fn release(&mut self, seq: SeqId) {
+        let s = self.seqs.remove(&seq).expect("unknown seq");
+        for b in s.blocks {
+            let blk = self.blocks.get_mut(&b).unwrap();
+            blk.refcount -= 1;
+            if blk.refcount == 0 {
+                self.blocks.remove(&b);
+            }
+        }
+    }
+
+    pub fn len(&self, seq: SeqId) -> usize {
+        self.seqs[&seq].len
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_blocks
+    }
+
+    pub fn allocated_bytes(&self) -> usize {
+        self.blocks.len() * BLOCK_TOKENS * self.bytes_per_token
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_blocks * BLOCK_TOKENS * self.bytes_per_token
+    }
+
+    /// Blocks a fully-dense token tree of width k and depth γ would need
+    /// (App. G.3's `O(k^γ)` comparison baseline).
+    pub fn dense_tree_tokens(k: usize, gamma: usize) -> f64 {
+        if k == 1 {
+            return gamma as f64;
+        }
+        ((k as f64).powi(gamma as i32) - 1.0) / (k as f64 - 1.0)
+    }
+
+    /// Tokens SpecBranch's sparse branch structure materialises per round:
+    /// `k·γ + (k−1)·(1−b)` with branch point b (App. G.3).
+    pub fn branch_tokens(k: usize, gamma: usize, b: usize) -> f64 {
+        (k * gamma) as f64 + (k as f64 - 1.0) * (1.0 - b as f64)
+    }
+
+    /// Invariant check (used by property tests): every block referenced by
+    /// a live sequence exists, and refcounts equal the number of referencing
+    /// sequences.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counts: HashMap<u32, u32> = HashMap::new();
+        for s in self.seqs.values() {
+            if s.blocks.len() != s.len.div_ceil(BLOCK_TOKENS) {
+                return Err(format!(
+                    "seq block count {} inconsistent with len {}",
+                    s.blocks.len(),
+                    s.len
+                ));
+            }
+            for b in &s.blocks {
+                *counts.entry(*b).or_insert(0) += 1;
+            }
+        }
+        for (b, blk) in &self.blocks {
+            let c = counts.get(b).copied().unwrap_or(0);
+            if blk.refcount != c {
+                return Err(format!("block {b} refcount {} != {} refs", blk.refcount, c));
+            }
+        }
+        for b in counts.keys() {
+            if !self.blocks.contains_key(b) {
+                return Err(format!("dangling block {b}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Concrete KV tensor for the PJRT backend: static `(L,2,H,S,D)` f32
+/// storage plus the logical length. Forking clones the buffer (the tiny
+/// pair's cache is ~1-4 MB; the *paged* manager above is what models the
+/// paper-scale memory story).
+#[derive(Clone, Debug)]
+pub struct TensorKv {
+    pub data: Vec<f32>,
+    pub len: usize,
+    pub seq_max: usize,
+}
+
+impl TensorKv {
+    pub fn zeros(elems: usize, seq_max: usize) -> Self {
+        Self { data: vec![0.0; elems], len: 0, seq_max }
+    }
+
+    /// Rollback: slots beyond `len` are garbage by contract, so truncation
+    /// is a pointer move.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len);
+        self.len = len;
+    }
+
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+        assert!(self.len <= self.seq_max, "KV overflow: {} > {}", self.len, self.seq_max);
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.seq_max - self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn append_and_len() {
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, 5);
+        assert_eq!(c.len(s), 5);
+        assert_eq!(c.allocated_blocks(), 1);
+        c.append(s, BLOCK_TOKENS);
+        assert_eq!(c.len(s), 5 + BLOCK_TOKENS);
+        assert_eq!(c.allocated_blocks(), 2);
+    }
+
+    #[test]
+    fn fork_shares_blocks() {
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, 64);
+        let before = c.allocated_blocks();
+        let f = c.fork(s);
+        assert_eq!(c.allocated_blocks(), before, "fork must not allocate");
+        assert_eq!(c.len(f), 64);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_then_append_cows_tail() {
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, 20); // 1 full + 1 partial block
+        let f = c.fork(s);
+        c.append(f, 1); // must CoW the shared partial tail
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 3);
+        // Parent unaffected.
+        assert_eq!(c.len(s), 20);
+        assert_eq!(c.len(f), 21);
+    }
+
+    #[test]
+    fn release_frees_unshared_blocks() {
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, 64);
+        let f = c.fork(s);
+        c.append(f, 32);
+        c.release(f);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 4); // only parent's blocks remain
+        c.release(s);
+        assert_eq!(c.allocated_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_rolls_back() {
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, 50);
+        c.truncate(s, 17);
+        assert_eq!(c.len(s), 17);
+        assert_eq!(c.allocated_blocks(), 2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sparse_branch_beats_dense_tree() {
+        // App. G.3: k·γ + (k−1)(1−b) ≪ (k^γ − 1)/(k − 1).
+        let (k, gamma, b) = (4, 8, 3);
+        assert!(
+            BlockCache::branch_tokens(k, gamma, b)
+                < BlockCache::dense_tree_tokens(k, gamma) / 100.0
+        );
+    }
+
+    #[test]
+    fn tensor_kv_rollback() {
+        let mut kv = TensorKv::zeros(128, 16);
+        kv.advance(10);
+        kv.truncate(4);
+        assert_eq!(kv.len, 4);
+        assert_eq!(kv.remaining(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV overflow")]
+    fn tensor_kv_overflow_panics() {
+        let mut kv = TensorKv::zeros(128, 8);
+        kv.advance(9);
+    }
+
+    #[test]
+    fn prop_random_ops_keep_invariants() {
+        check("blockcache invariants", 100, |g: &mut Gen| {
+            let mut c = BlockCache::new(64);
+            let mut live: Vec<SeqId> = vec![c.create()];
+            for _ in 0..g.usize_in(10, 60) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        c.append(live[i], g.usize_in(1, 40));
+                    }
+                    1 => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        live.push(c.fork(live[i]));
+                    }
+                    2 => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let len = c.len(live[i]);
+                        c.truncate(live[i], g.usize_in(0, len));
+                    }
+                    _ => {
+                        if live.len() > 1 {
+                            let i = g.usize_in(0, live.len() - 1);
+                            c.release(live.swap_remove(i));
+                        }
+                    }
+                }
+                c.check_invariants().map_err(|e| e)?;
+            }
+            for s in live {
+                c.release(s);
+            }
+            prop_assert!(c.allocated_blocks() == 0, "leak: {} blocks", c.allocated_blocks());
+            Ok(())
+        });
+    }
+}

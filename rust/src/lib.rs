@@ -1,0 +1,35 @@
+//! SpecBranch: speculative decoding via hybrid drafting and rollback-aware
+//! branch parallelism — a Rust + JAX + Pallas reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the serving coordinator: decoding engines
+//!   ([`engines`]), the draft/verify parallel pipeline ([`parallel`]),
+//!   request batching and scheduling ([`coordinator`]), a line-protocol
+//!   server ([`server`]), and the benchmark harness ([`bench_harness`]).
+//! * **L2/L1 (python/compile)** — the JAX transformer pair and Pallas
+//!   kernels, AOT-lowered to HLO text artifacts at build time.
+//! * **Runtime** ([`runtime`]) — loads `artifacts/*.hlo.txt` via the PJRT
+//!   CPU client (`xla` crate) and executes them on the request path; Python
+//!   is never invoked after `make artifacts`.
+//!
+//! Two interchangeable execution backends ([`backend`]): `PjrtBackend` runs
+//! the real tiny model pair end-to-end, `SimBackend` reproduces the paper's
+//! four A100 model pairs statistically (acceptance process α, speed ratio c,
+//! virtual clock) so every table and figure can be regenerated at paper
+//! scale on one CPU.
+
+pub mod backend;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod engines;
+pub mod hrad;
+pub mod kvcache;
+pub mod metrics;
+pub mod parallel;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod theory;
+pub mod token;
+pub mod util;

@@ -1,0 +1,244 @@
+//! `specbranch` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   generate   one-shot generation (PJRT artifacts or simulator)
+//!   serve      start the line-protocol TCP server over the coordinator
+//!   bench      regenerate a paper experiment (same code as `cargo bench`)
+//!   info       list model pairs / tasks / engines and artifact status
+//!
+//! Examples:
+//!   specbranch generate --prompt "the only way" --engine specbranch
+//!   specbranch generate --backend sim --pair vicuna --task mtbench
+//!   specbranch serve --addr 127.0.0.1:7799 --workers 2
+//!   specbranch bench --exp table2
+
+use specbranch::backend::pjrt::PjrtBackend;
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::bench_harness::{experiments, Scale};
+use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
+use specbranch::coordinator::Coordinator;
+use specbranch::engines;
+use specbranch::metrics;
+use specbranch::server::Server;
+use specbranch::token::Tokenizer;
+use specbranch::util::cli::Args;
+use specbranch::util::prng::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "specbranch — speculative decoding via hybrid drafting and \
+         rollback-aware branch parallelism\n\n\
+         USAGE: specbranch <generate|serve|bench|info> [flags]\n\n\
+         generate flags: --prompt <text> --engine <name> --backend <pjrt|sim>\n\
+                         --pair <llama|vicuna|deepseek|llama3.1> --task <name>\n\
+                         --max-new <n> --gamma <n> --epsilon <f> --seed <n>\n\
+         serve flags:    --addr <host:port> --workers <n> --engine <name>\n\
+                         --backend <pjrt|sim> [--max-conns <n>]\n\
+         bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
+                                table5|table6|fig7|fig10|fig19|table12|all>\n\
+                         [--fast]"
+    );
+}
+
+fn engine_cfg(args: &Args) -> EngineConfig {
+    EngineConfig {
+        gamma: args.get_usize("gamma", 6),
+        epsilon: args.get_f64("epsilon", 0.4),
+        k_max: args.get_usize("k-max", 4),
+        max_new_tokens: args.get_usize("max-new", 96),
+        target_temperature: args.get_f64("temperature", 0.0),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    }
+}
+
+fn build_backend(args: &Args) -> Result<Box<dyn Backend + Send>, String> {
+    match args.get_or("backend", "pjrt") {
+        "pjrt" => {
+            let dir = Manifest::default_dir();
+            let backend = PjrtBackend::start(&dir)
+                .map_err(|e| format!("PJRT backend failed ({e:#}); run `make artifacts`"))?;
+            Ok(Box::new(backend))
+        }
+        "sim" => {
+            let pair = ModelPair::parse(args.get_or("pair", "vicuna"))
+                .ok_or("unknown --pair")?;
+            let task = Task::parse(args.get_or("task", "mtbench")).ok_or("unknown --task")?;
+            let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+            Ok(Box::new(SimBackend::new(cfg)))
+        }
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let engine_id = match EngineId::parse(args.get_or("engine", "specbranch")) {
+        Some(e) => e,
+        None => {
+            eprintln!("unknown engine");
+            return 2;
+        }
+    };
+    let backend = match build_backend(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = engine_cfg(args);
+    let tok = Tokenizer::new();
+    let prompt_text = args.get_or("prompt", "the only way to do great work is to");
+    let prompt = tok.encode(prompt_text);
+    let engine = engines::build(engine_id, cfg.clone());
+    let mut session = backend.new_session(cfg.seed);
+    let mut rng = Pcg32::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(session.as_mut(), &prompt, &mut rng);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("prompt    : {prompt_text}");
+    println!("completion: {}", tok.decode(&out.tokens));
+    println!();
+    println!("engine={} backend={}", engine_id.name(), backend.name());
+    println!(
+        "tokens={} rounds={} M={:.2} RB={:.1}% branches={} hrad_calls={}",
+        out.stats.generated_tokens,
+        out.stats.rounds,
+        out.stats.mean_accepted(),
+        100.0 * out.stats.rollback_rate(),
+        out.stats.branches_spawned,
+        out.stats.hrad_calls,
+    );
+    println!(
+        "clock: {:.1} ms ({:.1} tok/s) | wall: {:.1} ms",
+        out.stats.elapsed_ms,
+        out.stats.tokens_per_sec(),
+        wall * 1000.0
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let engine_id =
+        EngineId::parse(args.get_or("engine", "specbranch")).unwrap_or(EngineId::SpecBranch);
+    let workers = args.get_usize("workers", 2);
+    let mut backends = Vec::new();
+    for _ in 0..workers {
+        match build_backend(args) {
+            Ok(b) => backends.push(b),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let coord = Coordinator::start(backends, engine_id, engine_cfg(args));
+    let addr = args.get_or("addr", "127.0.0.1:7799");
+    let server = match Server::bind(addr, coord) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e:#}");
+            return 2;
+        }
+    };
+    println!("serving on {} (engine={})", server.local_addr(), engine_id.name());
+    let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
+    server.serve(max_conns);
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let scale = if args.has("fast") { Scale::fast() } else { Scale::from_env() };
+    let exp = args.get_or("exp", "all");
+    let run = |name: &str| match name {
+        "table2" => experiments::table2(scale),
+        "table3" => experiments::table3(scale),
+        "fig1b" => experiments::fig1b(scale),
+        "fig2" => experiments::fig2(scale),
+        "fig5" => experiments::fig5(scale),
+        "fig6" => experiments::fig6(scale),
+        "table4" => experiments::table4(scale),
+        "table5" => experiments::table5(scale),
+        "table6" => experiments::table6(scale),
+        "fig7" => experiments::fig7(scale),
+        "fig10" => experiments::fig10(scale),
+        "fig19" => experiments::fig19(scale),
+        "table12" => experiments::table12(scale),
+        other => eprintln!("unknown experiment '{other}'"),
+    };
+    if exp == "all" {
+        for name in [
+            "table2", "table3", "fig1b", "fig2", "fig5", "fig6", "table4", "table5",
+            "table6", "fig7", "fig10", "fig19", "table12",
+        ] {
+            run(name);
+        }
+    } else {
+        run(exp);
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("model pairs (sim calibration):");
+    for id in ModelPair::PAPER_PAIRS.iter().chain([PairId::TinyPjrt].iter()) {
+        let p = ModelPair::get(*id);
+        println!(
+            "  {:<22} c={:<4} alpha={:<5} draft={}ms target={}ms kv/token={}B",
+            p.name,
+            p.c,
+            p.alpha,
+            p.draft_ms,
+            p.target_ms(),
+            p.kv_bytes_per_token()
+        );
+    }
+    println!("\ntasks:");
+    for id in Task::MAIN.iter().chain(Task::SPEC_BENCH.iter()) {
+        let t = Task::get(*id);
+        println!(
+            "  {:<10} alpha_shift={:+.2} burstiness={:.2} ngram_repeat={:.2}",
+            t.name, t.alpha_shift, t.burstiness, t.ngram_repeat
+        );
+    }
+    println!(
+        "\nengines: ar sps adaedl lookahead pearl specbranch \
+         specbranch-no-branch specbranch-no-hrad specbranch-pp"
+    );
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => println!(
+            "\nartifacts: {} (vocab={} seq_max={} block={} entry points={})",
+            dir.display(),
+            m.vocab,
+            m.seq_max,
+            m.block,
+            m.entry_points.len()
+        ),
+        Err(_) => println!("\nartifacts: not built (run `make artifacts`)"),
+    }
+    let pair = ModelPair::get(PairId::Llama318b70b);
+    println!(
+        "\nmemory model sanity: LLaMA-3.1 weights {:.0} GB",
+        metrics::memory_gb(&pair, 0)
+    );
+    0
+}

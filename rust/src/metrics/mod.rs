@@ -1,0 +1,197 @@
+//! Evaluation metrics (paper §6): mean accepted length M, wall-time
+//! speedup, tokens/s, **rollback rate RB**, plus the energy and memory
+//! models that stand in for NVIDIA DCGM on this testbed (DESIGN.md §3).
+
+use crate::config::ModelPair;
+use crate::util::stats::Histogram;
+
+/// Per-run decode statistics accumulated by every engine.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeStats {
+    /// Tokens committed to the output (excluding the prompt).
+    pub generated_tokens: u64,
+    /// Draft-model forward passes (1 token each).
+    pub draft_forwards: u64,
+    /// Target-model forward passes (each verifies up to γ+1 tokens).
+    pub target_forwards: u64,
+    /// Draft tokens discarded after verification ("rollback tokens":
+    /// tokens the draft model spent a forward on that never got committed).
+    pub rollback_tokens: u64,
+    /// Draft tokens proposed in total.
+    pub proposed_tokens: u64,
+    /// Verification rounds.
+    pub rounds: u64,
+    /// Rounds in which every verified token was accepted (the all-accept
+    /// condition parallel SD needs, §1).
+    pub all_accept_rounds: u64,
+    /// Histogram of accepted length per round (Fig. 1b / 12 / 13).
+    pub accepted_hist: Option<Histogram>,
+    /// Virtual wall-clock time elapsed (ms) — set by the backend's clock.
+    pub elapsed_ms: f64,
+    /// Busy time (ms) per model, for the energy model.
+    pub draft_busy_ms: f64,
+    pub target_busy_ms: f64,
+    /// H-RAD predictor invocations and total time (Fig. 7c).
+    pub hrad_calls: u64,
+    pub hrad_ms: f64,
+    /// Branches spawned (SpecBranch only).
+    pub branches_spawned: u64,
+    /// Tokens drafted on losing parallel branches. Excluded from RB per the
+    /// paper's metric definition (App. E.3: RB counts chain rollbacks only,
+    /// "excluding additional token loss due to branch and tree structures"),
+    /// but tracked for the energy/compute story.
+    pub branch_wasted_tokens: u64,
+    /// Peak KV bytes (branch-aware; Fig. 7a).
+    pub peak_kv_bytes: usize,
+}
+
+impl DecodeStats {
+    pub fn with_hist(gamma_max: usize) -> Self {
+        Self { accepted_hist: Some(Histogram::new(gamma_max + 1)), ..Default::default() }
+    }
+
+    /// Rollback rate RB = #rollback tokens / #total draft tokens (§6).
+    pub fn rollback_rate(&self) -> f64 {
+        if self.proposed_tokens == 0 {
+            return 0.0;
+        }
+        self.rollback_tokens as f64 / self.proposed_tokens as f64
+    }
+
+    /// Mean accepted length M: continuously accepted tokens per round
+    /// (paper's M; counts the committed tokens each verification yields).
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.rounds as f64
+    }
+
+    /// Decode speed in tokens/s under the virtual clock.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.elapsed_ms <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 * 1000.0 / self.elapsed_ms
+    }
+
+    /// Wall-time speedup vs. an autoregressive run of the same length.
+    pub fn speedup_vs(&self, ar: &DecodeStats) -> f64 {
+        if self.elapsed_ms <= 0.0 || ar.generated_tokens == 0 {
+            return 0.0;
+        }
+        let ar_per_tok = ar.elapsed_ms / ar.generated_tokens as f64;
+        let our_per_tok = self.elapsed_ms / self.generated_tokens.max(1) as f64;
+        ar_per_tok / our_per_tok
+    }
+
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.generated_tokens += other.generated_tokens;
+        self.draft_forwards += other.draft_forwards;
+        self.target_forwards += other.target_forwards;
+        self.rollback_tokens += other.rollback_tokens;
+        self.proposed_tokens += other.proposed_tokens;
+        self.rounds += other.rounds;
+        self.all_accept_rounds += other.all_accept_rounds;
+        self.elapsed_ms += other.elapsed_ms;
+        self.draft_busy_ms += other.draft_busy_ms;
+        self.target_busy_ms += other.target_busy_ms;
+        self.hrad_calls += other.hrad_calls;
+        self.hrad_ms += other.hrad_ms;
+        self.branches_spawned += other.branches_spawned;
+        self.branch_wasted_tokens += other.branch_wasted_tokens;
+        self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
+        if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {
+            for (k, &c) in theirs.counts().iter().enumerate() {
+                for _ in 0..c {
+                    mine.add(k);
+                }
+            }
+        }
+    }
+}
+
+/// Energy model standing in for DCGM (App. F.5): each model draws its
+/// board power while busy; energy = Σ P·busy_time. Captures the paper's
+/// mechanism — fewer doomed target forwards ⇒ fewer joules.
+pub fn energy_kj(stats: &DecodeStats, pair: &ModelPair) -> f64 {
+    let draft_j = pair.draft_power_w * stats.draft_busy_ms / 1000.0;
+    let target_j = pair.target_power_w * stats.target_busy_ms / 1000.0;
+    (draft_j + target_j) / 1000.0
+}
+
+/// Memory model (Fig. 7a): baseline model weights + KV cache + branch
+/// overhead, in GB. Weights at bf16 (2 bytes/param).
+pub fn memory_gb(pair: &ModelPair, kv_bytes: usize) -> f64 {
+    let weights_gb = (pair.draft_params_b + pair.target_params_b) * 2.0;
+    weights_gb + kv_bytes as f64 / 1e9
+}
+
+/// Per-token KV bytes of a paper-scale target model (used to scale the
+/// BlockCache accounting up to A100 sizes): `2·layers·heads·d_head·2bytes`.
+pub fn kv_bytes_per_token(layers: usize, heads: usize, d_head: usize) -> usize {
+    2 * layers * heads * d_head * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelPair, PairId};
+
+    fn stats(gen: u64, elapsed: f64) -> DecodeStats {
+        DecodeStats { generated_tokens: gen, elapsed_ms: elapsed, ..Default::default() }
+    }
+
+    #[test]
+    fn rollback_rate_basics() {
+        let mut s = DecodeStats::default();
+        s.proposed_tokens = 100;
+        s.rollback_tokens = 25;
+        assert!((s.rollback_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(DecodeStats::default().rollback_rate(), 0.0);
+    }
+
+    #[test]
+    fn speedup_is_ratio_of_per_token_latency() {
+        let ar = stats(100, 1000.0); // 10 ms/token
+        let sd = stats(100, 500.0); // 5 ms/token
+        assert!((sd.speedup_vs(&ar) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tokens_per_sec() {
+        let s = stats(50, 500.0);
+        assert!((s.tokens_per_sec() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = stats(10, 100.0);
+        a.rounds = 2;
+        let mut b = stats(20, 50.0);
+        b.rounds = 3;
+        a.merge(&b);
+        assert_eq!(a.generated_tokens, 30);
+        assert_eq!(a.rounds, 5);
+        assert!((a.elapsed_ms - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_scales_with_busy_time() {
+        let pair = ModelPair::get(PairId::Vicuna68m13b);
+        let mut s = DecodeStats::default();
+        s.draft_busy_ms = 1000.0;
+        s.target_busy_ms = 2000.0;
+        let e = energy_kj(&s, &pair);
+        let expect = (70.0 * 1.0 + 250.0 * 2.0) / 1000.0;
+        assert!((e - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_includes_weights_and_kv() {
+        let pair = ModelPair::get(PairId::Llama318b70b);
+        let base = memory_gb(&pair, 0);
+        assert!((base - 156.0).abs() < 1.0); // (8+70)B * 2 bytes
+        assert!(memory_gb(&pair, 1_000_000_000) > base);
+    }
+}

@@ -1,0 +1,63 @@
+//! Draft/verify parallelism notes + helpers.
+//!
+//! The overlap itself lives in the [`crate::backend::Session`] contract:
+//! `verify_submit` occupies the target resource without blocking and
+//! `verify_wait` joins, so an engine that drafts between the two calls gets
+//! true pipeline parallelism — real threads on the PJRT backend (one per
+//! model, mirroring the paper's per-device deployment), virtual two-track
+//! time on the simulator. This module provides the small scheduling helpers
+//! shared by engines and the coordinator.
+
+use crate::backend::Session;
+
+/// How much drafting fits inside one in-flight verification: the speed
+/// ratio c bounds the number of draft steps (§5.2), optionally derated by a
+/// utilisation factor (PP mode time-slices the devices).
+pub fn draft_steps_during_verify(session: &dyn Session, utilisation: f64) -> usize {
+    ((session.speed_ratio() * utilisation).floor() as usize).max(1)
+}
+
+/// Simple two-phase occupancy summary used by the fig7 bench: fraction of
+/// wall time each resource was busy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Occupancy {
+    pub draft_frac: f64,
+    pub target_frac: f64,
+}
+
+impl Occupancy {
+    pub fn from_stats(stats: &crate::metrics::DecodeStats) -> Occupancy {
+        if stats.elapsed_ms <= 0.0 {
+            return Occupancy::default();
+        }
+        Occupancy {
+            draft_frac: (stats.draft_busy_ms / stats.elapsed_ms).min(1.0),
+            target_frac: (stats.target_busy_ms / stats.elapsed_ms).min(1.0),
+        }
+    }
+
+    /// The paper's pipeline-bubble check (Table 9): draft and verify
+    /// stages of SpecBranch should be near-equal occupancy.
+    pub fn balanced(&self, tolerance: f64) -> bool {
+        (self.draft_frac - self.target_frac).abs() <= tolerance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::DecodeStats;
+
+    #[test]
+    fn occupancy_fracs() {
+        let mut s = DecodeStats::default();
+        s.elapsed_ms = 100.0;
+        s.draft_busy_ms = 40.0;
+        s.target_busy_ms = 90.0;
+        let o = Occupancy::from_stats(&s);
+        assert!((o.draft_frac - 0.4).abs() < 1e-12);
+        assert!((o.target_frac - 0.9).abs() < 1e-12);
+        assert!(!o.balanced(0.1));
+        assert!(o.balanced(0.6));
+    }
+}

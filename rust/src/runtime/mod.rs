@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the request path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): HLO **text** is
+//! parsed via `HloModuleProto::from_text_file` (text — not serialized
+//! protos — because jax ≥ 0.5 emits 64-bit instruction ids the 0.5.1 proto
+//! path rejects; the text parser reassigns ids). Each entry point compiles
+//! once at startup; execution is a plain synchronous call (the CPU client
+//! computes inline), so thread-per-model gives the paper's draft/verify
+//! overlap (see [`crate::parallel`]).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::manifest::{EntryPoint, Manifest};
+
+/// One compiled AOT function.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<crate::config::manifest::TensorSpec>,
+    pub outputs: Vec<crate::config::manifest::TensorSpec>,
+    /// Cumulative execution statistics (perf pass).
+    pub calls: std::cell::Cell<u64>,
+    pub total_us: std::cell::Cell<u64>,
+}
+
+/// Typed argument for [`Executable::run`].
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    /// Scalar i32 (rank-0).
+    ScalarI32(i32),
+}
+
+/// The loaded artifact bundle: PJRT client + all entry points.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest (compiles nothing yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Runtime { manifest, client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one entry point (call once at startup; compilation of the
+    /// largest artifact takes a few hundred ms).
+    pub fn compile(&self, name: &str) -> Result<Executable> {
+        let ep: &EntryPoint = self.manifest.entry(name)?;
+        let path = ep
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        Ok(Executable {
+            name: name.to_string(),
+            exe,
+            inputs: ep.inputs.clone(),
+            outputs: ep.outputs.clone(),
+            calls: std::cell::Cell::new(0),
+            total_us: std::cell::Cell::new(0),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with the given arguments; returns one `Vec<f32>` per output
+    /// (i32 outputs are converted). Output order matches the manifest.
+    ///
+    /// Shapes are validated against the manifest before dispatch — a
+    /// mismatch is a programming error on the Rust side, so fail loudly.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.inputs) {
+            let lit = match arg {
+                Arg::F32(data) => {
+                    if data.len() != spec.elems() {
+                        return Err(anyhow!(
+                            "{}: input '{}' expects {} f32 elems, got {}",
+                            self.name, spec.name, spec.elems(), data.len()
+                        ));
+                    }
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(to_anyhow)?
+                }
+                Arg::I32(data) => {
+                    if data.len() != spec.elems() {
+                        return Err(anyhow!(
+                            "{}: input '{}' expects {} i32 elems, got {}",
+                            self.name, spec.name, spec.elems(), data.len()
+                        ));
+                    }
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(to_anyhow)?
+                }
+                Arg::ScalarI32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.to_tuple().map_err(to_anyhow)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.outputs) {
+            let v = match spec.dtype.as_str() {
+                "i32" => lit
+                    .to_vec::<i32>()
+                    .map_err(to_anyhow)?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+                _ => lit.to_vec::<f32>().map_err(to_anyhow)?,
+            };
+            out.push(v);
+        }
+        self.calls.set(self.calls.get() + 1);
+        self.total_us
+            .set(self.total_us.get() + t0.elapsed().as_micros() as u64);
+        Ok(out)
+    }
+
+    /// Mean execution latency observed so far, in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        if self.calls.get() == 0 {
+            return 0.0;
+        }
+        self.total_us.get() as f64 / 1000.0 / self.calls.get() as f64
+    }
+}
+
+impl Executable {
+    /// Execute once with zeroed inputs. PJRT-CPU JIT-finalizes thunks on
+    /// the first execution (seconds for the biggest artifact); paying that
+    /// at startup keeps it off the request path.
+    pub fn warmup(&self) -> Result<()> {
+        let f32_bufs: Vec<Vec<f32>> =
+            self.inputs.iter().map(|s| vec![0.0; s.elems()]).collect();
+        let i32_bufs: Vec<Vec<i32>> =
+            self.inputs.iter().map(|s| vec![0; s.elems()]).collect();
+        let args: Vec<Arg> = self
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if s.dtype == "i32" {
+                    if s.shape.is_empty() {
+                        Arg::ScalarI32(0)
+                    } else {
+                        Arg::I32(&i32_bufs[i])
+                    }
+                } else {
+                    Arg::F32(&f32_bufs[i])
+                }
+            })
+            .collect();
+        self.run(&args)?;
+        // Warmup should not pollute the perf counters.
+        self.calls.set(0);
+        self.total_us.set(0);
+        Ok(())
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

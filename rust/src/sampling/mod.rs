@@ -1,0 +1,403 @@
+//! Token sampling + speculative verification primitives (paper §3, App. D).
+//!
+//! Everything that touches probability distributions lives here:
+//! temperature/greedy/top-k sampling, the `Match` speculative acceptance
+//! rule of Leviathan et al. (rejection + residual resampling), and the
+//! paper's **Branch Speculative Sampling** (Algorithm 2), which verifies k
+//! candidate branch-point tokens while provably preserving the target
+//! distribution (Table 6's losslessness claim; pinned by unit + property
+//! tests and the `table6_lossless` bench).
+
+use crate::util::prng::Pcg32;
+
+pub type Token = u32;
+
+/// Numerically stable in-place softmax with temperature.
+/// `temperature == 0` produces the greedy one-hot distribution.
+pub fn softmax(logits: &[f32], temperature: f64, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend_from_slice(logits);
+    if temperature <= 0.0 {
+        let best = argmax(logits);
+        for x in out.iter_mut() {
+            *x = 0.0;
+        }
+        out[best] = 1.0;
+        return;
+    }
+    let inv_t = (1.0 / temperature) as f32;
+    let m = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in out.iter_mut() {
+        *x = ((*x - m) * inv_t).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Re-temper a (temperature-1) probability distribution: `p^(1/T)`
+/// renormalised; `T == 0` gives the greedy one-hot; `T == 1` is identity.
+pub fn apply_temperature(dist: &[f32], temperature: f64) -> Vec<f32> {
+    if temperature <= 0.0 {
+        let mut out = vec![0.0; dist.len()];
+        out[argmax(dist)] = 1.0;
+        return out;
+    }
+    if (temperature - 1.0).abs() < 1e-9 {
+        return dist.to_vec();
+    }
+    let inv_t = 1.0 / temperature;
+    let mut out: Vec<f32> = dist
+        .iter()
+        .map(|&p| if p > 0.0 { (p as f64).powf(inv_t) as f32 } else { 0.0 })
+        .collect();
+    let sum: f32 = out.iter().sum();
+    let inv = 1.0 / sum.max(1e-30);
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample a token from a normalized distribution.
+pub fn sample(dist: &[f32], rng: &mut Pcg32) -> Token {
+    rng.categorical(dist) as Token
+}
+
+/// Indices of the k largest entries, descending (partial selection).
+pub fn top_k_indices(dist: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..dist.len()).collect();
+    let k = k.min(dist.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        dist[b].partial_cmp(&dist[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+    idx
+}
+
+/// Shannon entropy (nats) of a distribution — AdaEDL's implicit signal.
+pub fn entropy(dist: &[f32]) -> f64 {
+    dist.iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -(p as f64) * (p as f64).ln())
+        .sum()
+}
+
+/// Max probability (draft confidence) — the implicit signal of Eq. 6.
+pub fn confidence(dist: &[f32]) -> f64 {
+    dist.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64
+}
+
+/// The residual distribution `norm(max(0, p − q))` used after a rejection.
+/// Falls back to `p` if the residual has zero mass (p == q).
+pub fn residual(p: &[f32], q: &[f32], out: &mut Vec<f32>) {
+    debug_assert_eq!(p.len(), q.len());
+    out.clear();
+    let mut sum = 0.0f32;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let r = (pi - qi).max(0.0);
+        out.push(r);
+        sum += r;
+    }
+    if sum <= 0.0 {
+        out.copy_from_slice(p);
+        return;
+    }
+    let inv = 1.0 / sum;
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Outcome of verifying a chain of draft tokens against target dists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatchResult {
+    /// Number of leading draft tokens accepted.
+    pub n_accepted: usize,
+    /// Token appended after the accepted prefix: either the residual-sampled
+    /// correction (on rejection) or a fresh sample from `p_extra` (on full
+    /// acceptance), if provided.
+    pub next_token: Option<Token>,
+}
+
+/// Speculative verification of Leviathan et al. (the paper's `Match`):
+/// accept draft token `x_i` with prob `min(1, p_i(x_i)/q_i(x_i))`; on the
+/// first rejection resample from `norm(max(0, p_i − q_i))`; on full
+/// acceptance sample the bonus token from `p_extra` when given.
+///
+/// `ps[i]` / `qs[i]` are the target/draft distributions *conditioning on
+/// the same prefix* for draft position i; `tokens[i]` the proposed token.
+pub fn match_verify(
+    tokens: &[Token],
+    qs: &[Vec<f32>],
+    ps: &[Vec<f32>],
+    p_extra: Option<&[f32]>,
+    rng: &mut Pcg32,
+) -> MatchResult {
+    debug_assert_eq!(tokens.len(), qs.len());
+    debug_assert!(ps.len() >= tokens.len());
+    let mut scratch = Vec::new();
+    for i in 0..tokens.len() {
+        let t = tokens[i] as usize;
+        let p_i = ps[i][t] as f64;
+        let q_i = (qs[i][t] as f64).max(1e-12);
+        if rng.next_f64() < (p_i / q_i).min(1.0) {
+            continue;
+        }
+        // Rejected at i: resample from the residual.
+        residual(&ps[i], &qs[i], &mut scratch);
+        let corrected = sample(&scratch, rng);
+        return MatchResult { n_accepted: i, next_token: Some(corrected) };
+    }
+    let bonus = p_extra.map(|p| sample(p, rng));
+    MatchResult { n_accepted: tokens.len(), next_token: bonus }
+}
+
+/// Branch Speculative Sampling (paper Algorithm 2, Appendix D).
+///
+/// Given the target distribution `p` at the branch point and `k` candidate
+/// branch tokens `x_b^i` each drawn from its draft distribution `q_i`,
+/// accept the first candidate passing `r < p(x)/q_i(x)`; after each
+/// rejection deflate `p ← norm(max(0, p − q_i))` (so the procedure is
+/// exactly k chained single-token speculative samplings); if every
+/// candidate is rejected, sample from the final residual. The returned
+/// token is distributed exactly as `p` (lossless; property-tested).
+pub fn branch_speculative_sample(
+    p: &[f32],
+    candidates: &[Token],
+    qs: &[Vec<f32>],
+    rng: &mut Pcg32,
+) -> (Token, Option<usize>) {
+    debug_assert_eq!(candidates.len(), qs.len());
+    let mut p_cur: Vec<f32> = p.to_vec();
+    let mut scratch = Vec::new();
+    for (i, (&tok, q)) in candidates.iter().zip(qs).enumerate() {
+        let pi = p_cur[tok as usize] as f64;
+        let qi = (q[tok as usize] as f64).max(1e-12);
+        if rng.next_f64() < (pi / qi).min(1.0) {
+            return (tok, Some(i));
+        }
+        residual(&p_cur.clone(), q, &mut scratch);
+        std::mem::swap(&mut p_cur, &mut scratch);
+    }
+    (sample(&p_cur, rng), None)
+}
+
+/// Adaptive branch width (Eq. 7): `k = max(1, floor(k_max · (1 − q(x_b))))`,
+/// clamped to `k_max`.
+pub fn adaptive_branch_width(confidence: f64, k_max: usize) -> usize {
+    ((k_max as f64 * (1.0 - confidence)).floor() as usize).clamp(1, k_max.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::{check, Gen};
+    use crate::util::stats::tv_distance;
+
+    fn dist(v: &[f32]) -> Vec<f32> {
+        let s: f32 = v.iter().sum();
+        v.iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn softmax_greedy_is_onehot() {
+        let mut out = Vec::new();
+        softmax(&[0.1, 2.0, -1.0], 0.0, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_normalises_and_orders() {
+        let mut out = Vec::new();
+        softmax(&[1.0, 2.0, 3.0], 1.0, &mut out);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+        // Lower temperature sharpens.
+        let mut sharp = Vec::new();
+        softmax(&[1.0, 2.0, 3.0], 0.25, &mut sharp);
+        assert!(sharp[2] > out[2]);
+    }
+
+    #[test]
+    fn top_k_returns_descending_heads() {
+        let d = [0.1f32, 0.5, 0.05, 0.3, 0.05];
+        assert_eq!(top_k_indices(&d, 3), vec![1, 3, 0]);
+        assert_eq!(top_k_indices(&d, 99).len(), 5);
+    }
+
+    #[test]
+    fn residual_zeroes_where_q_dominates() {
+        let p = dist(&[0.5, 0.5]);
+        let q = dist(&[0.9, 0.1]);
+        let mut r = Vec::new();
+        residual(&p, &q, &mut r);
+        assert_eq!(r[0], 0.0);
+        assert!((r[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residual_identical_falls_back_to_p() {
+        let p = dist(&[0.3, 0.7]);
+        let mut r = Vec::new();
+        residual(&p, &p, &mut r);
+        assert_eq!(r, p);
+    }
+
+    #[test]
+    fn match_accepts_all_when_q_equals_p() {
+        let mut rng = Pcg32::new(0);
+        let p = dist(&[0.25, 0.25, 0.25, 0.25]);
+        let tokens = vec![0, 1, 2];
+        let qs = vec![p.clone(), p.clone(), p.clone()];
+        let ps = qs.clone();
+        let r = match_verify(&tokens, &qs, &ps, Some(&p), &mut rng);
+        assert_eq!(r.n_accepted, 3);
+        assert!(r.next_token.is_some());
+    }
+
+    #[test]
+    fn match_rejects_impossible_tokens() {
+        let mut rng = Pcg32::new(0);
+        let q = dist(&[1.0, 1.0]);
+        let p = vec![1.0f32, 0.0]; // target forbids token 1
+        let r = match_verify(&[1], &[q], &[p], None, &mut rng);
+        assert_eq!(r.n_accepted, 0);
+        assert_eq!(r.next_token, Some(0));
+    }
+
+    /// The core losslessness theorem: speculative sampling with any draft q
+    /// yields samples distributed exactly as p.
+    #[test]
+    fn match_preserves_target_marginal() {
+        let mut rng = Pcg32::new(77);
+        let p = dist(&[0.5, 0.2, 0.2, 0.1]);
+        let q = dist(&[0.1, 0.4, 0.4, 0.1]);
+        let n = 200_000;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            let tok = sample(&q, &mut rng);
+            let r = match_verify(&[tok], &[q.clone()], &[p.clone()], None, &mut rng);
+            let out = if r.n_accepted == 1 { tok } else { r.next_token.unwrap() };
+            counts[out as usize] += 1;
+        }
+        let emp: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        let pd: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+        assert!(tv_distance(&emp, &pd) < 0.01, "{emp:?} vs {pd:?}");
+    }
+
+    /// Algorithm 2 losslessness: branch sampling over k candidates also
+    /// preserves the target marginal.
+    #[test]
+    fn branch_sampling_preserves_target_marginal() {
+        let mut rng = Pcg32::new(99);
+        let p = dist(&[0.4, 0.3, 0.2, 0.1]);
+        let q1 = dist(&[0.1, 0.6, 0.2, 0.1]);
+        let q2 = dist(&[0.3, 0.1, 0.5, 0.1]);
+        let n = 200_000;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            let c1 = sample(&q1, &mut rng);
+            let c2 = sample(&q2, &mut rng);
+            let (tok, _) = branch_speculative_sample(
+                &p, &[c1, c2], &[q1.clone(), q2.clone()], &mut rng);
+            counts[tok as usize] += 1;
+        }
+        let emp: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        let pd: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+        assert!(tv_distance(&emp, &pd) < 0.01, "{emp:?} vs {pd:?}");
+    }
+
+    #[test]
+    fn adaptive_width_scales_inverse_confidence() {
+        assert_eq!(adaptive_branch_width(0.95, 6), 1);
+        assert_eq!(adaptive_branch_width(0.5, 6), 3);
+        assert_eq!(adaptive_branch_width(0.01, 6), 5);
+        assert_eq!(adaptive_branch_width(0.0, 6), 6);
+        assert_eq!(adaptive_branch_width(0.5, 1), 1);
+    }
+
+    // ------------------------------------------------------------------
+    // Property tests
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn prop_residual_is_distribution() {
+        check("residual normalizes", 200, |g: &mut Gen| {
+            let n = g.usize_in(2, 20);
+            let p = g.distribution(n);
+            let q = g.distribution(n);
+            let mut r = Vec::new();
+            residual(&p, &q, &mut r);
+            let sum: f32 = r.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+            prop_assert!(r.iter().all(|&x| x >= 0.0));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_match_accept_count_bounded() {
+        check("match bounds", 200, |g: &mut Gen| {
+            let n = g.usize_in(2, 16);
+            let len = g.usize_in(1, 8);
+            let qs: Vec<Vec<f32>> = (0..len).map(|_| g.distribution(n)).collect();
+            let ps: Vec<Vec<f32>> = (0..len).map(|_| g.distribution(n)).collect();
+            let mut rng = Pcg32::new(g.rng.next_u64());
+            let tokens: Vec<Token> =
+                qs.iter().map(|q| sample(q, &mut rng)).collect();
+            let r = match_verify(&tokens, &qs, &ps, None, &mut rng);
+            prop_assert!(r.n_accepted <= len);
+            if r.n_accepted < len {
+                prop_assert!(r.next_token.is_some());
+                prop_assert!((r.next_token.unwrap() as usize) < n);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_branch_sample_token_in_support_of_p() {
+        check("branch support", 300, |g: &mut Gen| {
+            let n = g.usize_in(2, 12);
+            let k = g.usize_in(1, 4);
+            // p with some zero entries to make support checks meaningful.
+            let mut p = g.distribution(n);
+            let zero = g.usize_in(0, n - 1);
+            let removed = p[zero];
+            p[zero] = 0.0;
+            let rest: f32 = 1.0 - removed;
+            for x in p.iter_mut() {
+                *x /= rest.max(1e-6);
+            }
+            let qs: Vec<Vec<f32>> = (0..k).map(|_| g.distribution(n)).collect();
+            let mut rng = Pcg32::new(g.rng.next_u64());
+            let cands: Vec<Token> = qs.iter().map(|q| sample(q, &mut rng)).collect();
+            let (tok, _) = branch_speculative_sample(&p, &cands, &qs, &mut rng);
+            prop_assert!((tok as usize) < n);
+            prop_assert!(
+                p[tok as usize] > 0.0,
+                "sampled token {tok} outside support of p"
+            );
+            Ok(())
+        });
+    }
+}

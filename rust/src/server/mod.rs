@@ -1,0 +1,184 @@
+//! Line-protocol TCP server + client over the coordinator.
+//!
+//! Protocol (one line per message, UTF-8):
+//!   client → `GEN <max_new_tokens> <prompt text…>`
+//!   server → `OK <id> <completion text>` then `STATS <id> <json>`
+//!   client → `METRICS` ; server → `METRICS <json>`
+//!   client → `QUIT`
+//!
+//! Text is tokenized with the 64-symbol [`crate::token::Tokenizer`] (the
+//! tiny PJRT pair's alphabet). The server holds the coordinator; each
+//! connection is handled on its own thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::token::Tokenizer;
+use crate::util::json;
+
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:0"); returns the bound server.
+    pub fn bind(addr: &str, coordinator: Coordinator) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server { listener, coordinator: Arc::new(coordinator) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound socket")
+    }
+
+    /// Serve `max_conns` connections (None = forever). Blocking.
+    pub fn serve(&self, max_conns: Option<usize>) {
+        let mut served = 0;
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let coord = Arc::clone(&self.coordinator);
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(s, &coord) {
+                            eprintln!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+            served += 1;
+            if let Some(n) = max_conns {
+                if served >= n {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    let tok = Tokenizer::new();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "QUIT" {
+            return Ok(());
+        }
+        if line == "METRICS" {
+            let m = coord.registry();
+            let v = json::obj(vec![
+                ("completed", json::num(m.completed as f64)),
+                ("generated_tokens", json::num(m.generated_tokens as f64)),
+                ("mean_queue_ms", json::num(m.mean_queue_ms)),
+                ("mean_decode_ms", json::num(m.mean_decode_ms)),
+            ]);
+            writeln!(out, "METRICS {v}")?;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("GEN ") {
+            // Malformed requests get an ERR reply, not a disconnect.
+            let Some((max_new, prompt_text)) = rest.split_once(' ') else {
+                writeln!(out, "ERR GEN needs '<max_new> <prompt>'")?;
+                continue;
+            };
+            let Ok(max_new) = max_new.parse::<usize>() else {
+                writeln!(out, "ERR bad max_new")?;
+                continue;
+            };
+            let prompt = tok.encode(prompt_text);
+            if prompt.is_empty() {
+                writeln!(out, "ERR empty prompt")?;
+                continue;
+            }
+            coord.submit(prompt, max_new, 42);
+            let resp = coord.collect();
+            let text = tok.decode(&resp.tokens).replace('\n', " ").replace('\t', " ");
+            writeln!(out, "OK {} {}", resp.id, text)?;
+            let stats = json::obj(vec![
+                ("generated", json::num(resp.stats.generated_tokens as f64)),
+                ("rounds", json::num(resp.stats.rounds as f64)),
+                ("mean_accepted", json::num(resp.stats.mean_accepted())),
+                ("rollback_rate", json::num(resp.stats.rollback_rate())),
+                ("tokens_per_sec", json::num(resp.stats.tokens_per_sec())),
+                ("queue_ms", json::num(resp.queue_ms)),
+                ("total_ms", json::num(resp.total_ms)),
+            ]);
+            writeln!(out, "STATS {} {}", resp.id, stats)?;
+            continue;
+        }
+        writeln!(out, "ERR unknown command")?;
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Debug)]
+pub struct GenReply {
+    pub id: u64,
+    pub text: String,
+    pub stats: json::Value,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<GenReply> {
+        writeln!(self.writer, "GEN {max_new} {prompt}")?;
+        let ok = self.read_line()?;
+        let rest = ok.strip_prefix("OK ").ok_or_else(|| anyhow!("bad reply: {ok}"))?;
+        let (id, text) = rest.split_once(' ').ok_or_else(|| anyhow!("bad OK line"))?;
+        let stats_line = self.read_line()?;
+        let srest = stats_line
+            .strip_prefix("STATS ")
+            .ok_or_else(|| anyhow!("bad stats line: {stats_line}"))?;
+        let (_sid, stats_json) = srest.split_once(' ').ok_or_else(|| anyhow!("bad STATS"))?;
+        Ok(GenReply {
+            id: id.parse().context("bad id")?,
+            text: text.to_string(),
+            stats: json::parse(stats_json).context("bad stats json")?,
+        })
+    }
+
+    pub fn metrics(&mut self) -> Result<json::Value> {
+        writeln!(self.writer, "METRICS")?;
+        let line = self.read_line()?;
+        let rest = line
+            .strip_prefix("METRICS ")
+            .ok_or_else(|| anyhow!("bad metrics line"))?;
+        Ok(json::parse(rest)?)
+    }
+
+    pub fn quit(&mut self) -> Result<()> {
+        writeln!(self.writer, "QUIT")?;
+        Ok(())
+    }
+}

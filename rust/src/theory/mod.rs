@@ -1,0 +1,191 @@
+//! Closed-form latency models from the paper (§3, §4, Appendix B).
+//!
+//! These are the analytical curves behind Fig. 2 and the speedup equations
+//! of §4.1; the `fig2_theory` bench overlays them with simulated runs, and
+//! unit tests pin the algebra (Lemma 1, Theorem 1, the γ ≈ c optimum).
+
+/// Baseline SD per-token latency under full acceptance (§4.1):
+/// `T_SD = (γ + c)/(γ + 1) · t`.
+pub fn t_sd(gamma: f64, c: f64, t: f64) -> f64 {
+    (gamma + c) / (gamma + 1.0) * t
+}
+
+/// Ideal parallel SD per-token latency (Eq. 1):
+/// `T_PSD = max(γt, ct)/γ`.
+pub fn t_psd_ideal(gamma: f64, c: f64, t: f64) -> f64 {
+    (gamma * t).max(c * t) / gamma
+}
+
+/// Expected accepted draft length, truncated geometric (Lemma 1):
+/// `E[X] = α(1-α^γ)/(1-α)`.
+pub fn expected_accepted(alpha: f64, gamma: f64) -> f64 {
+    if (1.0 - alpha).abs() < 1e-12 {
+        return gamma;
+    }
+    alpha * (1.0 - alpha.powf(gamma)) / (1.0 - alpha)
+}
+
+/// Parallel SD per-token latency under rollback (Theorem 1):
+/// `T_PSDr = 2·max(γt, ct) / ((1+α^γ)·E[X])`.
+pub fn t_psd_rollback(alpha: f64, gamma: f64, c: f64, t: f64) -> f64 {
+    let ex = expected_accepted(alpha, gamma);
+    if ex <= 0.0 {
+        return f64::INFINITY;
+    }
+    2.0 * (gamma * t).max(c * t) / ((1.0 + alpha.powf(gamma)) * ex)
+}
+
+/// Probability of full acceptance `α^γ` (Eq. 2's point mass at γ).
+pub fn p_full_accept(alpha: f64, gamma: f64) -> f64 {
+    alpha.powf(gamma)
+}
+
+/// Probability of rollback `1 - α^γ`.
+pub fn p_rollback(alpha: f64, gamma: f64) -> f64 {
+    1.0 - p_full_accept(alpha, gamma)
+}
+
+/// Argmin over integer γ in `[1, gamma_max]` of Theorem-1 latency.
+pub fn optimal_gamma(alpha: f64, c: f64, t: f64, gamma_max: usize) -> usize {
+    (1..=gamma_max)
+        .min_by(|&a, &b| {
+            t_psd_rollback(alpha, a as f64, c, t)
+                .partial_cmp(&t_psd_rollback(alpha, b as f64, c, t))
+                .unwrap()
+        })
+        .unwrap_or(1)
+}
+
+/// Expected accepted length of a *capped* chain: `E[min(X, b)]` for
+/// per-token acceptance α (geometric, uncapped tail collapsed onto b).
+pub fn expected_accepted_capped(alpha: f64, b: usize) -> f64 {
+    expected_accepted(alpha, b as f64)
+}
+
+/// Branch-pipeline planning model (engine-side extension of Theorem 1):
+/// find the retain length `b` maximising committed tokens per unit time
+/// when an all-accept round keeps the pipeline flowing (cost
+/// `max(c·t, (b+2)·t)`) but any rejection forces a serial redraft of the
+/// next chain (`+ b·t`, the draft stage of Fig. 9). This is the quantity
+/// H-RAD implicitly optimises; Fig. 2's γ ≤ c conclusion carries over but
+/// the optimum shifts *below* the Theorem-1 argmin because re-entry is
+/// serialized.
+pub fn optimal_branch_retain(alpha: f64, c: f64, gamma_max: usize) -> usize {
+    let t = 1.0;
+    let mut best = (1usize, f64::NEG_INFINITY);
+    for b in 1..=gamma_max {
+        let p_full = alpha.powi(b as i32);
+        let tokens = p_full * (b as f64 + 1.0)
+            + (1.0 - p_full) * (expected_accepted_capped(alpha, b) + 1.0);
+        let time = (c * t).max((b as f64 + 2.0) * t) + (1.0 - p_full) * b as f64 * t;
+        let rate = tokens / time;
+        if rate > best.1 {
+            best = (b, rate);
+        }
+    }
+    best.0
+}
+
+/// Speedup of ideal parallel SD over vanilla SD (§4.1): `(γ+c)/(γ+1)` when
+/// γ ≥ c, times `c/γ` when γ < c.
+pub fn psd_over_sd_speedup(gamma: f64, c: f64) -> f64 {
+    t_sd(gamma, c, 1.0) / t_psd_ideal(gamma, c, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma1_limits() {
+        // α→1: everything accepted, E[X] → γ.
+        assert!((expected_accepted(1.0, 8.0) - 8.0).abs() < 1e-9);
+        // α→0: nothing accepted.
+        assert!(expected_accepted(1e-9, 8.0) < 1e-6);
+        // Monotone in α.
+        let mut prev = 0.0;
+        for i in 1..10 {
+            let e = expected_accepted(i as f64 / 10.0, 8.0);
+            assert!(e > prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn theorem1_cases_agree_at_gamma_eq_c() {
+        let (alpha, t) = (0.7, 1.0);
+        let c = 6.0;
+        let a = t_psd_rollback(alpha, c - 1e-9, c, t);
+        let b = t_psd_rollback(alpha, c + 1e-9, c, t);
+        assert!((a - b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn theorem1_alpha_to_one_approaches_double_ideal_rate() {
+        // As α→1, T_PSDr → 2·max(γt,ct) / (2γ) = T_PSD_ideal.
+        let (gamma, c, t) = (6.0, 6.0, 1.0);
+        let lim = t_psd_rollback(1.0 - 1e-12, gamma, c, t);
+        assert!((lim - t_psd_ideal(gamma, c, t)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimum_sits_at_gamma_le_c() {
+        // Paper Fig. 2: the minimum latency occurs in the γ ≤ c segment.
+        for &alpha in &[0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            let c = 8.0;
+            let g = optimal_gamma(alpha, c, 1.0, 32);
+            assert!(
+                g as f64 <= c,
+                "alpha={alpha}: optimal gamma {g} exceeds c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn rollback_latency_dominates_ideal() {
+        for &alpha in &[0.3, 0.6, 0.9] {
+            for &gamma in &[2.0, 4.0, 8.0] {
+                let c = 6.0;
+                assert!(
+                    t_psd_rollback(alpha, gamma, c, 1.0) >= t_psd_ideal(gamma, c, 1.0) - 1e-9,
+                    "alpha={alpha} gamma={gamma}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ideal_psd_speedup_peaks_near_two_for_large_c() {
+        // γ ≈ c, c ≫ 1 ⇒ (γ+c)/(γ+1) ≈ 2 (paper §4.1).
+        let c = 50.0;
+        let s = psd_over_sd_speedup(c, c);
+        assert!((s - 2.0).abs() < 0.05, "speedup {s}");
+    }
+
+    #[test]
+    fn branch_retain_below_theorem1_argmin() {
+        // Serialized re-entry pushes the optimum below the Theorem-1 γ*.
+        for &alpha in &[0.6, 0.7, 0.8] {
+            let c = 10.0;
+            let b = optimal_branch_retain(alpha, c, 16);
+            let g = optimal_gamma(alpha, c, 1.0, 16);
+            assert!(b <= g, "alpha={alpha}: b {b} vs gamma* {g}");
+            assert!(b >= 1);
+        }
+    }
+
+    #[test]
+    fn branch_retain_grows_with_alpha() {
+        let lo = optimal_branch_retain(0.5, 10.0, 16);
+        let hi = optimal_branch_retain(0.9, 10.0, 16);
+        assert!(hi >= lo, "{lo} -> {hi}");
+    }
+
+    #[test]
+    fn optimal_gamma_grows_with_alpha() {
+        let c = 10.0;
+        let g_low = optimal_gamma(0.4, c, 1.0, 32);
+        let g_high = optimal_gamma(0.9, c, 1.0, 32);
+        assert!(g_high >= g_low, "{g_low} -> {g_high}");
+    }
+}

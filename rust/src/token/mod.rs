@@ -1,0 +1,88 @@
+//! Tokenizer for the tiny PJRT pair: a 64-symbol alphabet.
+//!
+//! The build-time corpus (python/compile/corpus.py) is a synthetic symbol
+//! stream over vocab 64, so the "tokenizer" is a reversible byte↔symbol
+//! mapping: lowercase letters, digits, space and common punctuation map
+//! 1:1; everything else folds onto `<unk>` (symbol 63). Good enough to
+//! feed readable prompts through the real model path and print completions.
+
+pub const VOCAB: usize = 64;
+pub const UNK: u32 = 63;
+
+/// Symbol table: index -> display char.
+const ALPHABET: &[u8; 64] =
+    b"abcdefghijklmnopqrstuvwxyz0123456789 .,;:!?'\"()-+*/=<>[]{}_\n\t#&@";
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    to_sym: [u32; 256],
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_sym = [UNK; 256];
+        for (i, &b) in ALPHABET.iter().enumerate() {
+            to_sym[b as usize] = i as u32;
+        }
+        // Uppercase folds to lowercase.
+        for c in b'A'..=b'Z' {
+            to_sym[c as usize] = (c - b'A') as u32;
+        }
+        Self { to_sym }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| self.to_sym[b as usize]).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| ALPHABET[(t as usize).min(VOCAB - 1)] as char)
+            .collect()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_lowercase_text() {
+        let tok = Tokenizer::new();
+        let text = "hello world 42!";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+
+    #[test]
+    fn uppercase_folds() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.decode(&tok.encode("ABC")), "abc");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tok = Tokenizer::new();
+        let syms = tok.encode("é");
+        assert!(syms.iter().all(|&s| s == UNK));
+    }
+
+    #[test]
+    fn all_symbols_in_range() {
+        let tok = Tokenizer::new();
+        for b in 0u8..=255 {
+            let s = tok.to_sym[b as usize];
+            assert!(s < VOCAB as u32);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities built from scratch (the offline registry has no
+//! rand/serde/clap/criterion/proptest — see DESIGN.md §3 substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

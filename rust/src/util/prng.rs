@@ -1,0 +1,210 @@
+//! Deterministic PRNG (PCG-XSH-RR 64/32 + SplitMix64 seeding).
+//!
+//! The offline registry has no `rand` crate, and determinism is a hard
+//! requirement anyway: every engine, backend and bench takes an explicit
+//! seed so that paper-figure regeneration is reproducible bit-for-bit.
+
+/// SplitMix64 — used to expand a single `u64` seed into stream state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output, full 2^64 period.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed; distinct seeds give uncorrelated
+    /// streams (state and increment both derived via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1; // must be odd
+        let mut pcg = Self { state: 0, inc };
+        pcg.state = pcg.state.wrapping_add(state);
+        pcg.next_u32();
+        pcg
+    }
+
+    /// Derive an independent child stream (for per-request / per-branch rng).
+    pub fn fork(&mut self, tag: u64) -> Pcg32 {
+        let a = self.next_u64();
+        Pcg32::new(a ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire rejection).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "below(0)");
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= (bound.wrapping_neg() % bound) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (slow path; used only in setup code).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u32) as usize;
+        }
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w.max(0.0) as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg32::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_matches_weights() {
+        let mut rng = Pcg32::new(11);
+        let w = [1.0f32, 3.0, 6.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..100_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 100_000.0 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / 100_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(13);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg32::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

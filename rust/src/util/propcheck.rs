@@ -1,0 +1,135 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Gen`]; `check` runs it across
+//! many random cases and, on failure, reports the failing seed so the case
+//! can be replayed deterministically (`PROPCHECK_SEED=<n> cargo test`).
+
+use super::prng::Pcg32;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn prob(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    /// A vector of f32 weights in (0, 1], at least one element.
+    pub fn weights(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.usize_in(1, max_len.max(1));
+        (0..n).map(|_| self.rng.next_f32().max(1e-6)).collect()
+    }
+
+    /// A normalized probability distribution of the given length.
+    pub fn distribution(&mut self, len: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..len).map(|_| self.rng.next_f32().max(1e-6)).collect();
+        let sum: f32 = v.iter().sum();
+        for x in &mut v {
+            *x /= sum;
+        }
+        v
+    }
+
+    pub fn tokens(&mut self, max_len: usize, vocab: u32) -> Vec<u32> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.rng.below(vocab)).collect()
+    }
+}
+
+/// Run `prop` on `cases` random cases. Panics with the failing seed on the
+/// first case that panics or returns `Err`.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let fixed_seed = std::env::var("PROPCHECK_SEED").is_ok();
+    let runs = if fixed_seed { 1 } else { cases };
+
+    for case in 0..runs {
+        let seed = if fixed_seed { base } else { base.wrapping_add(case as u64) };
+        let mut g = Gen { rng: Pcg32::new(seed), size: 1 + case % 50 };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed on case {case} (PROPCHECK_SEED={seed}): {msg}"
+            ),
+            Err(_) => panic!(
+                "property '{name}' panicked on case {case} (PROPCHECK_SEED={seed})"
+            ),
+        }
+    }
+}
+
+/// Assert helper returning Err instead of panicking, for use inside props.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |g| {
+            count += 1;
+            let x = g.prob();
+            prop_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "PROPCHECK_SEED")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert!(n < 101);
+            prop_assert!(n < 5, "n was {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn distribution_normalises() {
+        check("dist", 50, |g| {
+            let d = g.distribution(g.size.max(1));
+            let sum: f32 = d.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Statistics for the bench harness: summaries, percentiles, histograms,
+//! and a truncated-geometric fitter (the paper's accepted-length model,
+//! Eq. 2). Replaces criterion, which is unavailable offline.
+
+/// Online summary of a sample (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the 95% CI of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 { return f64::NAN; }
+        1.96 * self.std() / (self.n as f64).sqrt()
+    }
+}
+
+impl std::iter::FromIterator<f64> for Summary {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut s = Summary::new();
+        for x in iter {
+            s.add(x);
+        }
+        s
+    }
+}
+
+/// Percentile by linear interpolation on a sorted copy. `q` in [0, 100].
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Integer-bucket histogram (e.g. accepted-length distribution).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(buckets: usize) -> Self {
+        Self { counts: vec![0; buckets], total: 0 }
+    }
+
+    pub fn add(&mut self, bucket: usize) {
+        let b = bucket.min(self.counts.len() - 1);
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Empirical pmf.
+    pub fn pmf(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| c as f64 / self.total as f64).collect()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { return 0.0; }
+        self.counts.iter().enumerate()
+            .map(|(i, &c)| i as f64 * c as f64)
+            .sum::<f64>() / self.total as f64
+    }
+}
+
+/// Truncated geometric pmf from the paper (Eq. 2):
+/// `P(X = k) = (1-α)·α^k` for `k < γ`, `P(X = γ) = α^γ`.
+pub fn trunc_geometric_pmf(alpha: f64, gamma: usize) -> Vec<f64> {
+    let mut pmf = Vec::with_capacity(gamma + 1);
+    for k in 0..gamma {
+        pmf.push((1.0 - alpha) * alpha.powi(k as i32));
+    }
+    pmf.push(alpha.powi(gamma as i32));
+    pmf
+}
+
+/// Expected accepted length of the truncated geometric (Lemma 1):
+/// `E[X] = α(1-α^γ)/(1-α)`.
+pub fn trunc_geometric_mean(alpha: f64, gamma: usize) -> f64 {
+    if (1.0 - alpha).abs() < 1e-12 {
+        return gamma as f64;
+    }
+    alpha * (1.0 - alpha.powi(gamma as i32)) / (1.0 - alpha)
+}
+
+/// MLE of α for a truncated-geometric sample given by an accepted-length
+/// histogram (invert Lemma 1 numerically via bisection on the mean).
+pub fn fit_trunc_geometric(hist: &Histogram) -> f64 {
+    let gamma = hist.counts().len() - 1;
+    let target = hist.mean();
+    let (mut lo, mut hi) = (1e-6, 1.0 - 1e-9);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if trunc_geometric_mean(mid, gamma) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Total-variation distance between two pmfs.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s: Summary = [1.0, 2.0, 3.0, 4.0].into_iter().collect();
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometric_pmf_normalises() {
+        for &alpha in &[0.1, 0.5, 0.9] {
+            for &gamma in &[1usize, 4, 8] {
+                let pmf = trunc_geometric_pmf(alpha, gamma);
+                let sum: f64 = pmf.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-12, "alpha={alpha} gamma={gamma}");
+            }
+        }
+    }
+
+    #[test]
+    fn lemma1_matches_pmf_mean() {
+        for &alpha in &[0.3, 0.6, 0.85] {
+            let gamma = 8;
+            let pmf = trunc_geometric_pmf(alpha, gamma);
+            let mean: f64 = pmf.iter().enumerate().map(|(k, p)| k as f64 * p).sum();
+            assert!((mean - trunc_geometric_mean(alpha, gamma)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fit_recovers_alpha() {
+        let alpha = 0.7;
+        let gamma = 8;
+        let pmf = trunc_geometric_pmf(alpha, gamma);
+        let mut h = Histogram::new(gamma + 1);
+        for (k, p) in pmf.iter().enumerate() {
+            for _ in 0..((p * 100_000.0) as u64) {
+                h.add(k);
+            }
+        }
+        let est = fit_trunc_geometric(&h);
+        assert!((est - alpha).abs() < 0.01, "est {est}");
+    }
+
+    #[test]
+    fn histogram_clamps_overflow() {
+        let mut h = Histogram::new(4);
+        h.add(10);
+        assert_eq!(h.counts()[3], 1);
+    }
+}

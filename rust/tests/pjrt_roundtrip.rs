@@ -1,0 +1,89 @@
+//! Integration: AOT artifacts -> PJRT runtime -> engines, end to end.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so unit CI
+//! without the Python toolchain still passes).
+
+use specbranch::backend::pjrt::PjrtBackend;
+use specbranch::backend::Backend;
+use specbranch::config::EngineConfig;
+use specbranch::engines::{self, Engine};
+use specbranch::util::prng::Pcg32;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = specbranch::config::Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn ar_generates_on_real_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::start(&dir).expect("backend");
+    let engine = engines::build(
+        specbranch::config::EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 16, ..Default::default() },
+    );
+    let mut session = backend.new_session(1);
+    let prompt: Vec<u32> = vec![5, 10, 15, 20, 25, 30];
+    let out = engine.generate(session.as_mut(), &prompt, &mut Pcg32::new(7));
+    assert_eq!(out.tokens.len(), 16);
+    assert!(out.tokens.iter().all(|&t| (t as usize) < backend.manifest().vocab));
+}
+
+#[test]
+fn specbranch_greedy_matches_ar_on_real_models() {
+    // The losslessness claim on the real artifacts: greedy SpecBranch must
+    // reproduce the greedy AR stream exactly.
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::start(&dir).expect("backend");
+    let cfg = EngineConfig {
+        max_new_tokens: 24,
+        gamma: 4,
+        target_temperature: 0.0,
+        ..Default::default()
+    };
+    let prompt: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+
+    let ar = engines::build(specbranch::config::EngineId::Autoregressive, cfg.clone());
+    let mut s1 = backend.new_session(3);
+    let ar_out = ar.generate(s1.as_mut(), &prompt, &mut Pcg32::new(1));
+
+    let sb = engines::build(specbranch::config::EngineId::SpecBranch, cfg);
+    let mut s2 = backend.new_session(3);
+    let sb_out = sb.generate(s2.as_mut(), &prompt, &mut Pcg32::new(2));
+
+    let n = ar_out.tokens.len().min(sb_out.tokens.len());
+    assert!(n >= 16, "too few tokens to compare");
+    assert_eq!(&ar_out.tokens[..n], &sb_out.tokens[..n]);
+    assert!(sb_out.stats.rounds > 0);
+}
+
+#[test]
+fn all_engines_run_on_real_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::start(&dir).expect("backend");
+    for id in [
+        specbranch::config::EngineId::Sps,
+        specbranch::config::EngineId::AdaEdl,
+        specbranch::config::EngineId::Lookahead,
+        specbranch::config::EngineId::Pearl,
+        specbranch::config::EngineId::SpecBranchNoBranch,
+    ] {
+        let engine = engines::build(
+            id,
+            EngineConfig { max_new_tokens: 12, gamma: 4, ..Default::default() },
+        );
+        let mut session = backend.new_session(9);
+        let out = engine.generate(session.as_mut(), &[3, 1, 4, 1, 5, 9], &mut Pcg32::new(11));
+        assert!(
+            out.tokens.len() >= 12,
+            "{:?} produced only {} tokens",
+            id,
+            out.tokens.len()
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Server protocol round-trip over a real TCP socket (sim backend).
+
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use specbranch::coordinator::Coordinator;
+use specbranch::server::{Client, Server};
+
+fn start_server() -> std::net::SocketAddr {
+    let backends: Vec<Box<dyn Backend + Send>> = (0..2)
+        .map(|_| {
+            let cfg = SimConfig::new(
+                ModelPair::get(PairId::Llama68m7b),
+                Task::get(TaskId::MtBench),
+            );
+            Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+        })
+        .collect();
+    let coord = Coordinator::start(
+        backends,
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 32, ..Default::default() },
+    );
+    let server = Server::bind("127.0.0.1:0", coord).expect("bind");
+    let addr = server.local_addr();
+    std::thread::spawn(move || server.serve(None));
+    addr
+}
+
+#[test]
+fn generate_roundtrip() {
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let reply = client.generate("hello world this is a test", 32).expect("generate");
+    assert!(!reply.text.is_empty());
+    let gen = reply.stats.get("generated").and_then(|v| v.as_f64()).unwrap();
+    assert!(gen >= 32.0);
+    let tps = reply.stats.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap();
+    assert!(tps > 0.0);
+    client.quit().unwrap();
+}
+
+#[test]
+fn metrics_accumulate() {
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    for _ in 0..3 {
+        client.generate("some prompt text", 16).expect("generate");
+    }
+    let m = client.metrics().expect("metrics");
+    let completed = m.get("completed").and_then(|v| v.as_f64()).unwrap();
+    assert!(completed >= 3.0);
+    client.quit().unwrap();
+}
+
+#[test]
+fn multiple_clients_share_server() {
+    let addr = start_server();
+    let h: Vec<_> = (0..3)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let r = c.generate(&format!("client {i} prompt"), 16).expect("gen");
+                assert!(!r.text.is_empty());
+            })
+        })
+        .collect();
+    for t in h {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn bad_commands_get_errors_not_disconnects() {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = start_server();
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    writeln!(s, "NOPE").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"));
+    writeln!(s, "GEN abc").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR") || line.contains("bad"));
+}

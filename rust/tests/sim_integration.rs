@@ -1,0 +1,109 @@
+//! Integration over the simulation backend: cross-engine invariants at a
+//! scale unit tests don't reach, plus end-to-end metric sanity.
+
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use specbranch::engines;
+use specbranch::metrics::DecodeStats;
+use specbranch::util::prng::Pcg32;
+
+fn run(pair: PairId, task: TaskId, engine: EngineId, seed: u64, n: usize) -> DecodeStats {
+    let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+    let backend = SimBackend::new(cfg);
+    let e = engines::build(
+        engine,
+        EngineConfig {
+            gamma: (ModelPair::get(pair).c as usize).min(8),
+            max_new_tokens: n,
+            ..Default::default()
+        },
+    );
+    let mut s = backend.new_session(seed);
+    e.generate(s.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(seed)).stats
+}
+
+#[test]
+fn every_engine_terminates_on_every_pair() {
+    for pair in ModelPair::PAPER_PAIRS {
+        for engine in [
+            EngineId::Autoregressive,
+            EngineId::Sps,
+            EngineId::AdaEdl,
+            EngineId::Lookahead,
+            EngineId::Pearl,
+            EngineId::SpecBranch,
+            EngineId::SpecBranchNoBranch,
+            EngineId::SpecBranchNoHrad,
+            EngineId::SpecBranchPp,
+        ] {
+            let stats = run(pair, TaskId::Qa, engine, 3, 60);
+            assert!(
+                stats.generated_tokens >= 60,
+                "{engine:?} on {pair:?}: only {} tokens",
+                stats.generated_tokens
+            );
+            assert!(stats.elapsed_ms > 0.0);
+        }
+    }
+}
+
+#[test]
+fn speculative_engines_never_lose_tokens() {
+    // generated == committed − prompt: every commit is accounted.
+    for engine in [EngineId::Sps, EngineId::Pearl, EngineId::SpecBranch] {
+        let stats = run(PairId::Vicuna68m13b, TaskId::MtBench, engine, 11, 150);
+        assert!(stats.generated_tokens >= 150);
+        assert!(stats.rounds > 0);
+        // M is bounded by block size + bonus.
+        assert!(stats.mean_accepted() <= 18.0);
+    }
+}
+
+#[test]
+fn all_accept_condition_tracks_alignment() {
+    // Well-aligned pairs see far more all-accept rounds (the condition
+    // parallel SD needs, §1).
+    let poor = run(PairId::Vicuna68m13b, TaskId::CnnDm, EngineId::Sps, 5, 250);
+    let good = run(PairId::Llama318b70b, TaskId::HumanEval, EngineId::Sps, 5, 250);
+    let frac = |s: &DecodeStats| s.all_accept_rounds as f64 / s.rounds.max(1) as f64;
+    assert!(
+        frac(&good) > frac(&poor),
+        "good {:.2} vs poor {:.2}",
+        frac(&good),
+        frac(&poor)
+    );
+}
+
+#[test]
+fn task_difficulty_ordering_holds() {
+    // Translation (easy) must yield higher SpS speedup than CNN/DM (hard)
+    // on the same pair — the per-task calibration of Tables 2/3.
+    let pair = PairId::Llama68m7b;
+    let easy = run(pair, TaskId::Translation, EngineId::Sps, 9, 250);
+    let hard = run(pair, TaskId::CnnDm, EngineId::Sps, 9, 250);
+    let easy_ar = run(pair, TaskId::Translation, EngineId::Autoregressive, 9, 250);
+    let hard_ar = run(pair, TaskId::CnnDm, EngineId::Autoregressive, 9, 250);
+    assert!(easy.speedup_vs(&easy_ar) > hard.speedup_vs(&hard_ar));
+}
+
+#[test]
+fn energy_ordering_matches_paper_on_poor_alignment() {
+    // Table 10: SpecBranch < SpS < PEARL on poorly aligned pairs.
+    use specbranch::metrics::energy_kj;
+    let pair = ModelPair::get(PairId::Vicuna68m13b);
+    let sps = energy_kj(&run(PairId::Vicuna68m13b, TaskId::HumanEval, EngineId::Sps, 3, 300), &pair);
+    let pearl = energy_kj(&run(PairId::Vicuna68m13b, TaskId::HumanEval, EngineId::Pearl, 3, 300), &pair);
+    let ours = energy_kj(&run(PairId::Vicuna68m13b, TaskId::HumanEval, EngineId::SpecBranch, 3, 300), &pair);
+    assert!(ours < pearl, "SpecBranch {ours:.2} kJ vs PEARL {pearl:.2} kJ");
+    let _ = sps;
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(PairId::Deepseek13b33b, TaskId::Math, EngineId::SpecBranch, 21, 100);
+    let b = run(PairId::Deepseek13b33b, TaskId::Math, EngineId::SpecBranch, 21, 100);
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.elapsed_ms, b.elapsed_ms);
+}
