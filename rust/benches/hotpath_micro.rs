@@ -8,7 +8,8 @@ use std::time::Instant;
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
 use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use specbranch::engines;
+use specbranch::engines::{self, Engine};
+use specbranch::metrics::DecodeStats;
 use specbranch::sampling;
 use specbranch::util::prng::Pcg32;
 
@@ -74,11 +75,60 @@ fn bench_sampling_kernels() {
         "sampling::residual(64)       {:>8.1} ns/op",
         t0.elapsed().as_nanos() as f64 / n as f64
     );
+
+    // Branch Speculative Sampling (Alg. 2) with k=4 poorly-aligned
+    // candidate drafts: most rounds walk the full rejection chain, the
+    // code path that used to clone the target distribution per rejection.
+    let qs: Vec<Vec<f32>> = (0..4)
+        .map(|i| {
+            let mut v = dist.clone();
+            v.rotate_left(13 * (i + 1) % 64); // 13/26/39/52: all misaligned
+            v
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n {
+        let cands: Vec<u32> = qs.iter().map(|q| sampling::sample(q, &mut rng)).collect();
+        let (tok, _) = sampling::branch_speculative_sample(&dist, &cands, &qs, &mut rng);
+        acc += tok as u64;
+    }
+    println!(
+        "sampling::branch_sample(k=4) {:>8.1} ns/op (checksum {acc})",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
+}
+
+/// DecodeStats::merge with populated histograms — the coordinator/bench
+/// aggregation path (used to replay histogram counts one add at a time).
+fn bench_stats_merge() {
+    let mut src = DecodeStats::with_hist(16);
+    if let Some(h) = src.accepted_hist.as_mut() {
+        for k in 0..17 {
+            for _ in 0..60_000 {
+                h.add(k);
+            }
+        }
+    }
+    src.generated_tokens = 1_000_000;
+    src.rounds = 500_000;
+    let n = 100_000;
+    let mut dst = DecodeStats::with_hist(16);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        dst.merge(&src);
+    }
+    println!(
+        "DecodeStats::merge(1M-hist)  {:>8.1} ns/op (total {})",
+        t0.elapsed().as_nanos() as f64 / n as f64,
+        dst.accepted_hist.as_ref().map(|h| h.total()).unwrap_or(0)
+    );
 }
 
 fn main() {
     println!("== hotpath microbenchmarks (engine-side work only) ==");
     bench_sampling_kernels();
+    bench_stats_merge();
     println!();
     for id in [
         EngineId::Autoregressive,

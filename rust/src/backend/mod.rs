@@ -22,8 +22,49 @@
 //! SD's mutual-waiting bubbles and parallel SD's overlap, for both real
 //! and virtual time.
 
+#[cfg(feature = "xla")]
 pub mod pjrt;
 pub mod sim;
+
+/// Stub PJRT backend for builds without the `xla` feature: keeps the public
+/// surface (`PjrtBackend::start`) so callers compile unchanged, but startup
+/// reports that real-model execution is unavailable offline.
+#[cfg(not(feature = "xla"))]
+pub mod pjrt {
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use super::{Backend, Session};
+    use crate::config::Manifest;
+
+    pub struct PjrtBackend {
+        manifest: Manifest,
+    }
+
+    impl PjrtBackend {
+        pub fn start(_dir: impl AsRef<std::path::Path>) -> Result<Arc<PjrtBackend>> {
+            Err(anyhow!(
+                "built without the `xla` feature: the PJRT backend needs the \
+                 xla crate (xla_extension); use `--backend sim` instead"
+            ))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+    }
+
+    impl Backend for Arc<PjrtBackend> {
+        fn new_session(&self, _seed: u64) -> Box<dyn Session + Send> {
+            unreachable!("no PJRT sessions exist without the xla feature")
+        }
+
+        fn name(&self) -> String {
+            "pjrt:disabled".to_string()
+        }
+    }
+}
 
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -127,8 +168,9 @@ pub trait Session {
     fn capacity_left(&self) -> usize;
 }
 
-/// A backend constructs sessions.
+/// A backend constructs sessions. Sessions are `Send` so a decode task can
+/// migrate between scheduler workers round by round (continuous batching).
 pub trait Backend {
-    fn new_session(&self, seed: u64) -> Box<dyn Session>;
+    fn new_session(&self, seed: u64) -> Box<dyn Session + Send>;
     fn name(&self) -> String;
 }

@@ -355,7 +355,7 @@ impl PjrtBackend {
 }
 
 impl Backend for std::sync::Arc<PjrtBackend> {
-    fn new_session(&self, _seed: u64) -> Box<dyn Session> {
+    fn new_session(&self, _seed: u64) -> Box<dyn Session + Send> {
         Box::new(self.new_pjrt_session())
     }
 

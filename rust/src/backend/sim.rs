@@ -103,7 +103,7 @@ impl SimBackend {
 }
 
 impl Backend for SimBackend {
-    fn new_session(&self, seed: u64) -> Box<dyn Session> {
+    fn new_session(&self, seed: u64) -> Box<dyn Session + Send> {
         let mut cfg = self.cfg.clone();
         cfg.seed = cfg.seed ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         Box::new(SimSession::new(cfg))

@@ -8,7 +8,7 @@
 use crate::backend::sim::{SimBackend, SimConfig};
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use crate::engines;
+use crate::engines::{self, Engine};
 use crate::hrad;
 use crate::metrics;
 use crate::theory;

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use crate::backend::sim::{SimBackend, SimConfig};
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use crate::engines;
+use crate::engines::{self, DecodeTask};
 use crate::metrics::DecodeStats;
 use crate::util::prng::Pcg32;
 
@@ -89,6 +89,8 @@ impl Runner {
     }
 
     /// Run an engine over the workload; merged stats across requests.
+    /// Each request is driven through the step-wise [`DecodeTask`] API —
+    /// the same machinery the serving coordinator schedules.
     pub fn run_engine(
         &self,
         pair: PairId,
@@ -106,8 +108,13 @@ impl Runner {
             let prompt: Vec<u32> = (0..task_cfg.prompt_len.min(48).max(4))
                 .map(|_| rng.below(60))
                 .collect();
-            let mut session = backend.new_session(seed);
-            let out = engine.generate(session.as_mut(), &prompt, &mut rng);
+            let session = backend.new_session(seed);
+            let mut decode =
+                DecodeTask::new(engine.as_ref(), session, &prompt, cfg.max_new_tokens, rng);
+            while !decode.is_done() {
+                decode.step();
+            }
+            let out = decode.finish();
             merged.merge(&out.stats);
         }
         merged

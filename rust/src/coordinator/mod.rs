@@ -1,22 +1,29 @@
-//! Serving coordinator: request queue, continuous scheduling, worker pool.
+//! Serving coordinator: request queue, continuous-batching scheduler,
+//! worker pool.
 //!
-//! The L3 serving layer above the decoding engines (vLLM-router-shaped):
-//! requests enter a FIFO admission queue; a pool of decode workers — each
-//! owning its own [`Backend`] handle and [`Engine`] — pulls the next
-//! request the moment it frees up (continuous batching at request
-//! granularity: the unit of batching in SpecBranch is the *branch batch*
-//! inside a round, which the engine already exploits via
-//! `draft_forward_batch`). Per-request decode statistics aggregate into a
-//! coordinator-wide [`Registry`] that the server and benches report from.
+//! The L3 serving layer above the decoding engines (vLLM-router-shaped).
+//! Requests enter a FIFO admission queue; a pool of decode workers — each
+//! owning its own [`Backend`] handle and [`Engine`] — schedules **rounds**,
+//! not whole requests: admission turns a request into a [`DecodeTask`]
+//! (prefill + per-request budget), and workers then pull one task at a time
+//! from a round-robin ready queue, run exactly one draft/verify round, and
+//! requeue it. A long request therefore never head-of-line-blocks short
+//! ones, new arrivals join the running batch between rounds, and the
+//! per-request `max_new_tokens` is honored exactly by the engine layer —
+//! there is no post-decode truncation anywhere. Per-request decode
+//! statistics aggregate into a coordinator-wide [`Registry`] that the
+//! server and benches report from.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
-use crate::engines::{self, Engine};
+use crate::engines::{self, DecodeTask, Engine};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::prng::Pcg32;
@@ -28,6 +35,19 @@ pub struct Request {
     pub prompt: Vec<Token>,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// Optional per-round streaming channel (tokens land as rounds commit).
+    pub stream: Option<Sender<StreamChunk>>,
+}
+
+/// Per-round streaming update for one request.
+#[derive(Clone, Debug)]
+pub struct StreamChunk {
+    pub id: u64,
+    /// Tokens committed by the round that just ran (may be empty on the
+    /// final capacity-exhausted round).
+    pub tokens: Vec<Token>,
+    /// True on the last chunk; the full [`Response`] follows via `collect`.
+    pub done: bool,
 }
 
 /// Completed request.
@@ -42,9 +62,22 @@ pub struct Response {
     pub total_ms: f64,
 }
 
+/// One in-flight request: a resumable decode task plus timing bookkeeping.
+struct Inflight {
+    id: u64,
+    task: DecodeTask,
+    enqueued_at: Instant,
+    admitted_at: Instant,
+    /// Accumulated on-worker decode time (prefill + all rounds), µs.
+    decode_us: u64,
+    stream: Option<Sender<StreamChunk>>,
+}
+
 #[derive(Default)]
 struct Queues {
-    inbox: VecDeque<(Request, std::time::Instant)>,
+    inbox: VecDeque<(Request, Instant)>,
+    /// Round-robin queue of in-flight tasks awaiting their next round.
+    ready: VecDeque<Inflight>,
     outbox: VecDeque<Response>,
 }
 
@@ -53,6 +86,8 @@ struct Queues {
 pub struct Registry {
     pub completed: AtomicU64,
     pub generated_tokens: AtomicU64,
+    /// Draft/verify rounds executed across all requests (scheduler units).
+    pub rounds: AtomicU64,
     pub queue_us_total: AtomicU64,
     pub decode_us_total: AtomicU64,
 }
@@ -63,6 +98,7 @@ impl Registry {
         RegistrySnapshot {
             completed,
             generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
             mean_queue_ms: if completed == 0 {
                 0.0
             } else {
@@ -81,11 +117,12 @@ impl Registry {
 pub struct RegistrySnapshot {
     pub completed: u64,
     pub generated_tokens: u64,
+    pub rounds: u64,
     pub mean_queue_ms: f64,
     pub mean_decode_ms: f64,
 }
 
-/// The coordinator: admission queue + decode worker pool.
+/// The coordinator: admission queue + round-scheduling decode worker pool.
 pub struct Coordinator {
     queues: Arc<(Mutex<Queues>, Condvar, Condvar)>,
     registry: Arc<Registry>,
@@ -98,7 +135,8 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start a worker pool. Each worker gets its own backend handle (the
     /// PJRT handles are Send-but-not-Sync channel endpoints) and its own
-    /// engine instance.
+    /// engine instance; tasks migrate freely between workers round by
+    /// round.
     pub fn start(
         backends: Vec<Box<dyn Backend + Send>>,
         engine_id: EngineId,
@@ -108,6 +146,10 @@ impl Coordinator {
         let registry = Arc::new(Registry::default());
         let stop = Arc::new(AtomicBool::new(false));
         let inflight = Arc::new(AtomicU64::new(0));
+        // Continuous-batch window: cap admissions so a request flood cannot
+        // open unbounded live sessions (each admission prefills a KV cache)
+        // while still letting arrivals join a running batch between rounds.
+        let max_ready = 16 * backends.len().max(1);
         let mut workers = Vec::new();
         for (wi, backend) in backends.into_iter().enumerate() {
             let queues = Arc::clone(&queues);
@@ -119,7 +161,7 @@ impl Coordinator {
                 .name(format!("decode-worker-{wi}"))
                 .spawn(move || {
                     let engine: Box<dyn Engine> = engines::build(engine_id, cfg);
-                    worker_loop(backend, engine, queues, registry, stop, inflight);
+                    worker_loop(backend, engine, queues, registry, stop, inflight, max_ready);
                 })
                 .expect("spawn worker");
             workers.push(handle);
@@ -136,13 +178,36 @@ impl Coordinator {
 
     /// Enqueue a request; returns its id immediately.
     pub fn submit(&self, prompt: Vec<Token>, max_new_tokens: usize, seed: u64) -> u64 {
+        self.enqueue(prompt, max_new_tokens, seed, None)
+    }
+
+    /// Enqueue a request whose per-round token deltas are sent over
+    /// `stream` as they commit; the final [`Response`] still arrives via
+    /// `collect`/`collect_id`.
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<Token>,
+        max_new_tokens: usize,
+        seed: u64,
+        stream: Sender<StreamChunk>,
+    ) -> u64 {
+        self.enqueue(prompt, max_new_tokens, seed, Some(stream))
+    }
+
+    fn enqueue(
+        &self,
+        prompt: Vec<Token>,
+        max_new_tokens: usize,
+        seed: u64,
+        stream: Option<Sender<StreamChunk>>,
+    ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let (lock, cv_in, _) = &*self.queues;
         let mut q = lock.lock().unwrap();
         self.inflight.fetch_add(1, Ordering::SeqCst);
         q.inbox.push_back((
-            Request { id, prompt, max_new_tokens, seed },
-            std::time::Instant::now(),
+            Request { id, prompt, max_new_tokens, seed, stream },
+            Instant::now(),
         ));
         cv_in.notify_one();
         id
@@ -155,6 +220,19 @@ impl Coordinator {
         loop {
             if let Some(r) = q.outbox.pop_front() {
                 return r;
+            }
+            q = cv_out.wait(q).unwrap();
+        }
+    }
+
+    /// Block until the response for `id` is ready (other responses stay
+    /// queued for their own collectors).
+    pub fn collect_id(&self, id: u64) -> Response {
+        let (lock, _, cv_out) = &*self.queues;
+        let mut q = lock.lock().unwrap();
+        loop {
+            if let Some(pos) = q.outbox.iter().position(|r| r.id == id) {
+                return q.outbox.remove(pos).expect("position just found");
             }
             q = cv_out.wait(q).unwrap();
         }
@@ -174,14 +252,24 @@ impl Coordinator {
         self.registry.snapshot()
     }
 
-    /// Stop all workers (in-flight requests finish; queued ones drain).
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let (_, cv_in, _) = &*self.queues;
-        cv_in.notify_all();
+    /// Stop all workers. Queued and in-flight requests drain to completion
+    /// first; any responses not yet collected are returned.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        let (lock, cv_in, _) = &*self.queues;
+        {
+            // Store + notify under the queues lock: a worker holds this
+            // lock from its stop-check until it parks on the condvar, so
+            // without the lock the notify could land in that window and be
+            // lost, deadlocking join() below.
+            let _q = lock.lock().unwrap();
+            self.stop.store(true, Ordering::SeqCst);
+            cv_in.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        let mut q = lock.lock().unwrap();
+        q.outbox.drain(..).collect()
     }
 }
 
@@ -192,14 +280,30 @@ fn worker_loop(
     registry: Arc<Registry>,
     stop: Arc<AtomicBool>,
     inflight: Arc<AtomicU64>,
+    max_ready: usize,
 ) {
     let (lock, cv_in, cv_out) = &*queues;
+    // One scheduling decision: admit a new request or run one round.
+    enum Work {
+        Admit(Request, Instant),
+        Round(Inflight),
+    }
     loop {
-        let (req, enqueued_at) = {
+        let work = {
             let mut q = lock.lock().unwrap();
             loop {
-                if let Some(item) = q.inbox.pop_front() {
-                    break item;
+                // Admission first — new arrivals join the running batch
+                // before the next round of existing work — but only while
+                // the batch window has room, so a flood of arrivals can
+                // neither starve in-flight decoding nor open unbounded
+                // prefilled sessions.
+                if q.ready.len() < max_ready {
+                    if let Some((req, at)) = q.inbox.pop_front() {
+                        break Work::Admit(req, at);
+                    }
+                }
+                if let Some(t) = q.ready.pop_front() {
+                    break Work::Round(t);
                 }
                 if stop.load(Ordering::SeqCst) {
                     return;
@@ -207,37 +311,95 @@ fn worker_loop(
                 q = cv_in.wait(q).unwrap();
             }
         };
-        let queue_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
-        let t0 = std::time::Instant::now();
-        let mut session = backend.new_session(req.seed);
-        let mut rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
-        let mut out = engine.generate(session.as_mut(), &req.prompt, &mut rng);
-        out.tokens.truncate(req.max_new_tokens);
-        let total_ms = queue_ms + t0.elapsed().as_secs_f64() * 1000.0;
-
-        registry.completed.fetch_add(1, Ordering::Relaxed);
-        registry
-            .generated_tokens
-            .fetch_add(out.tokens.len() as u64, Ordering::Relaxed);
-        registry
-            .queue_us_total
-            .fetch_add((queue_ms * 1000.0) as u64, Ordering::Relaxed);
-        registry
-            .decode_us_total
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-
-        let resp = Response {
-            id: req.id,
-            tokens: out.tokens,
-            stats: out.stats,
-            queue_ms,
-            total_ms,
+        let t = match work {
+            Work::Admit(req, enqueued_at) => {
+                let admitted_at = Instant::now();
+                let session = backend.new_session(req.seed);
+                let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
+                let task =
+                    DecodeTask::new(engine.as_ref(), session, &req.prompt, req.max_new_tokens, rng);
+                Inflight {
+                    id: req.id,
+                    task,
+                    enqueued_at,
+                    admitted_at,
+                    decode_us: admitted_at.elapsed().as_micros() as u64,
+                    stream: req.stream,
+                }
+            }
+            Work::Round(mut t) => {
+                let t0 = Instant::now();
+                let out = t.task.step();
+                t.decode_us += t0.elapsed().as_micros() as u64;
+                registry.rounds.fetch_add(1, Ordering::Relaxed);
+                if let Some(tx) = &t.stream {
+                    // A dropped receiver just disables streaming.
+                    let _ = tx.send(StreamChunk {
+                        id: t.id,
+                        tokens: out.new_tokens,
+                        done: out.done,
+                    });
+                }
+                t
+            }
         };
-        let mut q = lock.lock().unwrap();
-        q.outbox.push_back(resp);
-        inflight.fetch_sub(1, Ordering::SeqCst);
-        cv_out.notify_all();
+        if t.task.is_done() {
+            complete(t, &registry, lock, cv_out, &inflight);
+        } else {
+            let mut q = lock.lock().unwrap();
+            q.ready.push_back(t);
+            drop(q);
+            cv_in.notify_one();
+        }
     }
+}
+
+/// Finish a task: build the response, update the registry, publish.
+fn complete(
+    t: Inflight,
+    registry: &Registry,
+    lock: &Mutex<Queues>,
+    cv_out: &Condvar,
+    inflight: &AtomicU64,
+) {
+    let queue_ms = t.admitted_at.duration_since(t.enqueued_at).as_secs_f64() * 1000.0;
+    let total_ms = t.enqueued_at.elapsed().as_secs_f64() * 1000.0;
+    // A zero-budget request never ran a round; flush the done marker so
+    // streaming consumers terminate.
+    if let Some(tx) = &t.stream {
+        if t.task.budget() == 0 {
+            let _ = tx.send(StreamChunk { id: t.id, tokens: Vec::new(), done: true });
+        }
+    }
+    let out = t.task.finish();
+    // The step-wise engines honor the budget exactly, so the coordinator
+    // aggregate and the per-request stats must agree — no truncation here.
+    assert_eq!(
+        out.tokens.len() as u64,
+        out.stats.generated_tokens,
+        "response length and DecodeStats.generated_tokens disagree"
+    );
+    registry.completed.fetch_add(1, Ordering::Relaxed);
+    registry
+        .generated_tokens
+        .fetch_add(out.stats.generated_tokens, Ordering::Relaxed);
+    registry
+        .queue_us_total
+        .fetch_add((queue_ms * 1000.0) as u64, Ordering::Relaxed);
+    registry.decode_us_total.fetch_add(t.decode_us, Ordering::Relaxed);
+
+    let resp = Response {
+        id: t.id,
+        tokens: out.tokens,
+        stats: out.stats,
+        queue_ms,
+        total_ms,
+    };
+    let mut q = lock.lock().unwrap();
+    q.outbox.push_back(resp);
+    drop(q);
+    inflight.fetch_sub(1, Ordering::SeqCst);
+    cv_out.notify_all();
 }
 
 #[cfg(test)]
@@ -279,6 +441,7 @@ mod tests {
         let snap = coord.registry();
         assert_eq!(snap.completed, n);
         assert_eq!(snap.generated_tokens, n * 40);
+        assert!(snap.rounds >= n, "at least one round per request");
         coord.shutdown();
     }
 
@@ -289,14 +452,55 @@ mod tests {
             EngineId::Autoregressive,
             EngineConfig::default(),
         );
+        assert!(coord.shutdown().is_empty());
+    }
+
+    #[test]
+    fn per_request_budgets_honored_exactly() {
+        // The engine config's budget (the old global cap) is intentionally
+        // different from every per-request budget: only the request's own
+        // max_new_tokens may decide the output length.
+        let coord = Coordinator::start(
+            sim_backends(2),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 999, ..Default::default() },
+        );
+        let sizes = [7usize, 40, 150];
+        for (i, &sz) in sizes.iter().enumerate() {
+            coord.submit(vec![1, 2, 3], sz, i as u64);
+        }
+        let mut got = std::collections::HashMap::new();
+        let mut stats_total = 0u64;
+        for _ in 0..sizes.len() {
+            let r = coord.collect();
+            assert_eq!(
+                r.tokens.len() as u64,
+                r.stats.generated_tokens,
+                "per-request counters must agree"
+            );
+            stats_total += r.stats.generated_tokens;
+            got.insert(r.id, r.tokens.len());
+        }
+        for (i, &sz) in sizes.iter().enumerate() {
+            assert_eq!(got[&(i as u64)], sz, "request {i} length");
+        }
+        let snap = coord.registry();
+        assert_eq!(
+            snap.generated_tokens, stats_total,
+            "registry must equal the sum of per-request stats"
+        );
+        assert_eq!(snap.generated_tokens as usize, 7 + 40 + 150);
         coord.shutdown();
     }
 
     #[test]
     fn fifo_order_within_single_worker() {
+        // Equal-work requests through one worker: round-robin round
+        // scheduling preserves completion order (AR needs exactly one
+        // round per token, so the workload is deterministic).
         let coord = Coordinator::start(
             sim_backends(1),
-            EngineId::Sps,
+            EngineId::Autoregressive,
             EngineConfig { max_new_tokens: 10, ..Default::default() },
         );
         let ids: Vec<u64> = (0..5).map(|i| coord.submit(vec![1, 2, 3], 10, i)).collect();
@@ -304,7 +508,77 @@ mod tests {
         for _ in 0..5 {
             got.push(coord.collect().id);
         }
-        assert_eq!(got, ids, "single worker must preserve FIFO");
+        assert_eq!(got, ids, "single worker must preserve FIFO for equal work");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn short_request_overtakes_long_ones() {
+        // Continuous batching: a short request submitted *after* a pile of
+        // long ones must not wait for them (no head-of-line blocking).
+        let coord = Coordinator::start(
+            sim_backends(2),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 400, ..Default::default() },
+        );
+        let n_long = 11u64;
+        for i in 0..n_long {
+            coord.submit(vec![1, 2, 3], 200, i);
+        }
+        let short_id = coord.submit(vec![4, 5, 6], 5, 99);
+        let first = coord.collect();
+        assert_eq!(
+            first.id, short_id,
+            "short request must finish before any 200-token request"
+        );
+        assert_eq!(first.tokens.len(), 5);
+        for _ in 0..n_long {
+            assert_eq!(coord.collect().tokens.len(), 200);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_inflight_requests_drains() {
+        let coord = Coordinator::start(
+            sim_backends(2),
+            EngineId::Sps,
+            EngineConfig { max_new_tokens: 60, ..Default::default() },
+        );
+        for i in 0..6 {
+            coord.submit(vec![1, 2, 3], 30, i);
+        }
+        // Shut down immediately: every queued/in-flight request must still
+        // complete with its full budget.
+        let rest = coord.shutdown();
+        assert_eq!(rest.len(), 6, "all submitted requests drain");
+        for r in rest {
+            assert_eq!(r.tokens.len(), 30);
+        }
+    }
+
+    #[test]
+    fn streaming_chunks_concatenate_to_response() {
+        let coord = Coordinator::start(
+            sim_backends(1),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 64, ..Default::default() },
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = coord.submit_streaming(vec![1, 2, 3], 33, 7, tx);
+        let resp = coord.collect_id(id);
+        let mut streamed = Vec::new();
+        let mut saw_done = false;
+        while let Ok(chunk) = rx.try_recv() {
+            assert_eq!(chunk.id, id);
+            streamed.extend(chunk.tokens);
+            if chunk.done {
+                saw_done = true;
+            }
+        }
+        assert!(saw_done, "final chunk must carry done=true");
+        assert_eq!(streamed, resp.tokens, "chunks must concatenate to response");
+        assert_eq!(resp.tokens.len(), 33);
         coord.shutdown();
     }
 }

@@ -12,7 +12,7 @@ use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
 use super::common::{commit_round, has_room, pending_tokens, propose_chain};
-use super::{Engine, GenerateOut};
+use super::{DecodeState, Engine, StepOutcome};
 
 /// λ in the acceptance lower bound. The paper's default (0.15) is tuned
 /// for 32k-token vocabularies; the 64-symbol testbed's entropy range is
@@ -35,55 +35,66 @@ impl AdaEdl {
     }
 }
 
+struct AdaEdlState {
+    cfg: EngineConfig,
+    gamma: usize,
+}
+
+impl DecodeState for AdaEdlState {
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        if !has_room(session, self.gamma) {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let epsilon = self.cfg.epsilon;
+        let pending = pending_tokens(session, 0);
+        let proposal = propose_chain(
+            session,
+            0,
+            &pending,
+            self.gamma,
+            self.cfg.draft_temperature,
+            rng,
+            |q, _| AdaEdl::signal(q) < epsilon,
+        );
+        let mut block = vec![*session.committed().last().unwrap()];
+        block.extend_from_slice(&proposal.tokens);
+        let ticket = session.verify_submit(&block);
+        let v = session.verify_wait(ticket);
+        let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+            .iter()
+            .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+            .collect();
+        let r = sampling::match_verify(
+            &proposal.tokens,
+            &proposal.qs,
+            &ps[..proposal.len()],
+            Some(&ps[proposal.len()]),
+            rng,
+        );
+        let next = r.next_token.expect("chain verify always yields a next token");
+        let new_tokens = commit_round(session, 0, &proposal, r.n_accepted, next, 0, remaining);
+        StepOutcome { new_tokens, done: false }
+    }
+}
+
 impl Engine for AdaEdl {
     fn id(&self) -> EngineId {
         EngineId::AdaEdl
     }
 
-    fn generate(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
+    fn default_budget(&self) -> usize {
+        self.cfg.max_new_tokens
+    }
+
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState> {
         session.prefill(prompt);
         let gamma = self.cfg.gamma.min(session.block() - 1);
-        let epsilon = self.cfg.epsilon;
-        let mut produced = 0usize;
-
-        while produced < self.cfg.max_new_tokens && has_room(session, gamma) {
-            let pending = pending_tokens(session, 0);
-            let proposal = propose_chain(
-                session,
-                0,
-                &pending,
-                gamma,
-                self.cfg.draft_temperature,
-                rng,
-                |q, _| Self::signal(q) < epsilon,
-            );
-            let mut block = vec![*session.committed().last().unwrap()];
-            block.extend_from_slice(&proposal.tokens);
-            let ticket = session.verify_submit(&block);
-            let v = session.verify_wait(ticket);
-            let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
-                .iter()
-                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
-                .collect();
-            let r = sampling::match_verify(
-                &proposal.tokens,
-                &proposal.qs,
-                &ps[..proposal.len()],
-                Some(&ps[proposal.len()]),
-                rng,
-            );
-            let next = r.next_token.expect("chain verify always yields a next token");
-            produced += commit_round(session, 0, &proposal, r.n_accepted, next, 0);
-        }
-        GenerateOut {
-            tokens: session.committed()[prompt.len()..].to_vec(),
-            stats: session.take_stats(),
-        }
+        Box::new(AdaEdlState { cfg: self.cfg.clone(), gamma })
     }
 }
 

@@ -9,7 +9,7 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::{Engine, GenerateOut};
+use super::{DecodeState, Engine, StepOutcome};
 
 pub struct Autoregressive {
     cfg: EngineConfig,
@@ -21,32 +21,47 @@ impl Autoregressive {
     }
 }
 
+/// One AR round = one target forward = one token; no loop state beyond the
+/// session itself.
+struct ArState {
+    target_temperature: f64,
+}
+
+impl DecodeState for ArState {
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        _remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        if session.capacity_left() <= 2 {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let last = *session.committed().last().unwrap();
+        let ticket = session.verify_submit(&[last]);
+        let v = session.verify_wait(ticket);
+        let p = sampling::apply_temperature(&v.ps[0], self.target_temperature);
+        let tok = sampling::sample(&p, rng);
+        session.target_commit(&[tok]);
+        let stats = session.stats_mut();
+        stats.rounds += 1;
+        stats.generated_tokens += 1;
+        StepOutcome { new_tokens: vec![tok], done: false }
+    }
+}
+
 impl Engine for Autoregressive {
     fn id(&self) -> EngineId {
         EngineId::Autoregressive
     }
 
-    fn generate(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
+    fn default_budget(&self) -> usize {
+        self.cfg.max_new_tokens
+    }
+
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState> {
         session.prefill(prompt);
-        let mut out = Vec::new();
-        while out.len() < self.cfg.max_new_tokens && session.capacity_left() > 2 {
-            let last = *session.committed().last().unwrap();
-            let ticket = session.verify_submit(&[last]);
-            let v = session.verify_wait(ticket);
-            let p = sampling::apply_temperature(&v.ps[0], self.cfg.target_temperature);
-            let tok = sampling::sample(&p, rng);
-            session.target_commit(&[tok]);
-            out.push(tok);
-            let stats = session.stats_mut();
-            stats.rounds += 1;
-            stats.generated_tokens += 1;
-        }
-        GenerateOut { tokens: out, stats: session.take_stats() }
+        Box::new(ArState { target_temperature: self.cfg.target_temperature })
     }
 }
 

@@ -66,10 +66,13 @@ pub fn propose_chain(
 }
 
 /// Post-verification bookkeeping shared by the chain engines: commit the
-/// accepted prefix + the follow-up token, roll the draft branch back so its
-/// consumed length equals `committed − 1`, and account rollback tokens.
+/// accepted prefix + the follow-up token (clamped to the request's
+/// remaining budget `limit`), roll the draft branch back so its consumed
+/// length equals `committed − 1`, and account rollback tokens — accepted
+/// tokens dropped by the clamp count as rollback, since the draft spent a
+/// forward on them that never reached the output.
 ///
-/// Returns the number of output tokens committed this round.
+/// Returns the tokens committed this round (the step's streaming delta).
 pub fn commit_round(
     session: &mut dyn Session,
     branch: BranchId,
@@ -77,9 +80,11 @@ pub fn commit_round(
     n_accepted: usize,
     next_token: Token,
     stats_extra_rollback: u64,
-) -> usize {
+    limit: usize,
+) -> Vec<Token> {
     let mut commit: Vec<Token> = proposal.tokens[..n_accepted].to_vec();
     commit.push(next_token);
+    commit.truncate(limit.max(1));
     session.target_commit(&commit);
     let new_committed = session.target_len();
     // Draft consumed must equal committed − 1 (the trailing committed token
@@ -88,7 +93,7 @@ pub fn commit_round(
     if session.draft_len(branch) > want {
         session.draft_rollback(branch, want);
     }
-    let rejected = (proposal.len() - n_accepted) as u64;
+    let rejected = (proposal.len() - n_accepted.min(commit.len())) as u64;
     let stats: &mut DecodeStats = session.stats_mut();
     stats.rounds += 1;
     stats.proposed_tokens += proposal.len() as u64;
@@ -100,7 +105,7 @@ pub fn commit_round(
     if let Some(h) = stats.accepted_hist.as_mut() {
         h.add(n_accepted);
     }
-    commit.len()
+    commit
 }
 
 /// Tokens committed to the target but not yet consumed by the draft branch
@@ -127,7 +132,7 @@ mod tests {
     use crate::backend::Backend;
     use crate::config::{ModelPair, PairId, Task, TaskId};
 
-    fn sim_session() -> Box<dyn Session> {
+    fn sim_session() -> Box<dyn Session + Send> {
         let cfg = SimConfig::new(
             ModelPair::get(PairId::Llama68m7b),
             Task::get(TaskId::MtBench),
@@ -163,13 +168,30 @@ mod tests {
         s.prefill(&[1, 2, 3, 4]);
         let mut rng = Pcg32::new(0);
         let p = propose_chain(s.as_mut(), 0, &[4], 4, 1.0, &mut rng, |_, _| false);
-        let n = commit_round(s.as_mut(), 0, &p, 2, 9, 0);
-        assert_eq!(n, 3); // 2 accepted + correction
+        let commit = commit_round(s.as_mut(), 0, &p, 2, 9, 0, usize::MAX);
+        assert_eq!(commit.len(), 3); // 2 accepted + correction
+        assert_eq!(commit[2], 9);
         assert_eq!(s.target_len(), 7);
         assert_eq!(s.draft_len(0), 6);
         let st = s.stats_mut();
         assert_eq!(st.rounds, 1);
         assert_eq!(st.rollback_tokens, 2);
         assert_eq!(st.generated_tokens, 3);
+    }
+
+    #[test]
+    fn commit_round_clamps_to_budget() {
+        let mut s = sim_session();
+        s.prefill(&[1, 2, 3, 4]);
+        let mut rng = Pcg32::new(0);
+        let p = propose_chain(s.as_mut(), 0, &[4], 4, 1.0, &mut rng, |_, _| false);
+        // 3 accepted + correction would commit 4, but only 2 fit the budget.
+        let commit = commit_round(s.as_mut(), 0, &p, 3, 9, 0, 2);
+        assert_eq!(commit.len(), 2);
+        assert_eq!(s.target_len(), 6);
+        let st = s.stats_mut();
+        assert_eq!(st.generated_tokens, 2);
+        // 4 proposed, 2 reached the output: 1 rejected + 1 clamped = 2.
+        assert_eq!(st.rollback_tokens, 2);
     }
 }

@@ -16,7 +16,7 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::{Engine, GenerateOut};
+use super::{DecodeState, Engine, StepOutcome};
 
 pub struct Lookahead {
     cfg: EngineConfig,
@@ -79,82 +79,98 @@ impl NgramCache {
     }
 }
 
+struct LookaheadState {
+    target_temperature: f64,
+    gamma: usize,
+    cache: NgramCache,
+}
+
+impl DecodeState for LookaheadState {
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        if session.capacity_left() <= self.gamma + 2 {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let committed = session.committed().to_vec();
+        let speculation = self.cache.lookup_chain(&committed, self.gamma);
+
+        let mut block = vec![*committed.last().unwrap()];
+        block.extend_from_slice(&speculation);
+        let ticket = session.verify_submit(&block);
+        let v = session.verify_wait(ticket);
+        let ps: Vec<Vec<f32>> = v
+            .ps
+            .iter()
+            .map(|p| sampling::apply_temperature(p, self.target_temperature))
+            .collect();
+
+        // Point-mass drafts: accept speculation[i] iff it matches the
+        // target's own sample at that position.
+        let mut commit: Vec<Token> = Vec::new();
+        let mut n_accepted = 0usize;
+        let mut rejected = false;
+        for (i, &spec_tok) in speculation.iter().enumerate() {
+            let t = sampling::sample(&ps[i], rng);
+            if t == spec_tok {
+                commit.push(spec_tok);
+                n_accepted += 1;
+            } else {
+                commit.push(t); // target's own token replaces the miss
+                rejected = true;
+                break;
+            }
+        }
+        if !rejected {
+            // Everything matched (or nothing speculated): sample the
+            // bonus token from the last distribution.
+            let t = sampling::sample(&ps[speculation.len()], rng);
+            commit.push(t);
+        }
+        commit.truncate(remaining);
+
+        session.target_commit(&commit);
+        self.cache.ingest(session.committed());
+
+        let stats = session.stats_mut();
+        stats.rounds += 1;
+        stats.proposed_tokens += speculation.len() as u64;
+        // Speculated tokens that never reached the output: verification
+        // misses plus any accepted tokens clamped off by the budget.
+        stats.rollback_tokens += (speculation.len() - n_accepted.min(commit.len())) as u64;
+        stats.generated_tokens += commit.len() as u64;
+        if n_accepted == speculation.len() {
+            stats.all_accept_rounds += 1;
+        }
+        if let Some(h) = stats.accepted_hist.as_mut() {
+            h.add(n_accepted);
+        }
+        StepOutcome { new_tokens: commit, done: false }
+    }
+}
+
 impl Engine for Lookahead {
     fn id(&self) -> EngineId {
         EngineId::Lookahead
     }
 
-    fn generate(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
+    fn default_budget(&self) -> usize {
+        self.cfg.max_new_tokens
+    }
+
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState> {
         session.prefill(prompt);
         let gamma = self.cfg.gamma.min(session.block() - 1);
-        let vocab = session.vocab();
         let mut cache = NgramCache::new(self.cfg.ngram);
         cache.ingest(prompt);
-        let mut produced = 0usize;
-
-        while produced < self.cfg.max_new_tokens && session.capacity_left() > gamma + 2 {
-            let committed = session.committed().to_vec();
-            let speculation = cache.lookup_chain(&committed, gamma);
-
-            let mut block = vec![*committed.last().unwrap()];
-            block.extend_from_slice(&speculation);
-            let ticket = session.verify_submit(&block);
-            let v = session.verify_wait(ticket);
-            let ps: Vec<Vec<f32>> = v
-                .ps
-                .iter()
-                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
-                .collect();
-
-            // Point-mass drafts: accept speculation[i] iff it matches the
-            // target's own sample at that position.
-            let mut commit: Vec<Token> = Vec::new();
-            let mut n_accepted = 0usize;
-            let mut rejected = false;
-            for (i, &spec_tok) in speculation.iter().enumerate() {
-                let t = sampling::sample(&ps[i], rng);
-                if t == spec_tok {
-                    commit.push(spec_tok);
-                    n_accepted += 1;
-                } else {
-                    commit.push(t); // target's own token replaces the miss
-                    rejected = true;
-                    break;
-                }
-            }
-            if !rejected {
-                // Everything matched (or nothing speculated): sample the
-                // bonus token from the last distribution.
-                let t = sampling::sample(&ps[speculation.len()], rng);
-                commit.push(t);
-            }
-
-            session.target_commit(&commit);
-            produced += commit.len();
-            cache.ingest(session.committed());
-
-            let stats = session.stats_mut();
-            stats.rounds += 1;
-            stats.proposed_tokens += speculation.len() as u64;
-            stats.rollback_tokens += (speculation.len() - n_accepted) as u64;
-            stats.generated_tokens += commit.len() as u64;
-            if n_accepted == speculation.len() {
-                stats.all_accept_rounds += 1;
-            }
-            if let Some(h) = stats.accepted_hist.as_mut() {
-                h.add(n_accepted);
-            }
-            let _ = vocab;
-        }
-        GenerateOut {
-            tokens: session.committed()[prompt.len()..].to_vec(),
-            stats: session.take_stats(),
-        }
+        Box::new(LookaheadState {
+            target_temperature: self.cfg.target_temperature,
+            gamma,
+            cache,
+        })
     }
 }
 

@@ -11,6 +11,17 @@
 //! | [`lookahead::Lookahead`] | Fu et al. '24 | n-gram cache | serialized |
 //! | [`pearl::Pearl`] | Liu et al. '24 | static γ | pre/post-verify overlap |
 //! | [`specbranch::SpecBranch`] | **this paper** | H-RAD hybrid | branch-parallel + Alg. 2 |
+//!
+//! ## Step-wise decode contract
+//!
+//! Generation is resumable: [`Engine::begin`] prefills a session and returns
+//! a [`DecodeState`] whose [`DecodeState::step`] executes exactly **one
+//! draft/verify round**, commits at most the round's `remaining` budget
+//! (never overshoots — the final commit is clamped), and reports the tokens
+//! it committed. [`Engine::generate`] is a thin run-to-completion driver
+//! over `step()`; the continuous-batching coordinator instead interleaves
+//! rounds of many [`DecodeTask`]s on one worker pool, so a long request
+//! never head-of-line-blocks short ones.
 
 pub mod adaedl;
 pub mod ar;
@@ -34,16 +45,149 @@ pub struct GenerateOut {
     pub stats: DecodeStats,
 }
 
+/// Result of one draft/verify round of a resumable decode.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutcome {
+    /// Tokens committed by this round, in order — the per-round delta
+    /// (streaming consumers forward these as they land). Never exceeds the
+    /// `remaining` budget passed to [`DecodeState::step`].
+    pub new_tokens: Vec<Token>,
+    /// The request can make no further progress: budget exhausted or the
+    /// session's KV capacity is too small for another round.
+    pub done: bool,
+}
+
+/// Resumable per-request decode state: everything an engine's generation
+/// loop used to keep on the stack, hoisted so a scheduler can interleave
+/// rounds of many requests across one worker pool.
+pub trait DecodeState: Send {
+    /// Execute exactly one draft/verify round, committing at most
+    /// `remaining` tokens to the session.
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome;
+}
+
 /// A decoding engine: drives one [`Session`] to continue one prompt.
 pub trait Engine: Send + Sync {
     fn id(&self) -> EngineId;
 
+    /// The engine config's default per-request token budget (used by the
+    /// [`Engine::generate`] driver; schedulers pass per-request budgets to
+    /// [`DecodeTask::new`] instead).
+    fn default_budget(&self) -> usize;
+
+    /// Prefill the session and return the resumable decode state.
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState>;
+
+    /// Run-to-completion driver: a thin loop over [`DecodeState::step`].
     fn generate(
         &self,
         session: &mut dyn Session,
         prompt: &[Token],
         rng: &mut Pcg32,
-    ) -> GenerateOut;
+    ) -> GenerateOut {
+        let prompt_len = prompt.len();
+        let budget = self.default_budget();
+        let mut state = self.begin(session, prompt);
+        let mut produced = 0usize;
+        while produced < budget {
+            let out = state.step(session, budget - produced, rng);
+            produced += out.new_tokens.len();
+            if out.done {
+                break;
+            }
+        }
+        GenerateOut {
+            tokens: session.committed()[prompt_len..].to_vec(),
+            stats: session.take_stats(),
+        }
+    }
+}
+
+/// A resumable decode job: session + engine state + per-request budget +
+/// rng. The continuous-batching coordinator advances these one round at a
+/// time; [`Engine::generate`] drives the same machinery to completion
+/// inline.
+pub struct DecodeTask {
+    session: Box<dyn Session + Send>,
+    state: Box<dyn DecodeState>,
+    rng: Pcg32,
+    budget: usize,
+    produced: usize,
+    prompt_len: usize,
+    done: bool,
+}
+
+impl DecodeTask {
+    /// Prefill `session` with `prompt`; the task will commit at most
+    /// `budget` new tokens (the per-request `max_new_tokens`).
+    pub fn new(
+        engine: &dyn Engine,
+        mut session: Box<dyn Session + Send>,
+        prompt: &[Token],
+        budget: usize,
+        rng: Pcg32,
+    ) -> DecodeTask {
+        let state = engine.begin(session.as_mut(), prompt);
+        DecodeTask {
+            session,
+            state,
+            rng,
+            budget,
+            produced: 0,
+            prompt_len: prompt.len(),
+            done: budget == 0,
+        }
+    }
+
+    /// Execute one draft/verify round. No-op once the task is done.
+    pub fn step(&mut self) -> StepOutcome {
+        if self.done {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let remaining = self.budget - self.produced;
+        let mut out = self.state.step(self.session.as_mut(), remaining, &mut self.rng);
+        debug_assert!(
+            out.new_tokens.len() <= remaining,
+            "engine overshot its per-request budget"
+        );
+        self.produced += out.new_tokens.len();
+        if self.produced >= self.budget {
+            out.done = true;
+        }
+        self.done = out.done;
+        out
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Tokens committed so far (≤ budget, exactly the budget on normal
+    /// completion).
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Consume the task, returning the generated tokens and stats.
+    pub fn finish(mut self) -> GenerateOut {
+        let stats = self.session.take_stats();
+        let tokens = self.session.committed()[self.prompt_len..].to_vec();
+        debug_assert_eq!(
+            tokens.len() as u64,
+            stats.generated_tokens,
+            "committed tokens and DecodeStats.generated_tokens disagree"
+        );
+        GenerateOut { tokens, stats }
+    }
 }
 
 /// Construct an engine by id.
@@ -64,5 +208,104 @@ pub fn build(id: EngineId, cfg: EngineConfig) -> Box<dyn Engine> {
         EngineId::SpecBranchPp => {
             Box::new(specbranch::SpecBranch::ablation(cfg, true, true, true))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{ModelPair, PairId, Task, TaskId};
+
+    fn sim_backend() -> SimBackend {
+        SimBackend::new(SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::MtBench),
+        ))
+    }
+
+    #[test]
+    fn decode_task_honors_budget_exactly() {
+        let backend = sim_backend();
+        for engine_id in [
+            EngineId::Autoregressive,
+            EngineId::Sps,
+            EngineId::AdaEdl,
+            EngineId::Lookahead,
+            EngineId::Pearl,
+            EngineId::SpecBranch,
+            EngineId::SpecBranchNoBranch,
+        ] {
+            let engine = build(engine_id, EngineConfig::default());
+            for budget in [1usize, 7, 23] {
+                let session = backend.new_session(3);
+                let mut task = DecodeTask::new(
+                    engine.as_ref(),
+                    session,
+                    &[1, 2, 3, 4],
+                    budget,
+                    Pcg32::new(9),
+                );
+                while !task.is_done() {
+                    task.step();
+                }
+                let out = task.finish();
+                assert_eq!(
+                    out.tokens.len(),
+                    budget,
+                    "{engine_id:?} with budget {budget}"
+                );
+                assert_eq!(out.stats.generated_tokens as usize, budget);
+            }
+        }
+    }
+
+    #[test]
+    fn step_outcomes_concatenate_to_output() {
+        let backend = sim_backend();
+        let engine = build(EngineId::SpecBranch, EngineConfig::default());
+        let session = backend.new_session(5);
+        let mut task =
+            DecodeTask::new(engine.as_ref(), session, &[2, 3, 4], 40, Pcg32::new(1));
+        let mut streamed = Vec::new();
+        while !task.is_done() {
+            streamed.extend(task.step().new_tokens);
+        }
+        let out = task.finish();
+        assert_eq!(streamed, out.tokens, "per-round deltas must concatenate");
+    }
+
+    #[test]
+    fn zero_budget_task_is_immediately_done() {
+        let backend = sim_backend();
+        let engine = build(EngineId::Sps, EngineConfig::default());
+        let session = backend.new_session(1);
+        let mut task = DecodeTask::new(engine.as_ref(), session, &[1, 2], 0, Pcg32::new(1));
+        assert!(task.is_done());
+        assert!(task.step().new_tokens.is_empty());
+        let out = task.finish();
+        assert!(out.tokens.is_empty());
+        assert_eq!(out.stats.generated_tokens, 0);
+    }
+
+    #[test]
+    fn generate_driver_matches_stepped_task() {
+        // The default `generate` is a driver over the same step machinery:
+        // identical seeds must yield identical streams.
+        let backend = sim_backend();
+        let engine = build(EngineId::Sps, EngineConfig {
+            max_new_tokens: 30,
+            ..Default::default()
+        });
+        let mut s1 = backend.new_session(7);
+        let via_generate = engine.generate(s1.as_mut(), &[1, 2, 3], &mut Pcg32::new(4));
+        let s2 = backend.new_session(7);
+        let mut task = DecodeTask::new(engine.as_ref(), s2, &[1, 2, 3], 30, Pcg32::new(4));
+        while !task.is_done() {
+            task.step();
+        }
+        let via_task = task.finish();
+        assert_eq!(via_generate.tokens, via_task.tokens);
     }
 }

@@ -19,8 +19,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::common::{commit_round, has_room, propose_chain};
-use super::{Engine, GenerateOut};
+use super::common::{commit_round, has_room, propose_chain, Proposal};
+use super::{DecodeState, Engine, StepOutcome};
 
 pub struct Pearl {
     cfg: EngineConfig,
@@ -32,134 +32,166 @@ impl Pearl {
     }
 }
 
+/// Where the pipeline resumes at the next round.
+enum PearlPhase {
+    /// No valid segment in flight: draft a fresh one with pre-verify.
+    Draft,
+    /// A post-verify-drafted segment is pending its big verification.
+    /// `pre_accepted` leading tokens were already accepted (pre-verify)
+    /// and must not re-draw their acceptance.
+    Verify { segment: Proposal, pre_accepted: usize },
+}
+
+struct PearlState {
+    cfg: EngineConfig,
+    gamma: usize,
+    phase: PearlPhase,
+}
+
+impl DecodeState for PearlState {
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        if !has_room(session, 2 * self.gamma) {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let t_draft = self.cfg.draft_temperature;
+        let t_target = self.cfg.target_temperature;
+
+        // Draft phase with pre-verify: propose the first token, launch its
+        // verification, keep drafting the remaining γ−1 in parallel. Falls
+        // through into the verify phase on pre-acceptance so every step
+        // commits at least one token.
+        let (segment, pre_accepted) = match std::mem::replace(&mut self.phase, PearlPhase::Draft)
+        {
+            PearlPhase::Verify { segment, pre_accepted } => (segment, pre_accepted),
+            PearlPhase::Draft => {
+                let last = *session.committed().last().unwrap();
+                let first = propose_chain(session, 0, &[last], 1, t_draft, rng, |_, _| false);
+                let pre_ticket = session.verify_submit(&[last, first.tokens[0]]);
+                let rest = propose_chain(
+                    session,
+                    0,
+                    &[first.tokens[0]],
+                    self.gamma - 1,
+                    t_draft,
+                    rng,
+                    |_, _| false,
+                );
+                let mut segment = first.clone();
+                segment.tokens.extend(rest.tokens);
+                segment.qs.extend(rest.qs);
+                segment.confidences.extend(rest.confidences);
+
+                let pre = session.verify_wait(pre_ticket);
+                let p0 = sampling::apply_temperature(&pre.ps[0], t_target);
+                let r0 = sampling::match_verify(
+                    &segment.tokens[..1],
+                    &segment.qs[..1],
+                    std::slice::from_ref(&p0),
+                    None,
+                    rng,
+                );
+                if r0.n_accepted == 0 {
+                    // Pre-verify caught the rejection: the γ−1 post tokens
+                    // are doomed before the big verification even starts.
+                    let new_tokens = commit_round(
+                        session,
+                        0,
+                        &segment,
+                        0,
+                        r0.next_token.unwrap(),
+                        0,
+                        remaining,
+                    );
+                    return StepOutcome { new_tokens, done: false };
+                }
+                (segment, 1)
+            }
+        };
+
+        // Verify phase with post-verify drafting: verify the segment while
+        // optimistically drafting the next one.
+        let mut block = vec![*session.committed().last().unwrap()];
+        block.extend_from_slice(&segment.tokens);
+        let ticket = session.verify_submit(&block);
+        // Post-verify: draft S_{k+1} during verification, assuming full
+        // acceptance of S_k.
+        let next_segment = propose_chain(
+            session,
+            0,
+            &[*segment.tokens.last().unwrap()],
+            self.gamma,
+            t_draft,
+            rng,
+            |_, _| false,
+        );
+        let v = session.verify_wait(ticket);
+        let ps: Vec<Vec<f32>> = v.ps[..segment.len() + 1]
+            .iter()
+            .map(|p| sampling::apply_temperature(p, t_target))
+            .collect();
+        let r0 = sampling::match_verify(
+            &segment.tokens[pre_accepted..],
+            &segment.qs[pre_accepted..],
+            &ps[pre_accepted..segment.len()],
+            None,
+            rng,
+        );
+        let n_accepted = pre_accepted + r0.n_accepted;
+        if n_accepted == segment.len() {
+            // All-Accept: S_{k+1} remains valid; commit S_k (clamped to the
+            // request budget) and the pipeline rolls on (no resample, §5.2).
+            let mut commit = segment.tokens.clone();
+            commit.truncate(remaining);
+            session.target_commit(&commit);
+            let stats = session.stats_mut();
+            stats.rounds += 1;
+            stats.proposed_tokens += segment.len() as u64;
+            stats.rollback_tokens += (segment.len() - commit.len()) as u64;
+            stats.generated_tokens += commit.len() as u64;
+            stats.all_accept_rounds += 1;
+            if let Some(h) = stats.accepted_hist.as_mut() {
+                h.add(segment.len());
+            }
+            self.phase = PearlPhase::Verify { segment: next_segment, pre_accepted: 0 };
+            StepOutcome { new_tokens: commit, done: false }
+        } else {
+            // Mid-sequence rejection: every post-verify token of S_{k+1} is
+            // doomed (the paper's headline rollback).
+            let doomed = next_segment.len() as u64;
+            let new_tokens = commit_round(
+                session,
+                0,
+                &segment,
+                n_accepted,
+                r0.next_token.unwrap(),
+                doomed,
+                remaining,
+            );
+            session.stats_mut().proposed_tokens += doomed;
+            self.phase = PearlPhase::Draft;
+            StepOutcome { new_tokens, done: false }
+        }
+    }
+}
+
 impl Engine for Pearl {
     fn id(&self) -> EngineId {
         EngineId::Pearl
     }
 
-    fn generate(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
+    fn default_budget(&self) -> usize {
+        self.cfg.max_new_tokens
+    }
+
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState> {
         session.prefill(prompt);
         let gamma = self.cfg.gamma.min(session.block() - 1);
-        let t_draft = self.cfg.draft_temperature;
-        let t_target = self.cfg.target_temperature;
-        let mut produced = 0usize;
-
-        // Draft phase with pre-verify: propose the first token, launch its
-        // verification, keep drafting the remaining γ−1 in parallel.
-        'outer: while produced < self.cfg.max_new_tokens && has_room(session, 2 * gamma) {
-            let last = *session.committed().last().unwrap();
-            let first = propose_chain(session, 0, &[last], 1, t_draft, rng, |_, _| false);
-            let pre_ticket = session.verify_submit(&[last, first.tokens[0]]);
-            let rest = propose_chain(
-                session,
-                0,
-                &[first.tokens[0]],
-                gamma - 1,
-                t_draft,
-                rng,
-                |_, _| false,
-            );
-            let mut segment = first.clone();
-            segment.tokens.extend(rest.tokens);
-            segment.qs.extend(rest.qs);
-            segment.confidences.extend(rest.confidences);
-
-            let pre = session.verify_wait(pre_ticket);
-            let p0 = sampling::apply_temperature(&pre.ps[0], t_target);
-            let r0 = sampling::match_verify(
-                &segment.tokens[..1],
-                &segment.qs[..1],
-                std::slice::from_ref(&p0),
-                None,
-                rng,
-            );
-            if r0.n_accepted == 0 {
-                // Pre-verify caught the rejection: the γ−1 post tokens are
-                // doomed before the big verification even starts.
-                produced += commit_round(session, 0, &segment, 0, r0.next_token.unwrap(), 0);
-                continue 'outer;
-            }
-
-            // Verify phase with post-verify drafting: verify the segment
-            // while optimistically drafting the next one. The segment's
-            // first token was already accepted by pre-verify — don't re-draw
-            // its acceptance in the first big verification.
-            let mut pre_accepted = 1usize;
-            loop {
-                let mut block = vec![*session.committed().last().unwrap()];
-                block.extend_from_slice(&segment.tokens);
-                let ticket = session.verify_submit(&block);
-                // Post-verify: draft S_{k+1} during verification, assuming
-                // full acceptance of S_k.
-                let next_segment = propose_chain(
-                    session,
-                    0,
-                    &[*segment.tokens.last().unwrap()],
-                    gamma,
-                    t_draft,
-                    rng,
-                    |_, _| false,
-                );
-                let v = session.verify_wait(ticket);
-                let ps: Vec<Vec<f32>> = v.ps[..segment.len() + 1]
-                    .iter()
-                    .map(|p| sampling::apply_temperature(p, t_target))
-                    .collect();
-                let r0 = sampling::match_verify(
-                    &segment.tokens[pre_accepted..],
-                    &segment.qs[pre_accepted..],
-                    &ps[pre_accepted..segment.len()],
-                    None,
-                    rng,
-                );
-                let r = sampling::MatchResult {
-                    n_accepted: pre_accepted + r0.n_accepted,
-                    next_token: r0.next_token,
-                };
-                pre_accepted = 0;
-                if r.n_accepted == segment.len() {
-                    // All-Accept: S_{k+1} remains valid; commit S_k and the
-                    // pipeline rolls on (no resample needed, §5.2).
-                    session.target_commit(&segment.tokens);
-                    let stats = session.stats_mut();
-                    stats.rounds += 1;
-                    stats.proposed_tokens += segment.len() as u64;
-                    stats.generated_tokens += segment.len() as u64;
-                    stats.all_accept_rounds += 1;
-                    if let Some(h) = stats.accepted_hist.as_mut() {
-                        h.add(segment.len());
-                    }
-                    produced += segment.len();
-                    segment = next_segment;
-                    if produced >= self.cfg.max_new_tokens || !has_room(session, 2 * gamma) {
-                        break 'outer;
-                    }
-                } else {
-                    // Mid-sequence rejection: every post-verify token of
-                    // S_{k+1} is doomed (the paper's headline rollback).
-                    let doomed = next_segment.len() as u64;
-                    produced += commit_round(
-                        session,
-                        0,
-                        &segment,
-                        r.n_accepted,
-                        r.next_token.unwrap(),
-                        doomed,
-                    );
-                    session.stats_mut().proposed_tokens += doomed;
-                    continue 'outer;
-                }
-            }
-        }
-        GenerateOut {
-            tokens: session.committed()[prompt.len()..].to_vec(),
-            stats: session.take_stats(),
-        }
+        Box::new(PearlState { cfg: self.cfg.clone(), gamma, phase: PearlPhase::Draft })
     }
 }
 

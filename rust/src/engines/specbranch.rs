@@ -34,7 +34,7 @@ use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
 use super::common::{has_room, pending_tokens, propose_chain, Proposal};
-use super::{Engine, GenerateOut};
+use super::{DecodeState, Engine, StepOutcome};
 
 pub struct SpecBranch {
     cfg: EngineConfig,
@@ -61,41 +61,6 @@ impl SpecBranch {
     fn gamma_max(&self, session: &dyn Session) -> usize {
         self.cfg.gamma.min(session.block() - 1)
     }
-
-    /// H-RAD classification; `None` features (first round) defaults to the
-    /// soft signal, and the no-H-RAD ablation always uses confidence.
-    fn classify(
-        &self,
-        session: &mut dyn Session,
-        features: Option<&[f32]>,
-        next_token: Token,
-    ) -> usize {
-        if !self.use_hrad {
-            return 1;
-        }
-        match features {
-            None => 1,
-            Some(f) => {
-                let probs = session.hrad_predict(f, next_token);
-                let mut best = 0;
-                for i in 1..3 {
-                    if probs[i] > probs[best] {
-                        best = i;
-                    }
-                }
-                best
-            }
-        }
-    }
-
-    /// Branch-drafting budget per branch while one verification runs:
-    /// the speed ratio c bounds total draft steps (§5.2), shared across
-    /// the k batched branches (batch economy ≈ free), halved in PP mode.
-    fn branch_budget(&self, session: &dyn Session, _k: usize) -> usize {
-        let c = session.speed_ratio().max(1.0);
-        let steps = if self.pp_mode { (c / 2.0).floor() } else { c.floor() };
-        (steps as usize).clamp(1, self.gamma_max(session))
-    }
 }
 
 /// One spawned branch: its id, its branch-point candidate, and its
@@ -119,410 +84,470 @@ impl Engine for SpecBranch {
         }
     }
 
-    fn generate(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
+    fn default_budget(&self) -> usize {
+        self.cfg.max_new_tokens
+    }
+
+    fn begin(&self, session: &mut dyn Session, prompt: &[Token]) -> Box<dyn DecodeState> {
+        session.prefill(prompt);
+        let gamma_max = self.gamma_max(session);
         if self.use_branches {
-            self.generate_parallel(session, prompt, rng)
+            Box::new(ParallelState {
+                cfg: self.cfg.clone(),
+                use_hrad: self.use_hrad,
+                pp_mode: self.pp_mode,
+                gamma_max,
+                main: 0,
+                alpha_ema: 0.6,
+                wins: Proposal::default(),
+                wins_from_branch: false,
+                features: None,
+            })
         } else {
-            self.generate_serial(session, prompt, rng)
+            Box::new(SerialState {
+                cfg: self.cfg.clone(),
+                use_hrad: self.use_hrad,
+                gamma_max,
+                features: None,
+            })
         }
     }
 }
 
-impl SpecBranch {
-    /// The full branch-parallel pipeline.
-    fn generate_parallel(
-        &self,
+/// H-RAD classification; `None` features (first round) defaults to the
+/// soft signal, and the no-H-RAD ablation always uses confidence.
+fn classify(
+    use_hrad: bool,
+    session: &mut dyn Session,
+    features: Option<&[f32]>,
+    next_token: Token,
+) -> usize {
+    if !use_hrad {
+        return 1;
+    }
+    match features {
+        None => 1,
+        Some(f) => {
+            let probs = session.hrad_predict(f, next_token);
+            let mut best = 0;
+            for i in 1..3 {
+                if probs[i] > probs[best] {
+                    best = i;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Hoisted loop state of the branch-parallel pipeline (Fig. 9): one
+/// [`DecodeState::step`] is one draft-stage-or-branch-stage round.
+struct ParallelState {
+    cfg: EngineConfig,
+    use_hrad: bool,
+    pp_mode: bool,
+    gamma_max: usize,
+    main: BranchId,
+    /// Running acceptance estimate (EMA of draft confidences) feeding the
+    /// Theorem-1-derived planning caps.
+    alpha_ema: f64,
+    /// Winning-branch run-ahead from the previous round (the W of §5.2).
+    wins: Proposal,
+    /// Whether `wins` was drafted as a branch run-ahead (its discarded
+    /// tail is branch-structure waste, excluded from RB per App. E.3)
+    /// or on the main chain in the draft stage (tail counts as RB).
+    wins_from_branch: bool,
+    /// Features of the last completed verification, at the last accepted
+    /// position (posterior H-RAD input).
+    features: Option<Vec<f32>>,
+}
+
+impl ParallelState {
+    /// Branch-drafting budget per branch while one verification runs:
+    /// the speed ratio c bounds total draft steps (§5.2), shared across
+    /// the k batched branches (batch economy ≈ free), halved in PP mode.
+    fn branch_budget(&self, session: &dyn Session) -> usize {
+        let c = session.speed_ratio().max(1.0);
+        let steps = if self.pp_mode { (c / 2.0).floor() } else { c.floor() };
+        (steps as usize).clamp(1, self.gamma_max)
+    }
+}
+
+impl DecodeState for ParallelState {
+    fn step(
+        &mut self,
         session: &mut dyn Session,
-        prompt: &[Token],
+        remaining: usize,
         rng: &mut Pcg32,
-    ) -> GenerateOut {
-        session.prefill(prompt);
-        let gamma_max = self.gamma_max(session);
+    ) -> StepOutcome {
+        let gamma_max = self.gamma_max;
         let eps = self.cfg.epsilon;
         let t_draft = self.cfg.draft_temperature;
         let t_target = self.cfg.target_temperature;
 
-        let mut main: BranchId = 0;
-        let mut produced = 0usize;
-        // Running acceptance estimate (EMA of draft confidences) feeding
-        // the Theorem-1-derived planning caps.
-        let mut alpha_ema = 0.6f64;
-        // Winning-branch run-ahead from the previous round (the W of §5.2).
-        let mut wins = Proposal::default();
-        // Whether `wins` was drafted as a branch run-ahead (its discarded
-        // tail is branch-structure waste, excluded from RB per App. E.3)
-        // or on the main chain in the draft stage (tail counts as RB).
-        let mut wins_from_branch = false;
-        // Features of the last completed verification, at the last accepted
-        // position (posterior H-RAD input).
-        let mut features: Option<Vec<f32>> = None;
-
-        while produced < self.cfg.max_new_tokens && has_room(session, 2 * gamma_max) {
-            // ---------------- Draft stage (Fig. 9 left) ----------------
-            // Entered at the first round and after every rollback. H-RAD
-            // predicts the structure *a priori*: under the soft/all-accept
-            // signals the draft proposes a chain W while the target idles
-            // (the serialization cost rollback inherently pays); under the
-            // hard all-reject signal it skips straight to branching at the
-            // first token (Fig. 4 case 3) so the pipeline refills without a
-            // serial drafting phase.
-            if wins.is_empty() {
-                let last = *session.committed().last().unwrap();
-                let s_t = self.classify(session, features.as_deref(), last);
-                let pending = vec![last];
-                let cap = crate::theory::optimal_branch_retain(
-                    alpha_ema.clamp(0.05, 0.98),
-                    session.speed_ratio(),
-                    gamma_max,
-                );
-                let gamma = if s_t == 0 { 1 } else { cap.max(1) };
-                let confidence_stop = s_t == 1;
-                wins = propose_chain(session, main, &pending, gamma, t_draft, rng, |q, _| {
-                    confidence_stop && sampling::confidence(q) < eps
-                });
-                wins_from_branch = false;
-            }
-            // Every W flows through the branch stage exactly once: count it
-            // into the chain-draft total here (adopted run-aheads included).
-            session.stats_mut().proposed_tokens += wins.len() as u64;
-
-            // ---------------- Branch stage (Fig. 9 right) ----------------
-            let s_t = if wins.is_empty() {
-                0
-            } else {
-                self.classify(session, features.as_deref(), wins.tokens[0])
-            };
-            // Branch index b: how much of W we retain (Eq. 6), capped by
-            // the Theorem-1 optimal draft length for the locally estimated
-            // acceptance rate (Fig. 2: retaining past γ*(α, c) only feeds
-            // rollback accumulation).
-            let alpha_est = if wins.is_empty() {
-                alpha_ema
-            } else {
-                let mean = wins.confidences.iter().sum::<f64>() / wins.len() as f64;
-                alpha_ema = 0.8 * alpha_ema + 0.2 * mean;
-                mean
-            };
-            let b_cap = crate::theory::optimal_branch_retain(
-                alpha_est.clamp(0.05, 0.98),
+        if !has_room(session, 2 * gamma_max) {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        // ---------------- Draft stage (Fig. 9 left) ----------------
+        // Entered at the first round and after every rollback. H-RAD
+        // predicts the structure *a priori*: under the soft/all-accept
+        // signals the draft proposes a chain W while the target idles
+        // (the serialization cost rollback inherently pays); under the
+        // hard all-reject signal it skips straight to branching at the
+        // first token (Fig. 4 case 3) so the pipeline refills without a
+        // serial drafting phase.
+        if self.wins.is_empty() {
+            let last = *session.committed().last().unwrap();
+            let s_t = classify(self.use_hrad, session, self.features.as_deref(), last);
+            let pending = vec![last];
+            let cap = crate::theory::optimal_branch_retain(
+                self.alpha_ema.clamp(0.05, 0.98),
                 session.speed_ratio(),
                 gamma_max,
             );
-            let b = match s_t {
-                0 => 0,
-                2 => wins.len().min(b_cap.max(2)),
-                _ => wins
-                    .confidences
-                    .iter()
-                    .position(|&c| c < eps)
-                    .unwrap_or(wins.len())
-                    .min(b_cap),
-            };
-
-            // Branch-point draft distribution q(x_b).
-            let (q_b, conf_b) = if b < wins.len() {
-                (wins.qs[b].clone(), wins.confidences[b])
-            } else {
-                // Branch at the *next* position: catch the draft up to the
-                // last committed token (W may be empty after an all-reject
-                // re-entry) and take the next distribution.
-                let consumed = session.draft_len(main);
-                let mut q_raw = Vec::new();
-                if consumed < session.target_len() {
-                    // Post-rollback (W empty): replay the committed tokens
-                    // the draft has not seen yet.
-                    let catch_up: Vec<Token> = session.committed()[consumed..].to_vec();
-                    for &t in &catch_up {
-                        q_raw = session.draft_forward(main, t);
-                    }
-                } else {
-                    // W fully retained (s=2): consume its final token.
-                    q_raw = session.draft_forward(main, *wins.tokens.last().unwrap());
-                }
-                let conf = sampling::confidence(&q_raw);
-                (sampling::apply_temperature(&q_raw, t_draft), conf)
-            };
-
-            // Submit the retained prefix for verification.
-            let retained: Vec<Token> = wins.tokens[..b].to_vec();
-            let mut block = vec![*session.committed().last().unwrap()];
-            block.extend_from_slice(&retained);
-            let ticket = session.verify_submit(&block);
-
-            // ---- Branch resampling while the target verifies (Eq. 7) ----
-            let committed_len = session.target_len();
-            let fork_len = committed_len + b; // tokens consumed up to x_b
-            if session.draft_len(main) > fork_len {
-                session.draft_rollback(main, fork_len);
-            }
-            let k = if self.use_branches {
-                sampling::adaptive_branch_width(conf_b, self.cfg.k_max)
-            } else {
-                1
-            };
-            let candidates: Vec<Token> =
-                sampling::top_k_indices(&q_b, k).into_iter().map(|i| i as Token).collect();
-            let k = candidates.len();
-            let mut branch_ids: Vec<BranchId> = vec![main];
-            for _ in 1..k {
-                branch_ids.push(session.draft_fork(main));
-            }
-            // Feed each branch its candidate (one batched draft step), then
-            // run-ahead `budget` tokens per branch, batched across branches.
-            // Run-ahead length: c-bounded (the verification window is
-            // T_p = c·t regardless of this round's class), with per-branch
-            // confidence early stopping — drafting past the next branch
-            // point only manufactures rollback (Algorithm 1's
-            // "γ = Predictor(...)" applied to the branch stage).
-            let budget = self.branch_budget(session, k).min(b_cap + 1);
-            let mut qs_next = session.draft_forward_batch(&branch_ids, &candidates);
-            let mut branches: Vec<BranchState> = branch_ids
-                .iter()
-                .zip(&candidates)
-                .map(|(&id, &candidate)| BranchState {
-                    id,
-                    candidate,
-                    run_ahead: Proposal::default(),
-                })
-                .collect();
-            let mut active: Vec<bool> = vec![true; k];
-            for _step in 0..budget {
-                let mut step_ids = Vec::with_capacity(k);
-                let mut toks = Vec::with_capacity(k);
-                for (i, (bs, q_raw)) in branches.iter_mut().zip(&qs_next).enumerate() {
-                    if !active[i] {
-                        continue;
-                    }
-                    let conf = sampling::confidence(q_raw);
-                    if self.use_hrad && _step > 0 && conf < eps {
-                        active[i] = false; // next branch point reached
-                        continue;
-                    }
-                    let q = sampling::apply_temperature(q_raw, t_draft);
-                    let tok = sampling::sample(&q, rng);
-                    bs.run_ahead.confidences.push(conf);
-                    bs.run_ahead.tokens.push(tok);
-                    bs.run_ahead.qs.push(q);
-                    step_ids.push(bs.id);
-                    toks.push(tok);
-                }
-                if step_ids.is_empty() {
-                    break;
-                }
-                if _step + 1 < budget {
-                    let fresh = session.draft_forward_batch(&step_ids, &toks);
-                    // Scatter refreshed distributions back to active slots.
-                    let mut it = fresh.into_iter();
-                    for (i, bs) in branches.iter().enumerate() {
-                        if active[i] && step_ids.contains(&bs.id) {
-                            qs_next[i] = it.next().unwrap();
-                        }
-                    }
-                }
-            }
-            if self.pp_mode {
-                session.overhead(PP_COMM_MS);
-            }
-
-            // ---------------- Join verification ----------------
-            let v: VerifyOut = session.verify_wait(ticket);
-            let ps: Vec<Vec<f32>> = v.ps[..b + 1]
-                .iter()
-                .map(|p| sampling::apply_temperature(p, t_target))
-                .collect();
-            let r = sampling::match_verify(&retained, &wins.qs[..b], &ps[..b], None, rng);
-
-            // W beyond x_b: chain rollback if W was main-chain drafted,
-            // branch-structure waste if it was a run-ahead (App. E.3).
-            let discarded_tail = (wins.len() - b) as u64;
-            let (tail_rb, tail_bw) = if wins_from_branch {
-                (0, discarded_tail)
-            } else {
-                (discarded_tail, 0)
-            };
-            let branch_tokens: u64 = branches.iter().map(|s| s.run_ahead.len() as u64).sum();
-
-            if r.n_accepted < b {
-                // ---- Mid-chain rejection: global rollback (Fig. 1a) ----
-                for bs in &branches {
-                    if bs.id != main {
-                        session.draft_release(bs.id);
-                    }
-                }
-                let mut commit = retained[..r.n_accepted].to_vec();
-                commit.push(r.next_token.unwrap());
-                session.target_commit(&commit);
-                session.draft_rollback(main, session.target_len() - 1);
-                produced += commit.len();
-                let row = r.n_accepted.min(v.features.len().saturating_sub(1));
-                features = v.features.get(row).cloned();
-                wins = Proposal::default();
-                let stats = session.stats_mut();
-                stats.rounds += 1;
-                stats.generated_tokens += commit.len() as u64;
-                stats.rollback_tokens += (b - r.n_accepted) as u64 + tail_rb;
-                stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
-                if let Some(h) = stats.accepted_hist.as_mut() {
-                    h.add(r.n_accepted);
-                }
-                continue;
-            }
-
-            // ---- Chain fully accepted: resolve the branch point (Alg. 2) ----
-            let p_bp = &ps[b];
-            let qs_cand: Vec<Vec<f32>> = (0..k).map(|_| q_b.clone()).collect();
-            let (bp_token, winner) =
-                sampling::branch_speculative_sample(p_bp, &candidates, &qs_cand, rng);
-
-            let mut commit = retained.clone();
-            commit.push(bp_token);
-            session.target_commit(&commit);
-            produced += commit.len();
-            let row = b.min(v.features.len().saturating_sub(1));
-            features = v.features.get(row).cloned();
-
-            match winner {
-                Some(j) => {
-                    // Adopt the winning branch; its run-ahead is next W.
-                    let losing_tokens: u64 = branches
-                        .iter()
-                        .enumerate()
-                        .filter(|(i, _)| *i != j)
-                        .map(|(_, s)| s.run_ahead.len() as u64 + 1)
-                        .sum();
-                    // Drop every losing branch. Branch 0 is permanent (the
-                    // session's root); if it loses, park it rolled back so
-                    // its storage stays bounded instead of releasing it.
-                    for (i, bs) in branches.iter().enumerate() {
-                        if i == j {
-                            continue;
-                        }
-                        if bs.id == 0 {
-                            let park = (session.target_len() - 1).min(session.draft_len(0));
-                            session.draft_rollback(0, park);
-                        } else {
-                            session.draft_release(bs.id);
-                        }
-                    }
-                    let win = branches.swap_remove(j);
-                    debug_assert_eq!(win.candidate, bp_token);
-                    main = win.id;
-                    wins = win.run_ahead;
-                    wins_from_branch = true;
-                    let hist_bucket = b.min(session.block() - 1);
-                    let stats = session.stats_mut();
-                    stats.rounds += 1;
-                    stats.generated_tokens += commit.len() as u64;
-                    stats.rollback_tokens += tail_rb;
-                    stats.branch_wasted_tokens += losing_tokens + tail_bw;
-                    stats.all_accept_rounds += 1;
-                    if let Some(h) = stats.accepted_hist.as_mut() {
-                        h.add(hist_bucket);
-                    }
-                }
-                None => {
-                    // No branch matched the target: rollback to draft stage.
-                    for bs in &branches {
-                        if bs.id != main {
-                            session.draft_release(bs.id);
-                        }
-                    }
-                    session.draft_rollback(main, session.target_len() - 1);
-                    wins = Proposal::default();
-                    let hist_bucket = b.min(session.block() - 1);
-                    let stats = session.stats_mut();
-                    stats.rounds += 1;
-                    stats.generated_tokens += commit.len() as u64;
-                    stats.rollback_tokens += tail_rb;
-                    stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
-                    if let Some(h) = stats.accepted_hist.as_mut() {
-                        h.add(hist_bucket);
-                    }
-                }
-            }
-        }
-        GenerateOut {
-            tokens: session.committed()[prompt.len()..].to_vec(),
-            stats: session.take_stats(),
-        }
-    }
-
-    /// The `w/o branch` ablation (Fig. 6, Table 13): H-RAD adaptive draft
-    /// lengths bolted onto the serialized draft-then-verify loop.
-    fn generate_serial(
-        &self,
-        session: &mut dyn Session,
-        prompt: &[Token],
-        rng: &mut Pcg32,
-    ) -> GenerateOut {
-        session.prefill(prompt);
-        let gamma_max = self.gamma_max(session);
-        let eps = self.cfg.epsilon;
-        let mut produced = 0usize;
-        let mut features: Option<Vec<f32>> = None;
-
-        while produced < self.cfg.max_new_tokens && has_room(session, gamma_max) {
-            let last = *session.committed().last().unwrap();
-            let s_t = self.classify(session, features.as_deref(), last);
-            let gamma = if s_t == 0 { 1 } else { gamma_max };
+            let gamma = if s_t == 0 { 1 } else { cap.max(1) };
             let confidence_stop = s_t == 1;
-            let pending = pending_tokens(session, 0);
-            let proposal = propose_chain(
-                session,
-                0,
-                &pending,
-                gamma,
-                self.cfg.draft_temperature,
-                rng,
-                |q, _| confidence_stop && sampling::confidence(q) < eps,
-            );
-            session.stats_mut().proposed_tokens += proposal.len() as u64;
-            let mut block = vec![last];
-            block.extend_from_slice(&proposal.tokens);
-            let ticket = session.verify_submit(&block);
-            let v = session.verify_wait(ticket);
-            let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+            self.wins =
+                propose_chain(session, self.main, &pending, gamma, t_draft, rng, |q, _| {
+                    confidence_stop && sampling::confidence(q) < eps
+                });
+            self.wins_from_branch = false;
+        }
+        // Every W flows through the branch stage exactly once: count it
+        // into the chain-draft total here (adopted run-aheads included).
+        session.stats_mut().proposed_tokens += self.wins.len() as u64;
+
+        // ---------------- Branch stage (Fig. 9 right) ----------------
+        let s_t = if self.wins.is_empty() {
+            0
+        } else {
+            classify(self.use_hrad, session, self.features.as_deref(), self.wins.tokens[0])
+        };
+        // Branch index b: how much of W we retain (Eq. 6), capped by
+        // the Theorem-1 optimal draft length for the locally estimated
+        // acceptance rate (Fig. 2: retaining past γ*(α, c) only feeds
+        // rollback accumulation).
+        let alpha_est = if self.wins.is_empty() {
+            self.alpha_ema
+        } else {
+            let mean = self.wins.confidences.iter().sum::<f64>() / self.wins.len() as f64;
+            self.alpha_ema = 0.8 * self.alpha_ema + 0.2 * mean;
+            mean
+        };
+        let b_cap = crate::theory::optimal_branch_retain(
+            alpha_est.clamp(0.05, 0.98),
+            session.speed_ratio(),
+            gamma_max,
+        );
+        let b = match s_t {
+            0 => 0,
+            2 => self.wins.len().min(b_cap.max(2)),
+            _ => self
+                .wins
+                .confidences
                 .iter()
-                .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
-                .collect();
-            let r = sampling::match_verify(
-                &proposal.tokens,
-                &proposal.qs,
-                &ps[..proposal.len()],
-                Some(&ps[proposal.len()]),
-                rng,
-            );
-            let next = r.next_token.expect("chain verify yields a token");
-            let mut commit = proposal.tokens[..r.n_accepted].to_vec();
-            commit.push(next);
-            session.target_commit(&commit);
-            let want = session.target_len() - 1;
-            if session.draft_len(0) > want {
-                session.draft_rollback(0, want);
+                .position(|&c| c < eps)
+                .unwrap_or(self.wins.len())
+                .min(b_cap),
+        };
+
+        // Branch-point draft distribution q(x_b).
+        let (q_b, conf_b) = if b < self.wins.len() {
+            (self.wins.qs[b].clone(), self.wins.confidences[b])
+        } else {
+            // Branch at the *next* position: catch the draft up to the
+            // last committed token (W may be empty after an all-reject
+            // re-entry) and take the next distribution.
+            let consumed = session.draft_len(self.main);
+            let mut q_raw = Vec::new();
+            if consumed < session.target_len() {
+                // Post-rollback (W empty): replay the committed tokens
+                // the draft has not seen yet.
+                let catch_up: Vec<Token> = session.committed()[consumed..].to_vec();
+                for &t in &catch_up {
+                    q_raw = session.draft_forward(self.main, t);
+                }
+            } else {
+                // W fully retained (s=2): consume its final token.
+                q_raw = session.draft_forward(self.main, *self.wins.tokens.last().unwrap());
             }
-            produced += commit.len();
+            let conf = sampling::confidence(&q_raw);
+            (sampling::apply_temperature(&q_raw, t_draft), conf)
+        };
+
+        // Submit the retained prefix for verification.
+        let retained: Vec<Token> = self.wins.tokens[..b].to_vec();
+        let mut block = vec![*session.committed().last().unwrap()];
+        block.extend_from_slice(&retained);
+        let ticket = session.verify_submit(&block);
+
+        // ---- Branch resampling while the target verifies (Eq. 7) ----
+        let committed_len = session.target_len();
+        let fork_len = committed_len + b; // tokens consumed up to x_b
+        if session.draft_len(self.main) > fork_len {
+            session.draft_rollback(self.main, fork_len);
+        }
+        let k = sampling::adaptive_branch_width(conf_b, self.cfg.k_max);
+        let candidates: Vec<Token> =
+            sampling::top_k_indices(&q_b, k).into_iter().map(|i| i as Token).collect();
+        let k = candidates.len();
+        let mut branch_ids: Vec<BranchId> = vec![self.main];
+        for _ in 1..k {
+            branch_ids.push(session.draft_fork(self.main));
+        }
+        // Feed each branch its candidate (one batched draft step), then
+        // run-ahead `budget` tokens per branch, batched across branches.
+        // Run-ahead length: c-bounded (the verification window is
+        // T_p = c·t regardless of this round's class), with per-branch
+        // confidence early stopping — drafting past the next branch
+        // point only manufactures rollback (Algorithm 1's
+        // "γ = Predictor(...)" applied to the branch stage).
+        let budget = self.branch_budget(session).min(b_cap + 1);
+        let mut qs_next = session.draft_forward_batch(&branch_ids, &candidates);
+        let mut branches: Vec<BranchState> = branch_ids
+            .iter()
+            .zip(&candidates)
+            .map(|(&id, &candidate)| BranchState {
+                id,
+                candidate,
+                run_ahead: Proposal::default(),
+            })
+            .collect();
+        let mut active: Vec<bool> = vec![true; k];
+        for _step in 0..budget {
+            let mut step_ids = Vec::with_capacity(k);
+            let mut toks = Vec::with_capacity(k);
+            for (i, (bs, q_raw)) in branches.iter_mut().zip(&qs_next).enumerate() {
+                if !active[i] {
+                    continue;
+                }
+                let conf = sampling::confidence(q_raw);
+                if self.use_hrad && _step > 0 && conf < eps {
+                    active[i] = false; // next branch point reached
+                    continue;
+                }
+                let q = sampling::apply_temperature(q_raw, t_draft);
+                let tok = sampling::sample(&q, rng);
+                bs.run_ahead.confidences.push(conf);
+                bs.run_ahead.tokens.push(tok);
+                bs.run_ahead.qs.push(q);
+                step_ids.push(bs.id);
+                toks.push(tok);
+            }
+            if step_ids.is_empty() {
+                break;
+            }
+            if _step + 1 < budget {
+                let fresh = session.draft_forward_batch(&step_ids, &toks);
+                // Scatter refreshed distributions back to active slots.
+                let mut it = fresh.into_iter();
+                for (i, bs) in branches.iter().enumerate() {
+                    if active[i] && step_ids.contains(&bs.id) {
+                        qs_next[i] = it.next().unwrap();
+                    }
+                }
+            }
+        }
+        if self.pp_mode {
+            session.overhead(PP_COMM_MS);
+        }
+
+        // ---------------- Join verification ----------------
+        let v: VerifyOut = session.verify_wait(ticket);
+        let ps: Vec<Vec<f32>> = v.ps[..b + 1]
+            .iter()
+            .map(|p| sampling::apply_temperature(p, t_target))
+            .collect();
+        let r = sampling::match_verify(&retained, &self.wins.qs[..b], &ps[..b], None, rng);
+
+        // W beyond x_b: chain rollback if W was main-chain drafted,
+        // branch-structure waste if it was a run-ahead (App. E.3).
+        let discarded_tail = (self.wins.len() - b) as u64;
+        let (tail_rb, tail_bw) = if self.wins_from_branch {
+            (0, discarded_tail)
+        } else {
+            (discarded_tail, 0)
+        };
+        let branch_tokens: u64 = branches.iter().map(|s| s.run_ahead.len() as u64).sum();
+
+        if r.n_accepted < b {
+            // ---- Mid-chain rejection: global rollback (Fig. 1a) ----
+            for bs in &branches {
+                if bs.id != self.main {
+                    session.draft_release(bs.id);
+                }
+            }
+            let mut commit = retained[..r.n_accepted].to_vec();
+            commit.push(r.next_token.unwrap());
+            commit.truncate(remaining);
+            session.target_commit(&commit);
+            session.draft_rollback(self.main, session.target_len() - 1);
             let row = r.n_accepted.min(v.features.len().saturating_sub(1));
-            features = v.features.get(row).cloned();
+            self.features = v.features.get(row).cloned();
+            self.wins = Proposal::default();
             let stats = session.stats_mut();
             stats.rounds += 1;
             stats.generated_tokens += commit.len() as u64;
-            stats.rollback_tokens += (proposal.len() - r.n_accepted) as u64;
-            if r.n_accepted == proposal.len() {
-                stats.all_accept_rounds += 1;
-            }
+            // Chain rollback: rejected retained tokens, plus any accepted
+            // ones clamped off by the request budget.
+            stats.rollback_tokens += (b - r.n_accepted.min(commit.len())) as u64 + tail_rb;
+            stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
             if let Some(h) = stats.accepted_hist.as_mut() {
                 h.add(r.n_accepted);
             }
+            return StepOutcome { new_tokens: commit, done: false };
         }
-        GenerateOut {
-            tokens: session.committed()[prompt.len()..].to_vec(),
-            stats: session.take_stats(),
+
+        // ---- Chain fully accepted: resolve the branch point (Alg. 2) ----
+        let p_bp = &ps[b];
+        let qs_cand: Vec<Vec<f32>> = (0..k).map(|_| q_b.clone()).collect();
+        let (bp_token, winner) =
+            sampling::branch_speculative_sample(p_bp, &candidates, &qs_cand, rng);
+
+        let mut commit = retained.clone();
+        commit.push(bp_token);
+        commit.truncate(remaining);
+        session.target_commit(&commit);
+        let clamp_rb = (b - b.min(commit.len())) as u64;
+        let row = b.min(v.features.len().saturating_sub(1));
+        self.features = v.features.get(row).cloned();
+
+        match winner {
+            Some(j) => {
+                // Adopt the winning branch; its run-ahead is next W.
+                let losing_tokens: u64 = branches
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != j)
+                    .map(|(_, s)| s.run_ahead.len() as u64 + 1)
+                    .sum();
+                // Drop every losing branch. Branch 0 is permanent (the
+                // session's root); if it loses, park it rolled back so
+                // its storage stays bounded instead of releasing it.
+                for (i, bs) in branches.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    if bs.id == 0 {
+                        let park = (session.target_len() - 1).min(session.draft_len(0));
+                        session.draft_rollback(0, park);
+                    } else {
+                        session.draft_release(bs.id);
+                    }
+                }
+                let win = branches.swap_remove(j);
+                debug_assert_eq!(win.candidate, bp_token);
+                self.main = win.id;
+                self.wins = win.run_ahead;
+                self.wins_from_branch = true;
+                let hist_bucket = b.min(session.block() - 1);
+                let stats = session.stats_mut();
+                stats.rounds += 1;
+                stats.generated_tokens += commit.len() as u64;
+                stats.rollback_tokens += tail_rb + clamp_rb;
+                stats.branch_wasted_tokens += losing_tokens + tail_bw;
+                stats.all_accept_rounds += 1;
+                if let Some(h) = stats.accepted_hist.as_mut() {
+                    h.add(hist_bucket);
+                }
+            }
+            None => {
+                // No branch matched the target: rollback to draft stage.
+                for bs in &branches {
+                    if bs.id != self.main {
+                        session.draft_release(bs.id);
+                    }
+                }
+                session.draft_rollback(self.main, session.target_len() - 1);
+                self.wins = Proposal::default();
+                let hist_bucket = b.min(session.block() - 1);
+                let stats = session.stats_mut();
+                stats.rounds += 1;
+                stats.generated_tokens += commit.len() as u64;
+                stats.rollback_tokens += tail_rb + clamp_rb;
+                stats.branch_wasted_tokens += branch_tokens + k as u64 + tail_bw;
+                if let Some(h) = stats.accepted_hist.as_mut() {
+                    h.add(hist_bucket);
+                }
+            }
         }
+        StepOutcome { new_tokens: commit, done: false }
+    }
+}
+
+/// Hoisted loop state of the `w/o branch` ablation (Fig. 6, Table 13):
+/// H-RAD adaptive draft lengths bolted onto the serialized
+/// draft-then-verify loop.
+struct SerialState {
+    cfg: EngineConfig,
+    use_hrad: bool,
+    gamma_max: usize,
+    features: Option<Vec<f32>>,
+}
+
+impl DecodeState for SerialState {
+    fn step(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        if !has_room(session, self.gamma_max) {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let eps = self.cfg.epsilon;
+        let last = *session.committed().last().unwrap();
+        let s_t = classify(self.use_hrad, session, self.features.as_deref(), last);
+        let gamma = if s_t == 0 { 1 } else { self.gamma_max };
+        let confidence_stop = s_t == 1;
+        let pending = pending_tokens(session, 0);
+        let proposal = propose_chain(
+            session,
+            0,
+            &pending,
+            gamma,
+            self.cfg.draft_temperature,
+            rng,
+            |q, _| confidence_stop && sampling::confidence(q) < eps,
+        );
+        session.stats_mut().proposed_tokens += proposal.len() as u64;
+        let mut block = vec![last];
+        block.extend_from_slice(&proposal.tokens);
+        let ticket = session.verify_submit(&block);
+        let v = session.verify_wait(ticket);
+        let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
+            .iter()
+            .map(|p| sampling::apply_temperature(p, self.cfg.target_temperature))
+            .collect();
+        let r = sampling::match_verify(
+            &proposal.tokens,
+            &proposal.qs,
+            &ps[..proposal.len()],
+            Some(&ps[proposal.len()]),
+            rng,
+        );
+        let next = r.next_token.expect("chain verify yields a token");
+        let mut commit = proposal.tokens[..r.n_accepted].to_vec();
+        commit.push(next);
+        commit.truncate(remaining);
+        session.target_commit(&commit);
+        let want = session.target_len() - 1;
+        if session.draft_len(0) > want {
+            session.draft_rollback(0, want);
+        }
+        let row = r.n_accepted.min(v.features.len().saturating_sub(1));
+        self.features = v.features.get(row).cloned();
+        let stats = session.stats_mut();
+        stats.rounds += 1;
+        stats.generated_tokens += commit.len() as u64;
+        stats.rollback_tokens += (proposal.len() - r.n_accepted.min(commit.len())) as u64;
+        if r.n_accepted == proposal.len() {
+            stats.all_accept_rounds += 1;
+        }
+        if let Some(h) = stats.accepted_hist.as_mut() {
+            h.add(r.n_accepted);
+        }
+        StepOutcome { new_tokens: commit, done: false }
     }
 }
 
@@ -532,7 +557,7 @@ mod tests {
     use crate::backend::sim::{SimBackend, SimConfig};
     use crate::backend::Backend;
     use crate::config::{ModelPair, PairId, Task, TaskId};
-    use crate::engines::{ar::Autoregressive, pearl::Pearl, sps::Sps};
+    use crate::engines::{ar::Autoregressive, pearl::Pearl, sps::Sps, GenerateOut};
 
     fn run_engine(
         engine: &dyn Engine,

@@ -5,7 +5,7 @@
 //! the sim backend). This module holds the pure decision logic shared by the
 //! engine and the analysis benches (Fig. 3c, Table 5, Fig. 19).
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Session};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 

@@ -27,6 +27,7 @@ pub mod hrad;
 pub mod kvcache;
 pub mod metrics;
 pub mod parallel;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sampling;
 pub mod server;

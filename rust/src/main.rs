@@ -18,7 +18,7 @@ use specbranch::backend::Backend;
 use specbranch::bench_harness::{experiments, Scale};
 use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
 use specbranch::coordinator::Coordinator;
-use specbranch::engines;
+use specbranch::engines::{self, DecodeTask};
 use specbranch::metrics;
 use specbranch::server::Server;
 use specbranch::token::Tokenizer;
@@ -49,6 +49,7 @@ fn print_help() {
          generate flags: --prompt <text> --engine <name> --backend <pjrt|sim>\n\
                          --pair <llama|vicuna|deepseek|llama3.1> --task <name>\n\
                          --max-new <n> --gamma <n> --epsilon <f> --seed <n>\n\
+                         [--stream]  print tokens per decode round\n\
          serve flags:    --addr <host:port> --workers <n> --engine <name>\n\
                          --backend <pjrt|sim> [--max-conns <n>]\n\
          bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
@@ -108,14 +109,38 @@ fn cmd_generate(args: &Args) -> i32 {
     let prompt_text = args.get_or("prompt", "the only way to do great work is to");
     let prompt = tok.encode(prompt_text);
     let engine = engines::build(engine_id, cfg.clone());
-    let mut session = backend.new_session(cfg.seed);
-    let mut rng = Pcg32::new(cfg.seed);
+    let session = backend.new_session(cfg.seed);
+    let stream = args.has("stream");
     let t0 = std::time::Instant::now();
-    let out = engine.generate(session.as_mut(), &prompt, &mut rng);
+    // Drive the step-wise API directly: one draft/verify round per step,
+    // streaming each round's tokens when asked.
+    let mut task = DecodeTask::new(
+        engine.as_ref(),
+        session,
+        &prompt,
+        cfg.max_new_tokens,
+        Pcg32::new(cfg.seed),
+    );
+    if stream {
+        println!("prompt    : {prompt_text}");
+        print!("completion: ");
+    }
+    while !task.is_done() {
+        let round = task.step();
+        if stream && !round.new_tokens.is_empty() {
+            print!("{}", tok.decode(&round.new_tokens));
+            let _ = std::io::Write::flush(&mut std::io::stdout());
+        }
+    }
+    let out = task.finish();
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("prompt    : {prompt_text}");
-    println!("completion: {}", tok.decode(&out.tokens));
+    if stream {
+        println!();
+    } else {
+        println!("prompt    : {prompt_text}");
+        println!("completion: {}", tok.decode(&out.tokens));
+    }
     println!();
     println!("engine={} backend={}", engine_id.name(), backend.name());
     println!(

@@ -102,11 +102,8 @@ impl DecodeStats {
         self.branch_wasted_tokens += other.branch_wasted_tokens;
         self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
         if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {
-            for (k, &c) in theirs.counts().iter().enumerate() {
-                for _ in 0..c {
-                    mine.add(k);
-                }
-            }
+            // Bucket-wise merge: O(buckets), not O(total count).
+            mine.merge(theirs);
         }
     }
 }

@@ -14,11 +14,19 @@ pub type Token = u32;
 
 /// Numerically stable in-place softmax with temperature.
 /// `temperature == 0` produces the greedy one-hot distribution.
+///
+/// Total on degenerate input: empty logits yield an empty distribution and
+/// NaN logits are treated as −∞ (zero probability); if *every* logit is
+/// NaN/−∞ the result falls back to uniform so callers always receive a
+/// valid distribution.
 pub fn softmax(logits: &[f32], temperature: f64, out: &mut Vec<f32>) {
     out.clear();
-    out.extend_from_slice(logits);
+    if logits.is_empty() {
+        return;
+    }
+    out.extend(logits.iter().map(|&x| if x.is_nan() { f32::NEG_INFINITY } else { x }));
     if temperature <= 0.0 {
-        let best = argmax(logits);
+        let best = argmax(out);
         for x in out.iter_mut() {
             *x = 0.0;
         }
@@ -27,6 +35,14 @@ pub fn softmax(logits: &[f32], temperature: f64, out: &mut Vec<f32>) {
     }
     let inv_t = (1.0 / temperature) as f32;
     let m = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        // No finite logit: no information — uniform.
+        let u = 1.0 / out.len() as f32;
+        for x in out.iter_mut() {
+            *x = u;
+        }
+        return;
+    }
     let mut sum = 0.0f32;
     for x in out.iter_mut() {
         *x = ((*x - m) * inv_t).exp();
@@ -80,14 +96,28 @@ pub fn sample(dist: &[f32], rng: &mut Pcg32) -> Token {
 }
 
 /// Indices of the k largest entries, descending (partial selection).
+///
+/// Total order: NaN entries sort last (treated as −∞), so degenerate
+/// distributions select real probability mass first instead of panicking;
+/// empty input or `k == 0` returns an empty vec.
 pub fn top_k_indices(dist: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..dist.len()).collect();
     let k = k.min(dist.len());
-    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-        dist[b].partial_cmp(&dist[a]).unwrap()
-    });
+    if k == 0 {
+        return Vec::new();
+    }
+    let desc = |a: &usize, b: &usize| -> std::cmp::Ordering {
+        let (x, y) = (dist[*a], dist[*b]);
+        match (x.is_nan(), y.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => y.partial_cmp(&x).expect("both finite-comparable"),
+        }
+    };
+    let mut idx: Vec<usize> = (0..dist.len()).collect();
+    idx.select_nth_unstable_by(k - 1, desc);
     idx.truncate(k);
-    idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+    idx.sort_by(desc);
     idx
 }
 
@@ -193,7 +223,9 @@ pub fn branch_speculative_sample(
         if rng.next_f64() < (pi / qi).min(1.0) {
             return (tok, Some(i));
         }
-        residual(&p_cur.clone(), q, &mut scratch);
+        // Deflate in place: `residual` reads `p_cur` and writes `scratch`,
+        // then the buffers swap roles — no per-rejection allocation.
+        residual(&p_cur, q, &mut scratch);
         std::mem::swap(&mut p_cur, &mut scratch);
     }
     (sample(&p_cur, rng), None)
@@ -242,6 +274,46 @@ mod tests {
         let d = [0.1f32, 0.5, 0.05, 0.3, 0.05];
         assert_eq!(top_k_indices(&d, 3), vec![1, 3, 0]);
         assert_eq!(top_k_indices(&d, 99).len(), 5);
+    }
+
+    #[test]
+    fn top_k_is_total_on_degenerate_input() {
+        // Empty input / zero k: empty output, no panic.
+        assert!(top_k_indices(&[], 3).is_empty());
+        assert!(top_k_indices(&[0.5, 0.5], 0).is_empty());
+        // NaN entries sort last; real mass is selected first.
+        let d = [0.2f32, f32::NAN, 0.5, f32::NAN, 0.3];
+        assert_eq!(top_k_indices(&d, 3), vec![2, 4, 0]);
+        let all = top_k_indices(&d, 5);
+        assert_eq!(&all[..3], &[2, 4, 0]);
+        let mut tail = all[3..].to_vec();
+        tail.sort_unstable();
+        assert_eq!(tail, vec![1, 3], "NaN indices fill the tail");
+        // All-NaN input: any order, but the right length and no panic.
+        assert_eq!(top_k_indices(&[f32::NAN, f32::NAN], 2).len(), 2);
+    }
+
+    #[test]
+    fn softmax_is_total_on_degenerate_input() {
+        let mut out = vec![9.0f32];
+        // Empty logits yield an empty distribution (both temperatures).
+        softmax(&[], 1.0, &mut out);
+        assert!(out.is_empty());
+        softmax(&[], 0.0, &mut out);
+        assert!(out.is_empty());
+        // A NaN logit gets zero mass; the rest still normalises.
+        softmax(&[1.0, f32::NAN, 2.0], 1.0, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1], 0.0);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Greedy ignores the NaN too.
+        softmax(&[1.0, f32::NAN, 2.0], 0.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 1.0]);
+        // All-NaN input: uniform fallback, still a distribution.
+        softmax(&[f32::NAN, f32::NAN], 1.0, &mut out);
+        assert_eq!(out, vec![0.5, 0.5]);
     }
 
     #[test]

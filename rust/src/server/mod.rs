@@ -3,12 +3,17 @@
 //! Protocol (one line per message, UTF-8):
 //!   client → `GEN <max_new_tokens> <prompt text…>`
 //!   server → `OK <id> <completion text>` then `STATS <id> <json>`
+//!   client → `GENS <max_new_tokens> <prompt text…>`   (streaming)
+//!   server → `PART <id> <text chunk>` per decode round, then
+//!            `OK <id> <completion text>` and `STATS <id> <json>`
 //!   client → `METRICS` ; server → `METRICS <json>`
 //!   client → `QUIT`
 //!
 //! Text is tokenized with the 64-symbol [`crate::token::Tokenizer`] (the
 //! tiny PJRT pair's alphabet). The server holds the coordinator; each
-//! connection is handled on its own thread.
+//! connection is handled on its own thread, and responses are matched to
+//! their own request ids, so concurrent connections never steal each
+//! other's completions.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -83,13 +88,15 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             let v = json::obj(vec![
                 ("completed", json::num(m.completed as f64)),
                 ("generated_tokens", json::num(m.generated_tokens as f64)),
+                ("rounds", json::num(m.rounds as f64)),
                 ("mean_queue_ms", json::num(m.mean_queue_ms)),
                 ("mean_decode_ms", json::num(m.mean_decode_ms)),
             ]);
             writeln!(out, "METRICS {v}")?;
             continue;
         }
-        if let Some(rest) = line.strip_prefix("GEN ") {
+        let streaming = line.starts_with("GENS ");
+        if let Some(rest) = line.strip_prefix("GEN ").or_else(|| line.strip_prefix("GENS ")) {
             // Malformed requests get an ERR reply, not a disconnect.
             let Some((max_new, prompt_text)) = rest.split_once(' ') else {
                 writeln!(out, "ERR GEN needs '<max_new> <prompt>'")?;
@@ -104,8 +111,25 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 writeln!(out, "ERR empty prompt")?;
                 continue;
             }
-            coord.submit(prompt, max_new, 42);
-            let resp = coord.collect();
+            let resp = if streaming {
+                // Forward each round's committed tokens as it lands.
+                let (tx, rx) = std::sync::mpsc::channel();
+                let id = coord.submit_streaming(prompt, max_new, 42, tx);
+                for chunk in rx {
+                    if !chunk.tokens.is_empty() {
+                        let part =
+                            tok.decode(&chunk.tokens).replace('\n', " ").replace('\t', " ");
+                        writeln!(out, "PART {} {}", chunk.id, part)?;
+                    }
+                    if chunk.done {
+                        break;
+                    }
+                }
+                coord.collect_id(id)
+            } else {
+                let id = coord.submit(prompt, max_new, 42);
+                coord.collect_id(id)
+            };
             let text = tok.decode(&resp.tokens).replace('\n', " ").replace('\t', " ");
             writeln!(out, "OK {} {}", resp.id, text)?;
             let stats = json::obj(vec![
@@ -153,19 +177,46 @@ impl Client {
 
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<GenReply> {
         writeln!(self.writer, "GEN {max_new} {prompt}")?;
-        let ok = self.read_line()?;
-        let rest = ok.strip_prefix("OK ").ok_or_else(|| anyhow!("bad reply: {ok}"))?;
+        self.read_reply().map(|(reply, _)| reply)
+    }
+
+    /// Streaming generation: returns the final reply plus the `PART` text
+    /// chunks in arrival order (one per decode round).
+    pub fn generate_stream(&mut self, prompt: &str, max_new: usize) -> Result<(GenReply, Vec<String>)> {
+        writeln!(self.writer, "GENS {max_new} {prompt}")?;
+        self.read_reply()
+    }
+
+    /// Read `PART`* then `OK` + `STATS` lines into a reply.
+    fn read_reply(&mut self) -> Result<(GenReply, Vec<String>)> {
+        let mut parts = Vec::new();
+        let rest = loop {
+            let line = self.read_line()?;
+            if let Some(part) = line.strip_prefix("PART ") {
+                let (_pid, chunk) =
+                    part.split_once(' ').ok_or_else(|| anyhow!("bad PART line"))?;
+                parts.push(chunk.to_string());
+                continue;
+            }
+            break line
+                .strip_prefix("OK ")
+                .ok_or_else(|| anyhow!("bad reply: {line}"))?
+                .to_string();
+        };
         let (id, text) = rest.split_once(' ').ok_or_else(|| anyhow!("bad OK line"))?;
         let stats_line = self.read_line()?;
         let srest = stats_line
             .strip_prefix("STATS ")
             .ok_or_else(|| anyhow!("bad stats line: {stats_line}"))?;
         let (_sid, stats_json) = srest.split_once(' ').ok_or_else(|| anyhow!("bad STATS"))?;
-        Ok(GenReply {
-            id: id.parse().context("bad id")?,
-            text: text.to_string(),
-            stats: json::parse(stats_json).context("bad stats json")?,
-        })
+        Ok((
+            GenReply {
+                id: id.parse().context("bad id")?,
+                text: text.to_string(),
+                stats: json::parse(stats_json).context("bad stats json")?,
+            },
+            parts,
+        ))
     }
 
     pub fn metrics(&mut self) -> Result<json::Value> {

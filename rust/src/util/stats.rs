@@ -100,6 +100,17 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Merge another histogram bucket-wise in one pass; `other`'s buckets
+    /// beyond our range collapse into the last bucket (same overflow rule
+    /// as [`Histogram::add`]).
+    pub fn merge(&mut self, other: &Histogram) {
+        let last = self.counts.len() - 1;
+        for (k, &c) in other.counts.iter().enumerate() {
+            self.counts[k.min(last)] += c;
+        }
+        self.total += other.total;
+    }
+
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }
@@ -231,5 +242,29 @@ mod tests {
         let mut h = Histogram::new(4);
         h.add(10);
         assert_eq!(h.counts()[3], 1);
+    }
+
+    #[test]
+    fn histogram_merge_matches_replayed_adds() {
+        let mut a = Histogram::new(4);
+        a.add(0);
+        a.add(2);
+        // A wider histogram: its overflow buckets collapse into a's last.
+        let mut b = Histogram::new(6);
+        b.add(1);
+        b.add(3);
+        b.add(5);
+        b.add(5);
+        let mut replay = a.clone();
+        for (k, &c) in b.counts().iter().enumerate() {
+            for _ in 0..c {
+                replay.add(k);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.counts(), replay.counts());
+        assert_eq!(a.total(), replay.total());
+        assert_eq!(a.total(), 6);
+        assert_eq!(a.counts()[3], 3); // b's bucket 3 + its two overflow counts
     }
 }

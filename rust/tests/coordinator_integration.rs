@@ -1,5 +1,5 @@
 //! Coordinator under load: many requests, multiple workers, metric
-//! aggregation, mixed request sizes.
+//! aggregation, mixed request sizes, continuous-batching fairness.
 
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
@@ -43,25 +43,114 @@ fn hundred_requests_four_workers() {
 }
 
 #[test]
-fn mixed_lengths_complete() {
+fn mixed_lengths_complete_exactly() {
+    // Per-request budgets, all different from the engine config's default:
+    // every response must have *exactly* the requested length, and the
+    // coordinator aggregate must equal the per-request stats sum.
     let coord = Coordinator::start(
         backends(2),
         EngineId::Sps,
-        EngineConfig { max_new_tokens: 200, ..Default::default() },
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
     );
-    let sizes = [5usize, 50, 120, 10, 80];
+    let sizes = [7usize, 40, 150, 5, 50, 120, 10, 80];
     for (i, &sz) in sizes.iter().enumerate() {
         coord.submit(vec![2, 3, 4], sz, i as u64);
     }
     let mut got = std::collections::HashMap::new();
+    let mut stats_sum = 0u64;
     for _ in 0..sizes.len() {
         let r = coord.collect();
+        assert_eq!(
+            r.tokens.len() as u64,
+            r.stats.generated_tokens,
+            "request {}: response length vs stats", r.id
+        );
+        stats_sum += r.stats.generated_tokens;
         got.insert(r.id, r.tokens.len());
     }
     for (i, &sz) in sizes.iter().enumerate() {
         assert_eq!(got[&(i as u64)], sz, "request {i}");
     }
+    let snap = coord.registry();
+    assert_eq!(snap.generated_tokens, stats_sum);
+    assert_eq!(snap.generated_tokens as usize, sizes.iter().sum::<usize>());
     coord.shutdown();
+}
+
+#[test]
+fn fifo_fairness_single_worker() {
+    // Round-robin round scheduling on one worker: equal-work requests
+    // (AR: one round per token, deterministic) complete in submission
+    // order.
+    let coord = Coordinator::start(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 12, ..Default::default() },
+    );
+    let ids: Vec<u64> = (0..6).map(|i| coord.submit(vec![1, 2, 3], 12, i)).collect();
+    let mut got = Vec::new();
+    for _ in 0..ids.len() {
+        got.push(coord.collect().id);
+    }
+    assert_eq!(got, ids, "equal work must complete FIFO on one worker");
+    coord.shutdown();
+}
+
+#[test]
+fn no_head_of_line_blocking_on_mixed_workload() {
+    // The acceptance workload: 12 mixed-length requests on 2 sim workers.
+    // The short requests are enqueued *after* all the long ones and must
+    // still finish first — workers schedule rounds, not whole requests.
+    let coord = Coordinator::start(
+        backends(2),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 512, ..Default::default() },
+    );
+    let mut long_ids = Vec::new();
+    for i in 0..9u64 {
+        long_ids.push(coord.submit(vec![1, 2, 3], 250, i));
+    }
+    let mut short_ids = std::collections::HashSet::new();
+    for i in 0..3u64 {
+        short_ids.insert(coord.submit(vec![4, 5, 6], 6, 100 + i));
+    }
+    // The three short requests must be the first three completions.
+    for _ in 0..3 {
+        let r = coord.collect();
+        assert!(
+            short_ids.remove(&r.id),
+            "a 250-token request finished before a 6-token one (id {})",
+            r.id
+        );
+        assert_eq!(r.tokens.len(), 6);
+    }
+    for _ in 0..long_ids.len() {
+        assert_eq!(coord.collect().tokens.len(), 250);
+    }
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_with_inflight_requests_drains_cleanly() {
+    let coord = Coordinator::start(
+        backends(2),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+    );
+    let sizes = [20usize, 45, 8, 33];
+    for (i, &sz) in sizes.iter().enumerate() {
+        coord.submit(vec![1, 2, 3], sz, i as u64);
+    }
+    // Immediate shutdown: queued and in-flight requests all finish with
+    // their exact budgets; undelivered responses come back.
+    let mut rest = coord.shutdown();
+    assert_eq!(rest.len(), sizes.len());
+    rest.sort_by_key(|r| r.id);
+    for (r, &sz) in rest.iter().zip(sizes.iter()) {
+        assert_eq!(r.tokens.len(), sz);
+        assert_eq!(r.stats.generated_tokens as usize, sz);
+    }
 }
 
 #[test]

@@ -34,9 +34,24 @@ fn generate_roundtrip() {
     let reply = client.generate("hello world this is a test", 32).expect("generate");
     assert!(!reply.text.is_empty());
     let gen = reply.stats.get("generated").and_then(|v| v.as_f64()).unwrap();
-    assert!(gen >= 32.0);
+    assert_eq!(gen, 32.0, "per-request budget honored exactly");
     let tps = reply.stats.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap();
     assert!(tps > 0.0);
+    client.quit().unwrap();
+}
+
+#[test]
+fn streaming_roundtrip_concatenates_to_completion() {
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let (reply, parts) = client
+        .generate_stream("stream me some tokens please", 24)
+        .expect("generate_stream");
+    assert!(!parts.is_empty(), "streaming must deliver per-round chunks");
+    let joined: String = parts.concat();
+    assert_eq!(joined, reply.text, "PART chunks must concatenate to OK text");
+    let gen = reply.stats.get("generated").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(gen, 24.0);
     client.quit().unwrap();
 }
 

@@ -4,7 +4,7 @@
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
 use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use specbranch::engines;
+use specbranch::engines::{self, Engine};
 use specbranch::metrics::DecodeStats;
 use specbranch::util::prng::Pcg32;
 

@@ -1,0 +1,134 @@
+//! Minimal offline stand-in for the `anyhow` crate, vendored so the
+//! workspace builds with zero registry dependencies. Implements exactly the
+//! subset this codebase uses: [`Error`], [`Result`], the [`anyhow!`] macro,
+//! and the [`Context`] extension trait. Semantics mirror the real crate:
+//! `{}` displays the outermost message, `{:#}` the whole cause chain.
+
+use std::fmt;
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Dynamic error: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `Context` attaches).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = anyhow!("root {}", 7);
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+    }
+
+    #[test]
+    fn from_std_error_collects_sources() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert_eq!(format!("{e}"), "boom");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"));
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: io");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+}
