@@ -166,6 +166,18 @@ pub trait Session {
 
     /// Remaining KV capacity (tokens) before the static cache is full.
     fn capacity_left(&self) -> usize;
+
+    /// Bytes of paged KV cache this session currently pins (0 for backends
+    /// without paged accounting).
+    fn kv_allocated_bytes(&self) -> usize {
+        0
+    }
+
+    /// Release every KV block the session still holds (all draft branches,
+    /// shared prefixes included) back to the cache. Called by the scheduler
+    /// when a request is cancelled mid-decode; committed tokens and stats
+    /// must stay intact. Backends without paged KV may no-op.
+    fn release_kv(&mut self) {}
 }
 
 /// A backend constructs sessions. Sessions are `Send` so a decode task can

@@ -580,6 +580,21 @@ impl Session for SimSession {
     fn capacity_left(&self) -> usize {
         self.cfg.seq_max.saturating_sub(self.committed.len())
     }
+
+    fn kv_allocated_bytes(&self) -> usize {
+        self.kv.allocated_bytes()
+    }
+
+    fn release_kv(&mut self) {
+        for (_, seq) in self.kv_seqs.drain() {
+            self.kv.release(seq);
+        }
+        for b in self.branches.iter_mut() {
+            *b = None;
+        }
+        debug_assert!(self.kv.check_invariants().is_ok(), "KV invariants after release");
+        debug_assert_eq!(self.kv.allocated_blocks(), 0, "all blocks freed on release");
+    }
 }
 
 #[cfg(test)]
@@ -740,6 +755,29 @@ mod tests {
             assert!(s <= prev, "sigma must not increase with K");
             prev = s;
         }
+    }
+
+    #[test]
+    fn release_kv_on_cancel_frees_all_blocks() {
+        // Cancellation contract: mid-decode, with branches forked off the
+        // main chain, release_kv must return the BlockCache to its empty
+        // baseline with invariants intact while the committed (partial)
+        // tokens survive.
+        let mut s = session(PairId::Vicuna68m13b, TaskId::MtBench, 21);
+        s.prefill(&[1, 2, 3, 4, 5]);
+        s.draft_forward(0, 5);
+        let b = s.draft_fork(0);
+        s.draft_forward(b, 9);
+        s.draft_forward(0, 7);
+        s.target_commit(&[7, 9]);
+        assert!(s.kv.allocated_blocks() > 0);
+        s.kv.check_invariants().unwrap();
+        let committed_before = s.committed().to_vec();
+        s.release_kv();
+        assert_eq!(s.kv.allocated_blocks(), 0, "baseline after release");
+        s.kv.check_invariants().unwrap();
+        assert_eq!(s.committed(), &committed_before[..], "partial tokens intact");
+        assert!(s.kv_allocated_bytes() == 0);
     }
 
     #[test]

@@ -1,32 +1,148 @@
-//! Serving coordinator: request queue, continuous-batching scheduler,
-//! worker pool.
+//! Serving coordinator: request queue, policy-driven continuous-batching
+//! scheduler, worker pool.
 //!
 //! The L3 serving layer above the decoding engines (vLLM-router-shaped).
-//! Requests enter a FIFO admission queue; a pool of decode workers — each
+//! Requests enter an admission queue; a pool of decode workers — each
 //! owning its own [`Backend`] handle and [`Engine`] — schedules **rounds**,
 //! not whole requests: admission turns a request into a [`DecodeTask`]
 //! (prefill + per-request budget), and workers then pull one task at a time
-//! from a round-robin ready queue, run exactly one draft/verify round, and
-//! requeue it. A long request therefore never head-of-line-blocks short
-//! ones, new arrivals join the running batch between rounds, and the
-//! per-request `max_new_tokens` is honored exactly by the engine layer —
-//! there is no post-decode truncation anywhere. Per-request decode
-//! statistics aggregate into a coordinator-wide [`Registry`] that the
-//! server and benches report from.
+//! from the ready queue, run exactly one draft/verify round, and requeue
+//! it. A long request therefore never head-of-line-blocks short ones, new
+//! arrivals join the running batch between rounds, and the per-request
+//! `max_new_tokens` is honored exactly by the engine layer — there is no
+//! post-decode truncation anywhere. Per-request decode statistics aggregate
+//! into a coordinator-wide [`Registry`] that the server and benches report
+//! from.
+//!
+//! ## Scheduling policies ([`SchedulePolicy`])
+//!
+//! Both the admission queue and the between-round ready queue are ordered
+//! by a policy chosen at [`Coordinator::start_with`]:
+//!
+//! * [`SchedulePolicy::RoundRobin`] (default) — FIFO admission, round-robin
+//!   rounds: every in-flight request advances one round per cycle.
+//! * [`SchedulePolicy::Priority`] — highest [`Request::priority`] first,
+//!   FIFO among ties. Starvation is bounded by **aging** in both the
+//!   admission queue and the ready queue: every scheduling decision that
+//!   passes over a waiting entry raises its effective priority by
+//!   `1 / aging_rounds`, so a low-priority request's wait is bounded by
+//!   `aging_rounds × (priority gap)` decisions rather than unbounded.
+//! * [`SchedulePolicy::EarliestDeadline`] — the task whose absolute
+//!   deadline (`enqueue time + deadline_ms`) comes first runs every round
+//!   until it completes; requests without a deadline run after all
+//!   deadlined ones. [`Response::deadline_met`] reports the outcome.
+//!
+//! ## Cancellation
+//!
+//! [`Coordinator::cancel`] removes a request **between rounds** wherever it
+//! currently lives: still-queued requests are retired immediately; a task
+//! parked in the ready queue is retired on the spot; a task mid-round on a
+//! worker is flagged and retired as soon as its current round commits.
+//! Cancellation never discards work already done: the response carries the
+//! **partial tokens** committed so far plus real [`DecodeStats`], with
+//! [`Response::status`] = [`ResponseStatus::Cancelled`], and the task's KV
+//! blocks are released back to the cache ([`DecodeTask::cancel`]). The
+//! registry invariant `Registry.generated_tokens ==
+//! Σ DecodeStats.generated_tokens` holds across mixed complete/cancel
+//! workloads because cancelled requests count their partial tokens.
+//!
+//! ## KV admission control
+//!
+//! With a watermark configured ([`SchedulerConfig::kv_watermark_bytes`]),
+//! admission is deferred while the **projected** KV footprint of admitted,
+//! unfinished requests would exceed it. The projection upper-bounds one
+//! request's `BlockCache` bytes: `(prompt + max_new_tokens + speculation
+//! headroom) × bytes/token`, rounded up to whole blocks, where the headroom
+//! covers `k_max` parallel branches of depth γ plus per-branch block
+//! rounding/CoW slack. Deferred requests are admitted as completions and
+//! cancellations free budget; a request whose projection alone exceeds the
+//! watermark is admitted when nothing else is in flight (alone on the
+//! cache) rather than dropped, so no request is ever lost to admission
+//! control.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
 use crate::engines::{self, DecodeTask, Engine};
+use crate::kvcache::{BlockCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::prng::Pcg32;
+
+/// Ready-queue and admission ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// FIFO admission, round-robin rounds (the PR 1 behavior).
+    RoundRobin,
+    /// Highest `priority` first with aging (bounded wait for low priority).
+    Priority,
+    /// Earliest absolute deadline first; no-deadline requests run last.
+    EarliestDeadline,
+}
+
+impl SchedulePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::RoundRobin => "rr",
+            SchedulePolicy::Priority => "priority",
+            SchedulePolicy::EarliestDeadline => "edf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulePolicy> {
+        Some(match s {
+            "rr" | "roundrobin" | "round-robin" | "fifo" => SchedulePolicy::RoundRobin,
+            "priority" | "prio" => SchedulePolicy::Priority,
+            "edf" | "deadline" | "earliest-deadline" => SchedulePolicy::EarliestDeadline,
+            _ => return None,
+        })
+    }
+}
+
+/// Scheduler tuning for one [`Coordinator::start_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub policy: SchedulePolicy,
+    /// Admission watermark on projected KV bytes across admitted,
+    /// unfinished requests. `None` = unbounded (no admission control).
+    pub kv_watermark_bytes: Option<usize>,
+    /// Bytes per KV token used by the admission projection. `None` derives
+    /// the sim draft-cache accounting (2 layers × 12 heads × 64 dims).
+    pub kv_bytes_per_token: Option<usize>,
+    /// Priority aging: scheduling decisions a waiting task is passed over
+    /// per +1 effective priority. 0 disables aging (pure priority).
+    pub aging_rounds: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: SchedulePolicy::RoundRobin,
+            kv_watermark_bytes: None,
+            kv_bytes_per_token: None,
+            aging_rounds: 8,
+        }
+    }
+}
+
+/// Resolved per-worker scheduling parameters.
+#[derive(Clone, Copy, Debug)]
+struct SchedParams {
+    policy: SchedulePolicy,
+    kv_watermark_bytes: Option<usize>,
+    kv_bytes_per_token: usize,
+    /// Speculation headroom tokens added to every request's KV projection.
+    headroom_tokens: usize,
+    aging_rounds: u64,
+    /// Continuous-batch window: max tasks parked in the ready queue.
+    max_ready: usize,
+}
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -35,7 +151,21 @@ pub struct Request {
     pub prompt: Vec<Token>,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// Larger = more urgent under [`SchedulePolicy::Priority`].
+    pub priority: i32,
+    /// Latency target in ms from submission; orders
+    /// [`SchedulePolicy::EarliestDeadline`] and sets
+    /// [`Response::deadline_met`].
+    pub deadline_ms: Option<u64>,
     /// Optional per-round streaming channel (tokens land as rounds commit).
+    pub stream: Option<Sender<StreamChunk>>,
+}
+
+/// Optional submission parameters (see [`Coordinator::submit_opts`]).
+#[derive(Debug, Default)]
+pub struct SubmitOpts {
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
     pub stream: Option<Sender<StreamChunk>>,
 }
 
@@ -44,25 +174,44 @@ pub struct Request {
 pub struct StreamChunk {
     pub id: u64,
     /// Tokens committed by the round that just ran (may be empty on the
-    /// final capacity-exhausted round).
+    /// final capacity-exhausted or cancellation round).
     pub tokens: Vec<Token>,
     /// True on the last chunk; the full [`Response`] follows via `collect`.
     pub done: bool,
 }
 
-/// Completed request.
+/// How a request left the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Ran to its full `max_new_tokens` (or KV capacity) budget.
+    Completed,
+    /// Retired early by [`Coordinator::cancel`]; tokens are the partial
+    /// output committed before cancellation (possibly empty).
+    Cancelled,
+}
+
+/// Completed or cancelled request.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<Token>,
     pub stats: DecodeStats,
+    pub status: ResponseStatus,
+    /// `Some(total_ms <= deadline_ms)` when the request carried a deadline.
+    pub deadline_met: Option<bool>,
     /// Queueing delay before decode started, wall clock (ms).
     pub queue_ms: f64,
     /// Queueing + decode, wall clock (ms).
     pub total_ms: f64,
 }
 
-/// One in-flight request: a resumable decode task plus timing bookkeeping.
+impl Response {
+    pub fn is_cancelled(&self) -> bool {
+        self.status == ResponseStatus::Cancelled
+    }
+}
+
+/// One in-flight request: a resumable decode task plus scheduling metadata.
 struct Inflight {
     id: u64,
     task: DecodeTask,
@@ -71,43 +220,82 @@ struct Inflight {
     /// Accumulated on-worker decode time (prefill + all rounds), µs.
     decode_us: u64,
     stream: Option<Sender<StreamChunk>>,
+    priority: i32,
+    deadline_ms: Option<u64>,
+    /// Absolute deadline (None = no deadline or out-of-range).
+    deadline_at: Option<Instant>,
+    /// Scheduling decisions that passed this task over (priority aging).
+    waits: u64,
+    /// Projected KV bytes charged against the admission watermark.
+    kv_projected: usize,
+}
+
+/// One request waiting for admission, with its aging state.
+struct Queued {
+    req: Request,
+    at: Instant,
+    /// Admission decisions that passed this request over (priority aging).
+    waits: u64,
 }
 
 #[derive(Default)]
 struct Queues {
-    inbox: VecDeque<(Request, Instant)>,
-    /// Round-robin queue of in-flight tasks awaiting their next round.
+    inbox: VecDeque<Queued>,
+    /// In-flight tasks awaiting their next round (policy-ordered pick).
     ready: VecDeque<Inflight>,
     outbox: VecDeque<Response>,
+    /// Ids currently held by a worker (admitting or running a round).
+    stepping: HashSet<u64>,
+    /// Cancellations requested for ids currently held by a worker; honored
+    /// as soon as the round in progress commits.
+    cancel_requested: HashSet<u64>,
+    /// Σ projected KV bytes of admitted, unfinished requests.
+    kv_projected_bytes: usize,
+    /// Id whose admission deferral was last counted, so the deferral
+    /// counter tracks episodes, not scheduler-loop passes over the same
+    /// blocked request.
+    last_deferred: Option<u64>,
 }
 
 /// Aggregated serving metrics.
 #[derive(Default)]
 pub struct Registry {
     pub completed: AtomicU64,
+    pub cancelled: AtomicU64,
     pub generated_tokens: AtomicU64,
     /// Draft/verify rounds executed across all requests (scheduler units).
     pub rounds: AtomicU64,
     pub queue_us_total: AtomicU64,
     pub decode_us_total: AtomicU64,
+    /// Admission deferral episodes: counted once per request blocked on the
+    /// KV watermark until the next admission succeeds (re-picking the same
+    /// blocked request across scheduler passes is one episode, not many).
+    pub admission_deferrals: AtomicU64,
+    /// High-water mark of Σ projected KV bytes across admitted requests.
+    pub kv_projected_peak: AtomicU64,
 }
 
 impl Registry {
     pub fn snapshot(&self) -> RegistrySnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
+        let cancelled = self.cancelled.load(Ordering::Relaxed);
+        let finished = completed + cancelled;
         RegistrySnapshot {
             completed,
+            cancelled,
             generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
-            mean_queue_ms: if completed == 0 {
+            admission_deferrals: self.admission_deferrals.load(Ordering::Relaxed),
+            kv_projected_peak_bytes: self.kv_projected_peak.load(Ordering::Relaxed),
+            mean_queue_ms: if finished == 0 {
                 0.0
             } else {
-                self.queue_us_total.load(Ordering::Relaxed) as f64 / 1000.0 / completed as f64
+                self.queue_us_total.load(Ordering::Relaxed) as f64 / 1000.0 / finished as f64
             },
-            mean_decode_ms: if completed == 0 {
+            mean_decode_ms: if finished == 0 {
                 0.0
             } else {
-                self.decode_us_total.load(Ordering::Relaxed) as f64 / 1000.0 / completed as f64
+                self.decode_us_total.load(Ordering::Relaxed) as f64 / 1000.0 / finished as f64
             },
         }
     }
@@ -116,69 +304,104 @@ impl Registry {
 #[derive(Clone, Copy, Debug)]
 pub struct RegistrySnapshot {
     pub completed: u64,
+    pub cancelled: u64,
     pub generated_tokens: u64,
     pub rounds: u64,
+    pub admission_deferrals: u64,
+    pub kv_projected_peak_bytes: u64,
     pub mean_queue_ms: f64,
     pub mean_decode_ms: f64,
 }
 
+/// State shared between the coordinator handle and its workers.
+struct Shared {
+    queues: Mutex<Queues>,
+    /// Signals work available (admission/rounds) and freed KV budget.
+    cv_in: Condvar,
+    /// Signals responses available in the outbox.
+    cv_out: Condvar,
+    registry: Registry,
+    stop: AtomicBool,
+    inflight: AtomicU64,
+    sched: SchedParams,
+}
+
 /// The coordinator: admission queue + round-scheduling decode worker pool.
 pub struct Coordinator {
-    queues: Arc<(Mutex<Queues>, Condvar, Condvar)>,
-    registry: Arc<Registry>,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
-    inflight: Arc<AtomicU64>,
 }
 
 impl Coordinator {
-    /// Start a worker pool. Each worker gets its own backend handle (the
-    /// PJRT handles are Send-but-not-Sync channel endpoints) and its own
-    /// engine instance; tasks migrate freely between workers round by
-    /// round.
+    /// Start a worker pool with the default round-robin scheduler.
     pub fn start(
         backends: Vec<Box<dyn Backend + Send>>,
         engine_id: EngineId,
         engine_cfg: EngineConfig,
     ) -> Coordinator {
-        let queues = Arc::new((Mutex::new(Queues::default()), Condvar::new(), Condvar::new()));
-        let registry = Arc::new(Registry::default());
-        let stop = Arc::new(AtomicBool::new(false));
-        let inflight = Arc::new(AtomicU64::new(0));
-        // Continuous-batch window: cap admissions so a request flood cannot
-        // open unbounded live sessions (each admission prefills a KV cache)
-        // while still letting arrivals join a running batch between rounds.
-        let max_ready = 16 * backends.len().max(1);
+        Self::start_with(backends, engine_id, engine_cfg, SchedulerConfig::default())
+    }
+
+    /// Start a worker pool under an explicit scheduling policy and KV
+    /// admission configuration. Each worker gets its own backend handle
+    /// (the PJRT handles are Send-but-not-Sync channel endpoints) and its
+    /// own engine instance; tasks migrate freely between workers round by
+    /// round.
+    pub fn start_with(
+        backends: Vec<Box<dyn Backend + Send>>,
+        engine_id: EngineId,
+        engine_cfg: EngineConfig,
+        sched_cfg: SchedulerConfig,
+    ) -> Coordinator {
+        // Speculation headroom for the KV projection: k_max branches of
+        // depth γ (App. G.3 token count) plus per-branch block rounding and
+        // tail CoW slack.
+        let k = engine_cfg.k_max.max(1);
+        let gamma = engine_cfg.gamma.max(1);
+        let branch_tokens = BlockCache::branch_tokens(k, gamma, 0).ceil() as usize;
+        let sched = SchedParams {
+            policy: sched_cfg.policy,
+            kv_watermark_bytes: sched_cfg.kv_watermark_bytes,
+            kv_bytes_per_token: sched_cfg
+                .kv_bytes_per_token
+                .unwrap_or_else(|| crate::metrics::kv_bytes_per_token(2, 12, 64)),
+            headroom_tokens: branch_tokens + k * BLOCK_TOKENS,
+            aging_rounds: sched_cfg.aging_rounds,
+            // Continuous-batch window: cap admissions so a request flood
+            // cannot open unbounded live sessions (each admission prefills
+            // a KV cache) while still letting arrivals join a running batch
+            // between rounds.
+            max_ready: 16 * backends.len().max(1),
+        };
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Queues::default()),
+            cv_in: Condvar::new(),
+            cv_out: Condvar::new(),
+            registry: Registry::default(),
+            stop: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            sched,
+        });
         let mut workers = Vec::new();
         for (wi, backend) in backends.into_iter().enumerate() {
-            let queues = Arc::clone(&queues);
-            let registry = Arc::clone(&registry);
-            let stop = Arc::clone(&stop);
-            let inflight = Arc::clone(&inflight);
+            let shared = Arc::clone(&shared);
             let cfg = engine_cfg.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("decode-worker-{wi}"))
                 .spawn(move || {
                     let engine: Box<dyn Engine> = engines::build(engine_id, cfg);
-                    worker_loop(backend, engine, queues, registry, stop, inflight, max_ready);
+                    worker_loop(backend, engine, shared);
                 })
                 .expect("spawn worker");
             workers.push(handle);
         }
-        Coordinator {
-            queues,
-            registry,
-            stop,
-            workers,
-            next_id: AtomicU64::new(0),
-            inflight,
-        }
+        Coordinator { shared, workers, next_id: AtomicU64::new(0) }
     }
 
     /// Enqueue a request; returns its id immediately.
     pub fn submit(&self, prompt: Vec<Token>, max_new_tokens: usize, seed: u64) -> u64 {
-        self.enqueue(prompt, max_new_tokens, seed, None)
+        self.submit_opts(prompt, max_new_tokens, seed, SubmitOpts::default())
     }
 
     /// Enqueue a request whose per-round token deltas are sent over
@@ -191,129 +414,344 @@ impl Coordinator {
         seed: u64,
         stream: Sender<StreamChunk>,
     ) -> u64 {
-        self.enqueue(prompt, max_new_tokens, seed, Some(stream))
+        self.submit_opts(
+            prompt,
+            max_new_tokens,
+            seed,
+            SubmitOpts { stream: Some(stream), ..Default::default() },
+        )
     }
 
-    fn enqueue(
+    /// Enqueue a request with explicit priority/deadline/streaming options.
+    pub fn submit_opts(
         &self,
         prompt: Vec<Token>,
         max_new_tokens: usize,
         seed: u64,
-        stream: Option<Sender<StreamChunk>>,
+        opts: SubmitOpts,
     ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (lock, cv_in, _) = &*self.queues;
-        let mut q = lock.lock().unwrap();
-        self.inflight.fetch_add(1, Ordering::SeqCst);
-        q.inbox.push_back((
-            Request { id, prompt, max_new_tokens, seed, stream },
-            Instant::now(),
-        ));
-        cv_in.notify_one();
+        let mut q = self.shared.queues.lock().unwrap();
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        q.inbox.push_back(Queued {
+            req: Request {
+                id,
+                prompt,
+                max_new_tokens,
+                seed,
+                priority: opts.priority,
+                deadline_ms: opts.deadline_ms,
+                stream: opts.stream,
+            },
+            at: Instant::now(),
+            waits: 0,
+        });
+        self.shared.cv_in.notify_one();
         id
+    }
+
+    /// Cancel a request mid-flight. Returns `true` if the request was found
+    /// live (queued, parked between rounds, or mid-round on a worker) and
+    /// will be retired as a [`ResponseStatus::Cancelled`] response carrying
+    /// its partial tokens; `false` if the id is unknown or the request has
+    /// already finished. A cancellation that races the final round loses
+    /// the race: the request completes normally.
+    pub fn cancel(&self, id: u64) -> bool {
+        let shared = &*self.shared;
+        let mut q = shared.queues.lock().unwrap();
+        // Still waiting for admission: retire without ever starting decode.
+        if let Some(pos) = q.inbox.iter().position(|e| e.req.id == id) {
+            let entry = q.inbox.remove(pos).expect("position just found");
+            drop(q);
+            if let Some(tx) = &entry.req.stream {
+                let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
+            }
+            let queue_ms = entry.at.elapsed().as_secs_f64() * 1000.0;
+            publish_response(
+                shared,
+                Response {
+                    id,
+                    tokens: Vec::new(),
+                    stats: DecodeStats::default(),
+                    status: ResponseStatus::Cancelled,
+                    deadline_met: entry.req.deadline_ms.map(|ms| queue_ms <= ms as f64),
+                    queue_ms,
+                    total_ms: queue_ms,
+                },
+                0,
+            );
+            return true;
+        }
+        // Parked in the ready queue between rounds: retire on the spot.
+        if let Some(pos) = q.ready.iter().position(|t| t.id == id) {
+            let t = q.ready.remove(pos).expect("position just found");
+            drop(q);
+            finish_inflight(t, true, shared);
+            return true;
+        }
+        // Mid-round on a worker: flag it; the worker retires the task as
+        // soon as the current round commits.
+        if q.stepping.contains(&id) {
+            q.cancel_requested.insert(id);
+            return true;
+        }
+        false
     }
 
     /// Block until any response is ready.
     pub fn collect(&self) -> Response {
-        let (lock, _, cv_out) = &*self.queues;
-        let mut q = lock.lock().unwrap();
+        let mut q = self.shared.queues.lock().unwrap();
         loop {
             if let Some(r) = q.outbox.pop_front() {
                 return r;
             }
-            q = cv_out.wait(q).unwrap();
+            q = self.shared.cv_out.wait(q).unwrap();
         }
     }
 
     /// Block until the response for `id` is ready (other responses stay
     /// queued for their own collectors).
     pub fn collect_id(&self, id: u64) -> Response {
-        let (lock, _, cv_out) = &*self.queues;
-        let mut q = lock.lock().unwrap();
+        let mut q = self.shared.queues.lock().unwrap();
         loop {
             if let Some(pos) = q.outbox.iter().position(|r| r.id == id) {
                 return q.outbox.remove(pos).expect("position just found");
             }
-            q = cv_out.wait(q).unwrap();
+            q = self.shared.cv_out.wait(q).unwrap();
         }
     }
 
     /// Non-blocking poll.
     pub fn try_collect(&self) -> Option<Response> {
-        let (lock, _, _) = &*self.queues;
-        lock.lock().unwrap().outbox.pop_front()
+        self.shared.queues.lock().unwrap().outbox.pop_front()
     }
 
     pub fn pending(&self) -> u64 {
-        self.inflight.load(Ordering::SeqCst)
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Σ projected KV bytes of admitted, unfinished requests — the quantity
+    /// the admission watermark bounds. Returns to 0 when the pool drains.
+    pub fn kv_projected_in_use(&self) -> usize {
+        self.shared.queues.lock().unwrap().kv_projected_bytes
     }
 
     pub fn registry(&self) -> RegistrySnapshot {
-        self.registry.snapshot()
+        self.shared.registry.snapshot()
     }
 
-    /// Stop all workers. Queued and in-flight requests drain to completion
-    /// first; any responses not yet collected are returned.
+    /// Stop all workers. Requests still waiting in the admission queue and
+    /// in-flight tasks all drain to completion first — no submitted request
+    /// is lost, including those deferred by the KV watermark; any responses
+    /// not yet collected are returned.
     pub fn shutdown(mut self) -> Vec<Response> {
-        let (lock, cv_in, _) = &*self.queues;
         {
             // Store + notify under the queues lock: a worker holds this
             // lock from its stop-check until it parks on the condvar, so
             // without the lock the notify could land in that window and be
             // lost, deadlocking join() below.
-            let _q = lock.lock().unwrap();
-            self.stop.store(true, Ordering::SeqCst);
-            cv_in.notify_all();
+            let _q = self.shared.queues.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+            self.shared.cv_in.notify_all();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let mut q = lock.lock().unwrap();
+        let mut q = self.shared.queues.lock().unwrap();
         q.outbox.drain(..).collect()
     }
 }
 
-fn worker_loop(
-    backend: Box<dyn Backend + Send>,
-    engine: Box<dyn Engine>,
-    queues: Arc<(Mutex<Queues>, Condvar, Condvar)>,
-    registry: Arc<Registry>,
-    stop: Arc<AtomicBool>,
-    inflight: Arc<AtomicU64>,
-    max_ready: usize,
-) {
-    let (lock, cv_in, cv_out) = &*queues;
+/// Projected KV bytes one request may pin: prompt + full budget + branch
+/// speculation headroom, rounded up to whole cache blocks.
+fn projected_kv_bytes(prompt_len: usize, max_new_tokens: usize, p: &SchedParams) -> usize {
+    let tokens = prompt_len + max_new_tokens + p.headroom_tokens;
+    tokens.div_ceil(BLOCK_TOKENS) * BLOCK_TOKENS * p.kv_bytes_per_token
+}
+
+fn abs_deadline(at: Instant, deadline_ms: Option<u64>) -> Option<Instant> {
+    deadline_ms.and_then(|ms| at.checked_add(Duration::from_millis(ms)))
+}
+
+/// `true` if deadline `a` orders strictly before `b` (None = never due).
+fn deadline_before(a: Option<Instant>, b: Option<Instant>) -> bool {
+    match (a, b) {
+        (Some(x), Some(y)) => x < y,
+        (Some(_), None) => true,
+        _ => false,
+    }
+}
+
+/// Index of the next request to admit from the inbox under `policy`.
+/// Priority ages waiting entries exactly like the ready queue does, so a
+/// low-priority request's admission wait is bounded even under a sustained
+/// stream of higher-priority arrivals.
+fn pick_admission_index(
+    inbox: &VecDeque<Queued>,
+    policy: SchedulePolicy,
+    aging_rounds: u64,
+) -> Option<usize> {
+    if inbox.is_empty() {
+        return None;
+    }
+    match policy {
+        SchedulePolicy::RoundRobin => Some(0),
+        SchedulePolicy::Priority => {
+            let eff = |e: &Queued| -> i64 {
+                let aged = if aging_rounds > 0 { (e.waits / aging_rounds) as i64 } else { 0 };
+                e.req.priority as i64 + aged
+            };
+            let mut best = 0usize;
+            let mut best_eff = eff(&inbox[0]);
+            for (i, e) in inbox.iter().enumerate().skip(1) {
+                let v = eff(e);
+                if v > best_eff {
+                    best = i;
+                    best_eff = v;
+                }
+            }
+            Some(best)
+        }
+        SchedulePolicy::EarliestDeadline => {
+            let mut best = 0usize;
+            let mut best_dl = abs_deadline(inbox[0].at, inbox[0].req.deadline_ms);
+            for (i, e) in inbox.iter().enumerate().skip(1) {
+                let dl = abs_deadline(e.at, e.req.deadline_ms);
+                if deadline_before(dl, best_dl) {
+                    best = i;
+                    best_dl = dl;
+                }
+            }
+            Some(best)
+        }
+    }
+}
+
+/// Index of the next ready task to run a round for under `policy`.
+fn pick_ready_index(
+    ready: &VecDeque<Inflight>,
+    policy: SchedulePolicy,
+    aging_rounds: u64,
+) -> Option<usize> {
+    if ready.is_empty() {
+        return None;
+    }
+    match policy {
+        SchedulePolicy::RoundRobin => Some(0),
+        SchedulePolicy::Priority => {
+            let eff = |t: &Inflight| -> i64 {
+                let aged = if aging_rounds > 0 { (t.waits / aging_rounds) as i64 } else { 0 };
+                t.priority as i64 + aged
+            };
+            let mut best = 0usize;
+            let mut best_eff = eff(&ready[0]);
+            for (i, t) in ready.iter().enumerate().skip(1) {
+                let e = eff(t);
+                if e > best_eff {
+                    best = i;
+                    best_eff = e;
+                }
+            }
+            Some(best)
+        }
+        SchedulePolicy::EarliestDeadline => {
+            let mut best = 0usize;
+            let mut best_dl = ready[0].deadline_at;
+            for (i, t) in ready.iter().enumerate().skip(1) {
+                if deadline_before(t.deadline_at, best_dl) {
+                    best = i;
+                    best_dl = t.deadline_at;
+                }
+            }
+            Some(best)
+        }
+    }
+}
+
+fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared: Arc<Shared>) {
+    let sched = shared.sched;
     // One scheduling decision: admit a new request or run one round.
     enum Work {
-        Admit(Request, Instant),
+        Admit(Request, Instant, usize),
         Round(Inflight),
     }
     loop {
         let work = {
-            let mut q = lock.lock().unwrap();
+            let mut q = shared.queues.lock().unwrap();
             loop {
                 // Admission first — new arrivals join the running batch
                 // before the next round of existing work — but only while
-                // the batch window has room, so a flood of arrivals can
-                // neither starve in-flight decoding nor open unbounded
-                // prefilled sessions.
-                if q.ready.len() < max_ready {
-                    if let Some((req, at)) = q.inbox.pop_front() {
-                        break Work::Admit(req, at);
+                // the batch window has room and the KV watermark admits the
+                // projected footprint, so a flood of arrivals can neither
+                // starve in-flight decoding nor oversubscribe the cache.
+                if q.ready.len() < sched.max_ready {
+                    let pick = pick_admission_index(&q.inbox, sched.policy, sched.aging_rounds);
+                    if let Some(idx) = pick {
+                        let proj = projected_kv_bytes(
+                            q.inbox[idx].req.prompt.len(),
+                            q.inbox[idx].req.max_new_tokens,
+                            &sched,
+                        );
+                        let fits = match sched.kv_watermark_bytes {
+                            None => true,
+                            // A request too big for the watermark on its own
+                            // is admitted alone rather than dropped.
+                            Some(w) => {
+                                q.kv_projected_bytes + proj <= w || q.kv_projected_bytes == 0
+                            }
+                        };
+                        if fits {
+                            if sched.policy == SchedulePolicy::Priority {
+                                for (j, e) in q.inbox.iter_mut().enumerate() {
+                                    if j != idx {
+                                        e.waits += 1;
+                                    }
+                                }
+                            }
+                            let entry = q.inbox.remove(idx).expect("index in range");
+                            q.kv_projected_bytes += proj;
+                            q.last_deferred = None;
+                            shared
+                                .registry
+                                .kv_projected_peak
+                                .fetch_max(q.kv_projected_bytes as u64, Ordering::Relaxed);
+                            q.stepping.insert(entry.req.id);
+                            break Work::Admit(entry.req, entry.at, proj);
+                        }
+                        // Count deferral episodes: re-picking the same
+                        // blocked request on later loop passes is one
+                        // deferral, not many.
+                        let id = q.inbox[idx].req.id;
+                        if q.last_deferred != Some(id) {
+                            q.last_deferred = Some(id);
+                            shared.registry.admission_deferrals.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
-                if let Some(t) = q.ready.pop_front() {
+                if let Some(i) = pick_ready_index(&q.ready, sched.policy, sched.aging_rounds) {
+                    if sched.policy == SchedulePolicy::Priority {
+                        for (j, t) in q.ready.iter_mut().enumerate() {
+                            if j != i {
+                                t.waits += 1;
+                            }
+                        }
+                    }
+                    let t = q.ready.remove(i).expect("index in range");
+                    q.stepping.insert(t.id);
                     break Work::Round(t);
                 }
-                if stop.load(Ordering::SeqCst) {
+                // Drain before exit: a stopped coordinator still owes a
+                // response to every request in the admission queue.
+                if shared.stop.load(Ordering::SeqCst) && q.inbox.is_empty() {
                     return;
                 }
-                q = cv_in.wait(q).unwrap();
+                q = shared.cv_in.wait(q).unwrap();
             }
         };
         let t = match work {
-            Work::Admit(req, enqueued_at) => {
+            Work::Admit(req, enqueued_at, kv_projected) => {
                 let admitted_at = Instant::now();
+                let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
                 let session = backend.new_session(req.seed);
                 let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
                 let task =
@@ -325,13 +763,18 @@ fn worker_loop(
                     admitted_at,
                     decode_us: admitted_at.elapsed().as_micros() as u64,
                     stream: req.stream,
+                    priority: req.priority,
+                    deadline_ms: req.deadline_ms,
+                    deadline_at,
+                    waits: 0,
+                    kv_projected,
                 }
             }
             Work::Round(mut t) => {
                 let t0 = Instant::now();
                 let out = t.task.step();
                 t.decode_us += t0.elapsed().as_micros() as u64;
-                registry.rounds.fetch_add(1, Ordering::Relaxed);
+                shared.registry.rounds.fetch_add(1, Ordering::Relaxed);
                 if let Some(tx) = &t.stream {
                     // A dropped receiver just disables streaming.
                     let _ = tx.send(StreamChunk {
@@ -343,63 +786,100 @@ fn worker_loop(
                 t
             }
         };
-        if t.task.is_done() {
-            complete(t, &registry, lock, cv_out, &inflight);
+        let mut q = shared.queues.lock().unwrap();
+        q.stepping.remove(&t.id);
+        let cancel = q.cancel_requested.remove(&t.id) && !t.task.is_done();
+        if cancel || t.task.is_done() {
+            drop(q);
+            finish_inflight(t, cancel, &shared);
         } else {
-            let mut q = lock.lock().unwrap();
             q.ready.push_back(t);
             drop(q);
-            cv_in.notify_one();
+            shared.cv_in.notify_one();
         }
     }
 }
 
-/// Finish a task: build the response, update the registry, publish.
-fn complete(
-    t: Inflight,
-    registry: &Registry,
-    lock: &Mutex<Queues>,
-    cv_out: &Condvar,
-    inflight: &AtomicU64,
-) {
-    let queue_ms = t.admitted_at.duration_since(t.enqueued_at).as_secs_f64() * 1000.0;
-    let total_ms = t.enqueued_at.elapsed().as_secs_f64() * 1000.0;
-    // A zero-budget request never ran a round; flush the done marker so
-    // streaming consumers terminate.
-    if let Some(tx) = &t.stream {
-        if t.task.budget() == 0 {
-            let _ = tx.send(StreamChunk { id: t.id, tokens: Vec::new(), done: true });
+/// Retire a task — completed or cancelled: build the response (partial
+/// tokens on cancel), release the KV projection, update the registry,
+/// publish, and wake both collectors and deferred admissions.
+fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
+    let Inflight {
+        id,
+        task,
+        enqueued_at,
+        admitted_at,
+        decode_us,
+        stream,
+        deadline_ms,
+        kv_projected,
+        ..
+    } = t;
+    let queue_ms = admitted_at.duration_since(enqueued_at).as_secs_f64() * 1000.0;
+    let total_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
+    // Flush the stream terminator for requests that never got one from a
+    // round: zero-budget completions and cancellations between rounds.
+    if let Some(tx) = &stream {
+        if cancelled || task.budget() == 0 {
+            let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
         }
     }
-    let out = t.task.finish();
-    // The step-wise engines honor the budget exactly, so the coordinator
-    // aggregate and the per-request stats must agree — no truncation here.
-    assert_eq!(
-        out.tokens.len() as u64,
-        out.stats.generated_tokens,
-        "response length and DecodeStats.generated_tokens disagree"
+    // `cancel` releases the task's KV blocks back to the cache and returns
+    // the partial output; `finish` asserts the budget was met exactly.
+    let out = if cancelled { task.cancel() } else { task.finish() };
+    if !cancelled {
+        // The step-wise engines honor the budget exactly, so the
+        // coordinator aggregate and the per-request stats must agree — no
+        // truncation here.
+        assert_eq!(
+            out.tokens.len() as u64,
+            out.stats.generated_tokens,
+            "response length and DecodeStats.generated_tokens disagree"
+        );
+    }
+    shared.registry.decode_us_total.fetch_add(decode_us, Ordering::Relaxed);
+    publish_response(
+        shared,
+        Response {
+            id,
+            tokens: out.tokens,
+            stats: out.stats,
+            status: if cancelled { ResponseStatus::Cancelled } else { ResponseStatus::Completed },
+            deadline_met: deadline_ms.map(|ms| total_ms <= ms as f64),
+            queue_ms,
+            total_ms,
+        },
+        kv_projected,
     );
-    registry.completed.fetch_add(1, Ordering::Relaxed);
-    registry
-        .generated_tokens
-        .fetch_add(out.stats.generated_tokens, Ordering::Relaxed);
-    registry
-        .queue_us_total
-        .fetch_add((queue_ms * 1000.0) as u64, Ordering::Relaxed);
-    registry.decode_us_total.fetch_add(t.decode_us, Ordering::Relaxed);
+}
 
-    let resp = Response {
-        id: t.id,
-        tokens: out.tokens,
-        stats: out.stats,
-        queue_ms,
-        total_ms,
-    };
-    let mut q = lock.lock().unwrap();
+/// Publish a retired request's [`Response`]: count it in the registry
+/// (cancelled requests count their partial tokens, keeping the registry
+/// total equal to the sum of per-response `DecodeStats`), release its KV
+/// projection, push it to the outbox, and wake collectors plus any
+/// admission deferred on the freed KV budget. The queues lock must NOT be
+/// held by the caller.
+fn publish_response(shared: &Shared, resp: Response, kv_projected: usize) {
+    if resp.is_cancelled() {
+        shared.registry.cancelled.fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared.registry.completed.fetch_add(1, Ordering::Relaxed);
+    }
+    shared
+        .registry
+        .generated_tokens
+        .fetch_add(resp.stats.generated_tokens, Ordering::Relaxed);
+    shared
+        .registry
+        .queue_us_total
+        .fetch_add((resp.queue_ms * 1000.0) as u64, Ordering::Relaxed);
+    let mut q = shared.queues.lock().unwrap();
+    q.kv_projected_bytes = q.kv_projected_bytes.saturating_sub(kv_projected);
     q.outbox.push_back(resp);
     drop(q);
-    inflight.fetch_sub(1, Ordering::SeqCst);
-    cv_out.notify_all();
+    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    shared.cv_out.notify_all();
+    shared.cv_in.notify_all();
 }
 
 #[cfg(test)]
@@ -435,11 +915,13 @@ mod tests {
         for _ in 0..n {
             let r = coord.collect();
             assert_eq!(r.tokens.len(), 40);
+            assert_eq!(r.status, ResponseStatus::Completed);
             assert!(seen.insert(r.id), "duplicate response {}", r.id);
         }
         assert_eq!(coord.pending(), 0);
         let snap = coord.registry();
         assert_eq!(snap.completed, n);
+        assert_eq!(snap.cancelled, 0);
         assert_eq!(snap.generated_tokens, n * 40);
         assert!(snap.rounds >= n, "at least one round per request");
         coord.shutdown();
@@ -580,5 +1062,60 @@ mod tests {
         assert_eq!(streamed, resp.tokens, "chunks must concatenate to response");
         assert_eq!(resp.tokens.len(), 33);
         coord.shutdown();
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            SchedulePolicy::RoundRobin,
+            SchedulePolicy::Priority,
+            SchedulePolicy::EarliestDeadline,
+        ] {
+            assert_eq!(SchedulePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedulePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn cancel_unknown_id_is_false() {
+        let coord = Coordinator::start(
+            sim_backends(1),
+            EngineId::Autoregressive,
+            EngineConfig::default(),
+        );
+        assert!(!coord.cancel(1234));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancel_after_completion_is_false() {
+        let coord = Coordinator::start(
+            sim_backends(1),
+            EngineId::Autoregressive,
+            EngineConfig::default(),
+        );
+        let id = coord.submit(vec![1, 2, 3], 4, 0);
+        let r = coord.collect_id(id);
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert!(!coord.cancel(id), "finished request cannot be cancelled");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn projection_is_block_aligned_and_monotone() {
+        let p = SchedParams {
+            policy: SchedulePolicy::RoundRobin,
+            kv_watermark_bytes: None,
+            kv_bytes_per_token: 100,
+            headroom_tokens: 10,
+            aging_rounds: 0,
+            max_ready: 16,
+        };
+        let a = projected_kv_bytes(3, 40, &p);
+        let b = projected_kv_bytes(3, 400, &p);
+        assert!(b > a);
+        assert_eq!(a % (BLOCK_TOKENS * 100), 0, "whole blocks");
+        // 3 + 40 + 10 = 53 tokens -> 4 blocks of 16.
+        assert_eq!(a, 4 * BLOCK_TOKENS * 100);
     }
 }

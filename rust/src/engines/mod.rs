@@ -188,6 +188,23 @@ impl DecodeTask {
         );
         GenerateOut { tokens, stats }
     }
+
+    /// Cancel the task between rounds: release every KV block the session
+    /// still holds back to the cache, then return the **partial** output —
+    /// the tokens committed so far and their real stats. The partial output
+    /// obeys the same contract as [`DecodeTask::finish`]:
+    /// `tokens.len() == stats.generated_tokens`.
+    pub fn cancel(mut self) -> GenerateOut {
+        self.session.release_kv();
+        let stats = self.session.take_stats();
+        let tokens = self.session.committed()[self.prompt_len..].to_vec();
+        debug_assert_eq!(
+            tokens.len() as u64,
+            stats.generated_tokens,
+            "partial tokens and DecodeStats.generated_tokens disagree on cancel"
+        );
+        GenerateOut { tokens, stats }
+    }
 }
 
 /// Construct an engine by id.
@@ -287,6 +304,25 @@ mod tests {
         let out = task.finish();
         assert!(out.tokens.is_empty());
         assert_eq!(out.stats.generated_tokens, 0);
+    }
+
+    #[test]
+    fn cancelled_task_returns_partial_tokens_with_consistent_stats() {
+        let backend = sim_backend();
+        let engine = build(EngineId::SpecBranch, EngineConfig::default());
+        let session = backend.new_session(11);
+        let mut task =
+            DecodeTask::new(engine.as_ref(), session, &[1, 2, 3], 500, Pcg32::new(2));
+        let mut streamed = Vec::new();
+        for _ in 0..3 {
+            streamed.extend(task.step().new_tokens);
+        }
+        assert!(!task.is_done(), "budget 500 cannot finish in 3 rounds");
+        let produced = task.produced();
+        assert_eq!(produced, streamed.len());
+        let out = task.cancel();
+        assert_eq!(out.tokens, streamed, "cancel returns exactly the partial output");
+        assert_eq!(out.stats.generated_tokens as usize, produced);
     }
 
     #[test]

@@ -315,6 +315,29 @@ mod tests {
     }
 
     #[test]
+    fn release_after_fork_returns_to_baseline() {
+        // Cancellation shape: a main chain with a forked speculation branch
+        // mid-decode; releasing both (what Session::release_kv does) must
+        // return the cache to its pre-request baseline with invariants
+        // intact at every step.
+        let mut c = BlockCache::new(512);
+        let baseline = c.allocated_blocks();
+        let s = c.create();
+        c.append(s, 45); // prompt + some committed tokens
+        let f = c.fork(s);
+        c.append(f, 9); // speculative branch draft (CoWs the shared tail)
+        c.append(s, 3);
+        c.check_invariants().unwrap();
+        assert!(c.allocated_blocks() > baseline);
+        c.release(f);
+        c.check_invariants().unwrap();
+        c.release(s);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), baseline, "all blocks returned");
+        assert_eq!(c.allocated_bytes(), 0);
+    }
+
+    #[test]
     fn truncate_rolls_back() {
         let mut c = BlockCache::new(1024);
         let s = c.create();

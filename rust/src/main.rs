@@ -15,14 +15,15 @@
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
-use specbranch::bench_harness::{experiments, Scale};
-use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
-use specbranch::coordinator::Coordinator;
+use specbranch::bench_harness::{experiments, Runner, Scale};
+use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task, TaskId};
+use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
 use specbranch::metrics;
 use specbranch::server::Server;
 use specbranch::token::Tokenizer;
 use specbranch::util::cli::Args;
+use specbranch::util::json;
 use specbranch::util::prng::Pcg32;
 
 fn main() {
@@ -32,6 +33,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "bench-smoke" => cmd_bench_smoke(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -45,16 +47,22 @@ fn print_help() {
     println!(
         "specbranch — speculative decoding via hybrid drafting and \
          rollback-aware branch parallelism\n\n\
-         USAGE: specbranch <generate|serve|bench|info> [flags]\n\n\
+         USAGE: specbranch <generate|serve|bench|bench-smoke|info> [flags]\n\n\
          generate flags: --prompt <text> --engine <name> --backend <pjrt|sim>\n\
                          --pair <llama|vicuna|deepseek|llama3.1> --task <name>\n\
                          --max-new <n> --gamma <n> --epsilon <f> --seed <n>\n\
                          [--stream]  print tokens per decode round\n\
          serve flags:    --addr <host:port> --workers <n> --engine <name>\n\
                          --backend <pjrt|sim> [--max-conns <n>]\n\
+                         --policy <rr|priority|edf>  scheduling policy\n\
+                         --kv-watermark-mb <n>  KV admission watermark (0=off)\n\
+                         --aging <rounds>  priority aging rate (0=off)\n\
          bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
                                 table5|table6|fig7|fig10|fig19|table12|all>\n\
-                         [--fast]"
+                         [--fast]\n\
+         bench-smoke:    --out <file> (default BENCH_ci.json)\n\
+                         --baseline <file>  fail on >tolerance regression\n\
+                         --tolerance <f>    (default 0.15)"
     );
 }
 
@@ -175,7 +183,25 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
-    let coord = Coordinator::start(backends, engine_id, engine_cfg(args));
+    let policy = match SchedulePolicy::parse(args.get_or("policy", "rr")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown --policy (use rr|priority|edf)");
+            return 2;
+        }
+    };
+    let watermark_mb = args.get_usize("kv-watermark-mb", 0);
+    let sched = SchedulerConfig {
+        policy,
+        kv_watermark_bytes: if watermark_mb == 0 {
+            None
+        } else {
+            Some(watermark_mb * 1024 * 1024)
+        },
+        kv_bytes_per_token: None,
+        aging_rounds: args.get_u64("aging", 8),
+    };
+    let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched);
     let addr = args.get_or("addr", "127.0.0.1:7799");
     let server = match Server::bind(addr, coord) {
         Ok(s) => s,
@@ -184,7 +210,12 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    println!("serving on {} (engine={})", server.local_addr(), engine_id.name());
+    println!(
+        "serving on {} (engine={} policy={})",
+        server.local_addr(),
+        engine_id.name(),
+        policy.name()
+    );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
     0
@@ -220,6 +251,114 @@ fn cmd_bench(args: &Args) -> i32 {
         run(exp);
     }
     0
+}
+
+/// CI throughput gate: run a small fixed sim workload, write the measured
+/// virtual-clock tokens/sec per engine as JSON, and compare against a
+/// committed baseline — exit 1 on a regression beyond `--tolerance`.
+///
+/// The sim backend's virtual clock makes the numbers machine-independent
+/// and bit-deterministic, so a tight tolerance is meaningful in CI. A
+/// baseline file carrying `"bootstrap": true` disables the gate (used to
+/// arm the pipeline before the first pinned numbers; replace it with a real
+/// `BENCH_ci.json` to arm the gate).
+fn cmd_bench_smoke(args: &Args) -> i32 {
+    let out_path = args.get_or("out", "BENCH_ci.json");
+    let tolerance = args.get_f64("tolerance", 0.15);
+    // Fixed small workload — must stay stable or the baseline is invalid.
+    let scale = Scale { requests: 3, max_new: 96 };
+    let pair = PairId::Vicuna68m13b;
+    let task = TaskId::MtBench;
+    let mut runner = Runner::new(scale);
+    let mut engines_json: Vec<(&str, json::Value)> = Vec::new();
+    let mut measured: Vec<(&'static str, f64)> = Vec::new();
+    for engine in [EngineId::Sps, EngineId::SpecBranch] {
+        let cfg = runner.engine_cfg(pair);
+        let e = runner.evaluate(pair, task, engine, &cfg);
+        println!(
+            "bench-smoke: {:<12} {:>8.1} tok/s  speedup {:.2}x  M {:.2}",
+            engine.name(),
+            e.tokens_per_sec,
+            e.speedup,
+            e.mean_accepted()
+        );
+        measured.push((engine.name(), e.tokens_per_sec));
+        engines_json.push((
+            engine.name(),
+            json::obj(vec![
+                ("tokens_per_sec", json::num(e.tokens_per_sec)),
+                ("speedup", json::num(e.speedup)),
+                ("mean_accepted", json::num(e.mean_accepted())),
+                ("rollback_rate", json::num(e.rollback_rate())),
+            ]),
+        ));
+    }
+    let report = json::obj(vec![
+        (
+            "workload",
+            json::obj(vec![
+                ("pair", json::s(ModelPair::get(pair).name)),
+                ("task", json::s(Task::get(task).name)),
+                ("requests", json::num(scale.requests as f64)),
+                ("max_new", json::num(scale.max_new as f64)),
+            ]),
+        ),
+        ("engines", json::obj(engines_json)),
+    ]);
+    if let Err(e) = std::fs::write(out_path, report.to_string_pretty() + "\n") {
+        eprintln!("bench-smoke: cannot write {out_path}: {e}");
+        return 2;
+    }
+    println!("bench-smoke: report written to {out_path}");
+
+    let Some(baseline_path) = args.get("baseline") else {
+        return 0;
+    };
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench-smoke: cannot read baseline {baseline_path}: {e}");
+            return 2;
+        }
+    };
+    let base = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench-smoke: bad baseline json: {e}");
+            return 2;
+        }
+    };
+    if matches!(base.get("bootstrap"), Some(json::Value::Bool(true))) {
+        println!(
+            "bench-smoke: baseline is bootstrap-only — gate disarmed; \
+             replace {baseline_path} with a measured {out_path} to arm it"
+        );
+        return 0;
+    }
+    let mut failed = false;
+    for (name, tps) in &measured {
+        let key = format!("engines.{name}.tokens_per_sec");
+        let Some(b) = base.get(&key).and_then(|v| v.as_f64()) else {
+            eprintln!("bench-smoke: baseline missing {key}; skipping");
+            continue;
+        };
+        let floor = b * (1.0 - tolerance);
+        if *tps < floor {
+            eprintln!(
+                "bench-smoke: REGRESSION {name}: {tps:.1} tok/s < floor {floor:.1} \
+                 (baseline {b:.1}, tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+            failed = true;
+        } else {
+            println!("bench-smoke: {name} ok ({tps:.1} >= floor {floor:.1})");
+        }
+    }
+    if failed {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_info() -> i32 {

@@ -141,9 +141,11 @@ mod tests {
 
     #[test]
     fn rollback_rate_basics() {
-        let mut s = DecodeStats::default();
-        s.proposed_tokens = 100;
-        s.rollback_tokens = 25;
+        let s = DecodeStats {
+            proposed_tokens: 100,
+            rollback_tokens: 25,
+            ..Default::default()
+        };
         assert!((s.rollback_rate() - 0.25).abs() < 1e-12);
         assert_eq!(DecodeStats::default().rollback_rate(), 0.0);
     }
@@ -176,9 +178,11 @@ mod tests {
     #[test]
     fn energy_scales_with_busy_time() {
         let pair = ModelPair::get(PairId::Vicuna68m13b);
-        let mut s = DecodeStats::default();
-        s.draft_busy_ms = 1000.0;
-        s.target_busy_ms = 2000.0;
+        let s = DecodeStats {
+            draft_busy_ms: 1000.0,
+            target_busy_ms: 2000.0,
+            ..Default::default()
+        };
         let e = energy_kj(&s, &pair);
         let expect = (70.0 * 1.0 + 250.0 * 2.0) / 1000.0;
         assert!((e - expect).abs() < 1e-9);

@@ -50,10 +50,12 @@ mod tests {
 
     #[test]
     fn occupancy_fracs() {
-        let mut s = DecodeStats::default();
-        s.elapsed_ms = 100.0;
-        s.draft_busy_ms = 40.0;
-        s.target_busy_ms = 90.0;
+        let s = DecodeStats {
+            elapsed_ms: 100.0,
+            draft_busy_ms: 40.0,
+            target_busy_ms: 90.0,
+            ..Default::default()
+        };
         let o = Occupancy::from_stats(&s);
         assert!((o.draft_frac - 0.4).abs() < 1e-12);
         assert!((o.target_frac - 0.9).abs() < 1e-12);

@@ -1,13 +1,21 @@
 //! Line-protocol TCP server + client over the coordinator.
 //!
 //! Protocol (one line per message, UTF-8):
-//!   client → `GEN <max_new_tokens> <prompt text…>`
+//!   client → `GEN <max_new_tokens> [pri=<i32>] [deadline=<ms>] <prompt…>`
 //!   server → `OK <id> <completion text>` then `STATS <id> <json>`
-//!   client → `GENS <max_new_tokens> <prompt text…>`   (streaming)
+//!   client → `GENS <max_new_tokens> [pri=<i32>] [deadline=<ms>] <prompt…>`
 //!   server → `PART <id> <text chunk>` per decode round, then
 //!            `OK <id> <completion text>` and `STATS <id> <json>`
+//!   client → `CANCEL <id>` ; server → `CANCELLED <id> <ok|miss>`
 //!   client → `METRICS` ; server → `METRICS <json>`
 //!   client → `QUIT`
+//!
+//! `pri=` orders requests under the coordinator's priority policy;
+//! `deadline=` sets the EDF deadline (ms from submission). Cancellation
+//! targets a request in flight on *another* connection (GEN replies are
+//! synchronous per connection); the cancelled request still receives its
+//! `OK` line carrying the partial completion, with `"cancelled": true` in
+//! its STATS json.
 //!
 //! Text is tokenized with the 64-symbol [`crate::token::Tokenizer`] (the
 //! tiny PJRT pair's alphabet). The server holds the coordinator; each
@@ -21,7 +29,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, SubmitOpts};
 use crate::token::Tokenizer;
 use crate::util::json;
 
@@ -87,18 +95,33 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             let m = coord.registry();
             let v = json::obj(vec![
                 ("completed", json::num(m.completed as f64)),
+                ("cancelled", json::num(m.cancelled as f64)),
                 ("generated_tokens", json::num(m.generated_tokens as f64)),
                 ("rounds", json::num(m.rounds as f64)),
+                ("admission_deferrals", json::num(m.admission_deferrals as f64)),
+                (
+                    "kv_projected_peak_bytes",
+                    json::num(m.kv_projected_peak_bytes as f64),
+                ),
                 ("mean_queue_ms", json::num(m.mean_queue_ms)),
                 ("mean_decode_ms", json::num(m.mean_decode_ms)),
             ]);
             writeln!(out, "METRICS {v}")?;
             continue;
         }
+        if let Some(rest) = line.strip_prefix("CANCEL ") {
+            let Ok(id) = rest.trim().parse::<u64>() else {
+                writeln!(out, "ERR bad cancel id")?;
+                continue;
+            };
+            let hit = coord.cancel(id);
+            writeln!(out, "CANCELLED {} {}", id, if hit { "ok" } else { "miss" })?;
+            continue;
+        }
         let streaming = line.starts_with("GENS ");
         if let Some(rest) = line.strip_prefix("GEN ").or_else(|| line.strip_prefix("GENS ")) {
             // Malformed requests get an ERR reply, not a disconnect.
-            let Some((max_new, prompt_text)) = rest.split_once(' ') else {
+            let Some((max_new, mut rest)) = rest.split_once(' ') else {
                 writeln!(out, "ERR GEN needs '<max_new> <prompt>'")?;
                 continue;
             };
@@ -106,7 +129,27 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 writeln!(out, "ERR bad max_new")?;
                 continue;
             };
-            let prompt = tok.encode(prompt_text);
+            // Optional scheduling options between max_new and the prompt.
+            // A word that looks like an option but does not parse as one is
+            // treated as the start of the prompt, so arbitrary prompt text
+            // keeps working (only a numeric `pri=<i32>`/`deadline=<u64>`
+            // first word is claimed as an option).
+            let mut priority = 0i32;
+            let mut deadline_ms: Option<u64> = None;
+            while let Some((word, tail)) = rest.split_once(' ') {
+                if let Some(p) = word.strip_prefix("pri=").and_then(|v| v.parse::<i32>().ok()) {
+                    priority = p;
+                    rest = tail;
+                } else if let Some(ms) =
+                    word.strip_prefix("deadline=").and_then(|v| v.parse::<u64>().ok())
+                {
+                    deadline_ms = Some(ms);
+                    rest = tail;
+                } else {
+                    break;
+                }
+            }
+            let prompt = tok.encode(rest);
             if prompt.is_empty() {
                 writeln!(out, "ERR empty prompt")?;
                 continue;
@@ -114,7 +157,12 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             let resp = if streaming {
                 // Forward each round's committed tokens as it lands.
                 let (tx, rx) = std::sync::mpsc::channel();
-                let id = coord.submit_streaming(prompt, max_new, 42, tx);
+                let id = coord.submit_opts(
+                    prompt,
+                    max_new,
+                    42,
+                    SubmitOpts { priority, deadline_ms, stream: Some(tx) },
+                );
                 for chunk in rx {
                     if !chunk.tokens.is_empty() {
                         let part =
@@ -127,7 +175,12 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 }
                 coord.collect_id(id)
             } else {
-                let id = coord.submit(prompt, max_new, 42);
+                let id = coord.submit_opts(
+                    prompt,
+                    max_new,
+                    42,
+                    SubmitOpts { priority, deadline_ms, stream: None },
+                );
                 coord.collect_id(id)
             };
             let text = tok.decode(&resp.tokens).replace('\n', " ").replace('\t', " ");
@@ -138,6 +191,11 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 ("mean_accepted", json::num(resp.stats.mean_accepted())),
                 ("rollback_rate", json::num(resp.stats.rollback_rate())),
                 ("tokens_per_sec", json::num(resp.stats.tokens_per_sec())),
+                ("cancelled", json::Value::Bool(resp.is_cancelled())),
+                (
+                    "deadline_met",
+                    resp.deadline_met.map(json::Value::Bool).unwrap_or(json::Value::Null),
+                ),
                 ("queue_ms", json::num(resp.queue_ms)),
                 ("total_ms", json::num(resp.total_ms)),
             ]);
@@ -178,6 +236,35 @@ impl Client {
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<GenReply> {
         writeln!(self.writer, "GEN {max_new} {prompt}")?;
         self.read_reply().map(|(reply, _)| reply)
+    }
+
+    /// Generation with scheduling options: a priority (larger = more
+    /// urgent) and/or a deadline in ms from submission.
+    pub fn generate_opts(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        priority: i32,
+        deadline_ms: Option<u64>,
+    ) -> Result<GenReply> {
+        let mut opts = format!("pri={priority}");
+        if let Some(ms) = deadline_ms {
+            opts.push_str(&format!(" deadline={ms}"));
+        }
+        writeln!(self.writer, "GEN {max_new} {opts} {prompt}")?;
+        self.read_reply().map(|(reply, _)| reply)
+    }
+
+    /// Cancel a request in flight on another connection. Returns `true` if
+    /// the server found it live.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        writeln!(self.writer, "CANCEL {id}")?;
+        let line = self.read_line()?;
+        let rest = line
+            .strip_prefix("CANCELLED ")
+            .ok_or_else(|| anyhow!("bad cancel reply: {line}"))?;
+        let (_id, verdict) = rest.split_once(' ').ok_or_else(|| anyhow!("bad CANCELLED"))?;
+        Ok(verdict == "ok")
     }
 
     /// Streaming generation: returns the final reply plus the `PART` text

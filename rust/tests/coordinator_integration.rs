@@ -1,10 +1,13 @@
 //! Coordinator under load: many requests, multiple workers, metric
-//! aggregation, mixed request sizes, continuous-batching fairness.
+//! aggregation, mixed request sizes, continuous-batching fairness,
+//! scheduling policies, mid-flight cancellation, and KV admission control.
 
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
 use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use specbranch::coordinator::Coordinator;
+use specbranch::coordinator::{
+    Coordinator, ResponseStatus, SchedulePolicy, SchedulerConfig, SubmitOpts,
+};
 
 fn backends(n: usize) -> Vec<Box<dyn Backend + Send>> {
     (0..n)
@@ -150,6 +153,294 @@ fn shutdown_with_inflight_requests_drains_cleanly() {
     for (r, &sz) in rest.iter().zip(sizes.iter()) {
         assert_eq!(r.tokens.len(), sz);
         assert_eq!(r.stats.generated_tokens as usize, sz);
+    }
+}
+
+#[test]
+fn cancel_queued_request_before_admission() {
+    // One worker, a window-filling backlog: the last submitted request is
+    // still waiting in the admission queue and can be cancelled before any
+    // decode work happens.
+    let coord = Coordinator::start(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+    );
+    let mut ids = Vec::new();
+    for i in 0..40u64 {
+        ids.push(coord.submit(vec![1, 2, 3], 60, i));
+    }
+    let victim = *ids.last().unwrap();
+    assert!(coord.cancel(victim), "queued request must be cancellable");
+    let r = coord.collect_id(victim);
+    assert_eq!(r.status, ResponseStatus::Cancelled);
+    assert!(r.tokens.is_empty(), "never admitted -> no tokens");
+    assert_eq!(r.stats.generated_tokens, 0);
+    let rest = coord.shutdown();
+    assert_eq!(rest.len(), 39, "every other request still completes");
+    for r in &rest {
+        assert_eq!(r.tokens.len(), 60);
+        assert_eq!(r.status, ResponseStatus::Completed);
+    }
+}
+
+#[test]
+fn cancel_mid_decode_returns_partial_tokens() {
+    // Stream the first round, then cancel: the response must carry exactly
+    // the partial tokens committed so far, with consistent stats, and the
+    // stream must still terminate with done=true.
+    let coord = Coordinator::start(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let id = coord.submit_streaming(vec![1, 2, 3], 8000, 7, tx);
+    // Block until the first round has committed — the task is now mid-
+    // decode with ~8000 rounds of budget left, so cancellation cannot race
+    // completion.
+    let first = rx.recv().expect("first round chunk");
+    assert!(!first.done, "8000-token request cannot finish in one round");
+    assert!(coord.cancel(id), "mid-decode request must be cancellable");
+    let r = coord.collect_id(id);
+    assert_eq!(r.status, ResponseStatus::Cancelled);
+    assert!(!r.tokens.is_empty(), "partial output preserved");
+    assert!(r.tokens.len() < 8000, "cancelled well before the budget");
+    assert_eq!(
+        r.tokens.len() as u64,
+        r.stats.generated_tokens,
+        "partial tokens and stats must agree"
+    );
+    // Drain the stream: chunks concatenate to the partial response and the
+    // cancellation flushed a terminating done=true.
+    let mut streamed = first.tokens.clone();
+    let mut saw_done = false;
+    while let Ok(chunk) = rx.try_recv() {
+        streamed.extend(chunk.tokens);
+        if chunk.done {
+            saw_done = true;
+        }
+    }
+    assert!(saw_done, "cancelled stream must terminate");
+    assert_eq!(streamed, r.tokens);
+    let snap = coord.registry();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(
+        snap.generated_tokens, r.stats.generated_tokens,
+        "registry counts the cancelled request's partial tokens"
+    );
+    assert_eq!(coord.kv_projected_in_use(), 0, "KV projection released");
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_cancel_complete_workload_keeps_registry_invariant() {
+    // The acceptance workload: cancellations interleaved with completions;
+    // the registry token count must equal the sum of per-response stats,
+    // partial tokens included, and the KV projection must drain to zero.
+    let coord = Coordinator::start(
+        backends(2),
+        EngineId::Sps,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+    );
+    let ids: Vec<u64> = (0..8).map(|i| coord.submit(vec![1, 2, 3], 2000, i)).collect();
+    assert!(coord.cancel(ids[2]));
+    assert!(coord.cancel(ids[5]));
+    let mut stats_sum = 0u64;
+    let mut cancelled = 0;
+    let mut completed = 0;
+    for _ in 0..ids.len() {
+        let r = coord.collect();
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+        stats_sum += r.stats.generated_tokens;
+        match r.status {
+            ResponseStatus::Cancelled => {
+                cancelled += 1;
+                assert!(r.tokens.len() < 2000);
+                assert!(r.id == ids[2] || r.id == ids[5]);
+            }
+            ResponseStatus::Completed => {
+                completed += 1;
+                assert_eq!(r.tokens.len(), 2000);
+            }
+        }
+    }
+    assert_eq!(cancelled, 2);
+    assert_eq!(completed, 6);
+    let snap = coord.registry();
+    assert_eq!(snap.cancelled, 2);
+    assert_eq!(snap.completed, 6);
+    assert_eq!(
+        snap.generated_tokens, stats_sum,
+        "registry == sum of per-request stats under mixed cancel/complete"
+    );
+    assert_eq!(coord.kv_projected_in_use(), 0);
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn edf_prefers_tight_deadline_that_round_robin_makes_wait() {
+    // Two equal-length requests on one worker. Under round-robin their
+    // rounds interleave, so the first-submitted request finishes first and
+    // the tight-deadline latecomer pays ~2x its own decode time — the miss.
+    // Under EDF the tight-deadline request runs every round until done and
+    // finishes first, meeting its deadline.
+    let submit_pair = |coord: &Coordinator| -> (u64, u64) {
+        let a = coord.submit_opts(vec![1, 2, 3], 200, 1, SubmitOpts::default());
+        let b = coord.submit_opts(
+            vec![4, 5, 6],
+            200,
+            2,
+            SubmitOpts { deadline_ms: Some(30_000), ..Default::default() },
+        );
+        (a, b)
+    };
+
+    let edf = Coordinator::start_with(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 256, ..Default::default() },
+        SchedulerConfig { policy: SchedulePolicy::EarliestDeadline, ..Default::default() },
+    );
+    let (_a, b) = submit_pair(&edf);
+    let first = edf.collect();
+    assert_eq!(first.id, b, "EDF runs the deadlined request to completion first");
+    assert_eq!(first.deadline_met, Some(true), "tight deadline met under EDF");
+    let second = edf.collect();
+    assert_eq!(second.deadline_met, None, "no deadline -> no verdict");
+    edf.shutdown();
+
+    let rr = Coordinator::start(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 256, ..Default::default() },
+    );
+    let (a, _b) = submit_pair(&rr);
+    let first = rr.collect();
+    assert_eq!(
+        first.id, a,
+        "round-robin interleaves, so the deadlined latecomer waits"
+    );
+    rr.shutdown();
+}
+
+#[test]
+fn priority_aging_bounds_low_priority_wait() {
+    // Six long high-priority requests and one short low-priority request on
+    // one worker. With aging, the low-priority request's effective priority
+    // rises while it waits, so it starts receiving rounds once its deficit
+    // reaches aging_rounds x (priority gap) and finishes long before the
+    // high-priority work drains — bounded wait, no starvation. With aging
+    // disabled (pure priority) it is served dead last.
+    let cfg = EngineConfig { max_new_tokens: 256, ..Default::default() };
+    let run = |aging_rounds: u64| -> (u64, Vec<u64>) {
+        let coord = Coordinator::start_with(
+            backends(1),
+            EngineId::Autoregressive,
+            cfg.clone(),
+            SchedulerConfig {
+                policy: SchedulePolicy::Priority,
+                aging_rounds,
+                ..Default::default()
+            },
+        );
+        for i in 0..6u64 {
+            coord.submit_opts(
+                vec![1, 2, 3],
+                80,
+                i,
+                SubmitOpts { priority: 5, ..Default::default() },
+            );
+        }
+        let low = coord.submit_opts(vec![4, 5, 6], 8, 99, SubmitOpts::default());
+        let mut order = Vec::new();
+        for _ in 0..7 {
+            order.push(coord.collect().id);
+        }
+        coord.shutdown();
+        (low, order)
+    };
+
+    let (low, order) = run(4);
+    assert_eq!(
+        order.first().copied(),
+        Some(low),
+        "aged low-priority short request finishes before the long high-priority pile"
+    );
+    let (low, order) = run(0);
+    assert_eq!(
+        order.last().copied(),
+        Some(low),
+        "without aging, pure priority serves the low-priority request last"
+    );
+}
+
+#[test]
+fn admission_watermark_bounds_kv_with_zero_drops() {
+    // Oversubscription stress: 12 requests whose combined KV projection is
+    // ~6x the watermark. Admission control must keep the projected peak
+    // under the watermark while every request still completes in full.
+    let watermark = 2_000_000usize;
+    let coord = Coordinator::start_with(
+        backends(2),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 64, gamma: 6, k_max: 4, ..Default::default() },
+        SchedulerConfig {
+            kv_watermark_bytes: Some(watermark),
+            ..Default::default()
+        },
+    );
+    let n = 12u64;
+    for i in 0..n {
+        coord.submit(vec![1, 2, 3], 40, i);
+    }
+    for _ in 0..n {
+        let r = coord.collect();
+        assert_eq!(r.status, ResponseStatus::Completed, "zero dropped requests");
+        assert_eq!(r.tokens.len(), 40);
+    }
+    let snap = coord.registry();
+    assert_eq!(snap.completed, n);
+    assert_eq!(snap.cancelled, 0);
+    assert!(
+        snap.kv_projected_peak_bytes as usize <= watermark,
+        "peak projected KV {} exceeded watermark {}",
+        snap.kv_projected_peak_bytes,
+        watermark
+    );
+    assert!(snap.kv_projected_peak_bytes > 0, "admissions were accounted");
+    assert!(
+        snap.admission_deferrals > 0,
+        "a 6x-oversubscribed workload must defer admissions"
+    );
+    assert_eq!(coord.kv_projected_in_use(), 0, "projection drains with the pool");
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_requests_deferred_by_admission_control() {
+    // Requests still waiting in the admission queue — including ones the KV
+    // watermark is deferring — must not be lost by shutdown.
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::Sps,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+        SchedulerConfig {
+            // Roughly one admitted request at a time.
+            kv_watermark_bytes: Some(1_000_000),
+            ..Default::default()
+        },
+    );
+    for i in 0..6 {
+        coord.submit(vec![1, 2, 3], 30, i);
+    }
+    let mut rest = coord.shutdown();
+    assert_eq!(rest.len(), 6, "deferred admissions drain on shutdown");
+    rest.sort_by_key(|r| r.id);
+    for r in &rest {
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(r.tokens.len(), 30);
     }
 }
 

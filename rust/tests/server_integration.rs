@@ -87,6 +87,70 @@ fn multiple_clients_share_server() {
 }
 
 #[test]
+fn priority_and_deadline_options_roundtrip() {
+    use specbranch::util::json::Value;
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let reply = client
+        .generate_opts("a prompt with scheduling options", 16, 3, Some(60_000))
+        .expect("generate_opts");
+    let gen = reply.stats.get("generated").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(gen, 16.0);
+    assert_eq!(
+        reply.stats.get("cancelled"),
+        Some(&Value::Bool(false)),
+        "completed request reports cancelled=false"
+    );
+    assert_eq!(
+        reply.stats.get("deadline_met"),
+        Some(&Value::Bool(true)),
+        "a 60s deadline on a 16-token request is met"
+    );
+    // Without a deadline the verdict is null.
+    let reply = client.generate_opts("no deadline here", 8, 0, None).expect("gen");
+    assert_eq!(reply.stats.get("deadline_met"), Some(&Value::Null));
+    client.quit().unwrap();
+}
+
+#[test]
+fn cancel_from_second_connection_returns_partial() {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = start_server();
+    // Open the cancel connection first so cancellation is a single write
+    // once the stream starts.
+    let mut canceller = Client::connect(&addr.to_string()).expect("connect canceller");
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    // A budget far larger than one round so cancellation cannot race
+    // completion (the sim KV capacity bounds it anyway).
+    writeln!(s, "GENS 8000 stream a very long generation").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let part = line.strip_prefix("PART ").expect("first streamed chunk");
+    let id: u64 = part.split_whitespace().next().unwrap().parse().unwrap();
+    assert!(canceller.cancel(id).expect("cancel roundtrip"), "request is live");
+    // Drain PART lines until the OK carrying the partial completion.
+    let ok_line = loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if !line.starts_with("PART ") {
+            break line.clone();
+        }
+    };
+    assert!(ok_line.starts_with("OK "), "got: {ok_line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("STATS "), "got: {line}");
+    assert!(
+        line.contains("\"cancelled\": true"),
+        "stats must flag the cancellation: {line}"
+    );
+    // Cancelling again misses: the request already finished.
+    assert!(!canceller.cancel(id).expect("second cancel"));
+    canceller.quit().unwrap();
+}
+
+#[test]
 fn bad_commands_get_errors_not_disconnects() {
     use std::io::{BufRead, BufReader, Write};
     let addr = start_server();
