@@ -13,20 +13,24 @@ use specbranch::metrics::DecodeStats;
 use specbranch::sampling;
 use specbranch::util::prng::Pcg32;
 
-fn bench_engine_overhead(id: EngineId, rounds_tokens: usize) -> (f64, u64) {
+fn bench_engine_overhead_cfg(id: EngineId, cfg: EngineConfig) -> (f64, u64) {
     let mut pair = ModelPair::get(PairId::Vicuna68m13b);
     // Zero virtual latency: wall time measures engine-side work only.
     pair.draft_ms = 0.0;
-    let cfg = SimConfig::new(pair, Task::get(TaskId::MtBench));
-    let backend = SimBackend::new(cfg);
-    let engine = engines::build(
-        id,
-        EngineConfig { gamma: 6, max_new_tokens: rounds_tokens, ..Default::default() },
-    );
+    let sim_cfg = SimConfig::new(pair, Task::get(TaskId::MtBench));
+    let backend = SimBackend::new(sim_cfg);
+    let engine = engines::build(id, cfg);
     let mut session = backend.new_session(1);
     let t0 = Instant::now();
     let out = engine.generate(session.as_mut(), &[1, 2, 3, 4], &mut Pcg32::new(1));
     (t0.elapsed().as_secs_f64() * 1e6, out.stats.rounds)
+}
+
+fn bench_engine_overhead(id: EngineId, rounds_tokens: usize) -> (f64, u64) {
+    bench_engine_overhead_cfg(
+        id,
+        EngineConfig { gamma: 6, max_new_tokens: rounds_tokens, ..Default::default() },
+    )
 }
 
 fn bench_sampling_kernels() {
@@ -97,6 +101,23 @@ fn bench_sampling_kernels() {
         "sampling::branch_sample(k=4) {:>8.1} ns/op (checksum {acc})",
         t0.elapsed().as_nanos() as f64 / n as f64
     );
+
+    // The deterministic Top-k branch-point rule (the engine's actual
+    // candidate path): top_k_indices + point-mass speculative resolution.
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n {
+        let cands: Vec<u32> = sampling::top_k_indices(&q, 4)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        let (tok, _) = sampling::branch_topk_speculative_sample(&dist, &cands, &mut rng);
+        acc += tok as u64;
+    }
+    println!(
+        "sampling::topk_branch(k=4)   {:>8.1} ns/op (checksum {acc})",
+        t0.elapsed().as_nanos() as f64 / n as f64
+    );
 }
 
 /// DecodeStats::merge with populated histograms — the coordinator/bench
@@ -145,4 +166,19 @@ fn main() {
             rounds
         );
     }
+    // Branch run-ahead scatter at full width: k_max cranked up (and the
+    // confidence early-stop disabled via epsilon=0) keeps k at/near k_max
+    // every round — the fan-out where the per-step scatter used to cost
+    // O(k²) `contains` scans.
+    let (us, rounds) = bench_engine_overhead_cfg(
+        EngineId::SpecBranch,
+        EngineConfig { gamma: 6, k_max: 16, epsilon: 0.0, max_new_tokens: 2000, ..Default::default() },
+    );
+    println!(
+        "{:<24} {:>9.1} us total, {:>7.2} us/round ({} rounds)",
+        "SpecBranch(k=k_max=16)",
+        us,
+        us / rounds.max(1) as f64,
+        rounds
+    );
 }

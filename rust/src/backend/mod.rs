@@ -21,6 +21,17 @@
 //! `verify_wait` joins. The same code path therefore reproduces vanilla
 //! SD's mutual-waiting bubbles and parallel SD's overlap, for both real
 //! and virtual time.
+//!
+//! ### Cross-request fused verification
+//! The serving coordinator batches the verify blocks of *different
+//! requests* into one fused target pass (`serve --verify-batch`). Sessions
+//! stay single-request: each engine submits its own block with
+//! [`Session::verify_submit`], and the coordinator — which alone knows the
+//! batch composition — then calls [`Session::verify_fuse`] on every lane
+//! with the realised width before any lane joins. The sim re-prices each
+//! lane to the amortised fused cost `t_p·(1 + η·(m−1))/m`; fusing never
+//! changes distributions, so batched and unbatched token streams are
+//! identical.
 
 #[cfg(feature = "xla")]
 pub mod pjrt;
@@ -135,6 +146,23 @@ pub trait Session {
     /// the last committed token. Occupies the target track; returns
     /// immediately (the engine may keep drafting).
     fn verify_submit(&mut self, tokens: &[Token]) -> VerifyTicket;
+
+    /// Mark an in-flight verification as one lane of a **fused
+    /// cross-request target pass** of `width` requests — the serving
+    /// coordinator's request-level batched verification. A fused pass over
+    /// `m` same-shaped verify blocks costs `t_p · (1 + η·(m−1))` device
+    /// time (the same batch economy `draft_forward_batch` models on the
+    /// draft side), amortised evenly over its `m` lanes, so this session's
+    /// pending verification is re-costed from `t_p` to
+    /// `t_p · (1 + η·(m−1)) / m`.
+    ///
+    /// Must be called between `verify_submit` and `verify_wait` of
+    /// `ticket`, while that verification is the session's only outstanding
+    /// target work (the engines' invariant). `width <= 1` is a no-op, so
+    /// the unbatched path is bit-identical with or without the call.
+    /// Backends without a batching cost model may ignore it; fusing never
+    /// changes distributions or tokens, only the clock.
+    fn verify_fuse(&mut self, _ticket: VerifyTicket, _width: usize) {}
 
     /// Join a verification; advances session time to its completion.
     fn verify_wait(&mut self, ticket: VerifyTicket) -> VerifyOut;

@@ -141,6 +141,13 @@ impl VirtualClock {
         self.target_free
     }
 
+    /// Re-price the latest in-flight target occupancy by `delta_ms`
+    /// (fused cross-request verification re-costs a pass after
+    /// submission; valid only while that pass is the last target work).
+    pub fn retime_target(&mut self, delta_ms: f64) {
+        self.target_free += delta_ms;
+    }
+
     /// Blocking occupancy of the engine thread (H-RAD, sampling, ...).
     pub fn engine_busy(&mut self, ms: f64) {
         self.now += ms;
@@ -198,9 +205,18 @@ fn sigmoid(x: f64) -> f64 {
 /// Positions per difficulty bucket (burst granularity, Fig. 10).
 const BUCKET: u64 = 8;
 
+/// Per-extra-lane overhead of a fused cross-request target pass: a fused
+/// pass of width m costs `t_p·(1 + η·(m−1))` device time, mirroring the
+/// 10% per-extra-branch economy `draft_forward_batch` models (decode is
+/// memory-bound, so batching underutilised passes is nearly free).
+const TARGET_BATCH_ETA: f64 = 0.10;
+
 struct Pending {
     out: VerifyOut,
     ready_at: f64,
+    /// Target-track ms this verification is currently priced at
+    /// (re-priced by `verify_fuse`).
+    cost_ms: f64,
 }
 
 pub struct SimSession {
@@ -495,8 +511,29 @@ impl Session for SimSession {
         }
         let ticket = VerifyTicket(self.next_ticket);
         self.next_ticket += 1;
-        self.pending.insert(ticket.0, Pending { out: VerifyOut { ps, features }, ready_at });
+        self.pending.insert(
+            ticket.0,
+            Pending { out: VerifyOut { ps, features }, ready_at, cost_ms: t_p },
+        );
         ticket
+    }
+
+    fn verify_fuse(&mut self, ticket: VerifyTicket, width: usize) {
+        if width <= 1 {
+            return;
+        }
+        let p = self.pending.get_mut(&ticket.0).expect("unknown ticket");
+        // Amortised lane cost of a width-m fused pass (see the trait doc):
+        // t_p·(1 + η·(m−1))/m. Re-price the pending pass in place — it is
+        // the session's only outstanding target work (engine invariant),
+        // so its completion time and the target track's free time coincide.
+        let fused = p.cost_ms * (1.0 + TARGET_BATCH_ETA * (width as f64 - 1.0)) / width as f64;
+        let delta = fused - p.cost_ms;
+        p.ready_at += delta;
+        p.cost_ms = fused;
+        self.clock.retime_target(delta);
+        self.stats.target_busy_ms += delta;
+        self.stats.fused_rounds += 1;
     }
 
     fn verify_wait(&mut self, ticket: VerifyTicket) -> VerifyOut {
@@ -719,6 +756,36 @@ mod tests {
         let t_q = ModelPair::get(PairId::Llama68m7b).draft_ms;
         let t_p = ModelPair::get(PairId::Llama68m7b).target_ms();
         assert!((elapsed - (t_p + t_q)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_verify_amortizes_target_cost() {
+        // Two identical sessions, one verify each; fusing one at width 4
+        // re-prices its pass to t_p·(1+η·3)/4 and must not change the
+        // returned distributions. Width 1 is a strict no-op.
+        let t_p = ModelPair::get(PairId::Llama68m7b).target_ms();
+        let run = |width: usize| -> (f64, f64, VerifyOut) {
+            let mut s = session(PairId::Llama68m7b, TaskId::MtBench, 17);
+            s.prefill(&[1, 2, 3]);
+            let t0 = s.clock.now;
+            let busy0 = s.stats.target_busy_ms;
+            let ticket = s.verify_submit(&[3, 4, 5]);
+            if width > 0 {
+                s.verify_fuse(ticket, width);
+            }
+            let out = s.verify_wait(ticket);
+            (s.clock.now - t0, s.stats.target_busy_ms - busy0, out)
+        };
+        let (base_ms, base_busy, base_out) = run(0);
+        let (same_ms, same_busy, _) = run(1);
+        assert_eq!(base_ms, same_ms, "width<=1 must be a no-op");
+        assert_eq!(base_busy, same_busy);
+        let (fused_ms, fused_busy, fused_out) = run(4);
+        let want = t_p * (1.0 + super::TARGET_BATCH_ETA * 3.0) / 4.0;
+        assert!((fused_ms - want).abs() < 1e-9, "fused {fused_ms} want {want}");
+        assert!((fused_busy - want).abs() < 1e-9);
+        assert!(fused_ms < base_ms, "amortised lane must be cheaper");
+        assert_eq!(base_out.ps, fused_out.ps, "fusing never changes distributions");
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod experiments;
 pub mod report;
 pub mod runner;
 
-pub use runner::{Runner, Scale};
+pub use runner::{BatchedRun, Runner, Scale};

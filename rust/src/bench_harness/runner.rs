@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use crate::backend::sim::{SimBackend, SimConfig};
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
-use crate::engines::{self, DecodeTask};
+use crate::engines::{self, DecodeTask, TaskPhase};
 use crate::metrics::DecodeStats;
 use crate::util::prng::Pcg32;
 
@@ -33,6 +33,29 @@ impl Scale {
         } else {
             Scale::full()
         }
+    }
+}
+
+/// Result of one lockstep fused-batch run ([`Runner::run_engine_batched`]):
+/// merged per-request stats plus the **measured** fused-pass shape.
+#[derive(Clone, Debug)]
+pub struct BatchedRun {
+    pub stats: DecodeStats,
+    /// Fused cross-request passes the driver issued (width ≥ 2).
+    pub fused_passes: u64,
+    /// Σ widths over those passes; `fused_lanes / fused_passes` is the
+    /// measured mean width (narrows as requests finish at different
+    /// rounds — never assume it equals the request count).
+    pub fused_lanes: u64,
+}
+
+impl BatchedRun {
+    /// Measured mean width of the fused passes (0 when none were issued).
+    pub fn mean_fused_width(&self) -> f64 {
+        if self.fused_passes == 0 {
+            return 0.0;
+        }
+        self.fused_lanes as f64 / self.fused_passes as f64
     }
 }
 
@@ -88,6 +111,27 @@ impl Runner {
         SimBackend::new(cfg)
     }
 
+    /// The r-th request of the standard workload: seed derivation, prompt
+    /// generation, session + task construction — shared by the serial and
+    /// batched drivers so their workloads can never drift apart (the
+    /// fused-vs-serial equivalence tests depend on that).
+    fn make_task(
+        &self,
+        backend: &SimBackend,
+        engine: &dyn engines::Engine,
+        cfg: &EngineConfig,
+        task_cfg: &Task,
+        r: usize,
+    ) -> DecodeTask {
+        let seed = self.seed ^ (r as u64 * 7919);
+        let mut rng = Pcg32::new(seed);
+        let prompt: Vec<u32> = (0..task_cfg.prompt_len.min(48).max(4))
+            .map(|_| rng.below(60))
+            .collect();
+        let session = backend.new_session(seed);
+        DecodeTask::new(engine, session, &prompt, cfg.max_new_tokens, rng)
+    }
+
     /// Run an engine over the workload; merged stats across requests.
     /// Each request is driven through the step-wise [`DecodeTask`] API —
     /// the same machinery the serving coordinator schedules.
@@ -103,14 +147,7 @@ impl Runner {
         let task_cfg = Task::get(task);
         let mut merged = DecodeStats::with_hist(cfg.gamma.max(8));
         for r in 0..self.scale.requests {
-            let seed = self.seed ^ (r as u64 * 7919);
-            let mut rng = Pcg32::new(seed);
-            let prompt: Vec<u32> = (0..task_cfg.prompt_len.min(48).max(4))
-                .map(|_| rng.below(60))
-                .collect();
-            let session = backend.new_session(seed);
-            let mut decode =
-                DecodeTask::new(engine.as_ref(), session, &prompt, cfg.max_new_tokens, rng);
+            let mut decode = self.make_task(&backend, engine.as_ref(), cfg, &task_cfg, r);
             while !decode.is_done() {
                 decode.step();
             }
@@ -118,6 +155,59 @@ impl Runner {
             merged.merge(&out.stats);
         }
         merged
+    }
+
+    /// Run the same workload as one lockstep **fused batch**: every
+    /// request advances round by round together, and each cycle the
+    /// in-flight verifications of all still-live requests fuse into one
+    /// cross-request target pass (`Session::verify_fuse`) — the
+    /// deterministic, thread-free equivalent of the serving coordinator's
+    /// `--verify-batch` path (same `DecodeTask` phase machinery, so the
+    /// token streams are identical to [`Runner::run_engine`]'s; only the
+    /// virtual clock sees the amortised batch economy).
+    pub fn run_engine_batched(
+        &self,
+        pair: PairId,
+        task: TaskId,
+        engine_id: EngineId,
+        cfg: &EngineConfig,
+    ) -> BatchedRun {
+        let backend = self.backend(pair, task);
+        let engine = engines::build(engine_id, cfg.clone());
+        let task_cfg = Task::get(task);
+        let mut tasks: Vec<DecodeTask> = (0..self.scale.requests)
+            .map(|r| self.make_task(&backend, engine.as_ref(), cfg, &task_cfg, r))
+            .collect();
+        let mut fused_passes = 0u64;
+        let mut fused_lanes = 0u64;
+        while tasks.iter().any(|t| !t.is_done()) {
+            let mut width = 0usize;
+            for t in tasks.iter_mut() {
+                if t.is_done() {
+                    continue;
+                }
+                if let TaskPhase::Submitted = t.step_submit() {
+                    width += 1;
+                }
+            }
+            if width >= 2 {
+                fused_passes += 1;
+                fused_lanes += width as u64;
+                for t in tasks.iter_mut() {
+                    t.fuse_verify(width); // no-op without a pending verify
+                }
+            }
+            for t in tasks.iter_mut() {
+                if t.has_pending_verify() {
+                    t.step_join();
+                }
+            }
+        }
+        let mut stats = DecodeStats::with_hist(cfg.gamma.max(8));
+        for t in tasks {
+            stats.merge(&t.finish().stats);
+        }
+        BatchedRun { stats, fused_passes, fused_lanes }
     }
 
     /// AR baseline for the same workload (cached).
@@ -171,6 +261,36 @@ mod tests {
         assert!(e.speedup > 1.0, "speedup {}", e.speedup);
         assert!(e.mean_accepted() >= 1.0);
         assert!(e.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn batched_runner_matches_serial_tokens_and_is_not_slower() {
+        let r = Runner::new(Scale::fast());
+        let cfg = r.engine_cfg(PairId::Vicuna68m13b);
+        let serial =
+            r.run_engine(PairId::Vicuna68m13b, TaskId::MtBench, EngineId::SpecBranch, &cfg);
+        let batched = r.run_engine_batched(
+            PairId::Vicuna68m13b,
+            TaskId::MtBench,
+            EngineId::SpecBranch,
+            &cfg,
+        );
+        assert_eq!(
+            serial.generated_tokens, batched.stats.generated_tokens,
+            "fusing must not change the committed streams"
+        );
+        assert!(batched.fused_passes > 0, "multi-request load must fuse");
+        assert_eq!(
+            batched.stats.fused_rounds, batched.fused_lanes,
+            "per-session fused lanes must agree with the driver's count"
+        );
+        assert!(batched.mean_fused_width() > 1.0);
+        assert!(
+            batched.stats.tokens_per_sec() >= serial.tokens_per_sec(),
+            "amortised fused passes cannot be slower: batched {} vs serial {}",
+            batched.stats.tokens_per_sec(),
+            serial.tokens_per_sec()
+        );
     }
 
     #[test]

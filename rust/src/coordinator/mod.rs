@@ -59,6 +59,26 @@
 //! watermark is admitted when nothing else is in flight (alone on the
 //! cache) rather than dropped, so no request is ever lost to admission
 //! control.
+//!
+//! ## Cross-request batched verification
+//!
+//! With [`SchedulerConfig::verify_batch`] `> 1`, one scheduling decision
+//! drains up to that many ready tasks — picked one by one under the active
+//! policy, so the **batch composition and its submit/join order stay
+//! policy-ordered** — and runs their rounds in three phases: every task is
+//! driven to its verification join point ([`DecodeTask::step_submit`]:
+//! draft stage, verify submission, branch run-ahead), the in-flight target
+//! passes of all submitted lanes are fused into **one cross-request target
+//! pass** ([`DecodeTask::fuse_verify`], amortised batch economy
+//! `t_p·(1 + η·(m−1))/m` per lane on the sim's virtual clock), and each
+//! round then joins and commits ([`DecodeTask::step_join`]). Fusing never
+//! changes distributions, so batched token streams are exactly the
+//! unbatched ones; every PR 1/2 invariant (exact budgets, the registry
+//! token equality across cancellation, the admission watermark) holds
+//! unchanged because commit/retire/cancel all happen after the join phase,
+//! through the same paths as unbatched rounds. Fused passes are counted in
+//! [`RegistrySnapshot::batched_rounds`] / `fused_requests` /
+//! `mean_fused_width`.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -69,7 +89,7 @@ use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
-use crate::engines::{self, DecodeTask, Engine};
+use crate::engines::{self, DecodeTask, Engine, StepOutcome, TaskPhase};
 use crate::kvcache::{BlockCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -118,6 +138,19 @@ pub struct SchedulerConfig {
     /// Priority aging: scheduling decisions a waiting task is passed over
     /// per +1 effective priority. 0 disables aging (pure priority).
     pub aging_rounds: u64,
+    /// Cross-request batched verification: max requests whose rounds one
+    /// worker drives to their verify-submission points and fuses into a
+    /// single target pass before any of them joins. `<= 1` disables
+    /// fusion (the PR 1/2 one-round-per-decision behavior).
+    ///
+    /// Width trades worker parallelism for fusion: the winning worker
+    /// greedily drains up to this many ready tasks per decision, so a
+    /// width at or above the concurrent-request count funnels every round
+    /// through one worker and defers each round's streamed chunk until the
+    /// whole batch joins. Size it below `ready / workers` when engine-side
+    /// CPU work or per-round streaming latency matters more than target
+    /// batch economy.
+    pub verify_batch: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -127,6 +160,7 @@ impl Default for SchedulerConfig {
             kv_watermark_bytes: None,
             kv_bytes_per_token: None,
             aging_rounds: 8,
+            verify_batch: 1,
         }
     }
 }
@@ -142,6 +176,8 @@ struct SchedParams {
     aging_rounds: u64,
     /// Continuous-batch window: max tasks parked in the ready queue.
     max_ready: usize,
+    /// Max width of one fused cross-request verification pass (≥ 1).
+    verify_batch: usize,
 }
 
 /// One generation request.
@@ -273,6 +309,11 @@ pub struct Registry {
     pub admission_deferrals: AtomicU64,
     /// High-water mark of Σ projected KV bytes across admitted requests.
     pub kv_projected_peak: AtomicU64,
+    /// Fused cross-request target passes issued (width ≥ 2).
+    pub batched_rounds: AtomicU64,
+    /// Σ widths over fused passes; mean fused width =
+    /// `fused_requests / batched_rounds`.
+    pub fused_requests: AtomicU64,
 }
 
 impl Registry {
@@ -280,6 +321,8 @@ impl Registry {
         let completed = self.completed.load(Ordering::Relaxed);
         let cancelled = self.cancelled.load(Ordering::Relaxed);
         let finished = completed + cancelled;
+        let batched_rounds = self.batched_rounds.load(Ordering::Relaxed);
+        let fused_requests = self.fused_requests.load(Ordering::Relaxed);
         RegistrySnapshot {
             completed,
             cancelled,
@@ -287,6 +330,13 @@ impl Registry {
             rounds: self.rounds.load(Ordering::Relaxed),
             admission_deferrals: self.admission_deferrals.load(Ordering::Relaxed),
             kv_projected_peak_bytes: self.kv_projected_peak.load(Ordering::Relaxed),
+            batched_rounds,
+            fused_requests,
+            mean_fused_width: if batched_rounds == 0 {
+                0.0
+            } else {
+                fused_requests as f64 / batched_rounds as f64
+            },
             mean_queue_ms: if finished == 0 {
                 0.0
             } else {
@@ -309,6 +359,12 @@ pub struct RegistrySnapshot {
     pub rounds: u64,
     pub admission_deferrals: u64,
     pub kv_projected_peak_bytes: u64,
+    /// Fused cross-request target passes issued (width ≥ 2).
+    pub batched_rounds: u64,
+    /// Σ fused-pass widths (requests that rode a fused pass).
+    pub fused_requests: u64,
+    /// Mean width of fused passes (0 when none were issued).
+    pub mean_fused_width: f64,
     pub mean_queue_ms: f64,
     pub mean_decode_ms: f64,
 }
@@ -373,6 +429,7 @@ impl Coordinator {
             // a KV cache) while still letting arrivals join a running batch
             // between rounds.
             max_ready: 16 * backends.len().max(1),
+            verify_batch: sched_cfg.verify_batch.max(1),
         };
         let shared = Arc::new(Shared {
             queues: Mutex::new(Queues::default()),
@@ -670,10 +727,12 @@ fn pick_ready_index(
 
 fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared: Arc<Shared>) {
     let sched = shared.sched;
-    // One scheduling decision: admit a new request or run one round.
+    // One scheduling decision: admit a new request, or run one round for a
+    // policy-ordered batch of up to `verify_batch` ready tasks whose
+    // verifications fuse into one cross-request target pass.
     enum Work {
         Admit(Request, Instant, usize),
-        Round(Inflight),
+        Rounds(Vec<Inflight>),
     }
     loop {
         let work = {
@@ -728,17 +787,31 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         }
                     }
                 }
-                if let Some(i) = pick_ready_index(&q.ready, sched.policy, sched.aging_rounds) {
-                    if sched.policy == SchedulePolicy::Priority {
-                        for (j, t) in q.ready.iter_mut().enumerate() {
-                            if j != i {
-                                t.waits += 1;
-                            }
-                        }
-                    }
+                // Drain up to `verify_batch` ready tasks, re-applying the
+                // policy per pick so the *batch composition* (and the
+                // submit/join order within it) stays policy-ordered.
+                let mut batch: Vec<Inflight> = Vec::new();
+                while batch.len() < sched.verify_batch {
+                    let pick = pick_ready_index(&q.ready, sched.policy, sched.aging_rounds);
+                    let Some(i) = pick else {
+                        break;
+                    };
                     let t = q.ready.remove(i).expect("index in range");
                     q.stepping.insert(t.id);
-                    break Work::Round(t);
+                    batch.push(t);
+                }
+                if !batch.is_empty() {
+                    // Priority aging: the whole batch drain is ONE
+                    // scheduling decision — only tasks it left behind were
+                    // passed over, and exactly once each, so the
+                    // `aging_rounds` knob means the same thing at every
+                    // verify_batch width.
+                    if sched.policy == SchedulePolicy::Priority {
+                        for t in q.ready.iter_mut() {
+                            t.waits += 1;
+                        }
+                    }
+                    break Work::Rounds(batch);
                 }
                 // Drain before exit: a stopped coordinator still owes a
                 // response to every request in the admission queue.
@@ -748,7 +821,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 q = shared.cv_in.wait(q).unwrap();
             }
         };
-        let t = match work {
+        let batch: Vec<Inflight> = match work {
             Work::Admit(req, enqueued_at, kv_projected) => {
                 let admitted_at = Instant::now();
                 let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
@@ -756,7 +829,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
                 let task =
                     DecodeTask::new(engine.as_ref(), session, &req.prompt, req.max_new_tokens, rng);
-                Inflight {
+                vec![Inflight {
                     id: req.id,
                     task,
                     enqueued_at,
@@ -768,34 +841,83 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                     deadline_at,
                     waits: 0,
                     kv_projected,
-                }
+                }]
             }
-            Work::Round(mut t) => {
-                let t0 = Instant::now();
-                let out = t.task.step();
-                t.decode_us += t0.elapsed().as_micros() as u64;
-                shared.registry.rounds.fetch_add(1, Ordering::Relaxed);
-                if let Some(tx) = &t.stream {
-                    // A dropped receiver just disables streaming.
-                    let _ = tx.send(StreamChunk {
-                        id: t.id,
-                        tokens: out.new_tokens,
-                        done: out.done,
-                    });
+            Work::Rounds(mut batch) => {
+                // Phase A: drive every task to its verification join point
+                // (draft stage + branch run-ahead), in policy order.
+                let mut outcomes: Vec<Option<StepOutcome>> = Vec::with_capacity(batch.len());
+                let mut width = 0usize;
+                for t in batch.iter_mut() {
+                    let t0 = Instant::now();
+                    let phase = t.task.step_submit();
+                    t.decode_us += t0.elapsed().as_micros() as u64;
+                    match phase {
+                        TaskPhase::Submitted => {
+                            width += 1;
+                            outcomes.push(None);
+                        }
+                        TaskPhase::Completed(out) => outcomes.push(Some(out)),
+                    }
                 }
-                t
+                // Phase B: one fused cross-request target pass over every
+                // submitted lane (tasks that finished without a joinable
+                // verification are skipped — fuse_verify is a no-op there).
+                if width >= 2 {
+                    shared.registry.batched_rounds.fetch_add(1, Ordering::Relaxed);
+                    shared.registry.fused_requests.fetch_add(width as u64, Ordering::Relaxed);
+                    for t in batch.iter_mut() {
+                        t.task.fuse_verify(width);
+                    }
+                }
+                // Phase C: join + commit, same order as the submit phase.
+                for (t, slot) in batch.iter_mut().zip(outcomes) {
+                    let out = match slot {
+                        Some(out) => out,
+                        None => {
+                            let t0 = Instant::now();
+                            let out = t.task.step_join();
+                            t.decode_us += t0.elapsed().as_micros() as u64;
+                            out
+                        }
+                    };
+                    shared.registry.rounds.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tx) = &t.stream {
+                        // A dropped receiver just disables streaming.
+                        let _ = tx.send(StreamChunk {
+                            id: t.id,
+                            tokens: out.new_tokens,
+                            done: out.done,
+                        });
+                    }
+                }
+                batch
             }
         };
         let mut q = shared.queues.lock().unwrap();
-        q.stepping.remove(&t.id);
-        let cancel = q.cancel_requested.remove(&t.id) && !t.task.is_done();
-        if cancel || t.task.is_done() {
-            drop(q);
-            finish_inflight(t, cancel, &shared);
-        } else {
-            q.ready.push_back(t);
-            drop(q);
+        let mut retire: Vec<(Inflight, bool)> = Vec::new();
+        let mut requeued = 0usize;
+        for t in batch {
+            q.stepping.remove(&t.id);
+            let cancel = q.cancel_requested.remove(&t.id) && !t.task.is_done();
+            if cancel || t.task.is_done() {
+                retire.push((t, cancel));
+            } else {
+                q.ready.push_back(t);
+                requeued += 1;
+            }
+        }
+        drop(q);
+        // A fused batch can return many ready tasks at once — wake a
+        // worker per returned task, but don't stampede the whole pool for
+        // the common single-task case (admissions, verify_batch=1).
+        if requeued == 1 {
             shared.cv_in.notify_one();
+        } else if requeued > 1 {
+            shared.cv_in.notify_all();
+        }
+        for (t, cancel) in retire {
+            finish_inflight(t, cancel, &shared);
         }
     }
 }
@@ -1102,6 +1224,81 @@ mod tests {
     }
 
     #[test]
+    fn batched_verification_matches_unbatched_streams() {
+        // Fusing only re-prices the virtual clock: under --verify-batch the
+        // per-request token streams must be byte-identical to the
+        // unbatched scheduler's (greedy target temperature is the
+        // default EngineConfig, so this also pins greedy losslessness).
+        let run = |verify_batch: usize| -> std::collections::HashMap<u64, Vec<Token>> {
+            let coord = Coordinator::start_with(
+                sim_backends(1),
+                EngineId::SpecBranch,
+                EngineConfig { max_new_tokens: 48, ..Default::default() },
+                SchedulerConfig { verify_batch, ..Default::default() },
+            );
+            for i in 0..6u64 {
+                coord.submit(vec![1, 2, 3, 1 + (i as u32 % 7)], 48, i);
+            }
+            let mut out = std::collections::HashMap::new();
+            for _ in 0..6 {
+                let r = coord.collect();
+                assert_eq!(r.tokens.len(), 48);
+                out.insert(r.id, r.tokens);
+            }
+            coord.shutdown();
+            out
+        };
+        let unbatched = run(1);
+        let batched = run(8);
+        assert_eq!(unbatched, batched, "fused streams must match unbatched");
+    }
+
+    #[test]
+    fn fused_passes_report_width_above_one() {
+        let coord = Coordinator::start_with(
+            sim_backends(1),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 64, ..Default::default() },
+            SchedulerConfig { verify_batch: 8, ..Default::default() },
+        );
+        for i in 0..8u64 {
+            coord.submit(vec![1, 2, 3], 64, i);
+        }
+        for _ in 0..8 {
+            assert_eq!(coord.collect().tokens.len(), 64);
+        }
+        let snap = coord.registry();
+        assert!(snap.batched_rounds > 0, "a multi-request load must fuse");
+        assert!(
+            snap.mean_fused_width > 1.0,
+            "fused width {} must exceed 1",
+            snap.mean_fused_width
+        );
+        assert!(snap.fused_requests >= 2 * snap.batched_rounds);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unbatched_scheduler_reports_no_fused_passes() {
+        let coord = Coordinator::start(
+            sim_backends(2),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 30, ..Default::default() },
+        );
+        for i in 0..6u64 {
+            coord.submit(vec![1, 2, 3], 30, i);
+        }
+        for _ in 0..6 {
+            coord.collect();
+        }
+        let snap = coord.registry();
+        assert_eq!(snap.batched_rounds, 0);
+        assert_eq!(snap.fused_requests, 0);
+        assert_eq!(snap.mean_fused_width, 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
     fn projection_is_block_aligned_and_monotone() {
         let p = SchedParams {
             policy: SchedulePolicy::RoundRobin,
@@ -1110,6 +1307,7 @@ mod tests {
             headroom_tokens: 10,
             aging_rounds: 0,
             max_ready: 16,
+            verify_batch: 1,
         };
         let a = projected_kv_bytes(3, 40, &p);
         let b = projected_kv_bytes(3, 400, &p);

@@ -31,7 +31,7 @@ pub mod pearl;
 pub mod specbranch;
 pub mod sps;
 
-use crate::backend::Session;
+use crate::backend::{Session, VerifyTicket};
 use crate::config::{EngineConfig, EngineId};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -57,9 +57,34 @@ pub struct StepOutcome {
     pub done: bool,
 }
 
+/// Result of the submit phase of a split round ([`DecodeState::step_submit`]).
+pub enum SubmitOutcome {
+    /// The round submitted a target verification and suspended at its join
+    /// point; complete it with [`DecodeState::step_join`], optionally
+    /// fusing the in-flight pass first (`Session::verify_fuse`).
+    Submitted(VerifyTicket),
+    /// The round ran to completion without a suspendable verification
+    /// (terminal rounds, or engines that do not implement the split).
+    Done(StepOutcome),
+}
+
 /// Resumable per-request decode state: everything an engine's generation
 /// loop used to keep on the stack, hoisted so a scheduler can interleave
 /// rounds of many requests across one worker pool.
+///
+/// Implementors provide either [`DecodeState::step`] (one whole round), or
+/// the [`DecodeState::step_submit`]/[`DecodeState::step_join`] pair, which
+/// splits the round at its verification join point so a scheduler can fuse
+/// the in-flight target passes of *several requests* into one batched pass
+/// before any of them joins (the coordinator's `verify_batch` path). The
+/// default implementations express each form in terms of the other, so a
+/// split engine behaves identically when driven through plain `step`.
+///
+/// **You must override at least one of `step` / `step_submit`** — like
+/// `PartialOrd`'s method pairs, the defaults are mutually recursive, so an
+/// impl that overrides neither compiles but recurses infinitely on the
+/// first round (the `split_phases_match_plain_step` test exercises both
+/// forms for the engines that split).
 pub trait DecodeState: Send {
     /// Execute exactly one draft/verify round, committing at most
     /// `remaining` tokens to the session.
@@ -68,7 +93,35 @@ pub trait DecodeState: Send {
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
-    ) -> StepOutcome;
+    ) -> StepOutcome {
+        match self.step_submit(session, remaining, rng) {
+            SubmitOutcome::Done(out) => out,
+            SubmitOutcome::Submitted(_) => self.step_join(session, remaining, rng),
+        }
+    }
+
+    /// Drive the round up to (and including) its verification submission,
+    /// plus any work that overlaps the verification (branch run-ahead
+    /// drafting). Engines without a split round run the whole round here.
+    fn step_submit(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> SubmitOutcome {
+        SubmitOutcome::Done(self.step(session, remaining, rng))
+    }
+
+    /// Join the verification submitted by the last [`DecodeState::step_submit`]
+    /// and commit the round. Panics if no submit phase is pending.
+    fn step_join(
+        &mut self,
+        _session: &mut dyn Session,
+        _remaining: usize,
+        _rng: &mut Pcg32,
+    ) -> StepOutcome {
+        unreachable!("step_join without a split step_submit")
+    }
 }
 
 /// A decoding engine: drives one [`Session`] to continue one prompt.
@@ -120,6 +173,18 @@ pub struct DecodeTask {
     produced: usize,
     prompt_len: usize,
     done: bool,
+    /// Ticket of a round suspended at its verification join point
+    /// ([`DecodeTask::step_submit`] ran, [`DecodeTask::step_join`] has not).
+    pending_verify: Option<VerifyTicket>,
+}
+
+/// Outcome of [`DecodeTask::step_submit`].
+pub enum TaskPhase {
+    /// A verification is in flight; optionally [`DecodeTask::fuse_verify`],
+    /// then finish the round with [`DecodeTask::step_join`].
+    Submitted,
+    /// The round completed without a joinable verification.
+    Completed(StepOutcome),
 }
 
 impl DecodeTask {
@@ -141,18 +206,14 @@ impl DecodeTask {
             produced: 0,
             prompt_len: prompt.len(),
             done: budget == 0,
+            pending_verify: None,
         }
     }
 
-    /// Execute one draft/verify round. No-op once the task is done.
-    pub fn step(&mut self) -> StepOutcome {
-        if self.done {
-            return StepOutcome { new_tokens: Vec::new(), done: true };
-        }
-        let remaining = self.budget - self.produced;
-        let mut out = self.state.step(self.session.as_mut(), remaining, &mut self.rng);
+    /// Account a committed round against the budget.
+    fn absorb(&mut self, mut out: StepOutcome) -> StepOutcome {
         debug_assert!(
-            out.new_tokens.len() <= remaining,
+            out.new_tokens.len() <= self.budget - self.produced,
             "engine overshot its per-request budget"
         );
         self.produced += out.new_tokens.len();
@@ -161,6 +222,58 @@ impl DecodeTask {
         }
         self.done = out.done;
         out
+    }
+
+    /// Execute one draft/verify round. No-op once the task is done.
+    pub fn step(&mut self) -> StepOutcome {
+        if self.done {
+            return StepOutcome { new_tokens: Vec::new(), done: true };
+        }
+        let remaining = self.budget - self.produced;
+        let out = self.state.step(self.session.as_mut(), remaining, &mut self.rng);
+        self.absorb(out)
+    }
+
+    /// Drive one round to its verification join point (the first half of
+    /// [`DecodeTask::step`]). On [`TaskPhase::Submitted`] the scheduler may
+    /// fuse the in-flight pass with other requests' before joining; a task
+    /// that is done, or whose engine does not split rounds, completes the
+    /// round here and reports [`TaskPhase::Completed`].
+    pub fn step_submit(&mut self) -> TaskPhase {
+        if self.done {
+            return TaskPhase::Completed(StepOutcome { new_tokens: Vec::new(), done: true });
+        }
+        let remaining = self.budget - self.produced;
+        match self.state.step_submit(self.session.as_mut(), remaining, &mut self.rng) {
+            SubmitOutcome::Submitted(ticket) => {
+                self.pending_verify = Some(ticket);
+                TaskPhase::Submitted
+            }
+            SubmitOutcome::Done(out) => TaskPhase::Completed(self.absorb(out)),
+        }
+    }
+
+    /// True between a [`TaskPhase::Submitted`] submit phase and its join.
+    pub fn has_pending_verify(&self) -> bool {
+        self.pending_verify.is_some()
+    }
+
+    /// Re-price the suspended round's in-flight verification as one lane
+    /// of a fused cross-request target pass of `width` requests. No-op
+    /// without a pending verification or for `width <= 1`.
+    pub fn fuse_verify(&mut self, width: usize) {
+        if let Some(ticket) = self.pending_verify {
+            self.session.verify_fuse(ticket, width);
+        }
+    }
+
+    /// Finish a round suspended by [`DecodeTask::step_submit`]: join the
+    /// verification and commit. Panics without a pending submit phase.
+    pub fn step_join(&mut self) -> StepOutcome {
+        self.pending_verify.take().expect("step_join without a pending step_submit");
+        let remaining = self.budget - self.produced;
+        let out = self.state.step_join(self.session.as_mut(), remaining, &mut self.rng);
+        self.absorb(out)
     }
 
     pub fn is_done(&self) -> bool {
@@ -323,6 +436,43 @@ mod tests {
         let out = task.cancel();
         assert_eq!(out.tokens, streamed, "cancel returns exactly the partial output");
         assert_eq!(out.stats.generated_tokens as usize, produced);
+    }
+
+    #[test]
+    fn split_phases_match_plain_step() {
+        // The step_submit/step_join split (with a fused re-pricing in
+        // between) must produce exactly the token stream of plain step():
+        // fusing only touches the clock, never distributions.
+        let backend = sim_backend();
+        for engine_id in [EngineId::SpecBranch, EngineId::SpecBranchNoBranch] {
+            let engine = build(engine_id, EngineConfig::default());
+            let s1 = backend.new_session(9);
+            let mut plain = DecodeTask::new(engine.as_ref(), s1, &[1, 2, 3], 40, Pcg32::new(6));
+            let mut plain_tokens = Vec::new();
+            while !plain.is_done() {
+                plain_tokens.extend(plain.step().new_tokens);
+            }
+            let s2 = backend.new_session(9);
+            let mut split = DecodeTask::new(engine.as_ref(), s2, &[1, 2, 3], 40, Pcg32::new(6));
+            let mut split_tokens = Vec::new();
+            let mut submitted_rounds = 0;
+            while !split.is_done() {
+                match split.step_submit() {
+                    TaskPhase::Submitted => {
+                        submitted_rounds += 1;
+                        split.fuse_verify(4); // clock-only re-pricing
+                        split_tokens.extend(split.step_join().new_tokens);
+                    }
+                    TaskPhase::Completed(out) => split_tokens.extend(out.new_tokens),
+                }
+            }
+            assert!(submitted_rounds > 0, "{engine_id:?} must split its rounds");
+            assert_eq!(plain_tokens, split_tokens, "{engine_id:?} stream changed");
+            let plain_out = plain.finish();
+            let split_out = split.finish();
+            assert_eq!(plain_out.tokens, split_out.tokens);
+            assert_eq!(split_out.stats.fused_rounds, submitted_rounds);
+        }
     }
 
     #[test]

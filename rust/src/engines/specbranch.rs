@@ -28,13 +28,13 @@
 //! parallelism for memory-constrained deployments: per-round communication
 //! overhead + halved branch budget).
 
-use crate::backend::{BranchId, Session, VerifyOut};
+use crate::backend::{BranchId, Session, VerifyOut, VerifyTicket};
 use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
 use super::common::{has_room, pending_tokens, propose_chain, Proposal};
-use super::{DecodeState, Engine, StepOutcome};
+use super::{DecodeState, Engine, StepOutcome, SubmitOutcome};
 
 pub struct SpecBranch {
     cfg: EngineConfig,
@@ -102,6 +102,7 @@ impl Engine for SpecBranch {
                 wins: Proposal::default(),
                 wins_from_branch: false,
                 features: None,
+                pending: None,
             })
         } else {
             Box::new(SerialState {
@@ -109,6 +110,7 @@ impl Engine for SpecBranch {
                 use_hrad: self.use_hrad,
                 gamma_max,
                 features: None,
+                pending: None,
             })
         }
     }
@@ -160,6 +162,21 @@ struct ParallelState {
     /// Features of the last completed verification, at the last accepted
     /// position (posterior H-RAD input).
     features: Option<Vec<f32>>,
+    /// Round suspended at its verification join point
+    /// ([`DecodeState::step_submit`] ran, [`DecodeState::step_join`] has not).
+    pending: Option<PendingJoin>,
+}
+
+/// Everything the join phase needs that the submit phase computed. `wins`
+/// (the W under verification) stays on the state itself and is only
+/// replaced by the join phase.
+struct PendingJoin {
+    ticket: VerifyTicket,
+    /// Branch index b: how much of W was retained (Eq. 6).
+    b: usize,
+    /// Deterministic Top-k branch-point candidates, descending q(x_b).
+    candidates: Vec<Token>,
+    branches: Vec<BranchState>,
 }
 
 impl ParallelState {
@@ -174,19 +191,19 @@ impl ParallelState {
 }
 
 impl DecodeState for ParallelState {
-    fn step(
+    fn step_submit(
         &mut self,
         session: &mut dyn Session,
-        remaining: usize,
+        _remaining: usize,
         rng: &mut Pcg32,
-    ) -> StepOutcome {
+    ) -> SubmitOutcome {
+        debug_assert!(self.pending.is_none(), "step_submit while a join is pending");
         let gamma_max = self.gamma_max;
         let eps = self.cfg.epsilon;
         let t_draft = self.cfg.draft_temperature;
-        let t_target = self.cfg.target_temperature;
 
         if !has_room(session, 2 * gamma_max) {
-            return StepOutcome { new_tokens: Vec::new(), done: true };
+            return SubmitOutcome::Done(StepOutcome { new_tokens: Vec::new(), done: true });
         }
         // ---------------- Draft stage (Fig. 9 left) ----------------
         // Entered at the first round and after every rollback. H-RAD
@@ -316,6 +333,7 @@ impl DecodeState for ParallelState {
         let mut active: Vec<bool> = vec![true; k];
         for _step in 0..budget {
             let mut step_ids = Vec::with_capacity(k);
+            let mut step_slots = Vec::with_capacity(k);
             let mut toks = Vec::with_capacity(k);
             for (i, (bs, q_raw)) in branches.iter_mut().zip(&qs_next).enumerate() {
                 if !active[i] {
@@ -332,6 +350,7 @@ impl DecodeState for ParallelState {
                 bs.run_ahead.tokens.push(tok);
                 bs.run_ahead.qs.push(q);
                 step_ids.push(bs.id);
+                step_slots.push(i);
                 toks.push(tok);
             }
             if step_ids.is_empty() {
@@ -339,18 +358,36 @@ impl DecodeState for ParallelState {
             }
             if _step + 1 < budget {
                 let fresh = session.draft_forward_batch(&step_ids, &toks);
-                // Scatter refreshed distributions back to active slots.
-                let mut it = fresh.into_iter();
-                for (i, bs) in branches.iter().enumerate() {
-                    if active[i] && step_ids.contains(&bs.id) {
-                        qs_next[i] = it.next().unwrap();
-                    }
+                // Positional scatter: `fresh[j]` refreshes the slot that
+                // produced `step_ids[j]` — O(k) per step, not the old
+                // O(k²) per-branch `contains` scan.
+                for (&slot, q) in step_slots.iter().zip(fresh) {
+                    qs_next[slot] = q;
                 }
             }
         }
         if self.pp_mode {
             session.overhead(PP_COMM_MS);
         }
+
+        // Suspend at the join point: the scheduler may now fuse this
+        // round's in-flight target pass with other requests' before the
+        // join phase commits (`Session::verify_fuse`).
+        self.pending = Some(PendingJoin { ticket, b, candidates, branches });
+        SubmitOutcome::Submitted(ticket)
+    }
+
+    fn step_join(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        let PendingJoin { ticket, b, candidates, mut branches } =
+            self.pending.take().expect("step_join without a pending step_submit");
+        let k = candidates.len();
+        let t_target = self.cfg.target_temperature;
+        let retained: Vec<Token> = self.wins.tokens[..b].to_vec();
 
         // ---------------- Join verification ----------------
         let v: VerifyOut = session.verify_wait(ticket);
@@ -399,10 +436,17 @@ impl DecodeState for ParallelState {
         }
 
         // ---- Chain fully accepted: resolve the branch point (Alg. 2) ----
-        let p_bp = &ps[b];
-        let qs_cand: Vec<Vec<f32>> = (0..k).map(|_| q_b.clone()).collect();
+        // The candidates are the *deterministic* Top-k tokens of q(x_b),
+        // not samples drawn from it, so the general Alg. 2 acceptance rule
+        // (`branch_speculative_sample`, which assumes x_b^i ~ q_i) would
+        // bias the committed token away from p whenever the target
+        // temperature is nonzero. The point-mass specialisation — accept
+        // x_b^i with prob p(x_b^i), else deflate p ← norm(max(0, p −
+        // 1{x_b^i})) — is the lossless rule for deterministic candidates
+        // (SpecInfer-style multi-candidate verification; marginal
+        // preservation is property-tested through this exact path).
         let (bp_token, winner) =
-            sampling::branch_speculative_sample(p_bp, &candidates, &qs_cand, rng);
+            sampling::branch_topk_speculative_sample(&ps[b], &candidates, rng);
 
         let mut commit = retained.clone();
         commit.push(bp_token);
@@ -483,17 +527,26 @@ struct SerialState {
     use_hrad: bool,
     gamma_max: usize,
     features: Option<Vec<f32>>,
+    /// Round suspended between its verify submission and its join.
+    pending: Option<SerialPending>,
+}
+
+/// The serial round's state across the submit/join split.
+struct SerialPending {
+    ticket: VerifyTicket,
+    proposal: Proposal,
 }
 
 impl DecodeState for SerialState {
-    fn step(
+    fn step_submit(
         &mut self,
         session: &mut dyn Session,
-        remaining: usize,
+        _remaining: usize,
         rng: &mut Pcg32,
-    ) -> StepOutcome {
+    ) -> SubmitOutcome {
+        debug_assert!(self.pending.is_none(), "step_submit while a join is pending");
         if !has_room(session, self.gamma_max) {
-            return StepOutcome { new_tokens: Vec::new(), done: true };
+            return SubmitOutcome::Done(StepOutcome { new_tokens: Vec::new(), done: true });
         }
         let eps = self.cfg.epsilon;
         let last = *session.committed().last().unwrap();
@@ -514,6 +567,18 @@ impl DecodeState for SerialState {
         let mut block = vec![last];
         block.extend_from_slice(&proposal.tokens);
         let ticket = session.verify_submit(&block);
+        self.pending = Some(SerialPending { ticket, proposal });
+        SubmitOutcome::Submitted(ticket)
+    }
+
+    fn step_join(
+        &mut self,
+        session: &mut dyn Session,
+        remaining: usize,
+        rng: &mut Pcg32,
+    ) -> StepOutcome {
+        let SerialPending { ticket, proposal } =
+            self.pending.take().expect("step_join without a pending step_submit");
         let v = session.verify_wait(ticket);
         let ps: Vec<Vec<f32>> = v.ps[..proposal.len() + 1]
             .iter()

@@ -141,8 +141,12 @@ pub fn measure_accuracy(
         if session.draft_len(0) > want {
             session.draft_rollback(0, want);
         }
-        let row = r.n_accepted.min(v.features.len() - 1);
-        features = Some(v.features[row].clone());
+        // Total on feature-less backends: `len() - 1` underflowed (and
+        // `v.features[row]` panicked) when a verification returned no
+        // feature rows; without features the next round simply predicts
+        // nothing, same as the engines' saturating `get(row)` idiom.
+        let row = r.n_accepted.min(v.features.len().saturating_sub(1));
+        features = v.features.get(row).cloned();
     }
     report
 }
@@ -169,7 +173,97 @@ impl PredictorReport {
 mod tests {
     use super::*;
     use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::{BranchId, VerifyOut, VerifyTicket};
     use crate::config::{ModelPair, PairId, Task, TaskId};
+    use crate::metrics::DecodeStats;
+
+    /// A backend whose verifications return **no feature rows** — the
+    /// degenerate case that used to underflow `measure_accuracy`'s
+    /// `v.features.len() - 1`.
+    struct NoFeatureSession(Box<dyn Session + Send>);
+
+    impl Session for NoFeatureSession {
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn block(&self) -> usize {
+            self.0.block()
+        }
+        fn speed_ratio(&self) -> f64 {
+            self.0.speed_ratio()
+        }
+        fn prefill(&mut self, prompt: &[Token]) {
+            self.0.prefill(prompt)
+        }
+        fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32> {
+            self.0.draft_forward(branch, token)
+        }
+        fn draft_forward_batch(
+            &mut self,
+            branches: &[BranchId],
+            tokens: &[Token],
+        ) -> Vec<Vec<f32>> {
+            self.0.draft_forward_batch(branches, tokens)
+        }
+        fn draft_fork(&mut self, branch: BranchId) -> BranchId {
+            self.0.draft_fork(branch)
+        }
+        fn draft_release(&mut self, branch: BranchId) {
+            self.0.draft_release(branch)
+        }
+        fn draft_len(&self, branch: BranchId) -> usize {
+            self.0.draft_len(branch)
+        }
+        fn draft_rollback(&mut self, branch: BranchId, len: usize) {
+            self.0.draft_rollback(branch, len)
+        }
+        fn verify_submit(&mut self, tokens: &[Token]) -> VerifyTicket {
+            self.0.verify_submit(tokens)
+        }
+        fn verify_wait(&mut self, ticket: VerifyTicket) -> VerifyOut {
+            let mut v = self.0.verify_wait(ticket);
+            v.features.clear();
+            v
+        }
+        fn target_commit(&mut self, tokens: &[Token]) {
+            self.0.target_commit(tokens)
+        }
+        fn target_len(&self) -> usize {
+            self.0.target_len()
+        }
+        fn target_rollback(&mut self, len: usize) {
+            self.0.target_rollback(len)
+        }
+        fn hrad_predict(&mut self, features: &[f32], next_token: Token) -> [f32; 3] {
+            self.0.hrad_predict(features, next_token)
+        }
+        fn overhead(&mut self, ms: f64) {
+            self.0.overhead(ms)
+        }
+        fn committed(&self) -> &[Token] {
+            self.0.committed()
+        }
+        fn stats_mut(&mut self) -> &mut DecodeStats {
+            self.0.stats_mut()
+        }
+        fn take_stats(&mut self) -> DecodeStats {
+            self.0.take_stats()
+        }
+        fn capacity_left(&self) -> usize {
+            self.0.capacity_left()
+        }
+    }
+
+    struct NoFeatureBackend(SimBackend);
+
+    impl Backend for NoFeatureBackend {
+        fn new_session(&self, seed: u64) -> Box<dyn Session + Send> {
+            Box::new(NoFeatureSession(self.0.new_session(seed)))
+        }
+        fn name(&self) -> String {
+            format!("nofeat:{}", self.0.name())
+        }
+    }
 
     #[test]
     fn retention_rule() {
@@ -214,6 +308,20 @@ mod tests {
             acc16 > acc1,
             "accuracy should improve with K: K=1 {acc1:.3} vs K=16 {acc16:.3}"
         );
+    }
+
+    #[test]
+    fn zero_feature_backend_measures_without_panicking() {
+        // Regression: a backend returning no feature rows used to panic in
+        // `measure_accuracy` (`features.len() - 1` underflow). It must now
+        // run to completion and simply score no predictions.
+        let cfg = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::MtBench),
+        );
+        let rep = measure_accuracy(&NoFeatureBackend(SimBackend::new(cfg)), 6, 50, 3);
+        assert_eq!(rep.total, 0, "no features -> nothing to predict from");
+        assert_eq!(rep.accuracy(), 0.0);
     }
 
     #[test]

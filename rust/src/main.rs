@@ -57,6 +57,8 @@ fn print_help() {
                          --policy <rr|priority|edf>  scheduling policy\n\
                          --kv-watermark-mb <n>  KV admission watermark (0=off)\n\
                          --aging <rounds>  priority aging rate (0=off)\n\
+                         --verify-batch <n>  fuse up to n requests' verify\n\
+                                             blocks per target pass (1=off)\n\
          bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
                                 table5|table6|fig7|fig10|fig19|table12|all>\n\
                          [--fast]\n\
@@ -200,6 +202,7 @@ fn cmd_serve(args: &Args) -> i32 {
         },
         kv_bytes_per_token: None,
         aging_rounds: args.get_u64("aging", 8),
+        verify_batch: args.get_usize("verify-batch", 1),
     };
     let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched);
     let addr = args.get_or("addr", "127.0.0.1:7799");
@@ -211,10 +214,11 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving on {} (engine={} policy={})",
+        "serving on {} (engine={} policy={} verify-batch={})",
         server.local_addr(),
         engine_id.name(),
-        policy.name()
+        policy.name(),
+        sched.verify_batch.max(1)
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
@@ -272,16 +276,20 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     let mut runner = Runner::new(scale);
     let mut engines_json: Vec<(&str, json::Value)> = Vec::new();
     let mut measured: Vec<(&'static str, f64)> = Vec::new();
+    let mut single_specbranch_tps = 0.0f64;
     for engine in [EngineId::Sps, EngineId::SpecBranch] {
         let cfg = runner.engine_cfg(pair);
         let e = runner.evaluate(pair, task, engine, &cfg);
         println!(
-            "bench-smoke: {:<12} {:>8.1} tok/s  speedup {:.2}x  M {:.2}",
+            "bench-smoke: {:<18} {:>8.1} tok/s  speedup {:.2}x  M {:.2}",
             engine.name(),
             e.tokens_per_sec,
             e.speedup,
             e.mean_accepted()
         );
+        if engine == EngineId::SpecBranch {
+            single_specbranch_tps = e.tokens_per_sec;
+        }
         measured.push((engine.name(), e.tokens_per_sec));
         engines_json.push((
             engine.name(),
@@ -292,6 +300,44 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
                 ("rollback_rate", json::num(e.rollback_rate())),
             ]),
         ));
+    }
+    // Cross-request batched verification variant (`serve --verify-batch`):
+    // the same workload through the deterministic lockstep fused driver.
+    // Gate (always armed, no pinned baseline needed): the fused path must
+    // not regress tokens/sec vs the single-request path above.
+    let batched = {
+        let cfg = runner.engine_cfg(pair);
+        runner.run_engine_batched(pair, task, EngineId::SpecBranch, &cfg)
+    };
+    let batched_tps = batched.stats.tokens_per_sec();
+    println!(
+        "bench-smoke: {:<18} {:>8.1} tok/s  fused_passes {}  mean width {:.2}",
+        "specbranch-batched",
+        batched_tps,
+        batched.fused_passes,
+        batched.mean_fused_width()
+    );
+    measured.push(("specbranch-batched", batched_tps));
+    engines_json.push((
+        "specbranch-batched",
+        json::obj(vec![
+            ("tokens_per_sec", json::num(batched_tps)),
+            ("fused_passes", json::num(batched.fused_passes as f64)),
+            ("mean_fused_width", json::num(batched.mean_fused_width())),
+        ]),
+    ));
+    let mut failed = false;
+    if batched.fused_passes == 0 {
+        eprintln!("bench-smoke: FUSION MISSING: multi-request load issued no fused pass");
+        failed = true;
+    }
+    if batched_tps < single_specbranch_tps * (1.0 - tolerance) {
+        eprintln!(
+            "bench-smoke: REGRESSION specbranch-batched: {batched_tps:.1} tok/s < \
+             single-request floor {:.1}",
+            single_specbranch_tps * (1.0 - tolerance)
+        );
+        failed = true;
     }
     let report = json::obj(vec![
         (
@@ -312,7 +358,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     println!("bench-smoke: report written to {out_path}");
 
     let Some(baseline_path) = args.get("baseline") else {
-        return 0;
+        return if failed { 1 } else { 0 };
     };
     let text = match std::fs::read_to_string(baseline_path) {
         Ok(t) => t,
@@ -330,12 +376,12 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     };
     if matches!(base.get("bootstrap"), Some(json::Value::Bool(true))) {
         println!(
-            "bench-smoke: baseline is bootstrap-only — gate disarmed; \
-             replace {baseline_path} with a measured {out_path} to arm it"
+            "bench-smoke: baseline is bootstrap-only — absolute gate disarmed \
+             (the in-run fused-vs-single gate above stays armed); replace \
+             {baseline_path} with a measured {out_path} to arm it"
         );
-        return 0;
+        return if failed { 1 } else { 0 };
     }
-    let mut failed = false;
     for (name, tps) in &measured {
         let key = format!("engines.{name}.tokens_per_sec");
         let Some(b) = base.get(&key).and_then(|v| v.as_f64()) else {

@@ -36,6 +36,9 @@ pub struct DecodeStats {
     pub hrad_ms: f64,
     /// Branches spawned (SpecBranch only).
     pub branches_spawned: u64,
+    /// Verification rounds whose target pass ran as one lane of a fused
+    /// cross-request batch (`Session::verify_fuse`, width ≥ 2).
+    pub fused_rounds: u64,
     /// Tokens drafted on losing parallel branches. Excluded from RB per the
     /// paper's metric definition (App. E.3: RB counts chain rollbacks only,
     /// "excluding additional token loss due to branch and tree structures"),
@@ -99,6 +102,7 @@ impl DecodeStats {
         self.hrad_calls += other.hrad_calls;
         self.hrad_ms += other.hrad_ms;
         self.branches_spawned += other.branches_spawned;
+        self.fused_rounds += other.fused_rounds;
         self.branch_wasted_tokens += other.branch_wasted_tokens;
         self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
         if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {

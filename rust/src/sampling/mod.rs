@@ -6,7 +6,13 @@
 //! paper's **Branch Speculative Sampling** (Algorithm 2), which verifies k
 //! candidate branch-point tokens while provably preserving the target
 //! distribution (Table 6's losslessness claim; pinned by unit + property
-//! tests and the `table6_lossless` bench).
+//! tests and the `table6_lossless` bench). Algorithm 2 comes in two
+//! losslessness-preserving forms with different candidate contracts:
+//! [`branch_speculative_sample`] for candidates *drawn from* their draft
+//! distributions, and [`branch_topk_speculative_sample`] for
+//! **deterministic Top-k** candidates (the engine's branch-point path) —
+//! feeding deterministic candidates to the former biases the committed
+//! token whenever the target temperature is nonzero.
 
 use crate::util::prng::Pcg32;
 
@@ -56,13 +62,30 @@ pub fn softmax(logits: &[f32], temperature: f64, out: &mut Vec<f32>) {
 
 /// Re-temper a (temperature-1) probability distribution: `p^(1/T)`
 /// renormalised; `T == 0` gives the greedy one-hot; `T == 1` is identity.
+///
+/// Total on degenerate input, like `softmax`/`top_k_indices`: empty input
+/// yields an empty distribution, NaN entries get zero mass (and are never
+/// chosen by the greedy one-hot), and an all-NaN/all-zero input falls back
+/// to uniform so callers always receive a valid distribution.
 pub fn apply_temperature(dist: &[f32], temperature: f64) -> Vec<f32> {
+    if dist.is_empty() {
+        return Vec::new();
+    }
     if temperature <= 0.0 {
         let mut out = vec![0.0; dist.len()];
-        out[argmax(dist)] = 1.0;
+        let best = argmax(dist);
+        if dist[best].is_nan() || dist[best] <= 0.0 {
+            // No usable mass anywhere: uniform fallback.
+            let u = 1.0 / dist.len() as f32;
+            for x in out.iter_mut() {
+                *x = u;
+            }
+            return out;
+        }
+        out[best] = 1.0;
         return out;
     }
-    if (temperature - 1.0).abs() < 1e-9 {
+    if (temperature - 1.0).abs() < 1e-9 && dist.iter().all(|x| !x.is_nan()) {
         return dist.to_vec();
     }
     let inv_t = 1.0 / temperature;
@@ -71,7 +94,14 @@ pub fn apply_temperature(dist: &[f32], temperature: f64) -> Vec<f32> {
         .map(|&p| if p > 0.0 { (p as f64).powf(inv_t) as f32 } else { 0.0 })
         .collect();
     let sum: f32 = out.iter().sum();
-    let inv = 1.0 / sum.max(1e-30);
+    if sum <= 0.0 {
+        let u = 1.0 / out.len() as f32;
+        for x in out.iter_mut() {
+            *x = u;
+        }
+        return out;
+    }
+    let inv = 1.0 / sum;
     for x in out.iter_mut() {
         *x *= inv;
     }
@@ -229,6 +259,51 @@ pub fn branch_speculative_sample(
         std::mem::swap(&mut p_cur, &mut scratch);
     }
     (sample(&p_cur, rng), None)
+}
+
+/// Branch Speculative Sampling for **deterministic Top-k** candidates —
+/// the rule the engine's branch-point candidate-selection path needs.
+///
+/// [`branch_speculative_sample`] is lossless only when each candidate is
+/// *drawn from* its draft distribution `q_i`. The SpecBranch engine instead
+/// branches on the deterministic Top-k tokens of the branch-point draft
+/// distribution, i.e. each candidate comes from the point mass
+/// `q_i = 1{x_b^i}`. Specialising Algorithm 2 to point-mass drafts (the
+/// SpecInfer-style multi-candidate verification rule) gives:
+///
+/// * accept candidate `x_b^i` with probability `p_cur(x_b^i)`;
+/// * on rejection deflate `p_cur ← norm(max(0, p_cur − 1{x_b^i}))` — zero
+///   the candidate's entry and renormalise;
+/// * if every candidate is rejected, sample from the final residual.
+///
+/// Each accept/deflate step is one exact speculative-sampling step against
+/// a point-mass draft, so the returned token is distributed exactly as `p`
+/// for **any** candidate set with distinct tokens — no distributional
+/// assumption on how the candidates were chosen (lossless; property-tested
+/// through the engine's Top-k path). The deflation is implemented by
+/// tracking the remaining mass instead of renormalising per rejection.
+pub fn branch_topk_speculative_sample(
+    p: &[f32],
+    candidates: &[Token],
+    rng: &mut Pcg32,
+) -> (Token, Option<usize>) {
+    debug_assert!(!p.is_empty());
+    let mut p_cur: Vec<f32> = p.to_vec();
+    let mut mass: f64 = p_cur.iter().map(|&x| x.max(0.0) as f64).sum();
+    for (i, &tok) in candidates.iter().enumerate() {
+        if mass <= 0.0 {
+            break;
+        }
+        let pi = (p_cur[tok as usize].max(0.0) as f64).min(mass);
+        if rng.next_f64() < pi / mass {
+            return (tok, Some(i));
+        }
+        mass -= pi;
+        p_cur[tok as usize] = 0.0;
+    }
+    // All candidates rejected: sample from the residual (`categorical`
+    // accepts unnormalised weights and falls back to uniform on zero mass).
+    (rng.categorical(&p_cur) as Token, None)
 }
 
 /// Adaptive branch width (Eq. 7): `k = max(1, floor(k_max · (1 − q(x_b))))`,
@@ -399,6 +474,72 @@ mod tests {
     }
 
     #[test]
+    fn apply_temperature_is_total_on_degenerate_input() {
+        // Empty input: empty output at every temperature, no panic (the
+        // old code indexed `out[argmax(dist)]` into an empty vec at T=0).
+        assert!(apply_temperature(&[], 0.0).is_empty());
+        assert!(apply_temperature(&[], 1.0).is_empty());
+        assert!(apply_temperature(&[], 0.5).is_empty());
+        // NaN entries get zero mass; the rest still normalises.
+        let out = apply_temperature(&[0.5, f32::NAN, 0.5], 0.5);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1], 0.0);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Greedy never picks a NaN entry.
+        let out = apply_temperature(&[0.2, f32::NAN, 0.8], 0.0);
+        assert_eq!(out, vec![0.0, 0.0, 1.0]);
+        // All-NaN / all-zero input: uniform fallback, still a distribution.
+        assert_eq!(apply_temperature(&[f32::NAN, f32::NAN], 0.0), vec![0.5, 0.5]);
+        assert_eq!(apply_temperature(&[0.0, 0.0], 2.0), vec![0.5, 0.5]);
+        // Identity and greedy still behave on healthy input.
+        let p = dist(&[0.1, 0.6, 0.3]);
+        assert_eq!(apply_temperature(&p, 1.0), p);
+        assert_eq!(apply_temperature(&p, 0.0), vec![0.0, 1.0, 0.0]);
+    }
+
+    /// The tentpole losslessness fix, end-to-end through the **engine's**
+    /// candidate-selection path: candidates are the deterministic Top-k of
+    /// the draft distribution (`top_k_indices`, exactly what
+    /// `engines::specbranch` feeds the branch point), not samples from it.
+    /// The committed branch-point token must still be marginally `p`.
+    #[test]
+    fn topk_branch_sampling_preserves_target_marginal() {
+        let mut rng = Pcg32::new(123);
+        let p = dist(&[0.35, 0.3, 0.2, 0.1, 0.05]);
+        // A deliberately misaligned draft: its Top-k order disagrees with p.
+        let q = dist(&[0.05, 0.15, 0.1, 0.4, 0.3]);
+        let n = 200_000;
+        for k in [1usize, 2, 3] {
+            let candidates: Vec<Token> =
+                top_k_indices(&q, k).into_iter().map(|i| i as Token).collect();
+            let mut counts = [0u64; 5];
+            for _ in 0..n {
+                let (tok, _) = branch_topk_speculative_sample(&p, &candidates, &mut rng);
+                counts[tok as usize] += 1;
+            }
+            let emp: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+            let pd: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+            assert!(tv_distance(&emp, &pd) < 0.01, "k={k}: {emp:?} vs {pd:?}");
+        }
+    }
+
+    #[test]
+    fn topk_branch_sampling_winner_matches_candidate() {
+        // Whenever a winner index is reported, the token is that candidate;
+        // with the target mass entirely on candidate 0, it always wins.
+        let mut rng = Pcg32::new(5);
+        let p = vec![1.0f32, 0.0, 0.0];
+        let (tok, win) = branch_topk_speculative_sample(&p, &[0, 1], &mut rng);
+        assert_eq!((tok, win), (0, Some(0)));
+        // Target forbids every candidate: residual sample, no winner.
+        let p = vec![0.0f32, 0.0, 1.0];
+        let (tok, win) = branch_topk_speculative_sample(&p, &[0, 1], &mut rng);
+        assert_eq!((tok, win), (2, None));
+    }
+
+    #[test]
     fn adaptive_width_scales_inverse_confidence() {
         assert_eq!(adaptive_branch_width(0.95, 6), 1);
         assert_eq!(adaptive_branch_width(0.5, 6), 3);
@@ -469,6 +610,37 @@ mod tests {
                 p[tok as usize] > 0.0,
                 "sampled token {tok} outside support of p"
             );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_topk_branch_sample_token_in_support_of_p() {
+        check("topk branch support", 300, |g: &mut Gen| {
+            let n = g.usize_in(2, 12);
+            let k = g.usize_in(1, 4);
+            let mut p = g.distribution(n);
+            let zero = g.usize_in(0, n - 1);
+            let removed = p[zero];
+            p[zero] = 0.0;
+            let rest: f32 = 1.0 - removed;
+            for x in p.iter_mut() {
+                *x /= rest.max(1e-6);
+            }
+            // The engine's path: deterministic Top-k of a draft distribution.
+            let q = g.distribution(n);
+            let cands: Vec<Token> =
+                top_k_indices(&q, k).into_iter().map(|i| i as Token).collect();
+            let mut rng = Pcg32::new(g.rng.next_u64());
+            let (tok, winner) = branch_topk_speculative_sample(&p, &cands, &mut rng);
+            prop_assert!((tok as usize) < n);
+            prop_assert!(
+                p[tok as usize] > 0.0,
+                "sampled token {tok} outside support of p"
+            );
+            if let Some(i) = winner {
+                prop_assert!(cands[i] == tok, "winner index must name the token");
+            }
             Ok(())
         });
     }

@@ -103,6 +103,9 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                     "kv_projected_peak_bytes",
                     json::num(m.kv_projected_peak_bytes as f64),
                 ),
+                ("batched_rounds", json::num(m.batched_rounds as f64)),
+                ("fused_requests", json::num(m.fused_requests as f64)),
+                ("mean_fused_width", json::num(m.mean_fused_width)),
                 ("mean_queue_ms", json::num(m.mean_queue_ms)),
                 ("mean_decode_ms", json::num(m.mean_decode_ms)),
             ]);

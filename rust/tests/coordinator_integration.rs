@@ -445,6 +445,144 @@ fn shutdown_drains_requests_deferred_by_admission_control() {
 }
 
 #[test]
+fn fused_verification_keeps_registry_invariant_under_mixed_cancellation() {
+    // The PR 1/2 acceptance invariant under the fused-verification
+    // scheduler: cancellations interleaved with completions, rounds running
+    // as cross-request batched target passes — the registry token count
+    // must still equal the sum of per-response stats (partial tokens
+    // included) and the KV projection must drain to zero.
+    let coord = Coordinator::start_with(
+        backends(2),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+        SchedulerConfig { verify_batch: 4, ..Default::default() },
+    );
+    let ids: Vec<u64> = (0..8).map(|i| coord.submit(vec![1, 2, 3], 1500, i)).collect();
+    assert!(coord.cancel(ids[2]));
+    assert!(coord.cancel(ids[5]));
+    let mut stats_sum = 0u64;
+    let mut cancelled = 0;
+    let mut completed = 0;
+    for _ in 0..ids.len() {
+        let r = coord.collect();
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+        stats_sum += r.stats.generated_tokens;
+        match r.status {
+            ResponseStatus::Cancelled => {
+                cancelled += 1;
+                assert!(r.tokens.len() < 1500);
+                assert!(r.id == ids[2] || r.id == ids[5]);
+            }
+            ResponseStatus::Completed => {
+                completed += 1;
+                assert_eq!(r.tokens.len(), 1500);
+            }
+        }
+    }
+    assert_eq!(cancelled, 2);
+    assert_eq!(completed, 6);
+    let snap = coord.registry();
+    assert_eq!(snap.cancelled, 2);
+    assert_eq!(snap.completed, 6);
+    assert_eq!(
+        snap.generated_tokens, stats_sum,
+        "registry == sum of per-request stats under fused passes + cancellation"
+    );
+    assert!(snap.batched_rounds > 0, "the workload must actually fuse");
+    assert!(snap.mean_fused_width > 1.0);
+    assert_eq!(coord.kv_projected_in_use(), 0);
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn fused_streams_match_unbatched_across_workers() {
+    // Greedy losslessness through the serving path: the per-request token
+    // streams of a fused-verification coordinator must be byte-identical
+    // to the unbatched coordinator's (fusing re-prices the clock only).
+    let run = |verify_batch: usize| -> Vec<(u64, Vec<u32>)> {
+        let coord = Coordinator::start_with(
+            backends(2),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 40, ..Default::default() },
+            SchedulerConfig { verify_batch, ..Default::default() },
+        );
+        for i in 0..10u64 {
+            coord.submit(vec![1, 2, 3, 1 + (i as u32 % 5)], 40, i);
+        }
+        let mut out: Vec<(u64, Vec<u32>)> = (0..10)
+            .map(|_| {
+                let r = coord.collect();
+                (r.id, r.tokens)
+            })
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        coord.shutdown();
+        out
+    };
+    assert_eq!(run(1), run(4), "fused and unbatched streams must match");
+}
+
+#[test]
+fn edf_orders_the_batch_composition() {
+    // verify_batch=2, one worker, three deadlined requests with a strict
+    // EDF order B < A < C. Every width-2 batch while B lives must be
+    // composed as {B, A} — C is excluded from the batch until B retires —
+    // so B (short) completes first, and A (which rode every cycle) beats C
+    // (which only started once B freed its lane). Completion order: B, A, C.
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 512, ..Default::default() },
+        SchedulerConfig {
+            policy: SchedulePolicy::EarliestDeadline,
+            verify_batch: 2,
+            ..Default::default()
+        },
+    );
+    let deadline = |ms: u64| SubmitOpts { deadline_ms: Some(ms), ..Default::default() };
+    let a = coord.submit_opts(vec![1, 2, 3], 400, 1, deadline(60_000));
+    let b = coord.submit_opts(vec![4, 5, 6], 150, 2, deadline(30_000));
+    let c = coord.submit_opts(vec![7, 8, 9], 400, 3, deadline(90_000));
+    let order: Vec<u64> = (0..3).map(|_| coord.collect().id).collect();
+    assert_eq!(
+        order,
+        vec![b, a, c],
+        "EDF must order the fused batch composition by deadline"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn priority_orders_the_batch_composition() {
+    // Same shape under the priority policy (aging off) with a strict
+    // priority order B > A > C: B rides every width-2 batch until done, A
+    // holds the second lane, C waits for a free lane.
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::Autoregressive,
+        EngineConfig { max_new_tokens: 512, ..Default::default() },
+        SchedulerConfig {
+            policy: SchedulePolicy::Priority,
+            aging_rounds: 0,
+            verify_batch: 2,
+            ..Default::default()
+        },
+    );
+    let pri = |p: i32| SubmitOpts { priority: p, ..Default::default() };
+    let a = coord.submit_opts(vec![1, 2, 3], 400, 1, pri(3));
+    let b = coord.submit_opts(vec![4, 5, 6], 150, 2, pri(5));
+    let c = coord.submit_opts(vec![7, 8, 9], 400, 3, pri(1));
+    let order: Vec<u64> = (0..3).map(|_| coord.collect().id).collect();
+    assert_eq!(
+        order,
+        vec![b, a, c],
+        "priority must order the fused batch composition"
+    );
+    coord.shutdown();
+}
+
+#[test]
 fn queue_delay_visible_under_backlog() {
     let coord = Coordinator::start(
         backends(1),
