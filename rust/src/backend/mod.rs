@@ -114,7 +114,10 @@ pub trait Session {
     /// Process the prompt on both models. Must be called exactly once,
     /// first. After prefill the draft main branch and the target have both
     /// consumed `prompt[..len-1]`, so the next draft/verify block starts
-    /// with the last prompt token.
+    /// with the last prompt token. Backends with a timing model price
+    /// prefill proportionally to the context length (the sim charges one
+    /// draft+target pass per `block()` chunk), which is what makes the
+    /// repeat-prefill cost of preempting and resuming a request visible.
     fn prefill(&mut self, prompt: &[Token]);
 
     /// One draft forward on `branch`: consume `token`, return the draft

@@ -385,13 +385,21 @@ impl Session for SimSession {
         self.kv.append(seq, main.len().max(1));
         self.kv_seqs.insert(0, seq);
         self.branches.push(Some(main));
-        // Prefill cost: one draft pass + one target pass over the prompt,
-        // processed block-parallel (a single forward each).
-        self.clock.draft_busy(self.cfg.pair.draft_ms);
-        let ready = self.clock.target_busy_async(self.cfg.pair.target_ms());
+        // Prefill cost: both models process the context block-parallel, in
+        // chunks of the backend's max verify block — one draft pass + one
+        // target pass per chunk. Short fresh prompts keep the old one-pass
+        // cost; a long context (notably the `prompt ⊕ committed` re-prefill
+        // of a preempted-then-resumed request) is priced proportionally to
+        // its length, so preemption's repeat-prefill work is visible on the
+        // virtual clock.
+        let passes = prompt.len().div_ceil(self.cfg.block).max(1) as f64;
+        let draft_ms = self.cfg.pair.draft_ms * passes;
+        let target_ms = self.cfg.pair.target_ms() * passes;
+        self.clock.draft_busy(draft_ms);
+        let ready = self.clock.target_busy_async(target_ms);
         self.clock.join(ready);
-        self.stats.draft_busy_ms += self.cfg.pair.draft_ms;
-        self.stats.target_busy_ms += self.cfg.pair.target_ms();
+        self.stats.draft_busy_ms += draft_ms;
+        self.stats.target_busy_ms += target_ms;
         self.note_kv_peak();
     }
 
@@ -822,6 +830,32 @@ mod tests {
             assert!(s <= prev, "sigma must not increase with K");
             prev = s;
         }
+    }
+
+    #[test]
+    fn prefill_cost_scales_with_context_length() {
+        // Re-prefill pricing for preemption/resume: a context longer than
+        // one verify block costs proportionally more (ceil(len/block)
+        // draft+target passes), while short prompts keep the one-pass cost.
+        let pair = ModelPair::get(PairId::Llama68m7b);
+        let one_pass = pair.draft_ms + pair.target_ms();
+        let cost = |len: usize| -> f64 {
+            let mut s = session(PairId::Llama68m7b, TaskId::MtBench, 5);
+            let prompt: Vec<Token> = (0..len as u32).map(|i| i % 60).collect();
+            s.prefill(&prompt);
+            s.clock.now
+        };
+        let block = SimConfig::new(
+            ModelPair::get(PairId::Llama68m7b),
+            Task::get(TaskId::MtBench),
+        )
+        .block;
+        assert!((cost(3) - one_pass).abs() < 1e-9, "short prompt = one pass");
+        assert!((cost(block) - one_pass).abs() < 1e-9, "exactly one block = one pass");
+        assert!(
+            (cost(3 * block + 1) - 4.0 * one_pass).abs() < 1e-9,
+            "3 blocks + 1 token = four passes"
+        );
     }
 
     #[test]

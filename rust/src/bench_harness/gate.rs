@@ -1,0 +1,462 @@
+//! CI bench-smoke gates, shared by the `bench-smoke` CLI subcommand and
+//! the tier-1 test suite — so the exact comparisons CI enforces are the
+//! ones `cargo test` verifies on every run.
+//!
+//! Three layers:
+//!
+//! 1. [`smoke_measurements`] — the fixed deterministic workload (virtual
+//!    clock, bit-stable across machines) whose tokens/sec feed both the
+//!    report (`BENCH_ci.json`) and the absolute baseline comparison.
+//! 2. [`preempt_smoke`] — the armed **in-run** preemption scenario: a
+//!    tight watermark + mixed priorities through the real coordinator;
+//!    asserts preemptions actually occur, streams stay byte-identical to
+//!    the unpreempted run, and throughput stays within tolerance of the
+//!    no-preemption path measured in the same invocation.
+//! 3. [`check_baseline`] — the absolute regression gate against the
+//!    committed `.github/bench_baseline.json`. A baseline carrying
+//!    `"bootstrap": true` disarms only this layer; once armed, a missing
+//!    engine key is a failure (renaming an engine cannot silently disarm
+//!    the gate).
+
+use std::collections::HashMap;
+
+use crate::backend::sim::{SimBackend, SimConfig};
+use crate::backend::Backend;
+use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use crate::coordinator::{
+    projected_admission_bytes, Coordinator, RegistrySnapshot, SchedulePolicy, SchedulerConfig,
+    SubmitOpts,
+};
+use crate::metrics::DecodeStats;
+use crate::sampling::Token;
+use crate::util::json;
+
+use super::runner::{default_gamma, Runner, Scale};
+
+/// One gated engine entry of the smoke workload.
+pub struct SmokeEntry {
+    pub name: &'static str,
+    pub tokens_per_sec: f64,
+    /// Report fields for this entry in `BENCH_ci.json`.
+    pub detail: json::Value,
+}
+
+/// The fixed smoke workload's measurements. The workload (pair, task,
+/// request count, budgets) must stay stable or the committed baseline is
+/// invalid.
+pub struct SmokeRun {
+    pub workload: json::Value,
+    pub entries: Vec<SmokeEntry>,
+    specbranch_tps: f64,
+    batched_tps: f64,
+    batched_fused_passes: u64,
+}
+
+/// Run the fixed smoke workload: SpS and SpecBranch through the step-wise
+/// runner, plus the fused `--verify-batch` path through the deterministic
+/// lockstep driver. Virtual-clock numbers — bit-deterministic across
+/// machines.
+pub fn smoke_measurements() -> SmokeRun {
+    let scale = Scale { requests: 3, max_new: 96 };
+    let pair = PairId::Vicuna68m13b;
+    let task = TaskId::MtBench;
+    let mut runner = Runner::new(scale);
+    let mut entries = Vec::new();
+    let mut specbranch_tps = 0.0f64;
+    for engine in [EngineId::Sps, EngineId::SpecBranch] {
+        let cfg = runner.engine_cfg(pair);
+        let e = runner.evaluate(pair, task, engine, &cfg);
+        if engine == EngineId::SpecBranch {
+            specbranch_tps = e.tokens_per_sec;
+        }
+        entries.push(SmokeEntry {
+            name: engine.name(),
+            tokens_per_sec: e.tokens_per_sec,
+            detail: json::obj(vec![
+                ("tokens_per_sec", json::num(e.tokens_per_sec)),
+                ("speedup", json::num(e.speedup)),
+                ("mean_accepted", json::num(e.mean_accepted())),
+                ("rollback_rate", json::num(e.rollback_rate())),
+            ]),
+        });
+    }
+    // Cross-request batched verification (`serve --verify-batch`): the same
+    // workload through the deterministic lockstep fused driver.
+    let cfg = runner.engine_cfg(pair);
+    let batched = runner.run_engine_batched(pair, task, EngineId::SpecBranch, &cfg);
+    let batched_tps = batched.stats.tokens_per_sec();
+    entries.push(SmokeEntry {
+        name: "specbranch-batched",
+        tokens_per_sec: batched_tps,
+        detail: json::obj(vec![
+            ("tokens_per_sec", json::num(batched_tps)),
+            ("fused_passes", json::num(batched.fused_passes as f64)),
+            ("mean_fused_width", json::num(batched.mean_fused_width())),
+        ]),
+    });
+    let workload = json::obj(vec![
+        ("pair", json::s(ModelPair::get(pair).name)),
+        ("task", json::s(Task::get(task).name)),
+        ("requests", json::num(scale.requests as f64)),
+        ("max_new", json::num(scale.max_new as f64)),
+    ]);
+    SmokeRun {
+        workload,
+        entries,
+        specbranch_tps,
+        batched_tps,
+        batched_fused_passes: batched.fused_passes,
+    }
+}
+
+impl SmokeRun {
+    /// `(name, tokens/sec)` pairs the absolute baseline gate compares.
+    pub fn measured(&self) -> Vec<(&'static str, f64)> {
+        self.entries.iter().map(|e| (e.name, e.tokens_per_sec)).collect()
+    }
+
+    /// In-run fused gate (always armed, no pinned baseline needed): the
+    /// fused `--verify-batch` path must issue fused passes and must not
+    /// regress tokens/sec beyond `tolerance` vs the single-request path
+    /// measured in the same invocation.
+    pub fn fused_failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.batched_fused_passes == 0 {
+            f.push("FUSION MISSING: multi-request load issued no fused pass".to_string());
+        }
+        let floor = self.specbranch_tps * (1.0 - tolerance);
+        if self.batched_tps < floor {
+            f.push(format!(
+                "REGRESSION specbranch-batched: {:.1} tok/s < single-request floor {:.1}",
+                self.batched_tps, floor
+            ));
+        }
+        f
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-run preemption gate
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-preempt` scenario: one low-priority victim
+/// plus a burst of higher-priority riders under a watermark that fits the
+/// victim alone, with [`SchedulerConfig::preempt`] armed — against the same
+/// submissions unconstrained.
+pub struct PreemptSmoke {
+    /// Merged virtual-clock tokens/sec of the preempted run (includes the
+    /// victim's repeat-prefill cost).
+    pub tokens_per_sec: f64,
+    /// Merged tokens/sec of the unconstrained (no-preemption) run.
+    pub reference_tokens_per_sec: f64,
+    /// Every request's token stream matched the unconstrained run's.
+    pub streams_match: bool,
+    /// Registry snapshot of the preempted run (preemptions, resumes,
+    /// repeat-prefill tokens, reclaimed KV bytes...).
+    pub registry: RegistrySnapshot,
+}
+
+/// Run the tight-watermark + mixed-priority preemption scenario through
+/// the real coordinator (one worker). The token streams are deterministic
+/// (greedy sim decoding); only the preemption *point* — and with it the
+/// exact repeat-prefill cost — depends on thread timing, which is why this
+/// entry gates in-run against its own reference instead of an absolute
+/// baseline.
+pub fn preempt_smoke() -> PreemptSmoke {
+    // The victim budget is sized so the victim is still decoding (~150
+    // rounds left) when the rider burst lands right after its first
+    // streamed round, and so the worst-case repeat-prefill cost stays
+    // well inside the default 15% tolerance of the merged throughput.
+    const VICTIM_BUDGET: usize = 512;
+    const RIDER_BUDGET: usize = 64;
+    let pair = PairId::Vicuna68m13b;
+    let task = TaskId::MtBench;
+    let engine_cfg = EngineConfig {
+        gamma: default_gamma(pair),
+        max_new_tokens: 96,
+        ..Default::default()
+    };
+    let backends = || -> Vec<Box<dyn Backend + Send>> {
+        vec![Box::new(SimBackend::new(SimConfig::new(
+            ModelPair::get(pair),
+            Task::get(task),
+        )))]
+    };
+    let victim_prompt: Vec<Token> = (0..16u32).map(|i| 1 + (i % 7)).collect();
+    let rider_prompt = |j: usize| -> Vec<Token> { vec![2 + j as Token, 3, 4, 5] };
+
+    let sched_ref = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    // Watermark: fits the victim alone, but not the victim plus one rider —
+    // the rider burst must preempt to get in.
+    let proj_victim =
+        projected_admission_bytes(victim_prompt.len(), VICTIM_BUDGET, &engine_cfg, &sched_ref);
+    let proj_rider = projected_admission_bytes(4, RIDER_BUDGET, &engine_cfg, &sched_ref);
+    let sched_tight = SchedulerConfig {
+        kv_watermark_bytes: Some(proj_victim + proj_rider / 2),
+        preempt: true,
+        ..sched_ref
+    };
+
+    type RunOut = (HashMap<u64, (Vec<Token>, DecodeStats)>, RegistrySnapshot);
+    let run = |sched: SchedulerConfig, handshake: bool| -> RunOut {
+        let coord =
+            Coordinator::start_with(backends(), EngineId::SpecBranch, engine_cfg.clone(), sched);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut n = 1;
+        coord.submit_opts(
+            victim_prompt.clone(),
+            VICTIM_BUDGET,
+            71,
+            SubmitOpts { stream: Some(tx), ..Default::default() },
+        );
+        if handshake {
+            // Wait for the victim's first committed round, so the rider
+            // burst arrives mid-flight and must preempt rather than defer.
+            let _ = rx.recv();
+        }
+        drop(rx);
+        for j in 0..4usize {
+            coord.submit_opts(
+                rider_prompt(j),
+                RIDER_BUDGET,
+                100 + j as u64,
+                SubmitOpts { priority: if j == 0 { 9 } else { 5 }, ..Default::default() },
+            );
+            n += 1;
+        }
+        let mut out = HashMap::new();
+        for _ in 0..n {
+            let r = coord.collect();
+            out.insert(r.id, (r.tokens, r.stats));
+        }
+        let snap = coord.registry();
+        coord.shutdown();
+        (out, snap)
+    };
+
+    let (reference, _) = run(sched_ref, false);
+    let (preempted, registry) = run(sched_tight, true);
+
+    let tps = |m: &HashMap<u64, (Vec<Token>, DecodeStats)>| -> f64 {
+        let tokens: u64 = m.values().map(|(_, s)| s.generated_tokens).sum();
+        let ms: f64 = m.values().map(|(_, s)| s.elapsed_ms).sum();
+        if ms <= 0.0 {
+            0.0
+        } else {
+            tokens as f64 * 1000.0 / ms
+        }
+    };
+    let streams_match = reference.len() == preempted.len()
+        && reference
+            .iter()
+            .all(|(id, (toks, _))| preempted.get(id).map(|(t, _)| t == toks).unwrap_or(false));
+    PreemptSmoke {
+        tokens_per_sec: tps(&preempted),
+        reference_tokens_per_sec: tps(&reference),
+        streams_match,
+        registry,
+    }
+}
+
+impl PreemptSmoke {
+    /// The armed in-run assertions for the `specbranch-preempt` entry.
+    pub fn failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.registry.preemptions == 0 {
+            f.push(
+                "specbranch-preempt: tight watermark + mixed priorities never preempted"
+                    .to_string(),
+            );
+        } else if self.registry.kv_reclaimed_bytes == 0 {
+            f.push("specbranch-preempt: preemption reclaimed no KV bytes".to_string());
+        }
+        if self.registry.resumed != self.registry.preemptions {
+            f.push(format!(
+                "specbranch-preempt: {} preemptions vs {} resumes (must pair up)",
+                self.registry.preemptions, self.registry.resumed
+            ));
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-preempt: streams diverged from the unconstrained run".to_string(),
+            );
+        }
+        let floor = self.reference_tokens_per_sec * (1.0 - tolerance);
+        if self.tokens_per_sec < floor {
+            f.push(format!(
+                "REGRESSION specbranch-preempt: {:.1} tok/s < floor {:.1} \
+                 (no-preemption path {:.1} in the same invocation)",
+                self.tokens_per_sec, floor, self.reference_tokens_per_sec
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-preempt` entry of `BENCH_ci.json`.
+    /// `in_run_gate_only` marks the entry as excluded from the absolute
+    /// baseline comparison (the preemption point is thread-timing
+    /// dependent, so its absolute tokens/sec is not bit-stable).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("tokens_per_sec", json::num(self.tokens_per_sec)),
+            ("reference_tokens_per_sec", json::num(self.reference_tokens_per_sec)),
+            ("preemptions", json::num(self.registry.preemptions as f64)),
+            ("resumed", json::num(self.registry.resumed as f64)),
+            (
+                "repeat_prefill_tokens",
+                json::num(self.registry.repeat_prefill_tokens as f64),
+            ),
+            ("kv_reclaimed_bytes", json::num(self.registry.kv_reclaimed_bytes as f64)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Absolute baseline gate
+// ---------------------------------------------------------------------------
+
+/// Outcome of the absolute baseline comparison.
+pub struct BaselineGate {
+    /// The baseline carries `"bootstrap": true`: this layer is disarmed
+    /// (the in-run gates above still apply).
+    pub disarmed: bool,
+    /// Human-readable failures; empty means the gate passed.
+    pub failures: Vec<String>,
+    /// Per-engine pass notes.
+    pub passes: Vec<String>,
+}
+
+/// Compare measured tokens/sec against the committed baseline: each
+/// measured entry must stay at or above `baseline × (1 − tolerance)`. Once
+/// the baseline is armed (no `"bootstrap": true`), a baseline missing an
+/// entry's key is a failure — renames cannot silently disarm the gate.
+pub fn check_baseline(
+    measured: &[(&str, f64)],
+    baseline: &json::Value,
+    tolerance: f64,
+) -> BaselineGate {
+    let mut gate = BaselineGate { disarmed: false, failures: Vec::new(), passes: Vec::new() };
+    if matches!(baseline.get("bootstrap"), Some(json::Value::Bool(true))) {
+        gate.disarmed = true;
+        return gate;
+    }
+    for (name, tps) in measured {
+        let key = format!("engines.{name}.tokens_per_sec");
+        let Some(b) = baseline.get(&key).and_then(|v| v.as_f64()) else {
+            gate.failures.push(format!("baseline missing {key} (armed gate requires it)"));
+            continue;
+        };
+        let floor = b * (1.0 - tolerance);
+        if *tps < floor {
+            gate.failures.push(format!(
+                "REGRESSION {name}: {tps:.1} tok/s < floor {floor:.1} \
+                 (baseline {b:.1}, tolerance {:.0}%)",
+                tolerance * 100.0
+            ));
+        } else {
+            gate.passes.push(format!("{name} ok ({tps:.1} >= floor {floor:.1})"));
+        }
+    }
+    gate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(sps: f64, sb: f64, batched: f64) -> json::Value {
+        json::parse(&format!(
+            r#"{{"engines": {{
+                "sps": {{"tokens_per_sec": {sps}}},
+                "specbranch": {{"tokens_per_sec": {sb}}},
+                "specbranch-batched": {{"tokens_per_sec": {batched}}}
+            }}}}"#
+        ))
+        .expect("test baseline parses")
+    }
+
+    #[test]
+    fn synthetic_regression_beyond_tolerance_fails() {
+        // The satellite check: a >15% tokens/sec drop must fail the gate.
+        let base = baseline(100.0, 100.0, 100.0);
+        let gate = check_baseline(
+            &[("sps", 100.0), ("specbranch", 84.9), ("specbranch-batched", 100.0)],
+            &base,
+            0.15,
+        );
+        assert!(!gate.disarmed);
+        assert_eq!(gate.failures.len(), 1, "exactly the regressed engine fails");
+        assert!(gate.failures[0].contains("specbranch"), "{:?}", gate.failures);
+        assert_eq!(gate.passes.len(), 2);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = baseline(100.0, 100.0, 100.0);
+        let gate = check_baseline(
+            &[("sps", 86.0), ("specbranch", 120.0), ("specbranch-batched", 99.0)],
+            &base,
+            0.15,
+        );
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        assert_eq!(gate.passes.len(), 3);
+    }
+
+    #[test]
+    fn bootstrap_baseline_disarms_absolute_gate_only() {
+        let base = json::parse(r#"{"bootstrap": true, "engines": {}}"#).unwrap();
+        let gate = check_baseline(&[("sps", 1.0)], &base, 0.15);
+        assert!(gate.disarmed);
+        assert!(gate.failures.is_empty());
+    }
+
+    #[test]
+    fn armed_baseline_missing_key_fails() {
+        let base = json::parse(r#"{"engines": {"sps": {"tokens_per_sec": 50.0}}}"#).unwrap();
+        let gate = check_baseline(&[("sps", 50.0), ("specbranch", 50.0)], &base, 0.15);
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"), "{:?}", gate.failures);
+    }
+
+    #[test]
+    fn committed_baseline_gate_passes_on_measured_numbers() {
+        // The armed `.github/bench_baseline.json` must hold against the
+        // numbers this tree actually measures — the tier-1 proof that the
+        // absolute CI gate passes. (The committed floors are conservative
+        // analytic lower bounds; tighten them any time with
+        // `bench-smoke --pin .github/bench_baseline.json` on a green run.)
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../.github/bench_baseline.json");
+        let text = std::fs::read_to_string(path).expect("committed baseline readable");
+        let base = json::parse(&text).expect("committed baseline parses");
+        assert!(
+            !matches!(base.get("bootstrap"), Some(json::Value::Bool(true))),
+            "the absolute gate must stay armed (no bootstrap flag)"
+        );
+        let run = smoke_measurements();
+        assert!(
+            run.fused_failures(0.15).is_empty(),
+            "in-run fused gate: {:?}",
+            run.fused_failures(0.15)
+        );
+        let gate = check_baseline(&run.measured(), &base, 0.15);
+        assert!(!gate.disarmed);
+        assert!(gate.failures.is_empty(), "absolute gate: {:?}", gate.failures);
+        assert_eq!(gate.passes.len(), run.entries.len());
+    }
+
+    #[test]
+    fn preempt_smoke_gates_pass() {
+        // The armed in-run preemption gate: preemptions occur, streams are
+        // byte-identical to the unpreempted run, throughput within 15% of
+        // the no-preemption path.
+        let run = preempt_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.registry.preemptions >= 1);
+        assert_eq!(run.registry.resumed, run.registry.preemptions);
+        assert!(run.registry.repeat_prefill_tokens > 0);
+        assert!(run.tokens_per_sec > 0.0);
+    }
+}

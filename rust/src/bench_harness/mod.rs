@@ -5,6 +5,7 @@
 //! `target/bench_reports/` (quoted by EXPERIMENTS.md).
 
 pub mod experiments;
+pub mod gate;
 pub mod report;
 pub mod runner;
 

@@ -79,6 +79,49 @@
 //! through the same paths as unbatched rounds. Fused passes are counted in
 //! [`RegistrySnapshot::batched_rounds`] / `fused_requests` /
 //! `mean_fused_width`.
+//!
+//! ## Between-rounds preemption with KV reclamation
+//!
+//! With [`SchedulerConfig::preempt`] enabled (`serve --preempt`), a blocked
+//! admission no longer has to wait: when the KV watermark (or the batch
+//! window) rejects an arrival that **strictly outranks** inflight work
+//! under the active policy, the scheduler *preempts* the lowest-ranked
+//! ready task between rounds instead of deferring the arrival. The victim
+//! is checkpointed ([`DecodeTask::checkpoint`]): its committed tokens and
+//! [`DecodeStats`] are captured, its KV blocks are released back to the
+//! cache through the same path cancellation uses, and the request re-enters
+//! the admission queue as a **`Resumable`** entry — same id, same original
+//! submission time, aging from zero — whose KV projection covers only
+//! `prompt ⊕ committed` plus its *remaining* budget. On re-admission a
+//! fresh session re-prefills `prompt ⊕ committed` (priced proportionally to
+//! its length by the backend) and decoding continues step-wise, so under
+//! deterministic (greedy) target verification — the default config — the
+//! final token stream is **byte-identical** to the unpreempted run, and the
+//! registry invariant still counts each request exactly once across any
+//! number of preempt/resume cycles.
+//!
+//! Semantics worth pinning down:
+//!
+//! * **Ranking.** An arrival preempts only a victim it strictly outranks:
+//!   higher effective (aged) priority under [`SchedulePolicy::Priority`],
+//!   strictly earlier absolute deadline under
+//!   [`SchedulePolicy::EarliestDeadline`]. [`SchedulePolicy::RoundRobin`]
+//!   defines no rank and never preempts. The victim chosen is the
+//!   lowest-ranked eligible ready task; tasks mid-round on a worker are
+//!   never preempted (round boundaries only).
+//! * **Anti-thrash hysteresis.** An admitted task is *shielded* until it
+//!   completes its first round — a resumed task cannot be preempted again
+//!   before making progress (so every preempt/resume cycle commits tokens;
+//!   no livelock even at a pathological watermark), and a fresh admission
+//!   cannot be evicted having paid only its prefill.
+//! * **Cancellation.** A request preempted and awaiting re-admission can
+//!   still be cancelled; its response carries the checkpoint's partial
+//!   tokens with real stats, exactly like a between-rounds cancellation.
+//! * **Accounting.** Preemptions surface as
+//!   [`RegistrySnapshot::preemptions`] / `resumed` /
+//!   `repeat_prefill_tokens` (context tokens re-prefilled by resumes) /
+//!   `kv_reclaimed_bytes` (measured paged-KV bytes released by
+//!   checkpoints), all exposed via the server `METRICS` reply.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -89,7 +132,7 @@ use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
-use crate::engines::{self, DecodeTask, Engine, StepOutcome, TaskPhase};
+use crate::engines::{self, DecodeTask, Engine, StepOutcome, TaskCheckpoint, TaskPhase};
 use crate::kvcache::{BlockCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -151,6 +194,11 @@ pub struct SchedulerConfig {
     /// CPU work or per-round streaming latency matters more than target
     /// batch economy.
     pub verify_batch: usize,
+    /// Between-rounds preemption: allow a blocked, strictly-outranking
+    /// admission to reclaim KV from the lowest-ranked inflight task
+    /// (checkpoint + release + resumable re-admission) instead of
+    /// deferring. `false` (default) keeps the PR 2 defer-only behavior.
+    pub preempt: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -161,6 +209,7 @@ impl Default for SchedulerConfig {
             kv_bytes_per_token: None,
             aging_rounds: 8,
             verify_batch: 1,
+            preempt: false,
         }
     }
 }
@@ -178,6 +227,55 @@ struct SchedParams {
     max_ready: usize,
     /// Max width of one fused cross-request verification pass (≥ 1).
     verify_batch: usize,
+    /// Between-rounds preemption enabled.
+    preempt: bool,
+}
+
+/// Resolve one [`SchedulerConfig`] + [`EngineConfig`] into per-worker
+/// scheduling parameters (KV projection constants included).
+fn resolve_params(
+    engine_cfg: &EngineConfig,
+    sched_cfg: &SchedulerConfig,
+    workers: usize,
+) -> SchedParams {
+    // Speculation headroom for the KV projection: k_max branches of
+    // depth γ (App. G.3 token count) plus per-branch block rounding and
+    // tail CoW slack.
+    let k = engine_cfg.k_max.max(1);
+    let gamma = engine_cfg.gamma.max(1);
+    let branch_tokens = BlockCache::branch_tokens(k, gamma, 0).ceil() as usize;
+    SchedParams {
+        policy: sched_cfg.policy,
+        kv_watermark_bytes: sched_cfg.kv_watermark_bytes,
+        kv_bytes_per_token: sched_cfg
+            .kv_bytes_per_token
+            .unwrap_or_else(|| crate::metrics::kv_bytes_per_token(2, 12, 64)),
+        headroom_tokens: branch_tokens + k * BLOCK_TOKENS,
+        aging_rounds: sched_cfg.aging_rounds,
+        // Continuous-batch window: cap admissions so a request flood
+        // cannot open unbounded live sessions (each admission prefills
+        // a KV cache) while still letting arrivals join a running batch
+        // between rounds.
+        max_ready: 16 * workers.max(1),
+        verify_batch: sched_cfg.verify_batch.max(1),
+        preempt: sched_cfg.preempt,
+    }
+}
+
+/// Projected KV bytes the admission controller charges for a request with
+/// `prompt_len` prompt tokens and a `max_new_tokens` budget under the given
+/// engine/scheduler configuration — the exact quantity weighed against
+/// [`SchedulerConfig::kv_watermark_bytes`]. Exposed so benches and tests
+/// can size watermarks precisely (e.g. "fits one long request but not the
+/// long one plus a short one").
+pub fn projected_admission_bytes(
+    prompt_len: usize,
+    max_new_tokens: usize,
+    engine_cfg: &EngineConfig,
+    sched_cfg: &SchedulerConfig,
+) -> usize {
+    let p = resolve_params(engine_cfg, sched_cfg, 1);
+    projected_kv_bytes(prompt_len, max_new_tokens, &p)
 }
 
 /// One generation request.
@@ -250,9 +348,13 @@ impl Response {
 /// One in-flight request: a resumable decode task plus scheduling metadata.
 struct Inflight {
     id: u64,
+    /// Request seed — a preemption needs it to rebuild a matching session.
+    seed: u64,
     task: DecodeTask,
     enqueued_at: Instant,
-    admitted_at: Instant,
+    /// Delay between submission and *first* admission, wall clock (ms) —
+    /// preserved across preempt/resume cycles.
+    queue_ms: f64,
     /// Accumulated on-worker decode time (prefill + all rounds), µs.
     decode_us: u64,
     stream: Option<Sender<StreamChunk>>,
@@ -264,14 +366,85 @@ struct Inflight {
     waits: u64,
     /// Projected KV bytes charged against the admission watermark.
     kv_projected: usize,
+    /// Preemption shield: a freshly admitted or resumed task may not be
+    /// preempted until it completes one round (cleared on the post-round
+    /// requeue). For resumes this is the anti-thrash hysteresis (every
+    /// preempt/resume cycle makes forward progress); for fresh admissions
+    /// it guarantees a paid prefill always yields at least one round.
+    shield: bool,
 }
 
-/// One request waiting for admission, with its aging state.
+/// One admission-queue entry: a fresh request, or a preempted task awaiting
+/// re-admission (`Resumable`), with shared aging state.
 struct Queued {
-    req: Request,
+    entry: AdmissionEntry,
+    /// Original submission time (preserved across preemption, so EDF
+    /// deadlines and total_ms stay anchored to the first submit).
     at: Instant,
     /// Admission decisions that passed this request over (priority aging).
     waits: u64,
+}
+
+enum AdmissionEntry {
+    Fresh(Request),
+    Resumable(ResumeEntry),
+}
+
+/// A preempted request queued for re-admission: the decode checkpoint plus
+/// the scheduling metadata that survives the preemption.
+struct ResumeEntry {
+    id: u64,
+    seed: u64,
+    checkpoint: TaskCheckpoint,
+    priority: i32,
+    deadline_ms: Option<u64>,
+    stream: Option<Sender<StreamChunk>>,
+    /// On-worker decode time accumulated before preemption (µs).
+    decode_us: u64,
+    /// Delay before the first admission (ms) — reported, not re-measured.
+    queue_ms: f64,
+}
+
+impl Queued {
+    fn id(&self) -> u64 {
+        match &self.entry {
+            AdmissionEntry::Fresh(r) => r.id,
+            AdmissionEntry::Resumable(r) => r.id,
+        }
+    }
+
+    fn priority(&self) -> i32 {
+        match &self.entry {
+            AdmissionEntry::Fresh(r) => r.priority,
+            AdmissionEntry::Resumable(r) => r.priority,
+        }
+    }
+
+    fn deadline_ms(&self) -> Option<u64> {
+        match &self.entry {
+            AdmissionEntry::Fresh(r) => r.deadline_ms,
+            AdmissionEntry::Resumable(r) => r.deadline_ms,
+        }
+    }
+
+    fn deadline_at(&self) -> Option<Instant> {
+        abs_deadline(self.at, self.deadline_ms())
+    }
+
+    /// Projected KV bytes this admission would charge. A resumable entry
+    /// projects its re-prefill context plus its *remaining* budget; the
+    /// context grows by exactly what the remaining budget shrank, so the
+    /// bound equals the original admission's `prompt + budget + headroom` —
+    /// preemption reclaims the victim's memory *now*, it does not make the
+    /// request cheaper to re-admit later.
+    fn projection(&self, p: &SchedParams) -> usize {
+        match &self.entry {
+            AdmissionEntry::Fresh(r) => projected_kv_bytes(r.prompt.len(), r.max_new_tokens, p),
+            AdmissionEntry::Resumable(r) => {
+                projected_kv_bytes(r.checkpoint.context_len(), r.checkpoint.remaining_budget(), p)
+            }
+        }
+    }
 }
 
 #[derive(Default)]
@@ -314,6 +487,18 @@ pub struct Registry {
     /// Σ widths over fused passes; mean fused width =
     /// `fused_requests / batched_rounds`.
     pub fused_requests: AtomicU64,
+    /// Between-rounds preemptions: inflight tasks checkpointed and evicted
+    /// to admit higher-ranked work.
+    pub preemptions: AtomicU64,
+    /// Preempted tasks re-admitted (each preemption is followed by exactly
+    /// one resume, unless the request is cancelled while waiting).
+    pub resumed: AtomicU64,
+    /// Context tokens (prompt + committed) re-prefilled by resumes — the
+    /// work preemption repeats.
+    pub repeat_prefill_tokens: AtomicU64,
+    /// Measured paged-KV bytes released back to the cache by preemption
+    /// checkpoints.
+    pub kv_reclaimed_bytes: AtomicU64,
 }
 
 impl Registry {
@@ -323,6 +508,8 @@ impl Registry {
         let finished = completed + cancelled;
         let batched_rounds = self.batched_rounds.load(Ordering::Relaxed);
         let fused_requests = self.fused_requests.load(Ordering::Relaxed);
+        let resumed = self.resumed.load(Ordering::Relaxed);
+        let repeat_prefill_tokens = self.repeat_prefill_tokens.load(Ordering::Relaxed);
         RegistrySnapshot {
             completed,
             cancelled,
@@ -332,6 +519,18 @@ impl Registry {
             kv_projected_peak_bytes: self.kv_projected_peak.load(Ordering::Relaxed),
             batched_rounds,
             fused_requests,
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            resumed,
+            repeat_prefill_tokens,
+            kv_reclaimed_bytes: self.kv_reclaimed_bytes.load(Ordering::Relaxed),
+            // Every derived ratio below is total: each guards its zero
+            // denominator, so an empty registry snapshots to all-zeros
+            // (never NaN — the METRICS json must stay parseable).
+            mean_repeat_prefill_tokens: if resumed == 0 {
+                0.0
+            } else {
+                repeat_prefill_tokens as f64 / resumed as f64
+            },
             mean_fused_width: if batched_rounds == 0 {
                 0.0
             } else {
@@ -363,10 +562,47 @@ pub struct RegistrySnapshot {
     pub batched_rounds: u64,
     /// Σ fused-pass widths (requests that rode a fused pass).
     pub fused_requests: u64,
+    /// Between-rounds preemptions (KV reclaimed from inflight tasks).
+    pub preemptions: u64,
+    /// Preempted tasks re-admitted and resumed.
+    pub resumed: u64,
+    /// Context tokens re-prefilled by resumes.
+    pub repeat_prefill_tokens: u64,
+    /// Paged-KV bytes released by preemption checkpoints.
+    pub kv_reclaimed_bytes: u64,
+    /// Mean context re-prefilled per resume (0 when none resumed).
+    pub mean_repeat_prefill_tokens: f64,
     /// Mean width of fused passes (0 when none were issued).
     pub mean_fused_width: f64,
     pub mean_queue_ms: f64,
     pub mean_decode_ms: f64,
+}
+
+impl RegistrySnapshot {
+    /// Canonical json form of the snapshot — the single source for the
+    /// server `METRICS` reply and the bench-smoke `BENCH_ci_metrics.json`
+    /// artifact, so the two can never drift apart field-wise.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json;
+        json::obj(vec![
+            ("completed", json::num(self.completed as f64)),
+            ("cancelled", json::num(self.cancelled as f64)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("admission_deferrals", json::num(self.admission_deferrals as f64)),
+            ("kv_projected_peak_bytes", json::num(self.kv_projected_peak_bytes as f64)),
+            ("batched_rounds", json::num(self.batched_rounds as f64)),
+            ("fused_requests", json::num(self.fused_requests as f64)),
+            ("mean_fused_width", json::num(self.mean_fused_width)),
+            ("preemptions", json::num(self.preemptions as f64)),
+            ("resumed", json::num(self.resumed as f64)),
+            ("repeat_prefill_tokens", json::num(self.repeat_prefill_tokens as f64)),
+            ("kv_reclaimed_bytes", json::num(self.kv_reclaimed_bytes as f64)),
+            ("mean_repeat_prefill_tokens", json::num(self.mean_repeat_prefill_tokens)),
+            ("mean_queue_ms", json::num(self.mean_queue_ms)),
+            ("mean_decode_ms", json::num(self.mean_decode_ms)),
+        ])
+    }
 }
 
 /// State shared between the coordinator handle and its workers.
@@ -410,27 +646,7 @@ impl Coordinator {
         engine_cfg: EngineConfig,
         sched_cfg: SchedulerConfig,
     ) -> Coordinator {
-        // Speculation headroom for the KV projection: k_max branches of
-        // depth γ (App. G.3 token count) plus per-branch block rounding and
-        // tail CoW slack.
-        let k = engine_cfg.k_max.max(1);
-        let gamma = engine_cfg.gamma.max(1);
-        let branch_tokens = BlockCache::branch_tokens(k, gamma, 0).ceil() as usize;
-        let sched = SchedParams {
-            policy: sched_cfg.policy,
-            kv_watermark_bytes: sched_cfg.kv_watermark_bytes,
-            kv_bytes_per_token: sched_cfg
-                .kv_bytes_per_token
-                .unwrap_or_else(|| crate::metrics::kv_bytes_per_token(2, 12, 64)),
-            headroom_tokens: branch_tokens + k * BLOCK_TOKENS,
-            aging_rounds: sched_cfg.aging_rounds,
-            // Continuous-batch window: cap admissions so a request flood
-            // cannot open unbounded live sessions (each admission prefills
-            // a KV cache) while still letting arrivals join a running batch
-            // between rounds.
-            max_ready: 16 * backends.len().max(1),
-            verify_batch: sched_cfg.verify_batch.max(1),
-        };
+        let sched = resolve_params(&engine_cfg, &sched_cfg, backends.len());
         let shared = Arc::new(Shared {
             queues: Mutex::new(Queues::default()),
             cv_in: Condvar::new(),
@@ -491,7 +707,7 @@ impl Coordinator {
         let mut q = self.shared.queues.lock().unwrap();
         self.shared.inflight.fetch_add(1, Ordering::SeqCst);
         q.inbox.push_back(Queued {
-            req: Request {
+            entry: AdmissionEntry::Fresh(Request {
                 id,
                 prompt,
                 max_new_tokens,
@@ -499,7 +715,7 @@ impl Coordinator {
                 priority: opts.priority,
                 deadline_ms: opts.deadline_ms,
                 stream: opts.stream,
-            },
+            }),
             at: Instant::now(),
             waits: 0,
         });
@@ -516,27 +732,35 @@ impl Coordinator {
     pub fn cancel(&self, id: u64) -> bool {
         let shared = &*self.shared;
         let mut q = shared.queues.lock().unwrap();
-        // Still waiting for admission: retire without ever starting decode.
-        if let Some(pos) = q.inbox.iter().position(|e| e.req.id == id) {
+        // Still waiting for (re-)admission: retire from the queue. A fresh
+        // request never started decode (empty response); a preempted
+        // resumable entry carries its checkpoint's partial tokens + stats.
+        if let Some(pos) = q.inbox.iter().position(|e| e.id() == id) {
             let entry = q.inbox.remove(pos).expect("position just found");
             drop(q);
-            if let Some(tx) = &entry.req.stream {
-                let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
+            let at = entry.at;
+            match entry.entry {
+                AdmissionEntry::Fresh(req) => {
+                    if let Some(tx) = &req.stream {
+                        let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
+                    }
+                    let queue_ms = at.elapsed().as_secs_f64() * 1000.0;
+                    publish_response(
+                        shared,
+                        Response {
+                            id,
+                            tokens: Vec::new(),
+                            stats: DecodeStats::default(),
+                            status: ResponseStatus::Cancelled,
+                            deadline_met: req.deadline_ms.map(|ms| queue_ms <= ms as f64),
+                            queue_ms,
+                            total_ms: queue_ms,
+                        },
+                        0,
+                    );
+                }
+                AdmissionEntry::Resumable(re) => retire_resumable_cancelled(shared, re, at),
             }
-            let queue_ms = entry.at.elapsed().as_secs_f64() * 1000.0;
-            publish_response(
-                shared,
-                Response {
-                    id,
-                    tokens: Vec::new(),
-                    stats: DecodeStats::default(),
-                    status: ResponseStatus::Cancelled,
-                    deadline_met: entry.req.deadline_ms.map(|ms| queue_ms <= ms as f64),
-                    queue_ms,
-                    total_ms: queue_ms,
-                },
-                0,
-            );
             return true;
         }
         // Parked in the ready queue between rounds: retire on the spot.
@@ -639,10 +863,23 @@ fn deadline_before(a: Option<Instant>, b: Option<Instant>) -> bool {
     }
 }
 
+/// Effective (aged) priority of a waiting admission entry.
+fn queued_eff_priority(e: &Queued, aging_rounds: u64) -> i64 {
+    let aged = if aging_rounds > 0 { (e.waits / aging_rounds) as i64 } else { 0 };
+    e.priority() as i64 + aged
+}
+
+/// Effective (aged) priority of a parked ready task.
+fn inflight_eff_priority(t: &Inflight, aging_rounds: u64) -> i64 {
+    let aged = if aging_rounds > 0 { (t.waits / aging_rounds) as i64 } else { 0 };
+    t.priority as i64 + aged
+}
+
 /// Index of the next request to admit from the inbox under `policy`.
 /// Priority ages waiting entries exactly like the ready queue does, so a
 /// low-priority request's admission wait is bounded even under a sustained
-/// stream of higher-priority arrivals.
+/// stream of higher-priority arrivals. Resumable entries participate under
+/// the same rules as fresh ones (same priority, original submission time).
 fn pick_admission_index(
     inbox: &VecDeque<Queued>,
     policy: SchedulePolicy,
@@ -654,14 +891,10 @@ fn pick_admission_index(
     match policy {
         SchedulePolicy::RoundRobin => Some(0),
         SchedulePolicy::Priority => {
-            let eff = |e: &Queued| -> i64 {
-                let aged = if aging_rounds > 0 { (e.waits / aging_rounds) as i64 } else { 0 };
-                e.req.priority as i64 + aged
-            };
             let mut best = 0usize;
-            let mut best_eff = eff(&inbox[0]);
+            let mut best_eff = queued_eff_priority(&inbox[0], aging_rounds);
             for (i, e) in inbox.iter().enumerate().skip(1) {
-                let v = eff(e);
+                let v = queued_eff_priority(e, aging_rounds);
                 if v > best_eff {
                     best = i;
                     best_eff = v;
@@ -671,15 +904,73 @@ fn pick_admission_index(
         }
         SchedulePolicy::EarliestDeadline => {
             let mut best = 0usize;
-            let mut best_dl = abs_deadline(inbox[0].at, inbox[0].req.deadline_ms);
+            let mut best_dl = inbox[0].deadline_at();
             for (i, e) in inbox.iter().enumerate().skip(1) {
-                let dl = abs_deadline(e.at, e.req.deadline_ms);
+                let dl = e.deadline_at();
                 if deadline_before(dl, best_dl) {
                     best = i;
                     best_dl = dl;
                 }
             }
             Some(best)
+        }
+    }
+}
+
+/// Index of the preemption victim for a blocked admission `arrival`: the
+/// **lowest-ranked** ready task that the arrival **strictly outranks** and
+/// that is not shielded by the resume hysteresis. Round-robin defines no
+/// rank, so it never preempts (blocked arrivals defer as before).
+fn pick_preempt_victim(
+    ready: &VecDeque<Inflight>,
+    arrival: &Queued,
+    p: &SchedParams,
+) -> Option<usize> {
+    match p.policy {
+        SchedulePolicy::RoundRobin => None,
+        SchedulePolicy::Priority => {
+            let arr_eff = queued_eff_priority(arrival, p.aging_rounds);
+            let mut best: Option<(usize, i64)> = None;
+            for (i, t) in ready.iter().enumerate() {
+                if t.shield {
+                    continue;
+                }
+                let eff = inflight_eff_priority(t, p.aging_rounds);
+                if eff >= arr_eff {
+                    continue; // not strictly outranked
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, b)) => eff < b,
+                };
+                if better {
+                    best = Some((i, eff));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        SchedulePolicy::EarliestDeadline => {
+            // Victim = the latest-deadline task (no deadline = latest of
+            // all) among those strictly after the arrival's deadline.
+            let arr_dl = arrival.deadline_at();
+            let mut best: Option<(usize, Option<Instant>)> = None;
+            for (i, t) in ready.iter().enumerate() {
+                if t.shield || !deadline_before(arr_dl, t.deadline_at) {
+                    continue;
+                }
+                let later = match best {
+                    None => true,
+                    Some((_, b)) => match (t.deadline_at, b) {
+                        (None, Some(_)) => true,
+                        (Some(x), Some(y)) => x > y,
+                        _ => false,
+                    },
+                };
+                if later {
+                    best = Some((i, t.deadline_at));
+                }
+            }
+            best.map(|(i, _)| i)
         }
     }
 }
@@ -696,14 +987,10 @@ fn pick_ready_index(
     match policy {
         SchedulePolicy::RoundRobin => Some(0),
         SchedulePolicy::Priority => {
-            let eff = |t: &Inflight| -> i64 {
-                let aged = if aging_rounds > 0 { (t.waits / aging_rounds) as i64 } else { 0 };
-                t.priority as i64 + aged
-            };
             let mut best = 0usize;
-            let mut best_eff = eff(&ready[0]);
+            let mut best_eff = inflight_eff_priority(&ready[0], aging_rounds);
             for (i, t) in ready.iter().enumerate().skip(1) {
-                let e = eff(t);
+                let e = inflight_eff_priority(t, aging_rounds);
                 if e > best_eff {
                     best = i;
                     best_eff = e;
@@ -727,11 +1014,14 @@ fn pick_ready_index(
 
 fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared: Arc<Shared>) {
     let sched = shared.sched;
-    // One scheduling decision: admit a new request, or run one round for a
-    // policy-ordered batch of up to `verify_batch` ready tasks whose
-    // verifications fuse into one cross-request target pass.
+    // One scheduling decision: admit a request (fresh or resumable),
+    // preempt an inflight task to make room for a blocked higher-ranked
+    // arrival, or run one round for a policy-ordered batch of up to
+    // `verify_batch` ready tasks whose verifications fuse into one
+    // cross-request target pass.
     enum Work {
-        Admit(Request, Instant, usize),
+        Admit(Box<Queued>, usize),
+        Preempt(Box<Inflight>),
         Rounds(Vec<Inflight>),
     }
     loop {
@@ -743,44 +1033,61 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 // the batch window has room and the KV watermark admits the
                 // projected footprint, so a flood of arrivals can neither
                 // starve in-flight decoding nor oversubscribe the cache.
-                if q.ready.len() < sched.max_ready {
-                    let pick = pick_admission_index(&q.inbox, sched.policy, sched.aging_rounds);
-                    if let Some(idx) = pick {
-                        let proj = projected_kv_bytes(
-                            q.inbox[idx].req.prompt.len(),
-                            q.inbox[idx].req.max_new_tokens,
-                            &sched,
-                        );
-                        let fits = match sched.kv_watermark_bytes {
-                            None => true,
-                            // A request too big for the watermark on its own
-                            // is admitted alone rather than dropped.
-                            Some(w) => {
-                                q.kv_projected_bytes + proj <= w || q.kv_projected_bytes == 0
-                            }
-                        };
-                        if fits {
-                            if sched.policy == SchedulePolicy::Priority {
-                                for (j, e) in q.inbox.iter_mut().enumerate() {
-                                    if j != idx {
-                                        e.waits += 1;
-                                    }
+                let pick = pick_admission_index(&q.inbox, sched.policy, sched.aging_rounds);
+                if let Some(idx) = pick {
+                    let window_ok = q.ready.len() < sched.max_ready;
+                    let proj = q.inbox[idx].projection(&sched);
+                    let fits_kv = match sched.kv_watermark_bytes {
+                        None => true,
+                        // A request too big for the watermark on its own
+                        // is admitted alone rather than dropped.
+                        Some(w) => q.kv_projected_bytes + proj <= w || q.kv_projected_bytes == 0,
+                    };
+                    if window_ok && fits_kv {
+                        if sched.policy == SchedulePolicy::Priority {
+                            for (j, e) in q.inbox.iter_mut().enumerate() {
+                                if j != idx {
+                                    e.waits += 1;
                                 }
                             }
-                            let entry = q.inbox.remove(idx).expect("index in range");
-                            q.kv_projected_bytes += proj;
-                            q.last_deferred = None;
-                            shared
-                                .registry
-                                .kv_projected_peak
-                                .fetch_max(q.kv_projected_bytes as u64, Ordering::Relaxed);
-                            q.stepping.insert(entry.req.id);
-                            break Work::Admit(entry.req, entry.at, proj);
                         }
-                        // Count deferral episodes: re-picking the same
-                        // blocked request on later loop passes is one
-                        // deferral, not many.
-                        let id = q.inbox[idx].req.id;
+                        let entry = q.inbox.remove(idx).expect("index in range");
+                        q.kv_projected_bytes += proj;
+                        q.last_deferred = None;
+                        shared
+                            .registry
+                            .kv_projected_peak
+                            .fetch_max(q.kv_projected_bytes as u64, Ordering::Relaxed);
+                        q.stepping.insert(entry.id());
+                        break Work::Admit(Box::new(entry), proj);
+                    }
+                    // Blocked arrival. With preemption enabled, a strictly
+                    // higher-ranked arrival may reclaim KV from the
+                    // lowest-ranked unshielded ready task instead of
+                    // waiting for it to finish.
+                    if sched.preempt {
+                        if let Some(v) = pick_preempt_victim(&q.ready, &q.inbox[idx], &sched) {
+                            let victim = q.ready.remove(v).expect("index in range");
+                            // Hold the id in `stepping` while the
+                            // checkpoint runs outside the lock, so a racing
+                            // cancel() is flagged rather than reported
+                            // unknown.
+                            q.stepping.insert(victim.id);
+                            // Return the victim's projection to the
+                            // admission budget *under this lock*: a second
+                            // worker re-evaluating the same blocked arrival
+                            // must see the freed budget (and admit) rather
+                            // than preempt another victim for it.
+                            q.kv_projected_bytes =
+                                q.kv_projected_bytes.saturating_sub(victim.kv_projected);
+                            break Work::Preempt(Box::new(victim));
+                        }
+                    }
+                    // Count KV deferral episodes: re-picking the same
+                    // blocked request on later loop passes is one
+                    // deferral, not many.
+                    if window_ok && !fits_kv {
+                        let id = q.inbox[idx].id();
                         if q.last_deferred != Some(id) {
                             q.last_deferred = Some(id);
                             shared.registry.admission_deferrals.fetch_add(1, Ordering::Relaxed);
@@ -821,27 +1128,82 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 q = shared.cv_in.wait(q).unwrap();
             }
         };
-        let batch: Vec<Inflight> = match work {
-            Work::Admit(req, enqueued_at, kv_projected) => {
+        let (batch, ran_round): (Vec<Inflight>, bool) = match work {
+            Work::Admit(entry, kv_projected) => {
+                let enqueued_at = entry.at;
                 let admitted_at = Instant::now();
-                let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
-                let session = backend.new_session(req.seed);
-                let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
-                let task =
-                    DecodeTask::new(engine.as_ref(), session, &req.prompt, req.max_new_tokens, rng);
-                vec![Inflight {
-                    id: req.id,
-                    task,
-                    enqueued_at,
-                    admitted_at,
-                    decode_us: admitted_at.elapsed().as_micros() as u64,
-                    stream: req.stream,
-                    priority: req.priority,
-                    deadline_ms: req.deadline_ms,
-                    deadline_at,
-                    waits: 0,
-                    kv_projected,
-                }]
+                let admitted = match entry.entry {
+                    AdmissionEntry::Fresh(req) => {
+                        let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
+                        let session = backend.new_session(req.seed);
+                        let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
+                        let task = DecodeTask::new(
+                            engine.as_ref(),
+                            session,
+                            &req.prompt,
+                            req.max_new_tokens,
+                            rng,
+                        );
+                        vec![Inflight {
+                            id: req.id,
+                            seed: req.seed,
+                            task,
+                            enqueued_at,
+                            queue_ms: admitted_at.duration_since(enqueued_at).as_secs_f64()
+                                * 1000.0,
+                            decode_us: admitted_at.elapsed().as_micros() as u64,
+                            stream: req.stream,
+                            priority: req.priority,
+                            deadline_ms: req.deadline_ms,
+                            deadline_at,
+                            waits: 0,
+                            kv_projected,
+                            // Shielded until its first round completes:
+                            // evicting a task that only ever paid its
+                            // prefill would discard that prefill for zero
+                            // committed tokens — strictly worse than not
+                            // admitting it.
+                            shield: true,
+                        }]
+                    }
+                    AdmissionEntry::Resumable(re) => {
+                        // Re-admission of a preempted task: a fresh session
+                        // (same request seed, so the stream continues
+                        // byte-identically under greedy verification)
+                        // re-prefills prompt ⊕ committed and decoding picks
+                        // up within the remaining budget.
+                        let deadline_at = abs_deadline(enqueued_at, re.deadline_ms);
+                        let session = backend.new_session(re.seed);
+                        shared.registry.resumed.fetch_add(1, Ordering::Relaxed);
+                        shared
+                            .registry
+                            .repeat_prefill_tokens
+                            .fetch_add(re.checkpoint.context_len() as u64, Ordering::Relaxed);
+                        let task = DecodeTask::resume(engine.as_ref(), session, re.checkpoint);
+                        vec![Inflight {
+                            id: re.id,
+                            seed: re.seed,
+                            task,
+                            enqueued_at,
+                            queue_ms: re.queue_ms,
+                            decode_us: re.decode_us + admitted_at.elapsed().as_micros() as u64,
+                            stream: re.stream,
+                            priority: re.priority,
+                            deadline_ms: re.deadline_ms,
+                            deadline_at,
+                            waits: 0,
+                            kv_projected,
+                            // Hysteresis: immune to preemption until one
+                            // round completes.
+                            shield: true,
+                        }]
+                    }
+                };
+                (admitted, false)
+            }
+            Work::Preempt(victim) => {
+                preempt_inflight(*victim, &shared);
+                continue;
             }
             Work::Rounds(mut batch) => {
                 // Phase A: drive every task to its verification join point
@@ -891,18 +1253,24 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         });
                     }
                 }
-                batch
+                (batch, true)
             }
         };
         let mut q = shared.queues.lock().unwrap();
         let mut retire: Vec<(Inflight, bool)> = Vec::new();
         let mut requeued = 0usize;
-        for t in batch {
+        for mut t in batch {
             q.stepping.remove(&t.id);
             let cancel = q.cancel_requested.remove(&t.id) && !t.task.is_done();
             if cancel || t.task.is_done() {
                 retire.push((t, cancel));
             } else {
+                // Hysteresis: completing a round lifts a resumed task's
+                // preemption shield (admissions re-park without a round,
+                // so a resume stays shielded until it makes progress).
+                if ran_round {
+                    t.shield = false;
+                }
                 q.ready.push_back(t);
                 requeued += 1;
             }
@@ -930,14 +1298,13 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
         id,
         task,
         enqueued_at,
-        admitted_at,
+        queue_ms,
         decode_us,
         stream,
         deadline_ms,
         kv_projected,
         ..
     } = t;
-    let queue_ms = admitted_at.duration_since(enqueued_at).as_secs_f64() * 1000.0;
     let total_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
     // Flush the stream terminator for requests that never got one from a
     // round: zero-budget completions and cancellations between rounds.
@@ -972,6 +1339,90 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
             total_ms,
         },
         kv_projected,
+    );
+}
+
+/// Preempt a ready task between rounds: checkpoint it (committed tokens +
+/// stats captured, KV released back to the cache) and re-queue it as a
+/// [`AdmissionEntry::Resumable`] entry under its original submission time
+/// (its admission projection was already released by the scheduling
+/// decision that picked it). A cancellation that raced the preemption (the
+/// id is parked in `stepping` while the checkpoint runs) retires the
+/// request immediately with the checkpoint's partial output instead of
+/// re-queueing it. The queues lock must NOT be held.
+fn preempt_inflight(t: Inflight, shared: &Shared) {
+    let Inflight {
+        id,
+        seed,
+        task,
+        enqueued_at,
+        queue_ms,
+        decode_us,
+        stream,
+        priority,
+        deadline_ms,
+        ..
+    } = t;
+    let checkpoint = task.checkpoint();
+    shared.registry.preemptions.fetch_add(1, Ordering::Relaxed);
+    shared
+        .registry
+        .kv_reclaimed_bytes
+        .fetch_add(checkpoint.kv_reclaimed_bytes as u64, Ordering::Relaxed);
+    let entry = ResumeEntry {
+        id,
+        seed,
+        checkpoint,
+        priority,
+        deadline_ms,
+        stream,
+        decode_us,
+        queue_ms,
+    };
+    // The victim's KV projection was already returned to the admission
+    // budget by the scheduling decision that picked it (under the queues
+    // lock), so concurrent workers never double-preempt for one arrival.
+    let mut q = shared.queues.lock().unwrap();
+    q.stepping.remove(&id);
+    if q.cancel_requested.remove(&id) {
+        drop(q);
+        retire_resumable_cancelled(shared, entry, enqueued_at);
+        return;
+    }
+    q.inbox.push_back(Queued {
+        entry: AdmissionEntry::Resumable(entry),
+        at: enqueued_at,
+        waits: 0,
+    });
+    drop(q);
+    // The blocked arrival that triggered the preemption can now re-try its
+    // admission against the freed budget.
+    shared.cv_in.notify_all();
+}
+
+/// Retire a preempted request that was cancelled while waiting for
+/// re-admission: its response carries the checkpoint's partial tokens and
+/// real stats, exactly like a between-rounds cancellation. The queues lock
+/// must NOT be held.
+fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: Instant) {
+    let ResumeEntry { id, checkpoint, stream, deadline_ms, decode_us, queue_ms, .. } = entry;
+    if let Some(tx) = &stream {
+        let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
+    }
+    let total_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
+    shared.registry.decode_us_total.fetch_add(decode_us, Ordering::Relaxed);
+    publish_response(
+        shared,
+        Response {
+            id,
+            tokens: checkpoint.generated,
+            stats: checkpoint.stats,
+            status: ResponseStatus::Cancelled,
+            deadline_met: deadline_ms.map(|ms| total_ms <= ms as f64),
+            queue_ms,
+            total_ms,
+        },
+        0,
     );
 }
 
@@ -1308,6 +1759,7 @@ mod tests {
             aging_rounds: 0,
             max_ready: 16,
             verify_batch: 1,
+            preempt: false,
         };
         let a = projected_kv_bytes(3, 40, &p);
         let b = projected_kv_bytes(3, 400, &p);
@@ -1315,5 +1767,81 @@ mod tests {
         assert_eq!(a % (BLOCK_TOKENS * 100), 0, "whole blocks");
         // 3 + 40 + 10 = 53 tokens -> 4 blocks of 16.
         assert_eq!(a, 4 * BLOCK_TOKENS * 100);
+    }
+
+    #[test]
+    fn public_projection_helper_is_block_aligned_and_monotone() {
+        // The helper benches/tests use to size watermarks must agree with
+        // the admission controller's own accounting semantics.
+        let e = EngineConfig::default();
+        let s = SchedulerConfig::default();
+        let small = projected_admission_bytes(3, 7, &e, &s);
+        let large = projected_admission_bytes(3, 400, &e, &s);
+        assert!(small > 0);
+        assert!(large > small, "projection must grow with the budget");
+        let bpt = crate::metrics::kv_bytes_per_token(2, 12, 64);
+        assert_eq!(small % (BLOCK_TOKENS * bpt), 0, "whole blocks");
+        // A resumable-style projection (context grown by exactly the
+        // tokens the remaining budget lost) is conserved: the bound is
+        // `prompt + budget + headroom` whether or not the request has made
+        // progress, so re-admission competes on equal footing.
+        let resumed = projected_admission_bytes(3 + 100, 400 - 100, &e, &s);
+        assert_eq!(resumed, large, "projection is conserved across progress");
+    }
+
+    #[test]
+    fn empty_registry_snapshot_is_total() {
+        // Zero rounds / zero requests: every derived ratio must be a
+        // finite 0.0 (never NaN — the server METRICS json must parse).
+        let snap = Registry::default().snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.cancelled, 0);
+        assert_eq!(snap.generated_tokens, 0);
+        assert_eq!(snap.rounds, 0);
+        assert_eq!(snap.preemptions, 0);
+        assert_eq!(snap.resumed, 0);
+        assert_eq!(snap.repeat_prefill_tokens, 0);
+        assert_eq!(snap.kv_reclaimed_bytes, 0);
+        for (name, v) in [
+            ("mean_fused_width", snap.mean_fused_width),
+            ("mean_repeat_prefill_tokens", snap.mean_repeat_prefill_tokens),
+            ("mean_queue_ms", snap.mean_queue_ms),
+            ("mean_decode_ms", snap.mean_decode_ms),
+        ] {
+            assert!(v.is_finite(), "{name} must be finite on an empty registry");
+            assert_eq!(v, 0.0, "{name} must be 0.0 on an empty registry");
+        }
+    }
+
+    #[test]
+    fn preemption_disabled_never_preempts() {
+        // Default config (preempt: false): a tight watermark defers, it
+        // never reclaims — the PR 2 behavior is bit-preserved.
+        let coord = Coordinator::start_with(
+            sim_backends(1),
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 64, ..Default::default() },
+            SchedulerConfig {
+                policy: SchedulePolicy::Priority,
+                kv_watermark_bytes: Some(2_000_000),
+                ..Default::default()
+            },
+        );
+        for i in 0..6u64 {
+            coord.submit_opts(
+                vec![1, 2, 3],
+                40,
+                i,
+                SubmitOpts { priority: i as i32, ..Default::default() },
+            );
+        }
+        for _ in 0..6 {
+            assert_eq!(coord.collect().tokens.len(), 40);
+        }
+        let snap = coord.registry();
+        assert_eq!(snap.preemptions, 0);
+        assert_eq!(snap.resumed, 0);
+        assert_eq!(snap.repeat_prefill_tokens, 0);
+        coord.shutdown();
     }
 }

@@ -176,6 +176,49 @@ pub struct DecodeTask {
     /// Ticket of a round suspended at its verification join point
     /// ([`DecodeTask::step_submit`] ran, [`DecodeTask::step_join`] has not).
     pending_verify: Option<VerifyTicket>,
+    /// Stats carried over from before a preemption ([`DecodeTask::resume`]):
+    /// merged into the live session's stats at `finish`/`cancel`/
+    /// `checkpoint`, so a request preempted any number of times still
+    /// reports one consistent `DecodeStats` (`tokens.len() ==
+    /// stats.generated_tokens` across the whole preempt/resume chain).
+    base_stats: DecodeStats,
+}
+
+/// Checkpointed state of a preempted [`DecodeTask`], taken between rounds:
+/// everything needed to rebuild an equivalent task on a **fresh session**
+/// later ([`DecodeTask::resume`]), after the original session's KV has been
+/// released back to the cache. Host-side only — holds no device state.
+pub struct TaskCheckpoint {
+    /// The original request prompt.
+    pub prompt: Vec<Token>,
+    /// Tokens committed before preemption (prompt excluded).
+    pub generated: Vec<Token>,
+    /// The original total per-request budget (`max_new_tokens`).
+    pub budget: usize,
+    /// Decode statistics accumulated so far, across every session this
+    /// request has run on (`generated_tokens == generated.len()`).
+    pub stats: DecodeStats,
+    /// RNG state at the preemption point; resume continues this stream.
+    pub rng: Pcg32,
+    /// Paged KV bytes the checkpoint released back to the cache.
+    pub kv_reclaimed_bytes: usize,
+}
+
+impl TaskCheckpoint {
+    /// Tokens a resume must re-prefill: prompt plus committed output.
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Tokens committed before preemption.
+    pub fn produced(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Budget still unspent — what a re-admission projection must cover.
+    pub fn remaining_budget(&self) -> usize {
+        self.budget - self.generated.len()
+    }
 }
 
 /// Outcome of [`DecodeTask::step_submit`].
@@ -207,6 +250,83 @@ impl DecodeTask {
             prompt_len: prompt.len(),
             done: budget == 0,
             pending_verify: None,
+            base_stats: DecodeStats::default(),
+        }
+    }
+
+    /// Preempt the task between rounds: release every KV block its session
+    /// still holds back to the cache and capture everything needed to
+    /// rebuild an equivalent task later on a fresh session
+    /// ([`DecodeTask::resume`]). Panics while a submitted verification is
+    /// pending ([`DecodeTask::has_pending_verify`]) — preemption is a
+    /// round-boundary operation, like cancellation.
+    ///
+    /// Resume rebuilds the decode state by re-prefilling `prompt ⊕
+    /// generated`, which at every round boundary is exactly the logical
+    /// session state (the engines keep `draft consumed == committed − 1`
+    /// between rounds). Under **deterministic (greedy) target
+    /// verification** — the default config and the paper's main-results
+    /// setting, where every lossless engine commits exactly the target
+    /// argmax chain — the resumed stream is therefore byte-identical to
+    /// the unpreempted run. Under stochastic verification the resumed
+    /// stream remains a faithful target sample (the acceptance rules are
+    /// lossless per token), but round structure and rng consumption may
+    /// differ, so bitwise equality is not guaranteed.
+    pub fn checkpoint(mut self) -> TaskCheckpoint {
+        assert!(
+            self.pending_verify.is_none(),
+            "checkpoint requires a round boundary (join the pending verification first)"
+        );
+        let kv_reclaimed_bytes = self.session.kv_allocated_bytes();
+        self.session.release_kv();
+        let mut stats = self.session.take_stats();
+        stats.merge(&self.base_stats);
+        let committed = self.session.committed();
+        let prompt = committed[..self.prompt_len].to_vec();
+        let generated = committed[self.prompt_len..].to_vec();
+        debug_assert_eq!(generated.len(), self.produced, "produced count drifted");
+        debug_assert_eq!(
+            generated.len() as u64,
+            stats.generated_tokens,
+            "checkpoint tokens and DecodeStats.generated_tokens disagree"
+        );
+        TaskCheckpoint {
+            prompt,
+            generated,
+            budget: self.budget,
+            stats,
+            rng: self.rng,
+            kv_reclaimed_bytes,
+        }
+    }
+
+    /// Rebuild a preempted task from its checkpoint on a fresh session:
+    /// re-prefill `prompt ⊕ generated` (the backend prices this
+    /// proportionally to its length) and continue decoding step-wise
+    /// within the remaining budget. The session must come from the same
+    /// backend seed as the original so the resumed stream matches the
+    /// unpreempted one (see [`DecodeTask::checkpoint`] for the exact
+    /// byte-identity contract).
+    pub fn resume(
+        engine: &dyn Engine,
+        mut session: Box<dyn Session + Send>,
+        ckpt: TaskCheckpoint,
+    ) -> DecodeTask {
+        let TaskCheckpoint { mut prompt, generated, budget, stats, rng, .. } = ckpt;
+        let prompt_len = prompt.len();
+        let produced = generated.len();
+        prompt.extend_from_slice(&generated);
+        let state = engine.begin(session.as_mut(), &prompt);
+        DecodeTask {
+            session,
+            state,
+            rng,
+            budget,
+            produced,
+            prompt_len,
+            done: produced >= budget,
+            pending_verify: None,
+            base_stats: stats,
         }
     }
 
@@ -290,9 +410,12 @@ impl DecodeTask {
         self.budget
     }
 
-    /// Consume the task, returning the generated tokens and stats.
+    /// Consume the task, returning the generated tokens and stats. A task
+    /// that was preempted and resumed reports its tokens and stats across
+    /// the whole chain, counted once.
     pub fn finish(mut self) -> GenerateOut {
-        let stats = self.session.take_stats();
+        let mut stats = self.session.take_stats();
+        stats.merge(&self.base_stats);
         let tokens = self.session.committed()[self.prompt_len..].to_vec();
         debug_assert_eq!(
             tokens.len() as u64,
@@ -309,7 +432,8 @@ impl DecodeTask {
     /// `tokens.len() == stats.generated_tokens`.
     pub fn cancel(mut self) -> GenerateOut {
         self.session.release_kv();
-        let stats = self.session.take_stats();
+        let mut stats = self.session.take_stats();
+        stats.merge(&self.base_stats);
         let tokens = self.session.committed()[self.prompt_len..].to_vec();
         debug_assert_eq!(
             tokens.len() as u64,
@@ -473,6 +597,103 @@ mod tests {
             assert_eq!(plain_out.tokens, split_out.tokens);
             assert_eq!(split_out.stats.fused_rounds, submitted_rounds);
         }
+    }
+
+    #[test]
+    fn checkpoint_resume_stream_is_byte_identical() {
+        // Preempt after two rounds, rebuild on a fresh session from the
+        // same backend seed: under greedy verification (the default
+        // config) the full stream must be byte-identical to the
+        // unpreempted run, and the merged stats must count every token
+        // exactly once.
+        let backend = sim_backend();
+        for engine_id in [
+            EngineId::Autoregressive,
+            EngineId::Sps,
+            EngineId::SpecBranch,
+            EngineId::SpecBranchNoBranch,
+        ] {
+            let engine = build(engine_id, EngineConfig::default());
+            let mut full = DecodeTask::new(
+                engine.as_ref(),
+                backend.new_session(3),
+                &[1, 2, 3, 4],
+                48,
+                Pcg32::new(9),
+            );
+            while !full.is_done() {
+                full.step();
+            }
+            let want = full.finish();
+            assert_eq!(want.tokens.len(), 48, "{engine_id:?} reference run");
+
+            let mut t = DecodeTask::new(
+                engine.as_ref(),
+                backend.new_session(3),
+                &[1, 2, 3, 4],
+                48,
+                Pcg32::new(9),
+            );
+            for _ in 0..2 {
+                t.step();
+            }
+            assert!(!t.is_done(), "{engine_id:?} cannot finish 48 tokens in 2 rounds");
+            let ckpt = t.checkpoint();
+            assert_eq!(ckpt.prompt, vec![1, 2, 3, 4]);
+            assert_eq!(ckpt.produced(), ckpt.generated.len());
+            assert_eq!(ckpt.budget, 48);
+            assert_eq!(
+                ckpt.stats.generated_tokens as usize,
+                ckpt.generated.len(),
+                "{engine_id:?} checkpoint stats"
+            );
+            assert!(ckpt.kv_reclaimed_bytes > 0, "{engine_id:?} held no KV");
+            let mut resumed = DecodeTask::resume(engine.as_ref(), backend.new_session(3), ckpt);
+            while !resumed.is_done() {
+                resumed.step();
+            }
+            assert_eq!(resumed.produced(), 48);
+            let got = resumed.finish();
+            assert_eq!(got.tokens, want.tokens, "{engine_id:?} resumed stream diverged");
+            assert_eq!(got.stats.generated_tokens, 48, "{engine_id:?} merged stats");
+        }
+    }
+
+    #[test]
+    fn repeated_preemption_counts_tokens_once() {
+        // Two preempt/resume cycles: the stats chain must still report
+        // every committed token exactly once and the stream must match the
+        // uninterrupted run.
+        let backend = sim_backend();
+        let engine = build(EngineId::SpecBranch, EngineConfig::default());
+        let mut full =
+            DecodeTask::new(engine.as_ref(), backend.new_session(5), &[2, 3, 4], 60, Pcg32::new(1));
+        while !full.is_done() {
+            full.step();
+        }
+        let want = full.finish();
+
+        let mut t =
+            DecodeTask::new(engine.as_ref(), backend.new_session(5), &[2, 3, 4], 60, Pcg32::new(1));
+        t.step();
+        t.step();
+        let ckpt = t.checkpoint();
+        let mut t = DecodeTask::resume(engine.as_ref(), backend.new_session(5), ckpt);
+        t.step();
+        let ckpt = t.checkpoint();
+        assert_eq!(
+            ckpt.stats.generated_tokens as usize,
+            ckpt.generated.len(),
+            "stats accumulate once across two checkpoints"
+        );
+        let mut t = DecodeTask::resume(engine.as_ref(), backend.new_session(5), ckpt);
+        while !t.is_done() {
+            t.step();
+        }
+        let got = t.finish();
+        assert_eq!(got.tokens, want.tokens, "twice-preempted stream diverged");
+        assert_eq!(got.stats.generated_tokens, 60);
+        assert!(got.stats.rounds > 0);
     }
 
     #[test]

@@ -15,8 +15,8 @@
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
-use specbranch::bench_harness::{experiments, Runner, Scale};
-use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task, TaskId};
+use specbranch::bench_harness::{experiments, gate, Scale};
+use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
 use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
 use specbranch::metrics;
@@ -59,12 +59,17 @@ fn print_help() {
                          --aging <rounds>  priority aging rate (0=off)\n\
                          --verify-batch <n>  fuse up to n requests' verify\n\
                                              blocks per target pass (1=off)\n\
+                         [--preempt]  reclaim KV from outranked inflight\n\
+                                      work instead of deferring admissions\n\
          bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
                                 table5|table6|fig7|fig10|fig19|table12|all>\n\
                          [--fast]\n\
          bench-smoke:    --out <file> (default BENCH_ci.json)\n\
+                         --metrics-out <file> (default BENCH_ci_metrics.json)\n\
                          --baseline <file>  fail on >tolerance regression\n\
-                         --tolerance <f>    (default 0.15)"
+                         --tolerance <f>    (default 0.15)\n\
+                         --pin <file>  also write the report over <file>\n\
+                                       (re-pins the committed baseline)"
     );
 }
 
@@ -203,6 +208,7 @@ fn cmd_serve(args: &Args) -> i32 {
         kv_bytes_per_token: None,
         aging_rounds: args.get_u64("aging", 8),
         verify_batch: args.get_usize("verify-batch", 1),
+        preempt: args.has("preempt"),
     };
     let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched);
     let addr = args.get_or("addr", "127.0.0.1:7799");
@@ -214,11 +220,12 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving on {} (engine={} policy={} verify-batch={})",
+        "serving on {} (engine={} policy={} verify-batch={} preempt={})",
         server.local_addr(),
         engine_id.name(),
         policy.name(),
-        sched.verify_batch.max(1)
+        sched.verify_batch.max(1),
+        sched.preempt
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
@@ -257,98 +264,65 @@ fn cmd_bench(args: &Args) -> i32 {
     0
 }
 
-/// CI throughput gate: run a small fixed sim workload, write the measured
-/// virtual-clock tokens/sec per engine as JSON, and compare against a
-/// committed baseline — exit 1 on a regression beyond `--tolerance`.
-///
-/// The sim backend's virtual clock makes the numbers machine-independent
-/// and bit-deterministic, so a tight tolerance is meaningful in CI. A
-/// baseline file carrying `"bootstrap": true` disables the gate (used to
-/// arm the pipeline before the first pinned numbers; replace it with a real
-/// `BENCH_ci.json` to arm the gate).
+/// CI throughput gate: run the fixed sim smoke workload, write the
+/// measured virtual-clock tokens/sec per engine as JSON, enforce the
+/// always-armed in-run gates (fused `--verify-batch` vs single-request,
+/// and the `specbranch-preempt` scenario vs its own no-preemption path),
+/// and compare the deterministic entries against the committed baseline —
+/// exit 1 on any gate failure. All the comparison logic lives in
+/// [`gate`] (`bench_harness::gate`) and is exercised by `cargo test`, so
+/// the gate CI enforces is the gate the test suite verifies.
 fn cmd_bench_smoke(args: &Args) -> i32 {
     let out_path = args.get_or("out", "BENCH_ci.json");
+    let metrics_path = args.get_or("metrics-out", "BENCH_ci_metrics.json");
     let tolerance = args.get_f64("tolerance", 0.15);
-    // Fixed small workload — must stay stable or the baseline is invalid.
-    let scale = Scale { requests: 3, max_new: 96 };
-    let pair = PairId::Vicuna68m13b;
-    let task = TaskId::MtBench;
-    let mut runner = Runner::new(scale);
-    let mut engines_json: Vec<(&str, json::Value)> = Vec::new();
-    let mut measured: Vec<(&'static str, f64)> = Vec::new();
-    let mut single_specbranch_tps = 0.0f64;
-    for engine in [EngineId::Sps, EngineId::SpecBranch] {
-        let cfg = runner.engine_cfg(pair);
-        let e = runner.evaluate(pair, task, engine, &cfg);
-        println!(
-            "bench-smoke: {:<18} {:>8.1} tok/s  speedup {:.2}x  M {:.2}",
-            engine.name(),
-            e.tokens_per_sec,
-            e.speedup,
-            e.mean_accepted()
-        );
-        if engine == EngineId::SpecBranch {
-            single_specbranch_tps = e.tokens_per_sec;
-        }
-        measured.push((engine.name(), e.tokens_per_sec));
-        engines_json.push((
-            engine.name(),
-            json::obj(vec![
-                ("tokens_per_sec", json::num(e.tokens_per_sec)),
-                ("speedup", json::num(e.speedup)),
-                ("mean_accepted", json::num(e.mean_accepted())),
-                ("rollback_rate", json::num(e.rollback_rate())),
-            ]),
-        ));
-    }
-    // Cross-request batched verification variant (`serve --verify-batch`):
-    // the same workload through the deterministic lockstep fused driver.
-    // Gate (always armed, no pinned baseline needed): the fused path must
-    // not regress tokens/sec vs the single-request path above.
-    let batched = {
-        let cfg = runner.engine_cfg(pair);
-        runner.run_engine_batched(pair, task, EngineId::SpecBranch, &cfg)
-    };
-    let batched_tps = batched.stats.tokens_per_sec();
-    println!(
-        "bench-smoke: {:<18} {:>8.1} tok/s  fused_passes {}  mean width {:.2}",
-        "specbranch-batched",
-        batched_tps,
-        batched.fused_passes,
-        batched.mean_fused_width()
-    );
-    measured.push(("specbranch-batched", batched_tps));
-    engines_json.push((
-        "specbranch-batched",
-        json::obj(vec![
-            ("tokens_per_sec", json::num(batched_tps)),
-            ("fused_passes", json::num(batched.fused_passes as f64)),
-            ("mean_fused_width", json::num(batched.mean_fused_width())),
-        ]),
-    ));
     let mut failed = false;
-    if batched.fused_passes == 0 {
-        eprintln!("bench-smoke: FUSION MISSING: multi-request load issued no fused pass");
+
+    // Deterministic entries (virtual clock; bit-stable across machines).
+    let run = gate::smoke_measurements();
+    for e in &run.entries {
+        println!("bench-smoke: {:<20} {:>8.1} tok/s", e.name, e.tokens_per_sec);
+    }
+    for f in run.fused_failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
         failed = true;
     }
-    if batched_tps < single_specbranch_tps * (1.0 - tolerance) {
-        eprintln!(
-            "bench-smoke: REGRESSION specbranch-batched: {batched_tps:.1} tok/s < \
-             single-request floor {:.1}",
-            single_specbranch_tps * (1.0 - tolerance)
-        );
+
+    // Armed in-run preemption gate: tight watermark + mixed priorities
+    // through the real coordinator; must preempt, must keep streams
+    // byte-identical, must stay within tolerance of the no-preemption
+    // path measured in the same invocation.
+    let preempt = gate::preempt_smoke();
+    println!(
+        "bench-smoke: {:<20} {:>8.1} tok/s  (no-preempt {:.1})  preemptions {}  \
+         repeat_prefill {}",
+        "specbranch-preempt",
+        preempt.tokens_per_sec,
+        preempt.reference_tokens_per_sec,
+        preempt.registry.preemptions,
+        preempt.registry.repeat_prefill_tokens,
+    );
+    for f in preempt.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
         failed = true;
     }
-    let report = json::obj(vec![
+
+    // The committed-baseline form of the report carries only the
+    // deterministic entries: the specbranch-preempt numbers depend on the
+    // preemption point (thread timing), so they are reported but never
+    // pinned or compared absolutely.
+    let pinned_report = json::obj(vec![
+        ("workload", run.workload.clone()),
         (
-            "workload",
-            json::obj(vec![
-                ("pair", json::s(ModelPair::get(pair).name)),
-                ("task", json::s(Task::get(task).name)),
-                ("requests", json::num(scale.requests as f64)),
-                ("max_new", json::num(scale.max_new as f64)),
-            ]),
+            "engines",
+            json::obj(run.entries.iter().map(|e| (e.name, e.detail.clone())).collect()),
         ),
+    ]);
+    let mut engines_json: Vec<(&str, json::Value)> =
+        run.entries.iter().map(|e| (e.name, e.detail.clone())).collect();
+    engines_json.push(("specbranch-preempt", preempt.detail()));
+    let report = json::obj(vec![
+        ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),
     ]);
     if let Err(e) = std::fs::write(out_path, report.to_string_pretty() + "\n") {
@@ -356,6 +330,33 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         return 2;
     }
     println!("bench-smoke: report written to {out_path}");
+    // Registry/METRICS snapshot of the preempted run — uploaded by CI as
+    // an artifact next to the report (same serialization as the server's
+    // METRICS reply).
+    let registry_json = preempt.registry.to_json();
+    if let Err(e) = std::fs::write(metrics_path, registry_json.to_string_pretty() + "\n") {
+        eprintln!("bench-smoke: cannot write {metrics_path}: {e}");
+        return 2;
+    }
+    println!("bench-smoke: registry snapshot written to {metrics_path}");
+    // `--pin <path>`: also write the deterministic entries over the
+    // committed baseline — the one-command way to (re)pin the absolute
+    // gate from a green run. A run whose in-run gates failed refuses to
+    // pin: regressed floors must never be committed silently.
+    if let Some(pin_path) = args.get("pin") {
+        if failed {
+            eprintln!(
+                "bench-smoke: refusing to pin {pin_path}: in-run gates failed in this \
+                 invocation"
+            );
+            return 1;
+        }
+        if let Err(e) = std::fs::write(pin_path, pinned_report.to_string_pretty() + "\n") {
+            eprintln!("bench-smoke: cannot pin baseline {pin_path}: {e}");
+            return 2;
+        }
+        println!("bench-smoke: baseline pinned to {pin_path}");
+    }
 
     let Some(baseline_path) = args.get("baseline") else {
         return if failed { 1 } else { 0 };
@@ -374,31 +375,21 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             return 2;
         }
     };
-    if matches!(base.get("bootstrap"), Some(json::Value::Bool(true))) {
+    let abs = gate::check_baseline(&run.measured(), &base, tolerance);
+    if abs.disarmed {
         println!(
             "bench-smoke: baseline is bootstrap-only — absolute gate disarmed \
-             (the in-run fused-vs-single gate above stays armed); replace \
-             {baseline_path} with a measured {out_path} to arm it"
+             (the in-run gates above stay armed); replace {baseline_path} with \
+             a measured {out_path} (or run with --pin {baseline_path}) to arm it"
         );
         return if failed { 1 } else { 0 };
     }
-    for (name, tps) in &measured {
-        let key = format!("engines.{name}.tokens_per_sec");
-        let Some(b) = base.get(&key).and_then(|v| v.as_f64()) else {
-            eprintln!("bench-smoke: baseline missing {key}; skipping");
-            continue;
-        };
-        let floor = b * (1.0 - tolerance);
-        if *tps < floor {
-            eprintln!(
-                "bench-smoke: REGRESSION {name}: {tps:.1} tok/s < floor {floor:.1} \
-                 (baseline {b:.1}, tolerance {:.0}%)",
-                tolerance * 100.0
-            );
-            failed = true;
-        } else {
-            println!("bench-smoke: {name} ok ({tps:.1} >= floor {floor:.1})");
-        }
+    for p in &abs.passes {
+        println!("bench-smoke: {p}");
+    }
+    for f in &abs.failures {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
     }
     if failed {
         1

@@ -92,23 +92,9 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             return Ok(());
         }
         if line == "METRICS" {
-            let m = coord.registry();
-            let v = json::obj(vec![
-                ("completed", json::num(m.completed as f64)),
-                ("cancelled", json::num(m.cancelled as f64)),
-                ("generated_tokens", json::num(m.generated_tokens as f64)),
-                ("rounds", json::num(m.rounds as f64)),
-                ("admission_deferrals", json::num(m.admission_deferrals as f64)),
-                (
-                    "kv_projected_peak_bytes",
-                    json::num(m.kv_projected_peak_bytes as f64),
-                ),
-                ("batched_rounds", json::num(m.batched_rounds as f64)),
-                ("fused_requests", json::num(m.fused_requests as f64)),
-                ("mean_fused_width", json::num(m.mean_fused_width)),
-                ("mean_queue_ms", json::num(m.mean_queue_ms)),
-                ("mean_decode_ms", json::num(m.mean_decode_ms)),
-            ]);
+            // Canonical snapshot serialization lives on RegistrySnapshot,
+            // shared with the bench-smoke metrics artifact.
+            let v = coord.registry().to_json();
             writeln!(out, "METRICS {v}")?;
             continue;
         }

@@ -6,7 +6,8 @@ use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
 use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
 use specbranch::coordinator::{
-    Coordinator, ResponseStatus, SchedulePolicy, SchedulerConfig, SubmitOpts,
+    projected_admission_bytes, Coordinator, ResponseStatus, SchedulePolicy, SchedulerConfig,
+    SubmitOpts,
 };
 
 fn backends(n: usize) -> Vec<Box<dyn Backend + Send>> {
@@ -579,6 +580,292 @@ fn priority_orders_the_batch_composition() {
         vec![b, a, c],
         "priority must order the fused batch composition"
     );
+    coord.shutdown();
+}
+
+#[test]
+fn preemption_reclaims_kv_then_resumes_byte_identical_exact_budgets() {
+    // Tentpole acceptance: under a watermark too small for the workload,
+    // the low-priority inflight request is preempted (KV reclaimed), the
+    // high-priority 7/40/150 mix runs, and the victim later resumes and
+    // completes with a token stream byte-identical to the unconstrained
+    // run — exact budgets, one registry count per request across the
+    // preempt/resume cycle.
+    let e_cfg = EngineConfig { max_new_tokens: 1024, ..Default::default() };
+    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let proj_600 = projected_admission_bytes(3, 600, &e_cfg, &base);
+    let proj_7 = projected_admission_bytes(3, 7, &e_cfg, &base);
+    // Fits the 600-budget victim alone, not together with even the
+    // 7-budget arrival: the high-priority burst must preempt to get in.
+    let tight = SchedulerConfig {
+        kv_watermark_bytes: Some(proj_600 + proj_7 / 2),
+        preempt: true,
+        ..base
+    };
+    let mix = [7usize, 40, 150];
+
+    // Unconstrained reference: same submission order => same ids => same
+    // per-request seeds => same deterministic greedy streams.
+    let reference = {
+        let coord =
+            Coordinator::start_with(backends(1), EngineId::SpecBranch, e_cfg.clone(), base);
+        coord.submit_opts(vec![1, 2, 3], 600, 5, SubmitOpts::default());
+        for (i, &sz) in mix.iter().enumerate() {
+            coord.submit_opts(
+                vec![4 + i as u32, 5, 6],
+                sz,
+                6 + i as u64,
+                SubmitOpts { priority: 9, ..Default::default() },
+            );
+        }
+        let mut out = std::collections::HashMap::new();
+        for _ in 0..4 {
+            let r = coord.collect();
+            out.insert(r.id, r.tokens);
+        }
+        coord.shutdown();
+        out
+    };
+
+    let coord = Coordinator::start_with(backends(1), EngineId::SpecBranch, e_cfg, tight);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let victim = coord.submit_opts(
+        vec![1, 2, 3],
+        600,
+        5,
+        SubmitOpts { stream: Some(tx), ..Default::default() },
+    );
+    // Wait for the victim's first committed round, so the high-priority
+    // arrivals land mid-flight and must preempt rather than defer.
+    let first = rx.recv().expect("victim first chunk");
+    assert!(!first.done, "a 600-token request cannot finish in one round");
+    let hi_ids: Vec<u64> = mix
+        .iter()
+        .enumerate()
+        .map(|(i, &sz)| {
+            coord.submit_opts(
+                vec![4 + i as u32, 5, 6],
+                sz,
+                6 + i as u64,
+                SubmitOpts { priority: 9, ..Default::default() },
+            )
+        })
+        .collect();
+    let mut got = std::collections::HashMap::new();
+    let mut stats_sum = 0u64;
+    let mut order = Vec::new();
+    for _ in 0..4 {
+        let r = coord.collect();
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(
+            r.tokens.len() as u64,
+            r.stats.generated_tokens,
+            "request {}: counters must agree across preempt/resume",
+            r.id
+        );
+        stats_sum += r.stats.generated_tokens;
+        order.push(r.id);
+        got.insert(r.id, r.tokens);
+    }
+    assert_eq!(got[&victim].len(), 600, "preempted victim still gets its exact budget");
+    for (i, &sz) in mix.iter().enumerate() {
+        assert_eq!(got[&hi_ids[i]].len(), sz, "exact budget for the {sz}-token request");
+    }
+    assert_eq!(
+        order.last().copied(),
+        Some(victim),
+        "the victim resumes only after the high-priority work frees the watermark"
+    );
+    for (id, tokens) in &reference {
+        assert_eq!(
+            &got[id], tokens,
+            "request {id}: stream must be byte-identical to the unconstrained run"
+        );
+    }
+    let snap = coord.registry();
+    assert!(snap.preemptions >= 1, "the tight watermark must preempt");
+    assert_eq!(snap.resumed, snap.preemptions, "every preemption is resumed");
+    assert!(snap.repeat_prefill_tokens > 0, "resume re-prefilled prompt + committed");
+    assert!(snap.kv_reclaimed_bytes > 0, "preemption reclaimed measured KV bytes");
+    assert_eq!(
+        snap.generated_tokens, stats_sum,
+        "registry counts each request once across preempt/resume"
+    );
+    assert_eq!(snap.generated_tokens as usize, 600 + 7 + 40 + 150);
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(coord.kv_projected_in_use(), 0, "projection drains to zero");
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_arrival_preempts_inflight_and_is_admitted_alone() {
+    // The oversized-admitted-alone rule interacting with preemption: an
+    // arrival whose projection alone exceeds the watermark outranks the
+    // inflight victim, preempts it to drain the cache to zero, runs alone
+    // (projection above the watermark), and the victim resumes after.
+    let e_cfg = EngineConfig { max_new_tokens: 1024, ..Default::default() };
+    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let proj_300 = projected_admission_bytes(3, 300, &e_cfg, &base);
+    let proj_700 = projected_admission_bytes(3, 700, &e_cfg, &base);
+    let watermark = proj_300 + proj_300 / 2;
+    assert!(proj_700 > watermark, "the big request must be oversized for the watermark");
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::Sps,
+        e_cfg,
+        SchedulerConfig { kv_watermark_bytes: Some(watermark), preempt: true, ..base },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let victim = coord
+        .submit_opts(vec![1, 2, 3], 300, 0, SubmitOpts { stream: Some(tx), ..Default::default() });
+    assert!(!rx.recv().expect("victim round").done);
+    let big =
+        coord.submit_opts(vec![4, 5, 6], 700, 1, SubmitOpts { priority: 9, ..Default::default() });
+    let first = coord.collect();
+    assert_eq!(first.id, big, "the oversized request runs alone while the victim waits");
+    assert_eq!(first.tokens.len(), 700);
+    assert_eq!(first.status, ResponseStatus::Completed);
+    let second = coord.collect_id(victim);
+    assert_eq!(second.tokens.len(), 300, "the victim still completes exactly");
+    assert_eq!(second.status, ResponseStatus::Completed);
+    let snap = coord.registry();
+    assert_eq!(snap.preemptions, 1, "one preemption drains the cache for the oversized run");
+    assert_eq!(snap.resumed, 1);
+    assert!(
+        snap.kv_projected_peak_bytes as usize >= proj_700,
+        "the oversized projection was admitted alone above the watermark"
+    );
+    assert_eq!(coord.kv_projected_in_use(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn pathological_watermark_preempt_resume_makes_progress_no_livelock() {
+    // Hysteresis acceptance: a 1-byte watermark makes every request
+    // oversized (each admitted alone) and every higher-priority arrival a
+    // preemptor. The resume shield (at least one completed round before
+    // the next preemption) guarantees forward progress, so the whole mixed
+    // workload still completes with exact budgets — no preempt/resume
+    // livelock, registry equality intact.
+    let e_cfg = EngineConfig { max_new_tokens: 256, ..Default::default() };
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::SpecBranch,
+        e_cfg,
+        SchedulerConfig {
+            policy: SchedulePolicy::Priority,
+            kv_watermark_bytes: Some(1),
+            preempt: true,
+            aging_rounds: 2,
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let first = coord
+        .submit_opts(vec![1, 2, 3], 240, 0, SubmitOpts { stream: Some(tx), ..Default::default() });
+    assert!(!rx.recv().expect("first round").done);
+    let mut ids = vec![first];
+    for (i, &p) in [5i32, 3, 9, 1].iter().enumerate() {
+        ids.push(coord.submit_opts(
+            vec![2 + i as u32, 3, 4],
+            240,
+            1 + i as u64,
+            SubmitOpts { priority: p, ..Default::default() },
+        ));
+    }
+    let mut stats_sum = 0u64;
+    for _ in 0..ids.len() {
+        let r = coord.collect();
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(r.tokens.len(), 240, "exact budget for request {}", r.id);
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+        stats_sum += r.stats.generated_tokens;
+    }
+    let snap = coord.registry();
+    assert!(snap.preemptions >= 1, "higher-priority arrivals must preempt");
+    assert_eq!(snap.resumed, snap.preemptions);
+    assert_eq!(snap.generated_tokens, stats_sum);
+    assert_eq!(snap.generated_tokens, 5 * 240);
+    assert_eq!(coord.kv_projected_in_use(), 0);
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn cancel_while_preempted_returns_partial_and_registry_holds() {
+    // Mixed cancel + preempt + complete: a request preempted and waiting
+    // for re-admission is cancelled — its response carries the
+    // checkpoint's partial tokens with real stats and it never resumes;
+    // a second cancellation lands mid-decode; two more requests complete.
+    // The registry token equality must span all of it.
+    let e_cfg = EngineConfig { max_new_tokens: 8192, ..Default::default() };
+    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let proj_400 = projected_admission_bytes(3, 400, &e_cfg, &base);
+    let watermark = proj_400 + proj_400 / 2;
+    let coord = Coordinator::start_with(
+        backends(1),
+        EngineId::SpecBranch,
+        e_cfg,
+        SchedulerConfig { kv_watermark_bytes: Some(watermark), preempt: true, ..base },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let victim = coord.submit_opts(
+        vec![1, 2, 3],
+        400,
+        0,
+        SubmitOpts { stream: Some(tx), ..Default::default() },
+    );
+    assert!(!rx.recv().expect("victim round").done);
+    // An oversized long-running high-priority request: preempts the victim
+    // and then holds the cache, so the victim must sit in the admission
+    // queue as a resumable entry (it cannot re-fit while the big one runs).
+    let big = coord.submit_opts(
+        vec![4, 5, 6],
+        8000,
+        1,
+        SubmitOpts { priority: 9, ..Default::default() },
+    );
+    let mut polls = 0;
+    while coord.registry().preemptions == 0 {
+        polls += 1;
+        assert!(polls < 10_000, "the oversized arrival never preempted the victim");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(coord.cancel(victim), "preempted request must be cancellable while queued");
+    let r_victim = coord.collect_id(victim);
+    assert_eq!(r_victim.status, ResponseStatus::Cancelled);
+    assert!(!r_victim.tokens.is_empty(), "partial tokens from before the preemption survive");
+    assert!(r_victim.tokens.len() < 400);
+    assert_eq!(r_victim.tokens.len() as u64, r_victim.stats.generated_tokens);
+    let mut stats_sum = r_victim.stats.generated_tokens;
+    // Cancel the big one mid-decode, then run two ordinary completions.
+    assert!(coord.cancel(big));
+    let r_big = coord.collect_id(big);
+    assert_eq!(r_big.status, ResponseStatus::Cancelled);
+    assert_eq!(r_big.tokens.len() as u64, r_big.stats.generated_tokens);
+    stats_sum += r_big.stats.generated_tokens;
+    let c1 = coord.submit_opts(vec![5, 6, 7], 80, 2, SubmitOpts::default());
+    let c2 = coord.submit_opts(vec![6, 7, 8], 80, 3, SubmitOpts::default());
+    for id in [c1, c2] {
+        let r = coord.collect_id(id);
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(r.tokens.len(), 80);
+        stats_sum += r.stats.generated_tokens;
+    }
+    let snap = coord.registry();
+    assert_eq!(snap.cancelled, 2);
+    assert_eq!(snap.completed, 2);
+    assert!(snap.preemptions >= 1);
+    assert_eq!(snap.resumed, 0, "a victim cancelled while queued never resumes");
+    assert!(snap.kv_reclaimed_bytes > 0);
+    assert_eq!(
+        snap.generated_tokens, stats_sum,
+        "registry == sum of per-request stats across cancel + preempt + complete"
+    );
+    assert_eq!(coord.kv_projected_in_use(), 0);
+    assert_eq!(coord.pending(), 0);
     coord.shutdown();
 }
 

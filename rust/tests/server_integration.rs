@@ -65,6 +65,39 @@ fn metrics_accumulate() {
     let m = client.metrics().expect("metrics");
     let completed = m.get("completed").and_then(|v| v.as_f64()).unwrap();
     assert!(completed >= 3.0);
+    // The preemption counters are present (zero without --preempt).
+    assert_eq!(m.get("preemptions").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(m.get("resumed").and_then(|v| v.as_f64()), Some(0.0));
+    client.quit().unwrap();
+}
+
+#[test]
+fn metrics_reply_on_idle_server_is_total() {
+    // Empty registry: every counter is 0 and every derived ratio is a
+    // finite 0.0 — the reply must parse (a NaN would break the json).
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let m = client.metrics().expect("idle METRICS must stay parseable");
+    for key in [
+        "completed",
+        "cancelled",
+        "generated_tokens",
+        "rounds",
+        "admission_deferrals",
+        "batched_rounds",
+        "fused_requests",
+        "preemptions",
+        "resumed",
+        "repeat_prefill_tokens",
+        "kv_reclaimed_bytes",
+        "mean_fused_width",
+        "mean_repeat_prefill_tokens",
+        "mean_queue_ms",
+        "mean_decode_ms",
+    ] {
+        let v = m.get(key).and_then(|v| v.as_f64());
+        assert_eq!(v, Some(0.0), "{key} must be a finite 0 on an idle server");
+    }
     client.quit().unwrap();
 }
 
