@@ -1,12 +1,16 @@
 //! Quickstart: load the AOT artifacts, decode one prompt with SpecBranch on
-//! the real tiny model pair, and compare against autoregressive decoding.
+//! the real tiny model pair, compare against autoregressive decoding, then
+//! serve the pair over TCP and run two requests concurrently on one
+//! multiplexed (protocol v2) connection.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::Backend;
 use specbranch::config::{EngineConfig, EngineId, Manifest};
+use specbranch::coordinator::Coordinator;
 use specbranch::engines;
+use specbranch::server::{Client, Server};
 use specbranch::token::Tokenizer;
 use specbranch::util::prng::Pcg32;
 
@@ -48,5 +52,29 @@ fn main() -> anyhow::Result<()> {
             100.0 * out.stats.rollback_rate()
         );
     }
+
+    // Serve the same pair and multiplex two tagged requests on one
+    // connection (protocol v2): both are in flight in the coordinator at
+    // once, and each reply routes back to its tag.
+    let backends: Vec<Box<dyn Backend + Send>> = vec![Box::new(backend.clone())];
+    let coord = Coordinator::start(backends, EngineId::SpecBranch, cfg);
+    let server = Server::bind("127.0.0.1:0", coord)?;
+    let addr = server.local_addr().to_string();
+    std::thread::spawn(move || server.serve(None));
+    let mut client = Client::connect(&addr)?;
+    client.submit("a", prompt, 24)?;
+    client.submit("b", "speculative decoding works by", 24)?;
+    println!("\n[serve] two tagged requests in flight on one connection:");
+    for tag in ["a", "b"] {
+        let (reply, _parts) = client.await_reply(tag)?;
+        println!("  {tag}: {}", reply.text);
+    }
+    let peak = client
+        .metrics()?
+        .get("inflight_peak")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    println!("  coordinator inflight peak: {peak}");
+    client.quit()?;
     Ok(())
 }

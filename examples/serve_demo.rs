@@ -1,9 +1,9 @@
-//! End-to-end serving driver (DESIGN.md §6): start the coordinator + TCP
-//! server over the REAL model pair (PJRT artifacts), submit a batch of
-//! prompts through the network client, and report per-request latency,
-//! throughput and the SD quality metrics — proving all layers compose:
-//! Pallas kernel → JAX model → HLO artifact → PJRT runtime → engine →
-//! coordinator → server → client.
+//! End-to-end serving driver: start the coordinator + TCP server over the
+//! REAL model pair (PJRT artifacts), keep the whole prompt batch in flight
+//! on ONE multiplexed (protocol v2) connection, and report per-request
+//! latency, throughput and the SD quality metrics — proving all layers
+//! compose: Pallas kernel → JAX model → HLO artifact → PJRT runtime →
+//! engine → coordinator → server → mux client.
 //!
 //!     make artifacts && cargo run --release --example serve_demo
 
@@ -48,15 +48,25 @@ fn main() -> anyhow::Result<()> {
         "the only way to do great work",
     ];
 
-    println!("serve_demo: {} requests against {addr}\n", prompts.len());
+    println!("serve_demo: {} requests multiplexed on one connection to {addr}\n", prompts.len());
     let mut client = Client::connect(&addr.to_string())?;
+    let t0 = std::time::Instant::now();
+    // Protocol v2: every request in flight at once, tagged r0..r7 — the
+    // coordinator batches them continuously instead of one per round-trip.
+    for (i, p) in prompts.iter().enumerate() {
+        client.submit(&format!("r{i}"), p, 40)?;
+    }
     let mut latencies = Vec::new();
     let mut tokens_total = 0u64;
-    let t0 = std::time::Instant::now();
-    for p in prompts {
-        let t1 = std::time::Instant::now();
-        let reply = client.generate(p, 40)?;
-        let ms = t1.elapsed().as_secs_f64() * 1000.0;
+    for (i, p) in prompts.iter().enumerate() {
+        let (reply, _parts) = client.await_reply(&format!("r{i}"))?;
+        // Per-request latency from the server's own accounting (queue +
+        // decode wall time), since replies overlap on the wire.
+        let ms = reply
+            .stats
+            .get("total_ms")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
         latencies.push(ms);
         let gen = reply
             .stats
@@ -90,6 +100,14 @@ fn main() -> anyhow::Result<()> {
         percentile(&latencies, 50.0),
         percentile(&latencies, 95.0),
         s.max()
+    );
+    println!(
+        "coordinator inflight peak: {} (all {} requests overlapped on one socket)",
+        metrics
+            .get("inflight_peak")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+        prompts.len()
     );
     println!("coordinator metrics: {metrics}");
     Ok(())

@@ -2,7 +2,7 @@
 //! the tier-1 test suite — so the exact comparisons CI enforces are the
 //! ones `cargo test` verifies on every run.
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! 1. [`smoke_measurements`] — the fixed deterministic workload (virtual
 //!    clock, bit-stable across machines) whose tokens/sec feed both the
@@ -12,7 +12,14 @@
 //!    asserts preemptions actually occur, streams stay byte-identical to
 //!    the unpreempted run, and throughput stays within tolerance of the
 //!    no-preemption path measured in the same invocation.
-//! 3. [`check_baseline`] — the absolute regression gate against the
+//! 3. [`mux_smoke`] — the armed **in-run** multiplexing scenario: M
+//!    streaming requests on one tagged (v2) connection through a real TCP
+//!    server; asserts the coordinator actually held ≥ 2 requests in
+//!    flight at once, every stream is byte-identical to its serial
+//!    reference (M separate one-at-a-time connections), and throughput
+//!    does not regress vs that serial path measured in the same
+//!    invocation.
+//! 4. [`check_baseline`] — the absolute regression gate against the
 //!    committed `.github/bench_baseline.json`. A baseline carrying
 //!    `"bootstrap": true` disarms only this layer; once armed, a missing
 //!    engine key is a failure (renaming an engine cannot silently disarm
@@ -314,6 +321,153 @@ impl PreemptSmoke {
 }
 
 // ---------------------------------------------------------------------------
+// In-run mux gate
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-mux` scenario: M streaming requests
+/// multiplexed on **one** connection (tagged v2 protocol) against the same
+/// requests driven serially over M separate connections, through a real
+/// TCP server in the same invocation. Sharing one server pins the engine
+/// and scheduler config across the two phases, so the per-request streams
+/// must be byte-identical and the virtual-clock throughput comparable.
+pub struct MuxSmoke {
+    /// Merged virtual-clock tokens/sec of the multiplexed run.
+    pub tokens_per_sec: f64,
+    /// Merged tokens/sec of the serial (one request per connection) run.
+    pub reference_tokens_per_sec: f64,
+    /// Every mux stream (PART concatenation and final text) matched its
+    /// serial reference byte-for-byte.
+    pub streams_match: bool,
+    /// Coordinator high-water mark of concurrently in-flight requests —
+    /// must reach ≥ 2 or the mux never actually overlapped work.
+    pub inflight_peak: u64,
+}
+
+/// Run the mux smoke scenario: the serial references on one server, the
+/// multiplexed run on a second identically-configured server. Submission
+/// order is the same in both phases, so each request gets the same
+/// coordinator id — and therefore the same per-request rng — in both
+/// runs, making streams *and* virtual-clock stats exactly equal unless
+/// the mux path itself misbehaves.
+pub fn mux_smoke() -> MuxSmoke {
+    const M: usize = 8;
+    const BUDGET: usize = 48;
+    let spawn_server = || -> String {
+        let backends: Vec<Box<dyn Backend + Send>> = (0..2)
+            .map(|_| {
+                let cfg = SimConfig::new(
+                    ModelPair::get(PairId::Vicuna68m13b),
+                    Task::get(TaskId::MtBench),
+                );
+                Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+            })
+            .collect();
+        let coord = Coordinator::start(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 96, ..Default::default() },
+        );
+        let server = crate::server::Server::bind("127.0.0.1:0", coord).expect("bind mux smoke");
+        let addr = server.local_addr().to_string();
+        std::thread::spawn(move || server.serve(None));
+        addr
+    };
+    let prompt = |i: usize| format!("mux probe {i} the quick brown fox jumps");
+    let measure = |stats: &json::Value| -> (u64, f64) {
+        let tokens = stats.get("generated").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let ms = stats.get("elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        (tokens, ms)
+    };
+
+    // Serial references: M separate connections, strictly one at a time.
+    let serial_addr = spawn_server();
+    let mut reference: Vec<(String, String)> = Vec::new();
+    let (mut ref_tokens, mut ref_ms) = (0u64, 0.0f64);
+    for i in 0..M {
+        let mut c = crate::server::Client::connect(&serial_addr).expect("connect serial");
+        let (reply, parts) = c.generate_stream(&prompt(i), BUDGET).expect("serial stream");
+        let (t, ms) = measure(&reply.stats);
+        ref_tokens += t;
+        ref_ms += ms;
+        reference.push((parts.concat(), reply.text));
+        let _ = c.quit();
+    }
+
+    // Mux run: the same M prompts in flight simultaneously on ONE
+    // connection (to a fresh server, so ids and rngs line up with the
+    // serial phase), replies awaited in submission order while the frames
+    // interleave freely.
+    let mux_addr = spawn_server();
+    let mut c = crate::server::Client::connect(&mux_addr).expect("connect mux");
+    for i in 0..M {
+        c.submit_stream(&format!("t{i}"), &prompt(i), BUDGET).expect("mux submit");
+    }
+    let mut streams_match = true;
+    let (mut mux_tokens, mut mux_ms) = (0u64, 0.0f64);
+    for i in 0..M {
+        let (reply, parts) = c.await_reply(&format!("t{i}")).expect("mux reply");
+        let (t, ms) = measure(&reply.stats);
+        mux_tokens += t;
+        mux_ms += ms;
+        let (ref_parts, ref_text) = &reference[i];
+        streams_match &= parts.concat() == *ref_parts && reply.text == *ref_text;
+    }
+    let metrics = c.metrics().expect("mux metrics");
+    let inflight_peak =
+        metrics.get("inflight_peak").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let _ = c.quit();
+
+    let tps = |tokens: u64, ms: f64| if ms <= 0.0 { 0.0 } else { tokens as f64 * 1000.0 / ms };
+    MuxSmoke {
+        tokens_per_sec: tps(mux_tokens, mux_ms),
+        reference_tokens_per_sec: tps(ref_tokens, ref_ms),
+        streams_match,
+        inflight_peak,
+    }
+}
+
+impl MuxSmoke {
+    /// The armed in-run assertions for the `specbranch-mux` entry.
+    pub fn failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if !self.streams_match {
+            f.push(
+                "specbranch-mux: multiplexed streams diverged from their serial references"
+                    .to_string(),
+            );
+        }
+        if self.inflight_peak < 2 {
+            f.push(format!(
+                "specbranch-mux: the multiplexed connection never overlapped work \
+                 (inflight_peak {})",
+                self.inflight_peak
+            ));
+        }
+        let floor = self.reference_tokens_per_sec * (1.0 - tolerance);
+        if self.tokens_per_sec < floor {
+            f.push(format!(
+                "REGRESSION specbranch-mux: {:.1} tok/s < floor {:.1} \
+                 (serial reference {:.1} in the same invocation)",
+                self.tokens_per_sec, floor, self.reference_tokens_per_sec
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-mux` entry of `BENCH_ci.json`
+    /// (in-run gate only: the inflight peak depends on thread timing).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("tokens_per_sec", json::num(self.tokens_per_sec)),
+            ("reference_tokens_per_sec", json::num(self.reference_tokens_per_sec)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("inflight_peak", json::num(self.inflight_peak as f64)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Absolute baseline gate
 // ---------------------------------------------------------------------------
 
@@ -444,6 +598,20 @@ mod tests {
         assert!(!gate.disarmed);
         assert!(gate.failures.is_empty(), "absolute gate: {:?}", gate.failures);
         assert_eq!(gate.passes.len(), run.entries.len());
+    }
+
+    #[test]
+    fn mux_smoke_gates_pass() {
+        // The armed in-run mux gate: one connection with 8 streaming
+        // requests in flight must overlap work in the coordinator
+        // (inflight_peak ≥ 2), keep every stream byte-identical to its
+        // serial reference, and stay within 15% of the serial throughput.
+        let run = mux_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.streams_match);
+        assert!(run.inflight_peak >= 2, "inflight_peak {}", run.inflight_peak);
+        assert!(run.tokens_per_sec > 0.0);
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! Mux load generator: drive a live server's tagged (v2) wire protocol
+//! with N connections × M in-flight requests per connection, and report
+//! wall-clock plus virtual-clock throughput.
+//!
+//! This is the measurement half of the multiplexed protocol: one
+//! connection with `inflight > 1` keeps that many requests live in the
+//! coordinator simultaneously (observable as `inflight_peak` in the
+//! server metrics), which is exactly what serialized v1 clients could
+//! never do. The CLI `specbranch loadgen` subcommand and the CI
+//! bench-smoke artifact both ride this module, so the numbers in
+//! `LOADGEN_ci.json` are produced by the same code paths the tests
+//! exercise.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::server::Client;
+use crate::util::json;
+
+/// One load-generation run: every connection keeps a closed-loop window
+/// of `inflight` tagged requests open until it has completed
+/// `requests_per_conn` of them.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenConfig {
+    pub connections: usize,
+    pub inflight: usize,
+    pub requests_per_conn: usize,
+    pub max_new: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self { connections: 2, inflight: 4, requests_per_conn: 8, max_new: 48 }
+    }
+}
+
+/// Aggregate results of one [`run`].
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    pub inflight: usize,
+    pub total_requests: u64,
+    pub generated_tokens: u64,
+    /// Wall-clock duration of the whole run (ms) and the throughput it
+    /// implies — machine-dependent, reported for operators.
+    pub wall_ms: f64,
+    pub wall_tokens_per_sec: f64,
+    /// Σ per-request virtual decode clock (ms) and the deterministic
+    /// throughput it implies — bit-stable on the sim backend.
+    pub clock_ms: f64,
+    pub clock_tokens_per_sec: f64,
+    /// High-water mark of concurrently in-flight requests, read from the
+    /// server's METRICS after the run; proves the mux overlapped work.
+    pub inflight_peak: u64,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> json::Value {
+        json::obj(vec![
+            ("connections", json::num(self.connections as f64)),
+            ("inflight", json::num(self.inflight as f64)),
+            ("total_requests", json::num(self.total_requests as f64)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+            ("wall_ms", json::num(self.wall_ms)),
+            ("wall_tokens_per_sec", json::num(self.wall_tokens_per_sec)),
+            ("clock_ms", json::num(self.clock_ms)),
+            ("clock_tokens_per_sec", json::num(self.clock_tokens_per_sec)),
+            ("inflight_peak", json::num(self.inflight_peak as f64)),
+        ])
+    }
+}
+
+/// Drive one connection's closed loop: keep up to `inflight` tagged
+/// requests open, awaiting the oldest and refilling until
+/// `requests_per_conn` have completed. Returns (tokens, virtual clock ms).
+fn drive_connection(addr: &str, conn: usize, cfg: &LoadgenConfig) -> Result<(u64, f64)> {
+    let mut client = Client::connect(addr)?;
+    let tag = |r: usize| format!("c{conn}r{r}");
+    let prompt = |r: usize| format!("load c{conn} r{r} the quick brown fox jumps over");
+    let window = cfg.inflight.max(1);
+    let mut submitted = 0usize;
+    while submitted < cfg.requests_per_conn && submitted < window {
+        client.submit(&tag(submitted), &prompt(submitted), cfg.max_new)?;
+        submitted += 1;
+    }
+    let mut tokens = 0u64;
+    let mut clock_ms = 0.0f64;
+    for r in 0..cfg.requests_per_conn {
+        let (reply, _parts) = client.await_reply(&tag(r))?;
+        let generated = reply
+            .stats
+            .get("generated")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("reply without generated count"))?;
+        tokens += generated as u64;
+        clock_ms += reply.stats.get("elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if submitted < cfg.requests_per_conn {
+            client.submit(&tag(submitted), &prompt(submitted), cfg.max_new)?;
+            submitted += 1;
+        }
+    }
+    client.quit()?;
+    Ok((tokens, clock_ms))
+}
+
+/// Run the load against a server at `addr`. Spawns one thread per
+/// connection; blocks until every request has completed.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..cfg.connections.max(1))
+        .map(|conn| {
+            let addr = addr.to_string();
+            let cfg = *cfg;
+            std::thread::spawn(move || drive_connection(&addr, conn, &cfg))
+        })
+        .collect();
+    let mut tokens = 0u64;
+    let mut clock_ms = 0.0f64;
+    for h in handles {
+        let (t, c) = h.join().map_err(|_| anyhow!("loadgen connection panicked"))??;
+        tokens += t;
+        clock_ms += c;
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let mut probe = Client::connect(addr).context("metrics probe")?;
+    let metrics = probe.metrics()?;
+    let inflight_peak =
+        metrics.get("inflight_peak").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    probe.quit()?;
+    let total = (cfg.connections.max(1) * cfg.requests_per_conn) as u64;
+    let tps = |ms: f64| if ms <= 0.0 { 0.0 } else { tokens as f64 * 1000.0 / ms };
+    Ok(LoadgenReport {
+        connections: cfg.connections.max(1),
+        inflight: cfg.inflight.max(1),
+        total_requests: total,
+        generated_tokens: tokens,
+        wall_ms,
+        wall_tokens_per_sec: tps(wall_ms),
+        clock_ms,
+        clock_tokens_per_sec: tps(clock_ms),
+        inflight_peak,
+    })
+}

@@ -6,6 +6,7 @@
 
 pub mod experiments;
 pub mod gate;
+pub mod loadgen;
 pub mod report;
 pub mod runner;
 

@@ -14,6 +14,20 @@
 //! into a coordinator-wide [`Registry`] that the server and benches report
 //! from.
 //!
+//! ## Completion delivery
+//!
+//! Finished [`Response`]s are delivered one of two ways: through the
+//! shared outbox ([`Coordinator::collect`] / [`Coordinator::collect_id`]),
+//! or — when the submission attached [`SubmitOpts::on_complete`] — through
+//! that request's own completion channel. The channel path is what the
+//! multiplexed server protocol rides: one connection keeps many requests
+//! in flight and receives exactly its own completions, in completion
+//! order, without polling the outbox. A completion channel whose receiver
+//! has gone away falls back to the outbox, so responses are never lost;
+//! [`Registry::inflight_peak`] records the high-water mark of concurrently
+//! in-flight requests, the observable proof that a mux client overlapped
+//! work.
+//!
 //! ## Scheduling policies ([`SchedulePolicy`])
 //!
 //! Both the admission queue and the between-round ready queue are ordered
@@ -293,6 +307,9 @@ pub struct Request {
     pub deadline_ms: Option<u64>,
     /// Optional per-round streaming channel (tokens land as rounds commit).
     pub stream: Option<Sender<StreamChunk>>,
+    /// Optional completion channel: the finished [`Response`] is delivered
+    /// here instead of the shared outbox (see [`SubmitOpts::on_complete`]).
+    pub on_complete: Option<Sender<Response>>,
 }
 
 /// Optional submission parameters (see [`Coordinator::submit_opts`]).
@@ -301,6 +318,15 @@ pub struct SubmitOpts {
     pub priority: i32,
     pub deadline_ms: Option<u64>,
     pub stream: Option<Sender<StreamChunk>>,
+    /// Per-request completion delivery: when set, the finished
+    /// [`Response`] is sent to this channel instead of the shared outbox,
+    /// so many submitters (e.g. one mux server connection per client) can
+    /// each receive exactly their own completions without contending on
+    /// [`Coordinator::collect_id`]. If the receiver is gone by completion
+    /// time the response falls back to the outbox — a dropped client never
+    /// loses a response, and the registry invariant is unaffected either
+    /// way. `None` keeps the outbox path.
+    pub on_complete: Option<Sender<Response>>,
 }
 
 /// Per-round streaming update for one request.
@@ -358,6 +384,8 @@ struct Inflight {
     /// Accumulated on-worker decode time (prefill + all rounds), µs.
     decode_us: u64,
     stream: Option<Sender<StreamChunk>>,
+    /// Completion delivery channel (outbox fallback when absent/closed).
+    on_complete: Option<Sender<Response>>,
     priority: i32,
     deadline_ms: Option<u64>,
     /// Absolute deadline (None = no deadline or out-of-range).
@@ -399,6 +427,8 @@ struct ResumeEntry {
     priority: i32,
     deadline_ms: Option<u64>,
     stream: Option<Sender<StreamChunk>>,
+    /// Completion delivery channel, preserved across preemption.
+    on_complete: Option<Sender<Response>>,
     /// On-worker decode time accumulated before preemption (µs).
     decode_us: u64,
     /// Delay before the first admission (ms) — reported, not re-measured.
@@ -499,6 +529,12 @@ pub struct Registry {
     /// Measured paged-KV bytes released back to the cache by preemption
     /// checkpoints.
     pub kv_reclaimed_bytes: AtomicU64,
+    /// High-water mark of concurrently in-flight requests (submitted but
+    /// not yet retired). A mux client driving one connection with M
+    /// outstanding tagged requests pushes this to M; a serial client never
+    /// pushes it past 1 — the observable proof that per-connection
+    /// multiplexing actually overlaps work in the coordinator.
+    pub inflight_peak: AtomicU64,
 }
 
 impl Registry {
@@ -523,6 +559,7 @@ impl Registry {
             resumed,
             repeat_prefill_tokens,
             kv_reclaimed_bytes: self.kv_reclaimed_bytes.load(Ordering::Relaxed),
+            inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
             // Every derived ratio below is total: each guards its zero
             // denominator, so an empty registry snapshots to all-zeros
             // (never NaN — the METRICS json must stay parseable).
@@ -570,6 +607,8 @@ pub struct RegistrySnapshot {
     pub repeat_prefill_tokens: u64,
     /// Paged-KV bytes released by preemption checkpoints.
     pub kv_reclaimed_bytes: u64,
+    /// High-water mark of concurrently in-flight requests.
+    pub inflight_peak: u64,
     /// Mean context re-prefilled per resume (0 when none resumed).
     pub mean_repeat_prefill_tokens: f64,
     /// Mean width of fused passes (0 when none were issued).
@@ -598,6 +637,7 @@ impl RegistrySnapshot {
             ("resumed", json::num(self.resumed as f64)),
             ("repeat_prefill_tokens", json::num(self.repeat_prefill_tokens as f64)),
             ("kv_reclaimed_bytes", json::num(self.kv_reclaimed_bytes as f64)),
+            ("inflight_peak", json::num(self.inflight_peak as f64)),
             ("mean_repeat_prefill_tokens", json::num(self.mean_repeat_prefill_tokens)),
             ("mean_queue_ms", json::num(self.mean_queue_ms)),
             ("mean_decode_ms", json::num(self.mean_decode_ms)),
@@ -705,7 +745,8 @@ impl Coordinator {
     ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let mut q = self.shared.queues.lock().unwrap();
-        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        let now_inflight = self.shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.shared.registry.inflight_peak.fetch_max(now_inflight, Ordering::Relaxed);
         q.inbox.push_back(Queued {
             entry: AdmissionEntry::Fresh(Request {
                 id,
@@ -715,6 +756,7 @@ impl Coordinator {
                 priority: opts.priority,
                 deadline_ms: opts.deadline_ms,
                 stream: opts.stream,
+                on_complete: opts.on_complete,
             }),
             at: Instant::now(),
             waits: 0,
@@ -757,6 +799,7 @@ impl Coordinator {
                             total_ms: queue_ms,
                         },
                         0,
+                        req.on_complete,
                     );
                 }
                 AdmissionEntry::Resumable(re) => retire_resumable_cancelled(shared, re, at),
@@ -1153,6 +1196,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                                 * 1000.0,
                             decode_us: admitted_at.elapsed().as_micros() as u64,
                             stream: req.stream,
+                            on_complete: req.on_complete,
                             priority: req.priority,
                             deadline_ms: req.deadline_ms,
                             deadline_at,
@@ -1188,6 +1232,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             queue_ms: re.queue_ms,
                             decode_us: re.decode_us + admitted_at.elapsed().as_micros() as u64,
                             stream: re.stream,
+                            on_complete: re.on_complete,
                             priority: re.priority,
                             deadline_ms: re.deadline_ms,
                             deadline_at,
@@ -1301,6 +1346,7 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
         queue_ms,
         decode_us,
         stream,
+        on_complete,
         deadline_ms,
         kv_projected,
         ..
@@ -1339,6 +1385,7 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
             total_ms,
         },
         kv_projected,
+        on_complete,
     );
 }
 
@@ -1359,6 +1406,7 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
         queue_ms,
         decode_us,
         stream,
+        on_complete,
         priority,
         deadline_ms,
         ..
@@ -1376,6 +1424,7 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
         priority,
         deadline_ms,
         stream,
+        on_complete,
         decode_us,
         queue_ms,
     };
@@ -1405,7 +1454,16 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
 /// real stats, exactly like a between-rounds cancellation. The queues lock
 /// must NOT be held.
 fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: Instant) {
-    let ResumeEntry { id, checkpoint, stream, deadline_ms, decode_us, queue_ms, .. } = entry;
+    let ResumeEntry {
+        id,
+        checkpoint,
+        stream,
+        on_complete,
+        deadline_ms,
+        decode_us,
+        queue_ms,
+        ..
+    } = entry;
     if let Some(tx) = &stream {
         let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
     }
@@ -1423,16 +1481,24 @@ fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: 
             total_ms,
         },
         0,
+        on_complete,
     );
 }
 
 /// Publish a retired request's [`Response`]: count it in the registry
 /// (cancelled requests count their partial tokens, keeping the registry
 /// total equal to the sum of per-response `DecodeStats`), release its KV
-/// projection, push it to the outbox, and wake collectors plus any
-/// admission deferred on the freed KV budget. The queues lock must NOT be
-/// held by the caller.
-fn publish_response(shared: &Shared, resp: Response, kv_projected: usize) {
+/// projection, deliver it — to the request's completion channel when one
+/// is attached, else to the shared outbox — and wake collectors plus any
+/// admission deferred on the freed KV budget. A completion channel whose
+/// receiver is gone falls back to the outbox, so no response is ever
+/// dropped. The queues lock must NOT be held by the caller.
+fn publish_response(
+    shared: &Shared,
+    resp: Response,
+    kv_projected: usize,
+    on_complete: Option<Sender<Response>>,
+) {
     if resp.is_cancelled() {
         shared.registry.cancelled.fetch_add(1, Ordering::Relaxed);
     } else {
@@ -1446,11 +1512,24 @@ fn publish_response(shared: &Shared, resp: Response, kv_projected: usize) {
         .registry
         .queue_us_total
         .fetch_add((resp.queue_ms * 1000.0) as u64, Ordering::Relaxed);
-    let mut q = shared.queues.lock().unwrap();
-    q.kv_projected_bytes = q.kv_projected_bytes.saturating_sub(kv_projected);
-    q.outbox.push_back(resp);
-    drop(q);
+    // Bookkeeping settles BEFORE the response becomes observable: a client
+    // that reacts to its completion immediately (a `pending()` probe, or a
+    // resubmission racing the KV watermark) must already see the freed
+    // projection and the decremented inflight count.
+    {
+        let mut q = shared.queues.lock().unwrap();
+        q.kv_projected_bytes = q.kv_projected_bytes.saturating_sub(kv_projected);
+    }
     shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    // A send to a live receiver consumes the response; a dead receiver
+    // hands it back for the outbox, so it is never lost.
+    let leftover = match on_complete {
+        Some(tx) => tx.send(resp).err().map(|e| e.0),
+        None => Some(resp),
+    };
+    if let Some(resp) = leftover {
+        shared.queues.lock().unwrap().outbox.push_back(resp);
+    }
     shared.cv_out.notify_all();
     shared.cv_in.notify_all();
 }

@@ -1,0 +1,23 @@
+//! Operator documentation, embedded into rustdoc.
+//!
+//! The repo's operator docs are markdown files at the repository root and
+//! under `docs/`; embedding them here makes the CI rustdoc job
+//! (`RUSTDOCFLAGS="-D warnings"`) validate them on every push — broken
+//! doc links or malformed embedded docs fail the build exactly like a
+//! broken contract comment would. The wire-protocol spec
+//! (`docs/PROTOCOL.md`) is embedded by the [`crate::server`] module it
+//! specifies.
+
+/// The repository README: build instructions, feature flags (including
+/// the `xla` gate and the vendored-`anyhow` story), and CLI usage for
+/// `serve`, `loadgen`, `bench` and `bench-smoke`.
+pub mod readme {
+    #![doc = include_str!("../../README.md")]
+}
+
+/// The architecture map: paper concepts (Alg. 2 point-mass rule, H-RAD,
+/// branch parallelism, rollback-aware retention) to the modules that
+/// implement them and the ROADMAP invariants that pin them.
+pub mod architecture {
+    #![doc = include_str!("../../docs/ARCHITECTURE.md")]
+}

@@ -17,11 +17,17 @@
 //! four A100 model pairs statistically (acceptance process α, speed ratio c,
 //! virtual clock) so every table and figure can be regenerated at paper
 //! scale on one CPU.
+//!
+//! Operator documentation is embedded into rustdoc (so CI validates it):
+//! the README and architecture map live in [`docs`], and the full wire
+//! protocol specification (v1 + the tagged multiplexed v2) is embedded in
+//! [`server`].
 
 pub mod backend;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
+pub mod docs;
 pub mod engines;
 pub mod hrad;
 pub mod kvcache;

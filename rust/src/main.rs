@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   generate   one-shot generation (PJRT artifacts or simulator)
 //!   serve      start the line-protocol TCP server over the coordinator
+//!   loadgen    mux load generator: N connections × M in-flight requests
 //!   bench      regenerate a paper experiment (same code as `cargo bench`)
 //!   info       list model pairs / tasks / engines and artifact status
 //!
@@ -10,12 +11,13 @@
 //!   specbranch generate --prompt "the only way" --engine specbranch
 //!   specbranch generate --backend sim --pair vicuna --task mtbench
 //!   specbranch serve --addr 127.0.0.1:7799 --workers 2
+//!   specbranch loadgen --connections 4 --inflight 8 --requests 16
 //!   specbranch bench --exp table2
 
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
-use specbranch::bench_harness::{experiments, gate, Scale};
+use specbranch::bench_harness::{experiments, gate, loadgen, Scale};
 use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
 use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
@@ -32,6 +34,7 @@ fn main() {
     let code = match cmd {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
         "info" => cmd_info(),
@@ -47,7 +50,7 @@ fn print_help() {
     println!(
         "specbranch — speculative decoding via hybrid drafting and \
          rollback-aware branch parallelism\n\n\
-         USAGE: specbranch <generate|serve|bench|bench-smoke|info> [flags]\n\n\
+         USAGE: specbranch <generate|serve|loadgen|bench|bench-smoke|info> [flags]\n\n\
          generate flags: --prompt <text> --engine <name> --backend <pjrt|sim>\n\
                          --pair <llama|vicuna|deepseek|llama3.1> --task <name>\n\
                          --max-new <n> --gamma <n> --epsilon <f> --seed <n>\n\
@@ -61,6 +64,14 @@ fn print_help() {
                                              blocks per target pass (1=off)\n\
                          [--preempt]  reclaim KV from outranked inflight\n\
                                       work instead of deferring admissions\n\
+         loadgen flags:  --connections <n> --inflight <m>  mux window per\n\
+                                      connection (tagged v2 protocol)\n\
+                         --requests <n>  requests per connection\n\
+                         --max-new <n>  per-request token budget\n\
+                         --out <file>  json report (default LOADGEN.json)\n\
+                         [--addr <host:port>]  target a running serve;\n\
+                                      default self-hosts a sim server\n\
+                                      (--workers/--pair/--task/--engine)\n\
          bench flags:    --exp <table2|table3|fig1b|fig2|fig5|fig6|table4|\n\
                                 table5|table6|fig7|fig10|fig19|table12|all>\n\
                          [--fast]\n\
@@ -232,6 +243,84 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+/// Drive the multiplexed (v2) wire protocol: `--connections` client
+/// connections, each keeping `--inflight` tagged requests live at once,
+/// `--requests` per connection in total. By default a sim-backed server is
+/// self-hosted in-process (so the command is a one-liner); `--addr` aims
+/// the same load at a running `serve`. Writes the json report shared with
+/// the CI bench-smoke artifact.
+fn cmd_loadgen(args: &Args) -> i32 {
+    let cfg = loadgen::LoadgenConfig {
+        connections: args.get_usize("connections", 2),
+        inflight: args.get_usize("inflight", 4),
+        requests_per_conn: args.get_usize("requests", 8),
+        max_new: args.get_usize("max-new", 48),
+    };
+    let out_path = args.get_or("out", "LOADGEN.json");
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            // Self-host: a sim-backed coordinator + server on a loopback
+            // port (the PJRT backend needs artifacts; loadgen is about the
+            // serving path, so the calibrated sim is the right default).
+            let engine_id = EngineId::parse(args.get_or("engine", "specbranch"))
+                .unwrap_or(EngineId::SpecBranch);
+            let Some(pair) = ModelPair::parse(args.get_or("pair", "vicuna")) else {
+                eprintln!("unknown --pair");
+                return 2;
+            };
+            let Some(task) = Task::parse(args.get_or("task", "mtbench")) else {
+                eprintln!("unknown --task");
+                return 2;
+            };
+            let workers = args.get_usize("workers", 2);
+            let backends: Vec<Box<dyn Backend + Send>> = (0..workers.max(1))
+                .map(|_| {
+                    let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+                    Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+                })
+                .collect();
+            let coord = Coordinator::start(backends, engine_id, engine_cfg(args));
+            let server = match Server::bind("127.0.0.1:0", coord) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("bind failed: {e:#}");
+                    return 2;
+                }
+            };
+            let addr = server.local_addr().to_string();
+            std::thread::spawn(move || server.serve(None));
+            println!("loadgen: self-hosted sim server on {addr}");
+            addr
+        }
+    };
+    let report = match loadgen::run(&addr, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen failed: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "loadgen: {} connections x {} inflight, {} requests, {} tokens",
+        report.connections, report.inflight, report.total_requests, report.generated_tokens
+    );
+    println!(
+        "loadgen: wall {:.1} ms ({:.1} tok/s) | virtual clock {:.1} ms ({:.1} tok/s)",
+        report.wall_ms,
+        report.wall_tokens_per_sec,
+        report.clock_ms,
+        report.clock_tokens_per_sec
+    );
+    println!("loadgen: coordinator inflight peak {}", report.inflight_peak);
+    if let Err(e) = std::fs::write(out_path, report.to_json().to_string_pretty() + "\n") {
+        eprintln!("loadgen: cannot write {out_path}: {e}");
+        return 2;
+    }
+    println!("loadgen: report written to {out_path}");
+    0
+}
+
 fn cmd_bench(args: &Args) -> i32 {
     let scale = if args.has("fast") { Scale::fast() } else { Scale::from_env() };
     let exp = args.get_or("exp", "all");
@@ -267,7 +356,8 @@ fn cmd_bench(args: &Args) -> i32 {
 /// CI throughput gate: run the fixed sim smoke workload, write the
 /// measured virtual-clock tokens/sec per engine as JSON, enforce the
 /// always-armed in-run gates (fused `--verify-batch` vs single-request,
-/// and the `specbranch-preempt` scenario vs its own no-preemption path),
+/// the `specbranch-preempt` scenario vs its own no-preemption path, and
+/// the `specbranch-mux` scenario vs its own serial-connection path),
 /// and compare the deterministic entries against the committed baseline —
 /// exit 1 on any gate failure. All the comparison logic lives in
 /// [`gate`] (`bench_harness::gate`) and is exercised by `cargo test`, so
@@ -307,6 +397,21 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         failed = true;
     }
 
+    // Armed in-run mux gate: M streaming requests multiplexed on one
+    // tagged (v2) connection through a real TCP server; must keep ≥ 2
+    // requests concurrently in flight, match its serial references
+    // byte-for-byte, and stay within tolerance of the serial path
+    // measured in the same invocation.
+    let mux = gate::mux_smoke();
+    println!(
+        "bench-smoke: {:<20} {:>8.1} tok/s  (serial {:.1})  inflight_peak {}",
+        "specbranch-mux", mux.tokens_per_sec, mux.reference_tokens_per_sec, mux.inflight_peak,
+    );
+    for f in mux.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
+
     // The committed-baseline form of the report carries only the
     // deterministic entries: the specbranch-preempt numbers depend on the
     // preemption point (thread timing), so they are reported but never
@@ -321,6 +426,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     let mut engines_json: Vec<(&str, json::Value)> =
         run.entries.iter().map(|e| (e.name, e.detail.clone())).collect();
     engines_json.push(("specbranch-preempt", preempt.detail()));
+    engines_json.push(("specbranch-mux", mux.detail()));
     let report = json::obj(vec![
         ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),

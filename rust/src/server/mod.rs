@@ -1,35 +1,43 @@
-//! Line-protocol TCP server + client over the coordinator.
+//! Line-protocol TCP server + multiplexing client over the coordinator.
 //!
-//! Protocol (one line per message, UTF-8):
-//!   client → `GEN <max_new_tokens> [pri=<i32>] [deadline=<ms>] <prompt…>`
-//!   server → `OK <id> <completion text>` then `STATS <id> <json>`
-//!   client → `GENS <max_new_tokens> [pri=<i32>] [deadline=<ms>] <prompt…>`
-//!   server → `PART <id> <text chunk>` per decode round, then
-//!            `OK <id> <completion text>` and `STATS <id> <json>`
-//!   client → `CANCEL <id>` ; server → `CANCELLED <id> <ok|miss>`
-//!   client → `METRICS` ; server → `METRICS <json>`
-//!   client → `QUIT`
+//! Two protocol generations share the socket. **v1** (legacy, untagged) is
+//! one-request-at-a-time: `GEN <max_new> <prompt>` and replies labelled by
+//! the server-assigned numeric id. **v2** (tagged) multiplexes: every
+//! request frame carries a client-chosen non-numeric tag (`GEN <tag>
+//! <max_new> …`), every reply frame echoes it, and frames from many
+//! in-flight requests interleave on one connection — so a single client
+//! session can saturate the continuous-batching scheduler instead of one
+//! request per round-trip.
 //!
-//! `pri=` orders requests under the coordinator's priority policy;
-//! `deadline=` sets the EDF deadline (ms from submission). Cancellation
-//! targets a request in flight on *another* connection (GEN replies are
-//! synchronous per connection); the cancelled request still receives its
-//! `OK` line carrying the partial completion, with `"cancelled": true` in
-//! its STATS json.
+//! Each connection is split into a **reader** (parses frames, submits to
+//! the coordinator with per-request stream + completion channels) and a
+//! **writer** (serialises a per-connection event queue onto the socket);
+//! a per-request forwarder bridges the coordinator's channels into that
+//! queue, preserving the per-request frame order (`PART`* then `OK` +
+//! `STATS`). Invariants the tests pin: tags are unique per connection
+//! while in flight, a dropped connection cancels its orphaned requests
+//! (their partial tokens still count in the registry), and v1 clients
+//! keep the pre-v2 reply structure for well-formed frames plus the exact
+//! bare `ERR` strings for numeric-first malformed ones (the `STATS`
+//! payload gained additive fields; see the compatibility notes below).
 //!
-//! Text is tokenized with the 64-symbol [`crate::token::Tokenizer`] (the
-//! tiny PJRT pair's alphabet). The server holds the coordinator; each
-//! connection is handled on its own thread, and responses are matched to
-//! their own request ids, so concurrent connections never steal each
-//! other's completions.
+//! The complete wire-protocol specification (grammar, framing and error
+//! rules, annotated mux/streaming/cancel transcripts, compatibility
+//! notes) is `docs/PROTOCOL.md`, embedded below so the rustdoc build
+//! checks it.
+//!
+//! ---
+#![doc = include_str!("../../../docs/PROTOCOL.md")]
 
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{Coordinator, SubmitOpts};
+use crate::coordinator::{Coordinator, Response, StreamChunk, SubmitOpts};
 use crate::token::Tokenizer;
 use crate::util::json;
 
@@ -74,48 +82,190 @@ impl Server {
     }
 }
 
+/// `true` if `s` is a valid v2 tag: non-empty, whitespace-free, and not a
+/// pure unsigned integer (numeric words belong to the v1 grammar and to
+/// id-addressed `CANCEL`).
+fn is_tag(s: &str) -> bool {
+    !s.is_empty() && !s.contains(char::is_whitespace) && s.parse::<u64>().is_err()
+}
+
+/// Completion text is framed on one line: collapse the tokenizer's
+/// whitespace symbols.
+fn sanitize(text: String) -> String {
+    text.replace(['\n', '\t'], " ")
+}
+
+/// Canonical per-request `STATS` payload (v1 and v2 share it; `id` is the
+/// coordinator-assigned global id that cross-connection `CANCEL` targets).
+fn stats_json(resp: &Response) -> json::Value {
+    json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("generated", json::num(resp.stats.generated_tokens as f64)),
+        ("rounds", json::num(resp.stats.rounds as f64)),
+        ("mean_accepted", json::num(resp.stats.mean_accepted())),
+        ("rollback_rate", json::num(resp.stats.rollback_rate())),
+        ("tokens_per_sec", json::num(resp.stats.tokens_per_sec())),
+        ("elapsed_ms", json::num(resp.stats.elapsed_ms)),
+        ("cancelled", json::Value::Bool(resp.is_cancelled())),
+        ("deadline_met", resp.deadline_met.map(json::Value::Bool).unwrap_or(json::Value::Null)),
+        ("queue_ms", json::num(resp.queue_ms)),
+        ("total_ms", json::num(resp.total_ms)),
+    ])
+}
+
+/// One entry of a connection's outbound event queue. The writer thread is
+/// the only place that touches the socket's write half, so frames from
+/// concurrent requests serialise cleanly; a `Done` event emits its `OK`
+/// and `STATS` lines back-to-back, which is what guarantees no foreign
+/// frame ever lands between them.
+enum ConnEvent {
+    /// A pre-formatted reply line from the reader (errors, cancel
+    /// verdicts, metrics).
+    Line(String),
+    /// One streamed decode round for the labelled request.
+    Chunk { label: String, tokens: Vec<u32> },
+    /// Final reply for the labelled request (v2 tag or v1 numeric id).
+    /// Boxed: a `Response` (tokens + full `DecodeStats`) dwarfs the other
+    /// variants.
+    Done { label: String, resp: Box<Response> },
+}
+
+/// Writer half of one connection: drain the event queue onto the socket
+/// until every sender is gone or the socket dies.
+fn writer_loop(mut out: TcpStream, events: Receiver<ConnEvent>, tok: Tokenizer) {
+    for ev in events {
+        let res = match ev {
+            ConnEvent::Line(line) => writeln!(out, "{line}"),
+            ConnEvent::Chunk { label, tokens } => {
+                let part = sanitize(tok.decode(&tokens));
+                writeln!(out, "PART {label} {part}")
+            }
+            ConnEvent::Done { label, resp } => {
+                let text = sanitize(tok.decode(&resp.tokens));
+                let stats = stats_json(&resp);
+                writeln!(out, "OK {label} {text}")
+                    .and_then(|()| writeln!(out, "STATS {label} {stats}"))
+            }
+        };
+        if res.is_err() {
+            // Dead socket: stop draining; pending senders see the drop.
+            return;
+        }
+    }
+}
+
+/// Bridge one request's coordinator channels into the connection's event
+/// queue: forward stream chunks until the final one, then the completion.
+/// Serialising both through one thread keeps the per-request frame order
+/// (`PART`* then `OK`) even though the two channels are independent. The
+/// tag is released just before the final frames are queued.
+fn spawn_forwarder(
+    label: String,
+    events: Sender<ConnEvent>,
+    tags: Arc<Mutex<HashMap<String, u64>>>,
+    stream_rx: Option<Receiver<StreamChunk>>,
+    done_rx: Receiver<Response>,
+) {
+    std::thread::spawn(move || {
+        if let Some(rx) = stream_rx {
+            for chunk in rx {
+                let done = chunk.done;
+                if !chunk.tokens.is_empty() {
+                    let ev = ConnEvent::Chunk { label: label.clone(), tokens: chunk.tokens };
+                    let _ = events.send(ev);
+                }
+                if done {
+                    break;
+                }
+            }
+        }
+        let resp = done_rx.recv();
+        tags.lock().unwrap().remove(&label);
+        if let Ok(resp) = resp {
+            let _ = events.send(ConnEvent::Done { label, resp: Box::new(resp) });
+        }
+    });
+}
+
 fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     let tok = Tokenizer::new();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+    let (events, events_rx) = channel::<ConnEvent>();
+    // In-flight requests on this connection: label (tag, or numeric id for
+    // v1 frames) → coordinator id. Guards tag uniqueness and drives the
+    // orphan cancellation when the connection goes away.
+    let tags: Arc<Mutex<HashMap<String, u64>>> = Arc::default();
+    let writer = std::thread::spawn(move || writer_loop(stream, events_rx, Tokenizer::new()));
+
     let mut line = String::new();
-    loop {
+    let result = loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(());
+        match reader.read_line(&mut line) {
+            Ok(0) => break Ok(()),
+            Ok(_) => {}
+            Err(e) => break Err(e.into()),
         }
         let line = line.trim_end();
         if line.is_empty() {
             continue;
         }
         if line == "QUIT" {
-            return Ok(());
+            break Ok(());
         }
         if line == "METRICS" {
             // Canonical snapshot serialization lives on RegistrySnapshot,
             // shared with the bench-smoke metrics artifact.
             let v = coord.registry().to_json();
-            writeln!(out, "METRICS {v}")?;
+            let _ = events.send(ConnEvent::Line(format!("METRICS {v}")));
             continue;
         }
         if let Some(rest) = line.strip_prefix("CANCEL ") {
-            let Ok(id) = rest.trim().parse::<u64>() else {
-                writeln!(out, "ERR bad cancel id")?;
-                continue;
+            let target = rest.trim();
+            let reply = if let Ok(id) = target.parse::<u64>() {
+                // v1: cancel by global id (any connection's request).
+                let hit = coord.cancel(id);
+                format!("CANCELLED {} {}", id, if hit { "ok" } else { "miss" })
+            } else if is_tag(target) {
+                // v2: cancel this connection's in-flight tagged request.
+                let id = tags.lock().unwrap().get(target).copied();
+                let hit = id.map(|id| coord.cancel(id)).unwrap_or(false);
+                format!("CANCELLED {} {}", target, if hit { "ok" } else { "miss" })
+            } else {
+                "ERR bad cancel id".to_string()
             };
-            let hit = coord.cancel(id);
-            writeln!(out, "CANCELLED {} {}", id, if hit { "ok" } else { "miss" })?;
+            let _ = events.send(ConnEvent::Line(reply));
             continue;
         }
         let streaming = line.starts_with("GENS ");
         if let Some(rest) = line.strip_prefix("GEN ").or_else(|| line.strip_prefix("GENS ")) {
-            // Malformed requests get an ERR reply, not a disconnect.
-            let Some((max_new, mut rest)) = rest.split_once(' ') else {
-                writeln!(out, "ERR GEN needs '<max_new> <prompt>'")?;
+            // v2 frames put a client-chosen non-numeric tag between the
+            // verb and the budget; v1 frames start with the numeric budget.
+            let (tag, body) = match rest.split_once(' ') {
+                Some((word, tail)) if is_tag(word) => (Some(word), tail),
+                Some(_) => (None, rest),
+                None => {
+                    if is_tag(rest) {
+                        (Some(rest), "")
+                    } else {
+                        (None, rest)
+                    }
+                }
+            };
+            // Malformed requests get an ERR reply, not a disconnect. v2
+            // errors echo the offending tag so a mux client can attribute
+            // them; v1 error strings are pinned bare.
+            let err = |msg: &str| {
+                ConnEvent::Line(match tag {
+                    Some(t) => format!("ERR {t} {msg}"),
+                    None => format!("ERR {msg}"),
+                })
+            };
+            let Some((max_new, mut rest)) = body.split_once(' ') else {
+                let _ = events.send(err("GEN needs '<max_new> <prompt>'"));
                 continue;
             };
             let Ok(max_new) = max_new.parse::<usize>() else {
-                writeln!(out, "ERR bad max_new")?;
+                let _ = events.send(err("bad max_new"));
                 continue;
             };
             // Optional scheduling options between max_new and the prompt.
@@ -140,78 +290,176 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             }
             let prompt = tok.encode(rest);
             if prompt.is_empty() {
-                writeln!(out, "ERR empty prompt")?;
+                let _ = events.send(err("empty prompt"));
                 continue;
             }
-            let resp = if streaming {
-                // Forward each round's committed tokens as it lands.
-                let (tx, rx) = std::sync::mpsc::channel();
-                let id = coord.submit_opts(
-                    prompt,
-                    max_new,
-                    42,
-                    SubmitOpts { priority, deadline_ms, stream: Some(tx) },
-                );
-                for chunk in rx {
-                    if !chunk.tokens.is_empty() {
-                        let part =
-                            tok.decode(&chunk.tokens).replace('\n', " ").replace('\t', " ");
-                        writeln!(out, "PART {} {}", chunk.id, part)?;
-                    }
-                    if chunk.done {
-                        break;
-                    }
+            // Reserve the label and submit under the map lock, so the
+            // forwarder's removal (which can fire the instant the request
+            // completes) can never race the insertion, and a duplicate tag
+            // is rejected before it reaches the coordinator.
+            let mut map = tags.lock().unwrap();
+            if let Some(t) = tag {
+                if map.contains_key(t) {
+                    drop(map);
+                    let _ = events.send(err("tag already in flight"));
+                    continue;
                 }
-                coord.collect_id(id)
+            }
+            let (done_tx, done_rx) = channel::<Response>();
+            let (stream_tx, stream_rx) = if streaming {
+                let (tx, rx) = channel::<StreamChunk>();
+                (Some(tx), Some(rx))
             } else {
-                let id = coord.submit_opts(
-                    prompt,
-                    max_new,
-                    42,
-                    SubmitOpts { priority, deadline_ms, stream: None },
-                );
-                coord.collect_id(id)
+                (None, None)
             };
-            let text = tok.decode(&resp.tokens).replace('\n', " ").replace('\t', " ");
-            writeln!(out, "OK {} {}", resp.id, text)?;
-            let stats = json::obj(vec![
-                ("generated", json::num(resp.stats.generated_tokens as f64)),
-                ("rounds", json::num(resp.stats.rounds as f64)),
-                ("mean_accepted", json::num(resp.stats.mean_accepted())),
-                ("rollback_rate", json::num(resp.stats.rollback_rate())),
-                ("tokens_per_sec", json::num(resp.stats.tokens_per_sec())),
-                ("cancelled", json::Value::Bool(resp.is_cancelled())),
-                (
-                    "deadline_met",
-                    resp.deadline_met.map(json::Value::Bool).unwrap_or(json::Value::Null),
-                ),
-                ("queue_ms", json::num(resp.queue_ms)),
-                ("total_ms", json::num(resp.total_ms)),
-            ]);
-            writeln!(out, "STATS {} {}", resp.id, stats)?;
+            let id = coord.submit_opts(
+                prompt,
+                max_new,
+                42,
+                SubmitOpts {
+                    priority,
+                    deadline_ms,
+                    stream: stream_tx,
+                    on_complete: Some(done_tx),
+                },
+            );
+            let label = tag.map(|t| t.to_string()).unwrap_or_else(|| id.to_string());
+            map.insert(label.clone(), id);
+            drop(map);
+            spawn_forwarder(label, events.clone(), Arc::clone(&tags), stream_rx, done_rx);
             continue;
         }
-        writeln!(out, "ERR unknown command")?;
+        let _ = events.send(ConnEvent::Line("ERR unknown command".to_string()));
+    };
+    // Orphan cancellation: whatever this connection still has in flight is
+    // cancelled now that nobody can read the replies. Partial tokens still
+    // count in the registry, so `generated_tokens == Σ per-response stats`
+    // survives client crashes. The forwarders drain the cancelled
+    // responses and drop their event senders, which lets the writer exit.
+    let orphans: Vec<u64> = tags.lock().unwrap().values().copied().collect();
+    for id in orphans {
+        coord.cancel(id);
     }
+    drop(events);
+    let _ = writer.join();
+    result
 }
 
-/// Minimal blocking client for tests/examples.
+/// Blocking client for tests, examples and the load generator: the legacy
+/// one-at-a-time v1 calls ([`Client::generate`] & friends) plus the v2 mux
+/// API — [`Client::submit`] / [`Client::submit_stream`] tag a request and
+/// return immediately, [`Client::await_reply`] blocks for one tag while
+/// buffering interleaved frames of the others, [`Client::next_event`]
+/// iterates raw frames in wire order for interleaved stream consumption,
+/// and [`Client::cancel_tag`] cancels an in-flight request of *this*
+/// connection mid-decode.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Tags this client has submitted and not yet seen retired — used to
+    /// attribute tagged `ERR` frames (the message's first word is
+    /// otherwise ambiguous).
+    inflight: HashSet<String>,
+    /// Frames read off the wire while blocking for some other reply.
+    queued: VecDeque<MuxEvent>,
 }
 
 #[derive(Debug)]
 pub struct GenReply {
+    /// Server-assigned global request id (what `CANCEL <id>` targets).
     pub id: u64,
+    /// The client-chosen tag for v2 replies; None for v1 replies.
+    pub tag: Option<String>,
     pub text: String,
     pub stats: json::Value,
+}
+
+/// Options for a tagged (v2) submission.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MuxOpts {
+    /// Larger = more urgent under the priority policy.
+    pub priority: i32,
+    /// EDF deadline in ms from submission.
+    pub deadline_ms: Option<u64>,
+    /// Stream per-round `PART` frames (`GENS`) instead of one final reply.
+    pub streaming: bool,
+}
+
+/// One server frame, demultiplexed ([`Client::next_event`]).
+#[derive(Debug)]
+pub enum MuxEvent {
+    /// One streamed decode round (`PART`).
+    Part { tag: String, text: String },
+    /// Final reply for a request (`OK` + `STATS` pair).
+    Done { tag: String, reply: GenReply },
+    /// Verdict for a `CANCEL` frame.
+    Cancelled { tag: String, hit: bool },
+    /// Tagged (request-scoped) or bare (v1/connection-scoped) error.
+    Err { tag: Option<String>, msg: String },
+    /// Registry snapshot reply.
+    Metrics(json::Value),
+}
+
+/// The label a buffered event is addressed to, if any.
+fn event_label(ev: &MuxEvent) -> Option<&str> {
+    match ev {
+        MuxEvent::Part { tag, .. }
+        | MuxEvent::Done { tag, .. }
+        | MuxEvent::Cancelled { tag, .. } => Some(tag),
+        MuxEvent::Err { tag, .. } => tag.as_deref(),
+        MuxEvent::Metrics(_) => None,
+    }
+}
+
+/// Fold one event of a tag into an in-progress reply: collect parts,
+/// finish on the final reply, surface request-scoped errors.
+fn absorb(ev: MuxEvent, parts: &mut Vec<String>) -> Result<Option<GenReply>> {
+    match ev {
+        MuxEvent::Part { text, .. } => {
+            parts.push(text);
+            Ok(None)
+        }
+        MuxEvent::Done { reply, .. } => Ok(Some(reply)),
+        MuxEvent::Err { tag, msg } => {
+            Err(anyhow!("server error for {}: {msg}", tag.unwrap_or_default()))
+        }
+        // A cancel verdict for this tag while awaiting its reply: the
+        // reply (carrying the partial completion) is still coming.
+        MuxEvent::Cancelled { .. } => Ok(None),
+        MuxEvent::Metrics(_) => Ok(None),
+    }
+}
+
+/// A prompt must stay on its own frame: an embedded newline would split
+/// into a second, almost-certainly-malformed frame whose bare `ERR` reply
+/// the demultiplexer cannot attribute.
+fn check_prompt(prompt: &str) -> Result<()> {
+    if prompt.contains(['\n', '\r']) {
+        return Err(anyhow!("prompt must be a single line (no newlines)"));
+    }
+    Ok(())
+}
+
+/// `true` if a v1 await may claim frames labelled `label` (numeric server
+/// ids only — never a tag this client has in flight — and sticky once the
+/// first frame fixed the id).
+fn v1_claims(inflight: &HashSet<String>, claimed: &Option<String>, label: &str) -> bool {
+    !inflight.contains(label)
+        && match claimed {
+            Some(c) => c == label,
+            None => label.parse::<u64>().is_ok(),
+        }
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            inflight: HashSet::new(),
+            queued: VecDeque::new(),
+        })
     }
 
     fn read_line(&mut self) -> Result<String> {
@@ -222,9 +470,183 @@ impl Client {
         Ok(line.trim_end().to_string())
     }
 
+    /// Read one frame off the wire (an `OK` consumes its adjacent `STATS`
+    /// too). Does not consult the buffered-event queue.
+    fn pump(&mut self) -> Result<MuxEvent> {
+        let line = self.read_line()?;
+        if let Some(rest) = line.strip_prefix("PART ") {
+            let (label, chunk) = rest.split_once(' ').unwrap_or((rest, ""));
+            return Ok(MuxEvent::Part { tag: label.to_string(), text: chunk.to_string() });
+        }
+        if let Some(rest) = line.strip_prefix("OK ") {
+            // An empty completion (cancelled before any round committed)
+            // frames as `OK <label>` with no text.
+            let (label, text) = rest.split_once(' ').unwrap_or((rest, ""));
+            let label = label.to_string();
+            let text = text.to_string();
+            let stats_line = self.read_line()?;
+            let srest = stats_line
+                .strip_prefix("STATS ")
+                .ok_or_else(|| anyhow!("bad stats line: {stats_line}"))?;
+            let (slabel, sjson) = srest.split_once(' ').ok_or_else(|| anyhow!("bad STATS"))?;
+            if slabel != label {
+                return Err(anyhow!("STATS label {slabel} does not match OK {label}"));
+            }
+            let stats = json::parse(sjson).context("bad stats json")?;
+            let (id, tag) = match label.parse::<u64>() {
+                Ok(n) => (n, None),
+                Err(_) => (
+                    stats.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                    Some(label.clone()),
+                ),
+            };
+            self.inflight.remove(&label);
+            return Ok(MuxEvent::Done { tag: label, reply: GenReply { id, tag, text, stats } });
+        }
+        if let Some(rest) = line.strip_prefix("CANCELLED ") {
+            let (label, verdict) = rest.split_once(' ').ok_or_else(|| anyhow!("bad CANCELLED"))?;
+            return Ok(MuxEvent::Cancelled { tag: label.to_string(), hit: verdict == "ok" });
+        }
+        if let Some(rest) = line.strip_prefix("METRICS ") {
+            return Ok(MuxEvent::Metrics(json::parse(rest).context("bad metrics json")?));
+        }
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            // A tagged error's first word is one of our in-flight tags.
+            if let Some((word, msg)) = rest.split_once(' ') {
+                if self.inflight.remove(word) {
+                    let tag = Some(word.to_string());
+                    return Ok(MuxEvent::Err { tag, msg: msg.to_string() });
+                }
+            }
+            return Ok(MuxEvent::Err { tag: None, msg: rest.to_string() });
+        }
+        Err(anyhow!("bad reply: {line}"))
+    }
+
+    // ---------------------------------------------------------------
+    // v2 mux API
+    // ---------------------------------------------------------------
+
+    /// Submit a tagged request (protocol v2) and return immediately; the
+    /// tag is the handle for [`Client::await_reply`] / [`Client::cancel_tag`].
+    /// Any number of tags may be in flight on one connection.
+    pub fn submit(&mut self, tag: &str, prompt: &str, max_new: usize) -> Result<()> {
+        self.submit_with(tag, prompt, max_new, MuxOpts::default())
+    }
+
+    /// Submit a tagged *streaming* request (`GENS`): per-round `PART`
+    /// frames arrive via [`Client::next_event`] / [`Client::await_reply`].
+    pub fn submit_stream(&mut self, tag: &str, prompt: &str, max_new: usize) -> Result<()> {
+        self.submit_with(tag, prompt, max_new, MuxOpts { streaming: true, ..Default::default() })
+    }
+
+    /// Submit a tagged request with explicit options.
+    pub fn submit_with(
+        &mut self,
+        tag: &str,
+        prompt: &str,
+        max_new: usize,
+        opts: MuxOpts,
+    ) -> Result<()> {
+        if !is_tag(tag) {
+            return Err(anyhow!(
+                "invalid tag '{tag}': tags are non-empty, whitespace-free and non-numeric"
+            ));
+        }
+        // The client attributes `ERR` frames by matching the first word
+        // against its in-flight tags; the bare (v1/connection-scoped)
+        // error vocabulary's first words are reserved so a tagged and a
+        // bare error can never be confused for each other.
+        if matches!(tag, "GEN" | "bad" | "empty" | "unknown") {
+            return Err(anyhow!("invalid tag '{tag}': reserved word"));
+        }
+        check_prompt(prompt)?;
+        let verb = if opts.streaming { "GENS" } else { "GEN" };
+        let mut head = format!("{verb} {tag} {max_new}");
+        if opts.priority != 0 {
+            head.push_str(&format!(" pri={}", opts.priority));
+        }
+        if let Some(ms) = opts.deadline_ms {
+            head.push_str(&format!(" deadline={ms}"));
+        }
+        writeln!(self.writer, "{head} {prompt}")?;
+        self.inflight.insert(tag.to_string());
+        Ok(())
+    }
+
+    /// Block until `tag`'s final reply, returning it plus the streamed
+    /// `PART` chunks in arrival order. Frames belonging to other tags are
+    /// buffered for their own awaiters, so replies can be awaited in any
+    /// order relative to completion.
+    pub fn await_reply(&mut self, tag: &str) -> Result<(GenReply, Vec<String>)> {
+        let mut parts = Vec::new();
+        // Drain frames already buffered by other waits first.
+        let mut i = 0;
+        while i < self.queued.len() {
+            if event_label(&self.queued[i]) == Some(tag) {
+                let ev = self.queued.remove(i).expect("index in range");
+                if let Some(reply) = absorb(ev, &mut parts)? {
+                    return Ok((reply, parts));
+                }
+            } else {
+                i += 1;
+            }
+        }
+        loop {
+            let ev = self.pump()?;
+            if event_label(&ev) == Some(tag) {
+                if let Some(reply) = absorb(ev, &mut parts)? {
+                    return Ok((reply, parts));
+                }
+                continue;
+            }
+            match ev {
+                MuxEvent::Err { tag: None, msg } => {
+                    return Err(anyhow!("server error: {msg}"));
+                }
+                other => self.queued.push_back(other),
+            }
+        }
+    }
+
+    /// Next frame in arrival order — buffered first, then the wire. The
+    /// raw view of interleaved streams: `Part` events of concurrent tags
+    /// arrive exactly as the server emitted them.
+    pub fn next_event(&mut self) -> Result<MuxEvent> {
+        if let Some(ev) = self.queued.pop_front() {
+            return Ok(ev);
+        }
+        self.pump()
+    }
+
+    /// Cancel this connection's in-flight tagged request mid-decode.
+    /// Returns `true` if the server found it live; the request's own
+    /// `OK`/`STATS` reply (with partial tokens and `"cancelled": true`)
+    /// still arrives and must still be awaited.
+    pub fn cancel_tag(&mut self, tag: &str) -> Result<bool> {
+        if !is_tag(tag) {
+            return Err(anyhow!("invalid tag '{tag}'"));
+        }
+        writeln!(self.writer, "CANCEL {tag}")?;
+        loop {
+            let ev = self.pump()?;
+            if let MuxEvent::Cancelled { tag: t, hit } = &ev {
+                if t == tag {
+                    return Ok(*hit);
+                }
+            }
+            self.queued.push_back(ev);
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // v1 API (legacy untagged, one request at a time)
+    // ---------------------------------------------------------------
+
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<GenReply> {
+        check_prompt(prompt)?;
         writeln!(self.writer, "GEN {max_new} {prompt}")?;
-        self.read_reply().map(|(reply, _)| reply)
+        self.await_v1_reply().map(|(reply, _)| reply)
     }
 
     /// Generation with scheduling options: a priority (larger = more
@@ -236,72 +658,82 @@ impl Client {
         priority: i32,
         deadline_ms: Option<u64>,
     ) -> Result<GenReply> {
+        check_prompt(prompt)?;
         let mut opts = format!("pri={priority}");
         if let Some(ms) = deadline_ms {
             opts.push_str(&format!(" deadline={ms}"));
         }
         writeln!(self.writer, "GEN {max_new} {opts} {prompt}")?;
-        self.read_reply().map(|(reply, _)| reply)
+        self.await_v1_reply().map(|(reply, _)| reply)
     }
 
-    /// Cancel a request in flight on another connection. Returns `true` if
-    /// the server found it live.
+    /// Cancel a request by its global id (any connection's). Returns
+    /// `true` if the server found it live.
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
         writeln!(self.writer, "CANCEL {id}")?;
-        let line = self.read_line()?;
-        let rest = line
-            .strip_prefix("CANCELLED ")
-            .ok_or_else(|| anyhow!("bad cancel reply: {line}"))?;
-        let (_id, verdict) = rest.split_once(' ').ok_or_else(|| anyhow!("bad CANCELLED"))?;
-        Ok(verdict == "ok")
+        let label = id.to_string();
+        loop {
+            let ev = self.pump()?;
+            if let MuxEvent::Cancelled { tag, hit } = &ev {
+                if *tag == label {
+                    return Ok(*hit);
+                }
+            }
+            self.queued.push_back(ev);
+        }
     }
 
     /// Streaming generation: returns the final reply plus the `PART` text
     /// chunks in arrival order (one per decode round).
-    pub fn generate_stream(&mut self, prompt: &str, max_new: usize) -> Result<(GenReply, Vec<String>)> {
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<(GenReply, Vec<String>)> {
+        check_prompt(prompt)?;
         writeln!(self.writer, "GENS {max_new} {prompt}")?;
-        self.read_reply()
+        self.await_v1_reply()
     }
 
-    /// Read `PART`* then `OK` + `STATS` lines into a reply.
-    fn read_reply(&mut self) -> Result<(GenReply, Vec<String>)> {
+    /// Await an untagged reply: the id label is learned from the first
+    /// frame the server sends for it (v1 clients have one request in
+    /// flight, so the first unclaimed numeric label is ours).
+    fn await_v1_reply(&mut self) -> Result<(GenReply, Vec<String>)> {
         let mut parts = Vec::new();
-        let rest = loop {
-            let line = self.read_line()?;
-            if let Some(part) = line.strip_prefix("PART ") {
-                let (_pid, chunk) =
-                    part.split_once(' ').ok_or_else(|| anyhow!("bad PART line"))?;
-                parts.push(chunk.to_string());
-                continue;
+        let mut claimed: Option<String> = None;
+        loop {
+            let ev = self.pump()?;
+            match ev {
+                MuxEvent::Part { tag, text } => {
+                    if v1_claims(&self.inflight, &claimed, &tag) {
+                        claimed = Some(tag);
+                        parts.push(text);
+                    } else {
+                        self.queued.push_back(MuxEvent::Part { tag, text });
+                    }
+                }
+                MuxEvent::Done { tag, reply } => {
+                    if v1_claims(&self.inflight, &claimed, &tag) {
+                        return Ok((reply, parts));
+                    }
+                    self.queued.push_back(MuxEvent::Done { tag, reply });
+                }
+                MuxEvent::Err { tag: None, msg } => {
+                    return Err(anyhow!("server error: {msg}"));
+                }
+                other => self.queued.push_back(other),
             }
-            break line
-                .strip_prefix("OK ")
-                .ok_or_else(|| anyhow!("bad reply: {line}"))?
-                .to_string();
-        };
-        let (id, text) = rest.split_once(' ').ok_or_else(|| anyhow!("bad OK line"))?;
-        let stats_line = self.read_line()?;
-        let srest = stats_line
-            .strip_prefix("STATS ")
-            .ok_or_else(|| anyhow!("bad stats line: {stats_line}"))?;
-        let (_sid, stats_json) = srest.split_once(' ').ok_or_else(|| anyhow!("bad STATS"))?;
-        Ok((
-            GenReply {
-                id: id.parse().context("bad id")?,
-                text: text.to_string(),
-                stats: json::parse(stats_json).context("bad stats json")?,
-            },
-            parts,
-        ))
+        }
     }
 
     pub fn metrics(&mut self) -> Result<json::Value> {
         writeln!(self.writer, "METRICS")?;
-        let line = self.read_line()?;
-        let rest = line
-            .strip_prefix("METRICS ")
-            .ok_or_else(|| anyhow!("bad metrics line"))?;
-        Ok(json::parse(rest)?)
+        loop {
+            match self.pump()? {
+                MuxEvent::Metrics(v) => return Ok(v),
+                other => self.queued.push_back(other),
+            }
+        }
     }
 
     pub fn quit(&mut self) -> Result<()> {

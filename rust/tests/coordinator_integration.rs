@@ -888,3 +888,131 @@ fn queue_delay_visible_under_backlog() {
     assert!(last_queue >= 0.0);
     coord.shutdown();
 }
+
+#[test]
+fn on_complete_channel_delivers_instead_of_outbox() {
+    // Completion-channel delivery (the mux server's path): every response
+    // arrives on its own channel, the shared outbox stays empty, and the
+    // registry still equals the sum of per-response stats.
+    let coord = Coordinator::start(
+        backends(2),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 64, ..Default::default() },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = coord.submit_opts(
+            vec![1, 2, 3, 1 + (i as u32 % 7)],
+            24,
+            i,
+            SubmitOpts { on_complete: Some(tx), ..Default::default() },
+        );
+        rxs.push((id, rx));
+    }
+    let mut stats_sum = 0u64;
+    for (id, rx) in rxs {
+        let r = rx.recv().expect("response on the completion channel");
+        assert_eq!(r.id, id, "each channel receives exactly its own response");
+        assert_eq!(r.tokens.len(), 24);
+        assert_eq!(r.status, ResponseStatus::Completed);
+        stats_sum += r.stats.generated_tokens;
+    }
+    assert!(coord.try_collect().is_none(), "outbox must stay empty");
+    let snap = coord.registry();
+    assert_eq!(snap.generated_tokens, stats_sum);
+    assert_eq!(snap.completed, 6);
+    assert!(snap.inflight_peak >= 2, "burst submission overlaps in flight");
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn dropped_on_complete_receiver_falls_back_to_outbox() {
+    // A mux connection that dies loses its receiver; the response must
+    // fall back to the outbox rather than vanish (and keep the registry
+    // invariant).
+    let coord = Coordinator::start(
+        backends(1),
+        EngineId::Sps,
+        EngineConfig { max_new_tokens: 32, ..Default::default() },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    drop(rx);
+    let id = coord.submit_opts(
+        vec![4, 5, 6],
+        16,
+        7,
+        SubmitOpts { on_complete: Some(tx), ..Default::default() },
+    );
+    let r = coord.collect_id(id);
+    assert_eq!(r.tokens.len(), 16);
+    let snap = coord.registry();
+    assert_eq!(snap.generated_tokens, r.stats.generated_tokens);
+    coord.shutdown();
+}
+
+#[test]
+fn mux_style_mixed_cancel_keeps_registry_equality() {
+    // Several channel-delivered streaming requests, some cancelled
+    // mid-flight (the orphan-cancel path a dropped connection takes):
+    // every response still arrives on its channel with partial tokens,
+    // and the registry equals the per-response stats sum.
+    let coord = Coordinator::start(
+        backends(1),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 600, ..Default::default() },
+    );
+    let mut victims = Vec::new();
+    let mut runners = Vec::new();
+    for i in 0..2u64 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (stx, srx) = std::sync::mpsc::channel();
+        let id = coord.submit_opts(
+            vec![1, 2, 3, 1 + i as u32],
+            500,
+            i,
+            SubmitOpts { on_complete: Some(tx), stream: Some(stx), ..Default::default() },
+        );
+        victims.push((id, rx, srx));
+    }
+    for i in 0..2u64 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = coord.submit_opts(
+            vec![4, 5, 6, 1 + i as u32],
+            20,
+            10 + i,
+            SubmitOpts { on_complete: Some(tx), ..Default::default() },
+        );
+        runners.push((id, rx));
+    }
+    let mut stats_sum = 0u64;
+    for (id, rx, srx) in victims {
+        // Wait for the first committed round so the cancel lands
+        // mid-decode and the partial output is non-empty.
+        let first = srx.recv().expect("first streamed chunk");
+        assert_eq!(first.id, id);
+        assert!(coord.cancel(id), "victim is live");
+        let r = rx.recv().expect("cancelled response on the channel");
+        assert_eq!(r.id, id);
+        assert_eq!(r.status, ResponseStatus::Cancelled);
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+        stats_sum += r.stats.generated_tokens;
+    }
+    for (id, rx) in runners {
+        let r = rx.recv().expect("completed response on the channel");
+        assert_eq!(r.id, id);
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(r.tokens.len(), 20);
+        stats_sum += r.stats.generated_tokens;
+    }
+    let snap = coord.registry();
+    assert_eq!(snap.cancelled, 2);
+    assert_eq!(snap.completed, 2);
+    assert_eq!(
+        snap.generated_tokens, stats_sum,
+        "registry == sum of per-response stats across channel-delivered cancels"
+    );
+    assert_eq!(coord.pending(), 0);
+    coord.shutdown();
+}

@@ -198,3 +198,191 @@ fn bad_commands_get_errors_not_disconnects() {
     reader.read_line(&mut line).unwrap();
     assert!(line.starts_with("ERR") || line.contains("bad"));
 }
+
+#[test]
+fn mux_one_connection_keeps_many_requests_inflight() {
+    // The tentpole acceptance check: one connection with 8 tagged requests
+    // submitted back-to-back keeps ≥ 2 of them concurrently in flight in
+    // the coordinator (inflight_peak in the registry snapshot), and every
+    // reply routes to its own tag.
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let inflight = 8usize;
+    for i in 0..inflight {
+        client
+            .submit(&format!("t{i}"), &format!("mux prompt number {i} here"), 24)
+            .expect("submit");
+    }
+    // Await out of submission order on purpose: frames for other tags
+    // must buffer, not get lost.
+    for i in (0..inflight).rev() {
+        let (reply, parts) = client.await_reply(&format!("t{i}")).expect("await");
+        assert_eq!(reply.tag.as_deref(), Some(format!("t{i}").as_str()));
+        assert!(parts.is_empty(), "GEN (non-streaming) sends no PART frames");
+        assert!(!reply.text.is_empty());
+        let gen = reply.stats.get("generated").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(gen, 24.0, "per-request budget honored under mux");
+    }
+    let m = client.metrics().expect("metrics");
+    let peak = m.get("inflight_peak").and_then(|v| v.as_f64()).unwrap();
+    assert!(peak >= 2.0, "one mux connection must overlap requests, peak {peak}");
+    let completed = m.get("completed").and_then(|v| v.as_f64()).unwrap();
+    assert!(completed >= inflight as f64);
+    // A retired tag is reusable.
+    client.submit("t0", "reuse the first tag", 8).expect("resubmit");
+    let (reply, _) = client.await_reply("t0").expect("await reuse");
+    assert_eq!(reply.stats.get("generated").and_then(|v| v.as_f64()), Some(8.0));
+    client.quit().unwrap();
+}
+
+#[test]
+fn mux_interleaved_streams_reassemble_byte_identical() {
+    // Serial references first (fresh connection each, one at a time),
+    // then the same prompts streamed concurrently on ONE connection: the
+    // per-tag PART reassembly and final text must match byte-for-byte.
+    let addr = start_server();
+    let n = 3usize;
+    let prompt = |i: usize| format!("interleave source text {i} for the stream");
+    let mut reference = Vec::new();
+    for i in 0..n {
+        let mut c = Client::connect(&addr.to_string()).expect("connect serial");
+        let (reply, parts) = c.generate_stream(&prompt(i), 28).expect("serial stream");
+        assert_eq!(parts.concat(), reply.text);
+        reference.push(reply.text);
+        c.quit().unwrap();
+    }
+    let mut client = Client::connect(&addr.to_string()).expect("connect mux");
+    for i in 0..n {
+        client.submit_stream(&format!("s{i}"), &prompt(i), 28).expect("submit");
+    }
+    // Drive the raw event stream: PART frames of the three requests
+    // interleave in wire order; reassemble per tag.
+    let mut parts: std::collections::HashMap<String, String> = Default::default();
+    let mut finals: std::collections::HashMap<String, String> = Default::default();
+    while finals.len() < n {
+        match client.next_event().expect("event") {
+            specbranch::server::MuxEvent::Part { tag, text } => {
+                parts.entry(tag).or_default().push_str(&text);
+            }
+            specbranch::server::MuxEvent::Done { tag, reply } => {
+                finals.insert(tag, reply.text);
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    for i in 0..n {
+        let tag = format!("s{i}");
+        assert_eq!(finals[&tag], reference[i], "final text matches serial reference");
+        assert_eq!(parts[&tag], reference[i], "PART reassembly matches serial reference");
+    }
+    client.quit().unwrap();
+}
+
+#[test]
+fn mux_same_connection_cancel_returns_tagged_partial() {
+    let addr = start_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    client
+        .submit_stream("big", "stream a very long generation please", 8000)
+        .expect("submit");
+    // Wait for the first committed round so the cancel lands mid-decode.
+    match client.next_event().expect("event") {
+        specbranch::server::MuxEvent::Part { tag, .. } => assert_eq!(tag, "big"),
+        other => panic!("unexpected frame before first PART: {other:?}"),
+    }
+    assert!(client.cancel_tag("big").expect("cancel"), "request is live");
+    let (reply, parts) = client.await_reply("big").expect("await cancelled");
+    assert_eq!(reply.tag.as_deref(), Some("big"));
+    assert_eq!(
+        reply.stats.get("cancelled"),
+        Some(&specbranch::util::json::Value::Bool(true)),
+        "stats must flag the cancellation"
+    );
+    assert!(!reply.text.is_empty(), "partial tokens committed before cancel");
+    assert_eq!(parts.concat(), reply.text, "buffered + live PART frames reassemble");
+    // Cancelling a retired tag misses.
+    assert!(!client.cancel_tag("big").expect("second cancel"));
+    client.quit().unwrap();
+}
+
+#[test]
+fn dropped_mux_connection_cancels_orphans() {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = start_server();
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "GENS a 4000 orphaned stream one").unwrap();
+        writeln!(s, "GENS b 4000 orphaned stream two").unwrap();
+        // Wait until decode demonstrably started, then drop the socket
+        // with both requests mid-flight.
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("PART "), "got: {line}");
+    }
+    // The server must cancel both orphans; their partial tokens stay
+    // counted (the registry invariant is asserted inside the coordinator).
+    let mut probe = Client::connect(&addr.to_string()).expect("connect probe");
+    let mut cancelled = 0.0;
+    for _ in 0..400 {
+        let m = probe.metrics().expect("metrics");
+        cancelled = m.get("cancelled").and_then(|v| v.as_f64()).unwrap();
+        if cancelled >= 2.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert_eq!(cancelled, 2.0, "both orphaned requests must be cancelled");
+    let m = probe.metrics().expect("metrics");
+    let generated = m.get("generated_tokens").and_then(|v| v.as_f64()).unwrap();
+    assert!(generated > 0.0, "partial tokens of the orphans are counted");
+    probe.quit().unwrap();
+}
+
+/// Write one raw frame and read one raw reply line (trimmed).
+fn raw_roundtrip(
+    s: &mut std::net::TcpStream,
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+    req: &str,
+) -> String {
+    use std::io::{BufRead, Write};
+    writeln!(s, "{req}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn v1_error_strings_are_pinned() {
+    // The untagged v1 error strings are a compatibility contract:
+    // byte-for-byte what the pre-v2 server replied.
+    let addr = start_server();
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = std::io::BufReader::new(s.try_clone().unwrap());
+    assert_eq!(raw_roundtrip(&mut s, &mut reader, "NOPE"), "ERR unknown command");
+    assert_eq!(
+        raw_roundtrip(&mut s, &mut reader, "GEN 12"),
+        "ERR GEN needs '<max_new> <prompt>'"
+    );
+    assert_eq!(raw_roundtrip(&mut s, &mut reader, "CANCEL not an id"), "ERR bad cancel id");
+}
+
+#[test]
+fn v2_errors_echo_the_tag() {
+    use std::io::Write;
+    let addr = start_server();
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = std::io::BufReader::new(s.try_clone().unwrap());
+    assert_eq!(raw_roundtrip(&mut s, &mut reader, "GEN t1 abc hello"), "ERR t1 bad max_new");
+    assert_eq!(
+        raw_roundtrip(&mut s, &mut reader, "GEN t2"),
+        "ERR t2 GEN needs '<max_new> <prompt>'"
+    );
+    // A live tag may not be reused: submit a slow request, then reuse its
+    // tag — the error must name the tag so the mux client can attribute it.
+    writeln!(s, "GEN busy 2000 a long running generation").unwrap();
+    assert_eq!(
+        raw_roundtrip(&mut s, &mut reader, "GEN busy 10 short one"),
+        "ERR busy tag already in flight"
+    );
+}
