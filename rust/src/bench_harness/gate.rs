@@ -19,7 +19,15 @@
 //!    reference (M separate one-at-a-time connections), and throughput
 //!    does not regress vs that serial path measured in the same
 //!    invocation.
-//! 4. [`check_baseline`] — the absolute regression gate against the
+//! 4. [`adaptive_smoke`] — the armed **in-run** adaptive control-plane
+//!    scenario: a mixed-alignment workload (one well-aligned pair, one
+//!    poorly-aligned pair) under `--adaptive` against a static (γ, k)
+//!    grid; asserts the controller actually planned rounds, streams stay
+//!    byte-identical to the static references under greedy, rollback
+//!    tokens strictly drop below the best static grid point's, and
+//!    throughput holds the best static's floor — all measured in the
+//!    same invocation.
+//! 5. [`check_baseline`] — the absolute regression gate against the
 //!    committed `.github/bench_baseline.json`. A baseline carrying
 //!    `"bootstrap": true` disarms only this layer; once armed, a missing
 //!    engine key is a failure (renaming an engine cannot silently disarm
@@ -468,6 +476,200 @@ impl MuxSmoke {
 }
 
 // ---------------------------------------------------------------------------
+// In-run adaptive gate
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-adaptive` scenario: a mixed-alignment
+/// workload — one well-aligned pair (Deepseek, high α) and one
+/// poorly-aligned pair (Vicuna, lower α, much faster draft) — decoded
+/// with the adaptive control plane armed, against the same submissions
+/// under each point of a static (γ, k) grid. Greedy sim decoding keeps
+/// every run's committed streams identical regardless of speculation
+/// depth, so the gate can hold streams byte-identical while comparing
+/// the cost of the *choices* the controller makes: it must cut rollback
+/// tokens below the best static point (shorter drafts where α is low)
+/// without giving up that point's virtual-clock throughput.
+pub struct AdaptiveSmoke {
+    /// Merged virtual-clock tokens/sec of the adaptive run (both pairs).
+    pub tokens_per_sec: f64,
+    /// The winning static grid point's merged tokens/sec.
+    pub best_static_tokens_per_sec: f64,
+    /// Which static grid point won on throughput (e.g. `static-g6k4`).
+    pub best_static_name: String,
+    /// Draft tokens discarded after verification across the adaptive run.
+    pub rollback_tokens: u64,
+    /// Rollback tokens of the winning static grid point.
+    pub best_static_rollback_tokens: u64,
+    /// Every adaptive stream matched every static run's byte-for-byte.
+    pub streams_match: bool,
+    /// `registry.generated_tokens == Σ per-response stats` held in every
+    /// run (adaptive and each static grid point).
+    pub registry_equal: bool,
+    /// Rounds the control plane actually planned (Σ over both pairs).
+    pub adaptive_rounds: u64,
+    /// Mean per-round γ / k the controller chose across the adaptive run.
+    pub mean_round_gamma: f64,
+    pub mean_round_k: f64,
+}
+
+/// Run the mixed-alignment adaptive scenario through the real coordinator
+/// (one worker per run, virtual clock — bit-deterministic). Each pair gets
+/// its own coordinator so the α-EWMA seed (`alpha_hint`) matches the pair
+/// under test, exactly as `serve --adaptive --pair <p>` wires it.
+pub fn adaptive_smoke() -> AdaptiveSmoke {
+    const N: usize = 3;
+    const BUDGET: usize = 96;
+    let pairs = [PairId::Deepseek13b33b, PairId::Vicuna68m13b];
+    let task = TaskId::MtBench;
+    let prompt =
+        |i: usize| -> Vec<Token> { (0..12u32).map(|j| 1 + ((j + 3 * i as u32) % 9)).collect() };
+
+    struct RunData {
+        /// Streams in submission order, both pairs concatenated.
+        streams: Vec<Vec<Token>>,
+        stats: DecodeStats,
+        registry_equal: bool,
+    }
+    let run = |gamma: usize, k_max: usize, adaptive: bool| -> RunData {
+        let mut data = RunData {
+            streams: Vec::new(),
+            stats: DecodeStats::default(),
+            registry_equal: true,
+        };
+        for pair in pairs {
+            let backends: Vec<Box<dyn Backend + Send>> = vec![Box::new(SimBackend::new(
+                SimConfig::new(ModelPair::get(pair), Task::get(task)),
+            ))];
+            let engine_cfg =
+                EngineConfig { gamma, k_max, max_new_tokens: BUDGET, ..Default::default() };
+            let sched = SchedulerConfig {
+                adaptive,
+                alpha_hint: if adaptive { Some(ModelPair::get(pair).alpha) } else { None },
+                ..Default::default()
+            };
+            let coord =
+                Coordinator::start_with(backends, EngineId::SpecBranch, engine_cfg, sched);
+            let ids: Vec<u64> =
+                (0..N).map(|i| coord.submit(prompt(i), BUDGET, 40 + i as u64)).collect();
+            let mut got: HashMap<u64, (Vec<Token>, DecodeStats)> = HashMap::new();
+            for _ in 0..N {
+                let r = coord.collect();
+                got.insert(r.id, (r.tokens, r.stats));
+            }
+            let snap = coord.registry();
+            coord.shutdown();
+            let sum: u64 = got.values().map(|(_, s)| s.generated_tokens).sum();
+            data.registry_equal &= snap.generated_tokens == sum;
+            for id in ids {
+                let (tokens, stats) = got.remove(&id).expect("every submitted id completes");
+                data.stats.merge(&stats);
+                data.streams.push(tokens);
+            }
+        }
+        data
+    };
+
+    let adaptive = run(EngineConfig::default().gamma, EngineConfig::default().k_max, true);
+    // The static grid the controller must match: the default deployment
+    // point plus two deeper-speculation points that pay more rollback.
+    let grid = [(6usize, 4usize), (8, 4), (12, 4)];
+    let statics: Vec<(String, RunData)> =
+        grid.iter().map(|&(g, k)| (format!("static-g{g}k{k}"), run(g, k, false))).collect();
+
+    let tps = |s: &DecodeStats| -> f64 {
+        if s.elapsed_ms <= 0.0 {
+            0.0
+        } else {
+            s.generated_tokens as f64 * 1000.0 / s.elapsed_ms
+        }
+    };
+    let streams_match = statics.iter().all(|(_, s)| s.streams == adaptive.streams);
+    let registry_equal =
+        adaptive.registry_equal && statics.iter().all(|(_, s)| s.registry_equal);
+    let (best_name, best) = statics
+        .into_iter()
+        .max_by(|a, b| tps(&a.1.stats).total_cmp(&tps(&b.1.stats)))
+        .expect("static grid is non-empty");
+
+    AdaptiveSmoke {
+        tokens_per_sec: tps(&adaptive.stats),
+        best_static_tokens_per_sec: tps(&best.stats),
+        best_static_name: best_name,
+        rollback_tokens: adaptive.stats.rollback_tokens,
+        best_static_rollback_tokens: best.stats.rollback_tokens,
+        streams_match,
+        registry_equal,
+        adaptive_rounds: adaptive.stats.adaptive_rounds,
+        mean_round_gamma: adaptive.stats.mean_round_gamma(),
+        mean_round_k: adaptive.stats.mean_round_k(),
+    }
+}
+
+impl AdaptiveSmoke {
+    /// The armed in-run assertions for the `specbranch-adaptive` entry.
+    pub fn failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.adaptive_rounds == 0 {
+            f.push(
+                "specbranch-adaptive: the control plane never planned a round".to_string(),
+            );
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-adaptive: adaptive streams diverged from the static \
+                 references under greedy decoding"
+                    .to_string(),
+            );
+        }
+        if !self.registry_equal {
+            f.push(
+                "specbranch-adaptive: registry generated_tokens != Σ per-response stats"
+                    .to_string(),
+            );
+        }
+        if self.rollback_tokens >= self.best_static_rollback_tokens {
+            f.push(format!(
+                "specbranch-adaptive: rollback tokens {} not below the best static's {} \
+                 ({} — the control plane must cut wasted drafting)",
+                self.rollback_tokens, self.best_static_rollback_tokens, self.best_static_name
+            ));
+        }
+        let floor = self.best_static_tokens_per_sec * (1.0 - tolerance);
+        if self.tokens_per_sec < floor {
+            f.push(format!(
+                "REGRESSION specbranch-adaptive: {:.1} tok/s < floor {:.1} \
+                 (best static {} {:.1} in the same invocation)",
+                self.tokens_per_sec, floor, self.best_static_name,
+                self.best_static_tokens_per_sec
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-adaptive` entry of
+    /// `BENCH_ci.json` (in-run gate only: the comparison is against the
+    /// static grid measured in the same invocation, not a pinned number).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("tokens_per_sec", json::num(self.tokens_per_sec)),
+            ("best_static", json::s(&self.best_static_name)),
+            ("best_static_tokens_per_sec", json::num(self.best_static_tokens_per_sec)),
+            ("rollback_tokens", json::num(self.rollback_tokens as f64)),
+            (
+                "best_static_rollback_tokens",
+                json::num(self.best_static_rollback_tokens as f64),
+            ),
+            ("adaptive_rounds", json::num(self.adaptive_rounds as f64)),
+            ("mean_round_gamma", json::num(self.mean_round_gamma)),
+            ("mean_round_k", json::num(self.mean_round_k)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("registry_equal", json::Value::Bool(self.registry_equal)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Absolute baseline gate
 // ---------------------------------------------------------------------------
 
@@ -611,6 +813,26 @@ mod tests {
         assert!(failures.is_empty(), "{failures:?}");
         assert!(run.streams_match);
         assert!(run.inflight_peak >= 2, "inflight_peak {}", run.inflight_peak);
+        assert!(run.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn adaptive_smoke_gates_pass() {
+        // The armed in-run adaptive gate: the control plane plans rounds
+        // on the mixed-alignment workload, keeps every stream
+        // byte-identical to the static references under greedy, strictly
+        // cuts rollback tokens below the best static (γ, k) grid point,
+        // and holds that point's throughput floor.
+        let run = adaptive_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.adaptive_rounds > 0);
+        assert!(run.streams_match && run.registry_equal);
+        assert!(run.rollback_tokens < run.best_static_rollback_tokens);
+        // The controller's mean depth must sit inside the engine envelope
+        // and differ from blind max-depth drafting.
+        assert!(run.mean_round_gamma >= 1.0 && run.mean_round_gamma < 12.0);
+        assert!(run.mean_round_k >= 1.0);
         assert!(run.tokens_per_sec > 0.0);
     }
 

@@ -136,6 +136,39 @@
 //!   `repeat_prefill_tokens` (context tokens re-prefilled by resumes) /
 //!   `kv_reclaimed_bytes` (measured paged-KV bytes released by
 //!   checkpoints), all exposed via the server `METRICS` reply.
+//!
+//! ## Adaptive speculation control plane
+//!
+//! With [`SchedulerConfig::adaptive`] enabled (`serve --adaptive`), the
+//! scheduler stops running every round on the static
+//! `EngineConfig { gamma, k_max }` and instead plans per-round
+//! [`SpeculationControls`] for each task it is about to step:
+//!
+//! * **Signal.** Each request carries an acceptance-rate estimate α,
+//!   seeded from the pair's calibrated α ([`SchedulerConfig::alpha_hint`])
+//!   and updated after every round by an EWMA over the truncated-geometric
+//!   MLE ([`DecodeTask::fitted_alpha`]) of the request's own
+//!   accepted-length histogram (armed at admission; histogram updates
+//!   never touch token streams or the virtual clock).
+//! * **Plan.** The per-request optimum comes from the theory layer: the
+//!   rollback-aware retain length (`theory::optimal_branch_retain`, which
+//!   strictly grows with α — a poorly-aligned request drafts shorter
+//!   chains than a well-aligned one) bounds both k and the γ ceiling fed
+//!   to the Theorem-1 argmin (`theory::optimal_gamma`).
+//! * **Modulation.** System state then bends the plan: KV occupancy close
+//!   to the admission watermark halves γ and drops branches (spend less
+//!   speculation instead of deferring admissions, counted in
+//!   [`RegistrySnapshot::gamma_shrunk_by_pressure`]); a fused batch caps
+//!   the γ spread so lockstep lanes stay comparable; tight EDF deadline
+//!   slack biases γ up for the requests that need latency most.
+//! * **Continuity.** α and the installed controls ride through
+//!   [`DecodeTask::checkpoint`]/`resume`, so preemption never resets
+//!   adaptation; under greedy (temperature-0) verification the committed
+//!   streams are byte-identical to the static configuration's — controls
+//!   steer only how much speculative work each round spends.
+//!
+//! With `adaptive` off (the default) no controls are ever installed and
+//! no histogram is armed: behavior is bit-for-bit the static path.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -146,7 +179,9 @@ use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
-use crate::engines::{self, DecodeTask, Engine, StepOutcome, TaskCheckpoint, TaskPhase};
+use crate::engines::{
+    self, DecodeTask, Engine, SpeculationControls, StepOutcome, TaskCheckpoint, TaskPhase,
+};
 use crate::kvcache::{BlockCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -213,6 +248,17 @@ pub struct SchedulerConfig {
     /// (checkpoint + release + resumable re-admission) instead of
     /// deferring. `false` (default) keeps the PR 2 defer-only behavior.
     pub preempt: bool,
+    /// Adaptive speculation control plane: plan per-round
+    /// [`SpeculationControls`] (γ/k) for every task from its acceptance-rate
+    /// EWMA and the theory optima, modulated by KV pressure, fused-batch
+    /// width and deadline slack (module docs). `false` (default) never
+    /// installs controls: bit-for-bit the static-configuration behavior.
+    pub adaptive: bool,
+    /// Seed for each request's acceptance-rate estimate before its own
+    /// accepted-length histogram has data — typically the pair's calibrated
+    /// α ([`crate::config::ModelPair::alpha`]). `None` falls back to
+    /// [`DEFAULT_ALPHA`]. Ignored unless `adaptive`.
+    pub alpha_hint: Option<f64>,
 }
 
 impl Default for SchedulerConfig {
@@ -224,6 +270,8 @@ impl Default for SchedulerConfig {
             aging_rounds: 8,
             verify_batch: 1,
             preempt: false,
+            adaptive: false,
+            alpha_hint: None,
         }
     }
 }
@@ -243,6 +291,12 @@ struct SchedParams {
     verify_batch: usize,
     /// Between-rounds preemption enabled.
     preempt: bool,
+    /// Adaptive speculation control plane enabled.
+    adaptive: bool,
+    /// α seed for requests with no acceptance history yet.
+    alpha_hint: Option<f64>,
+    /// Branch-count ceiling for planned controls (`EngineConfig::k_max`).
+    k_max: usize,
 }
 
 /// Resolve one [`SchedulerConfig`] + [`EngineConfig`] into per-worker
@@ -273,6 +327,99 @@ fn resolve_params(
         max_ready: 16 * workers.max(1),
         verify_batch: sched_cfg.verify_batch.max(1),
         preempt: sched_cfg.preempt,
+        adaptive: sched_cfg.adaptive,
+        alpha_hint: sched_cfg.alpha_hint,
+        k_max: k,
+    }
+}
+
+/// α assumed for a request with no hint and no history yet.
+pub const DEFAULT_ALPHA: f64 = 0.6;
+/// Per-round acceptance-rate EWMA: `α ← KEEP·α + (1−KEEP)·MLE`.
+const ALPHA_EWMA_KEEP: f64 = 0.8;
+/// Max γ spread allowed inside one fused batch (lockstep lanes whose round
+/// shapes diverge too far stop fusing profitably).
+const GAMMA_SPREAD_CAP: usize = 2;
+/// KV occupancy fraction of the watermark above which the control plane
+/// spends less speculation (γ halved, branches dropped) instead of letting
+/// branch headroom defer admissions.
+const KV_PRESSURE_THRESHOLD: f64 = 0.75;
+/// EDF deadline slack below which a request's γ is biased up by one.
+const EDF_TIGHT_SLACK_MS: u64 = 100;
+
+/// The control plane's per-request optimum, from the theory layer alone
+/// (no system state yet). The γ ceiling is the **rollback-aware retain
+/// length** ([`crate::theory::optimal_branch_retain`]): the longest chain
+/// worth keeping when a rejection forces a serial redraft. Unlike the raw
+/// Theorem-1 argmin — which is ≈ min(c, γ_max) for *any* α ∈ (0,1), since
+/// longer chains always amortize a fixed verify latency — the retain
+/// length strictly grows with α, so a poorly-aligned request drafts short
+/// and a well-aligned one drafts long, and rollback (which scales with
+/// every rejected suffix) shrinks exactly where rejections are likely.
+/// [`crate::theory::optimal_gamma`] then takes the Theorem-1 argmin inside
+/// that ceiling, and k retains the same rollback-aware branch count.
+fn desired_controls(alpha: f64, c: f64, gamma_limit: usize, k_max: usize) -> SpeculationControls {
+    let retain = crate::theory::optimal_branch_retain(alpha, c, gamma_limit);
+    let gamma = crate::theory::optimal_gamma(alpha, c, 1.0, retain.min(gamma_limit));
+    SpeculationControls { gamma, k: retain.clamp(1, k_max.max(1)) }
+}
+
+/// Plan and install this round's [`SpeculationControls`] for every task in
+/// the batch (adaptive mode only). Per-task theory optima first, then the
+/// system-state modulation (module docs): fused-batch γ-spread cap, EDF
+/// tight-deadline bias, KV-watermark pressure shrink.
+fn plan_controls(batch: &mut [Inflight], kv_pressure: f64, p: &SchedParams, registry: &Registry) {
+    let mut plans: Vec<SpeculationControls> = batch
+        .iter()
+        .map(|t| {
+            desired_controls(
+                t.alpha.unwrap_or(DEFAULT_ALPHA),
+                t.task.speed_ratio(),
+                t.task.gamma_limit(),
+                p.k_max,
+            )
+        })
+        .collect();
+    // Fused batch: cap the γ spread so lockstep lanes stay comparable —
+    // one lane drafting far past the rest stalls the whole fused pass.
+    if plans.len() >= 2 {
+        let min_gamma = plans.iter().map(|c| c.gamma).min().unwrap_or(1);
+        for c in plans.iter_mut() {
+            c.gamma = c.gamma.min(min_gamma + GAMMA_SPREAD_CAP);
+        }
+    }
+    // EDF: a request inside its deadline slack window gets one more draft
+    // token per round — more speculation where latency matters most.
+    if p.policy == SchedulePolicy::EarliestDeadline {
+        let now = Instant::now();
+        for (t, c) in batch.iter().zip(plans.iter_mut()) {
+            let tight = t.deadline_at.is_some_and(|dl| {
+                dl.saturating_duration_since(now) < Duration::from_millis(EDF_TIGHT_SLACK_MS)
+            });
+            if tight {
+                c.gamma = (c.gamma + 1).min(t.task.gamma_limit());
+            }
+        }
+    }
+    // KV pressure: near the watermark, spend less speculation (shorter
+    // chains, no extra branches) instead of letting the k·γ branch
+    // headroom in admission projections defer arrivals.
+    let shrunk = kv_pressure > KV_PRESSURE_THRESHOLD;
+    if shrunk {
+        for c in plans.iter_mut() {
+            c.gamma = (c.gamma / 2).max(1);
+            c.k = 1;
+        }
+    }
+    for (t, c) in batch.iter_mut().zip(plans) {
+        t.task.set_controls(c);
+        t.task.note_adaptive_round(c, shrunk);
+        registry.adaptive_rounds.fetch_add(1, Ordering::Relaxed);
+        registry.round_gamma_sum.fetch_add(c.gamma as u64, Ordering::Relaxed);
+        registry.round_k_sum.fetch_add(c.k as u64, Ordering::Relaxed);
+        if shrunk {
+            registry.gamma_shrunk_by_pressure.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -394,6 +541,12 @@ struct Inflight {
     waits: u64,
     /// Projected KV bytes charged against the admission watermark.
     kv_projected: usize,
+    /// Acceptance-rate estimate driving the adaptive control plane:
+    /// seeded from [`SchedParams::alpha_hint`] (or the checkpointed value
+    /// on resume), EWMA-updated from the task's accepted-length histogram
+    /// MLE after every round. `None` until the first signal when adaptive
+    /// is off or no hint was given.
+    alpha: Option<f64>,
     /// Preemption shield: a freshly admitted or resumed task may not be
     /// preempted until it completes one round (cleared on the post-round
     /// requeue). For resumes this is the anti-thrash hysteresis (every
@@ -464,17 +617,46 @@ impl Queued {
     /// Projected KV bytes this admission would charge. A resumable entry
     /// projects its re-prefill context plus its *remaining* budget; the
     /// context grows by exactly what the remaining budget shrank, so the
-    /// bound equals the original admission's `prompt + budget + headroom` —
-    /// preemption reclaims the victim's memory *now*, it does not make the
-    /// request cheaper to re-admit later.
+    /// analytic bound equals the original admission's
+    /// `prompt + budget + headroom` — preemption reclaims the victim's
+    /// memory *now*, it does not make the request cheaper to re-admit
+    /// later. A resume additionally carries a *measured* per-token KV cost
+    /// (the bytes its checkpoint actually released over the context that
+    /// held them): when that calibrated projection is tighter than the
+    /// analytic bound, the admission charges the calibrated one. The min
+    /// means calibration only ever tightens — it can admit sooner, never
+    /// admit past the watermark where the analytic bound would not.
     fn projection(&self, p: &SchedParams) -> usize {
         match &self.entry {
             AdmissionEntry::Fresh(r) => projected_kv_bytes(r.prompt.len(), r.max_new_tokens, p),
             AdmissionEntry::Resumable(r) => {
-                projected_kv_bytes(r.checkpoint.context_len(), r.checkpoint.remaining_budget(), p)
+                let analytic =
+                    projected_kv_bytes(r.checkpoint.context_len(), r.checkpoint.remaining_budget(), p);
+                match observed_kv_projection(&r.checkpoint) {
+                    Some(observed) => analytic.min(observed),
+                    None => analytic,
+                }
             }
         }
     }
+}
+
+/// Calibrated KV projection for a resumable checkpoint: scale the bytes the
+/// checkpoint measurably released (`kv_reclaimed_bytes`, the paged-KV cost
+/// of its context at preemption time) to the resumed request's full extent
+/// (context + remaining budget), plus one observed-rate block of
+/// speculation slack. `None` when the checkpoint recorded no reclaimed
+/// bytes (zero-cost backends, or a cancelled-before-decode edge) — the
+/// caller falls back to the analytic bound.
+fn observed_kv_projection(ckpt: &TaskCheckpoint) -> Option<usize> {
+    let context = ckpt.context_len();
+    if ckpt.kv_reclaimed_bytes == 0 || context == 0 {
+        return None;
+    }
+    let per_token = ckpt.kv_reclaimed_bytes as f64 / context as f64;
+    let extent = context + ckpt.remaining_budget();
+    let blocks = extent.div_ceil(BLOCK_TOKENS) + 1; // +1 block of slack
+    Some((per_token * (blocks * BLOCK_TOKENS) as f64).ceil() as usize)
 }
 
 #[derive(Default)]
@@ -535,6 +717,15 @@ pub struct Registry {
     /// pushes it past 1 — the observable proof that per-connection
     /// multiplexing actually overlaps work in the coordinator.
     pub inflight_peak: AtomicU64,
+    /// Task-rounds run with control-plane-planned γ/k installed.
+    pub adaptive_rounds: AtomicU64,
+    /// Σ planned per-round γ (mean = `round_gamma_sum / adaptive_rounds`).
+    pub round_gamma_sum: AtomicU64,
+    /// Σ planned per-round k.
+    pub round_k_sum: AtomicU64,
+    /// Adaptive rounds shrunk (γ halved, k → 1) because KV occupancy was
+    /// within [`KV_PRESSURE_THRESHOLD`] of the admission watermark.
+    pub gamma_shrunk_by_pressure: AtomicU64,
 }
 
 impl Registry {
@@ -546,6 +737,9 @@ impl Registry {
         let fused_requests = self.fused_requests.load(Ordering::Relaxed);
         let resumed = self.resumed.load(Ordering::Relaxed);
         let repeat_prefill_tokens = self.repeat_prefill_tokens.load(Ordering::Relaxed);
+        let adaptive_rounds = self.adaptive_rounds.load(Ordering::Relaxed);
+        let round_gamma_sum = self.round_gamma_sum.load(Ordering::Relaxed);
+        let round_k_sum = self.round_k_sum.load(Ordering::Relaxed);
         RegistrySnapshot {
             completed,
             cancelled,
@@ -560,6 +754,8 @@ impl Registry {
             repeat_prefill_tokens,
             kv_reclaimed_bytes: self.kv_reclaimed_bytes.load(Ordering::Relaxed),
             inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
+            adaptive_rounds,
+            gamma_shrunk_by_pressure: self.gamma_shrunk_by_pressure.load(Ordering::Relaxed),
             // Every derived ratio below is total: each guards its zero
             // denominator, so an empty registry snapshots to all-zeros
             // (never NaN — the METRICS json must stay parseable).
@@ -572,6 +768,16 @@ impl Registry {
                 0.0
             } else {
                 fused_requests as f64 / batched_rounds as f64
+            },
+            mean_round_gamma: if adaptive_rounds == 0 {
+                0.0
+            } else {
+                round_gamma_sum as f64 / adaptive_rounds as f64
+            },
+            mean_round_k: if adaptive_rounds == 0 {
+                0.0
+            } else {
+                round_k_sum as f64 / adaptive_rounds as f64
             },
             mean_queue_ms: if finished == 0 {
                 0.0
@@ -609,10 +815,17 @@ pub struct RegistrySnapshot {
     pub kv_reclaimed_bytes: u64,
     /// High-water mark of concurrently in-flight requests.
     pub inflight_peak: u64,
+    /// Task-rounds run with control-plane-planned γ/k installed.
+    pub adaptive_rounds: u64,
+    /// Adaptive rounds shrunk by KV-watermark pressure.
+    pub gamma_shrunk_by_pressure: u64,
     /// Mean context re-prefilled per resume (0 when none resumed).
     pub mean_repeat_prefill_tokens: f64,
     /// Mean width of fused passes (0 when none were issued).
     pub mean_fused_width: f64,
+    /// Mean planned per-round γ / k (0 when no adaptive round ever ran).
+    pub mean_round_gamma: f64,
+    pub mean_round_k: f64,
     pub mean_queue_ms: f64,
     pub mean_decode_ms: f64,
 }
@@ -638,6 +851,10 @@ impl RegistrySnapshot {
             ("repeat_prefill_tokens", json::num(self.repeat_prefill_tokens as f64)),
             ("kv_reclaimed_bytes", json::num(self.kv_reclaimed_bytes as f64)),
             ("inflight_peak", json::num(self.inflight_peak as f64)),
+            ("adaptive_rounds", json::num(self.adaptive_rounds as f64)),
+            ("mean_round_gamma", json::num(self.mean_round_gamma)),
+            ("mean_round_k", json::num(self.mean_round_k)),
+            ("gamma_shrunk_by_pressure", json::num(self.gamma_shrunk_by_pressure as f64)),
             ("mean_repeat_prefill_tokens", json::num(self.mean_repeat_prefill_tokens)),
             ("mean_queue_ms", json::num(self.mean_queue_ms)),
             ("mean_decode_ms", json::num(self.mean_decode_ms)),
@@ -1065,7 +1282,10 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
     enum Work {
         Admit(Box<Queued>, usize),
         Preempt(Box<Inflight>),
-        Rounds(Vec<Inflight>),
+        /// A round batch plus the KV occupancy fraction of the watermark at
+        /// pick time (0 when unbounded) — the control plane's pressure
+        /// signal, sampled under the queues lock.
+        Rounds(Vec<Inflight>, f64),
     }
     loop {
         let work = {
@@ -1161,7 +1381,11 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             t.waits += 1;
                         }
                     }
-                    break Work::Rounds(batch);
+                    let pressure = match sched.kv_watermark_bytes {
+                        Some(w) if w > 0 => q.kv_projected_bytes as f64 / w as f64,
+                        _ => 0.0,
+                    };
+                    break Work::Rounds(batch, pressure);
                 }
                 // Drain before exit: a stopped coordinator still owes a
                 // response to every request in the admission queue.
@@ -1180,13 +1404,19 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
                         let session = backend.new_session(req.seed);
                         let rng = Pcg32::new(req.seed ^ req.id.wrapping_mul(0x9E37_79B9));
-                        let task = DecodeTask::new(
+                        let mut task = DecodeTask::new(
                             engine.as_ref(),
                             session,
                             &req.prompt,
                             req.max_new_tokens,
                             rng,
                         );
+                        if sched.adaptive {
+                            // Arm the per-request accepted-length histogram
+                            // the α-EWMA learns from (stats-only: never
+                            // touches streams or the virtual clock).
+                            task.arm_accept_hist();
+                        }
                         vec![Inflight {
                             id: req.id,
                             seed: req.seed,
@@ -1202,6 +1432,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             deadline_at,
                             waits: 0,
                             kv_projected,
+                            alpha: if sched.adaptive { sched.alpha_hint } else { None },
                             // Shielded until its first round completes:
                             // evicting a task that only ever paid its
                             // prefill would discard that prefill for zero
@@ -1223,7 +1454,13 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             .registry
                             .repeat_prefill_tokens
                             .fetch_add(re.checkpoint.context_len() as u64, Ordering::Relaxed);
-                        let task = DecodeTask::resume(engine.as_ref(), session, re.checkpoint);
+                        // The α estimate rides the checkpoint, so a resume
+                        // picks adaptation up where the preemption left it.
+                        let ckpt_alpha = re.checkpoint.alpha;
+                        let mut task = DecodeTask::resume(engine.as_ref(), session, re.checkpoint);
+                        if sched.adaptive {
+                            task.arm_accept_hist();
+                        }
                         vec![Inflight {
                             id: re.id,
                             seed: re.seed,
@@ -1238,6 +1475,8 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             deadline_at,
                             waits: 0,
                             kv_projected,
+                            alpha: ckpt_alpha
+                                .or(if sched.adaptive { sched.alpha_hint } else { None }),
                             // Hysteresis: immune to preemption until one
                             // round completes.
                             shield: true,
@@ -1250,7 +1489,12 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 preempt_inflight(*victim, &shared);
                 continue;
             }
-            Work::Rounds(mut batch) => {
+            Work::Rounds(mut batch, kv_pressure) => {
+                // Adaptive control plane: plan and install this round's γ/k
+                // for every task before any of them drafts.
+                if sched.adaptive {
+                    plan_controls(&mut batch, kv_pressure, &sched, &shared.registry);
+                }
                 // Phase A: drive every task to its verification join point
                 // (draft stage + branch run-ahead), in policy order.
                 let mut outcomes: Vec<Option<StepOutcome>> = Vec::with_capacity(batch.len());
@@ -1289,6 +1533,20 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         }
                     };
                     shared.registry.rounds.fetch_add(1, Ordering::Relaxed);
+                    // Close the adaptation loop: fold the round's accepted
+                    // lengths into the request's α estimate (truncated-
+                    // geometric MLE over its armed histogram, EWMA'd so one
+                    // lucky round cannot whipsaw the next plan).
+                    if sched.adaptive {
+                        if let Some(fit) = t.task.fitted_alpha() {
+                            t.alpha = Some(match t.alpha {
+                                Some(prev) => {
+                                    ALPHA_EWMA_KEEP * prev + (1.0 - ALPHA_EWMA_KEEP) * fit
+                                }
+                                None => fit,
+                            });
+                        }
+                    }
                     if let Some(tx) = &t.stream {
                         // A dropped receiver just disables streaming.
                         let _ = tx.send(StreamChunk {
@@ -1409,9 +1667,13 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
         on_complete,
         priority,
         deadline_ms,
+        alpha,
         ..
     } = t;
-    let checkpoint = task.checkpoint();
+    let mut checkpoint = task.checkpoint();
+    // The scheduler-side α estimate rides the checkpoint alongside the
+    // task-side controls, so adaptation survives the preempt/resume cycle.
+    checkpoint.alpha = alpha;
     shared.registry.preemptions.fetch_add(1, Ordering::Relaxed);
     shared
         .registry
@@ -1839,6 +2101,9 @@ mod tests {
             max_ready: 16,
             verify_batch: 1,
             preempt: false,
+            adaptive: false,
+            alpha_hint: None,
+            k_max: 4,
         };
         let a = projected_kv_bytes(3, 40, &p);
         let b = projected_kv_bytes(3, 400, &p);
@@ -1881,9 +2146,13 @@ mod tests {
         assert_eq!(snap.resumed, 0);
         assert_eq!(snap.repeat_prefill_tokens, 0);
         assert_eq!(snap.kv_reclaimed_bytes, 0);
+        assert_eq!(snap.adaptive_rounds, 0);
+        assert_eq!(snap.gamma_shrunk_by_pressure, 0);
         for (name, v) in [
             ("mean_fused_width", snap.mean_fused_width),
             ("mean_repeat_prefill_tokens", snap.mean_repeat_prefill_tokens),
+            ("mean_round_gamma", snap.mean_round_gamma),
+            ("mean_round_k", snap.mean_round_k),
             ("mean_queue_ms", snap.mean_queue_ms),
             ("mean_decode_ms", snap.mean_decode_ms),
         ] {
@@ -1922,5 +2191,364 @@ mod tests {
         assert_eq!(snap.resumed, 0);
         assert_eq!(snap.repeat_prefill_tokens, 0);
         coord.shutdown();
+    }
+
+    fn pair_backends(pair: PairId, task: TaskId, n: usize) -> Vec<Box<dyn Backend + Send>> {
+        (0..n)
+            .map(|_| {
+                let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+                Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn desired_gamma_monotone_in_alpha() {
+        // The control-plane optimum must give a poorly-aligned request
+        // shorter drafts (and fewer branches) than a well-aligned one
+        // under identical config. Monotone, not strict at every step: the
+        // theory optima are integer argmins, so neighbouring α can tie.
+        let c = 8.0;
+        let alphas = [0.05, 0.3, 0.62, 0.82, 0.95];
+        let plans: Vec<SpeculationControls> =
+            alphas.iter().map(|&a| desired_controls(a, c, 15, 8)).collect();
+        for (w, pair) in plans.windows(2).enumerate() {
+            assert!(
+                pair[1].gamma >= pair[0].gamma,
+                "γ must not shrink as α grows: α {} -> γ {}, α {} -> γ {}",
+                alphas[w],
+                pair[0].gamma,
+                alphas[w + 1],
+                pair[1].gamma
+            );
+            assert!(pair[1].k >= pair[0].k, "k must not shrink as α grows");
+        }
+        let (lo, hi) = (plans[0], plans[plans.len() - 1]);
+        assert!(
+            hi.gamma > lo.gamma,
+            "a low-α request (γ {}) must draft strictly shorter than a high-α one (γ {})",
+            lo.gamma,
+            hi.gamma
+        );
+        for p in &plans {
+            assert!((1..=15).contains(&p.gamma), "γ {} out of range", p.gamma);
+            assert!((1..=8).contains(&p.k), "k {} out of range", p.k);
+        }
+        // Boundary α: hopeless drafts collapse to γ=1/k=1; a perfect
+        // drafter is capped by the k ceiling and the Theorem-1 argmin (≈c).
+        let dead = desired_controls(0.0, c, 15, 8);
+        assert_eq!((dead.gamma, dead.k), (1, 1));
+        let perfect = desired_controls(1.0, c, 15, 8);
+        assert_eq!(perfect.k, 8, "perfect drafter keeps the k_max ceiling");
+        assert!(perfect.gamma >= lo.gamma && perfect.gamma <= 15);
+    }
+
+    #[test]
+    fn adaptive_streams_match_static_under_greedy() {
+        // The control plane may only re-shape speculative work: under the
+        // default greedy target temperature the committed streams must be
+        // byte-identical to the static configuration's.
+        let run = |adaptive: bool| -> std::collections::HashMap<u64, Vec<Token>> {
+            let coord = Coordinator::start_with(
+                sim_backends(1),
+                EngineId::SpecBranch,
+                EngineConfig { max_new_tokens: 48, ..Default::default() },
+                SchedulerConfig {
+                    adaptive,
+                    alpha_hint: if adaptive {
+                        Some(ModelPair::get(PairId::Llama68m7b).alpha)
+                    } else {
+                        None
+                    },
+                    ..Default::default()
+                },
+            );
+            for i in 0..6u64 {
+                coord.submit(vec![1, 2, 3, 1 + (i as u32 % 7)], 48, i);
+            }
+            let mut out = std::collections::HashMap::new();
+            let mut stats_total = 0u64;
+            for _ in 0..6 {
+                let r = coord.collect();
+                assert_eq!(r.tokens.len(), 48);
+                stats_total += r.stats.generated_tokens;
+                out.insert(r.id, r.tokens);
+            }
+            let snap = coord.registry();
+            assert_eq!(snap.generated_tokens, stats_total, "registry equality");
+            if adaptive {
+                assert!(snap.adaptive_rounds > 0, "controls must actually be planned");
+                assert!(snap.mean_round_gamma >= 1.0, "planned γ must be ≥ 1");
+                assert!(snap.mean_round_k >= 1.0, "planned k must be ≥ 1");
+            } else {
+                assert_eq!(snap.adaptive_rounds, 0, "static mode must plan nothing");
+                assert_eq!(snap.mean_round_gamma, 0.0);
+            }
+            coord.shutdown();
+            out
+        };
+        let static_streams = run(false);
+        let adaptive_streams = run(true);
+        assert_eq!(
+            adaptive_streams, static_streams,
+            "adaptive streams must match static byte-for-byte under greedy"
+        );
+    }
+
+    #[test]
+    fn adaptive_alpha_ewma_converges_to_pair_alpha() {
+        // The per-request estimator the scheduler runs (truncated-geometric
+        // MLE over the armed accepted-length histogram, EWMA'd exactly as
+        // the worker loop does) must converge to the pair's calibrated α
+        // on the sim backend's poorly-aligned pair.
+        let pair = ModelPair::get(PairId::Vicuna68m13b);
+        let cfg = SimConfig::new(pair.clone(), Task::get(TaskId::MtBench));
+        let backend = SimBackend::new(cfg);
+        let session = backend.new_session(7);
+        let engine: Box<dyn Engine> =
+            engines::build(EngineId::Sps, EngineConfig { max_new_tokens: 600, ..Default::default() });
+        let mut task =
+            DecodeTask::new(engine.as_ref(), session, &[1, 2, 3, 4], 600, Pcg32::new(9));
+        task.arm_accept_hist();
+        let mut alpha = DEFAULT_ALPHA;
+        while !task.is_done() {
+            task.step();
+            if let Some(fit) = task.fitted_alpha() {
+                alpha = ALPHA_EWMA_KEEP * alpha + (1.0 - ALPHA_EWMA_KEEP) * fit;
+            }
+        }
+        assert!(
+            (alpha - pair.alpha).abs() < 0.15,
+            "EWMA α {:.3} should track the calibrated α {:.3}",
+            alpha,
+            pair.alpha
+        );
+    }
+
+    #[test]
+    fn observed_projection_tightens_but_never_loosens() {
+        // A resumable admission with a measured per-token KV cost charges
+        // min(analytic, calibrated): tighter when observed beats the
+        // analytic bound, unchanged when it does not.
+        let p = SchedParams {
+            policy: SchedulePolicy::RoundRobin,
+            kv_watermark_bytes: None,
+            kv_bytes_per_token: 100,
+            headroom_tokens: 10,
+            aging_rounds: 0,
+            max_ready: 16,
+            verify_batch: 1,
+            preempt: false,
+            adaptive: false,
+            alpha_hint: None,
+            k_max: 4,
+        };
+        let ckpt = |kv_reclaimed_bytes: usize| TaskCheckpoint {
+            prompt: vec![1; 10],
+            generated: vec![2; 22],
+            budget: 100,
+            stats: DecodeStats::default(),
+            rng: Pcg32::new(1),
+            kv_reclaimed_bytes,
+            controls: None,
+            alpha: None,
+        };
+        let queued = |c: TaskCheckpoint| Queued {
+            entry: AdmissionEntry::Resumable(ResumeEntry {
+                id: 0,
+                seed: 0,
+                checkpoint: c,
+                priority: 0,
+                deadline_ms: None,
+                stream: None,
+                on_complete: None,
+                decode_us: 0,
+                queue_ms: 0.0,
+            }),
+            at: Instant::now(),
+            waits: 0,
+        };
+        // context 32, remaining 78: analytic = (32+78+10)/16 blocks.
+        let analytic = projected_kv_bytes(32, 78, &p);
+        // 50 observed bytes/token (cheaper than the 100 analytic):
+        // calibrated = (ceil(110/16)+1 slack blocks)·16·50 = 6400.
+        let cheap = queued(ckpt(32 * 50));
+        assert_eq!(observed_kv_projection(&ckpt(32 * 50)), Some(6400));
+        assert_eq!(cheap.projection(&p), analytic.min(6400));
+        assert!(cheap.projection(&p) < analytic, "calibration must tighten here");
+        // 200 observed bytes/token (pricier than analytic): the admission
+        // still charges the analytic bound — calibration never loosens, so
+        // it can never admit past a watermark the analytic bound respects.
+        let pricey = queued(ckpt(32 * 200));
+        assert_eq!(pricey.projection(&p), analytic);
+        // No measurement recorded: fall back to the analytic bound.
+        let unmeasured = queued(ckpt(0));
+        assert_eq!(observed_kv_projection(&ckpt(0)), None);
+        assert_eq!(unmeasured.projection(&p), analytic);
+    }
+
+    #[test]
+    fn observed_projection_from_real_checkpoint_is_tight() {
+        // End-to-end satellite: checkpoint a real sim task and confirm its
+        // measured projection never exceeds the analytic admission bound
+        // (the sim's per-token KV cost is what the analytic constant
+        // models, while the analytic branch headroom is deliberately
+        // pessimistic).
+        let backends = sim_backends(1);
+        let engine: Box<dyn Engine> =
+            engines::build(EngineId::SpecBranch, EngineConfig::default());
+        let session = backends[0].new_session(3);
+        let mut task = DecodeTask::new(engine.as_ref(), session, &[1, 2, 3], 96, Pcg32::new(5));
+        for _ in 0..4 {
+            task.step();
+        }
+        assert!(!task.is_done());
+        let ckpt = task.checkpoint();
+        assert!(ckpt.kv_reclaimed_bytes > 0, "sim checkpoints reclaim real bytes");
+        let p = resolve_params(&EngineConfig::default(), &SchedulerConfig::default(), 1);
+        let analytic = projected_kv_bytes(ckpt.context_len(), ckpt.remaining_budget(), &p);
+        let observed = observed_kv_projection(&ckpt).expect("measured bytes present");
+        assert!(observed > 0);
+        let queued = Queued {
+            entry: AdmissionEntry::Resumable(ResumeEntry {
+                id: 0,
+                seed: 3,
+                checkpoint: ckpt,
+                priority: 0,
+                deadline_ms: None,
+                stream: None,
+                on_complete: None,
+                decode_us: 0,
+                queue_ms: 0.0,
+            }),
+            at: Instant::now(),
+            waits: 0,
+        };
+        let charged = queued.projection(&p);
+        assert!(
+            charged <= analytic,
+            "re-admission charge {charged} must never exceed the analytic bound {analytic}"
+        );
+        assert_eq!(charged, analytic.min(observed));
+    }
+
+    #[test]
+    fn pp_mode_overlap_preserves_streams() {
+        // Satellite: the wired pp_mode path (branch run-ahead budget from
+        // `parallel::draft_steps_during_verify` at PP utilisation) must
+        // overlap drafting with verification without changing committed
+        // streams — greedy losslessness is utilisation-independent.
+        let run = |id: EngineId| -> (std::collections::HashMap<u64, Vec<Token>>, u64) {
+            let coord = Coordinator::start(
+                pair_backends(PairId::Deepseek13b33b, TaskId::MtBench, 1),
+                id,
+                EngineConfig { max_new_tokens: 64, ..Default::default() },
+            );
+            for i in 0..4u64 {
+                coord.submit(vec![1, 2, 3, 2 + i as u32], 64, i);
+            }
+            let mut out = std::collections::HashMap::new();
+            let mut branches = 0u64;
+            for _ in 0..4 {
+                let r = coord.collect();
+                assert_eq!(r.tokens.len(), 64);
+                branches += r.stats.branches_spawned;
+                out.insert(r.id, r.tokens);
+            }
+            coord.shutdown();
+            (out, branches)
+        };
+        let (base, base_branches) = run(EngineId::SpecBranch);
+        let (pp, pp_branches) = run(EngineId::SpecBranchPp);
+        assert_eq!(base, pp, "pp_mode must not change committed streams");
+        assert!(
+            pp_branches > 0 && base_branches > 0,
+            "branch run-ahead (drafting during verify) must actually happen"
+        );
+    }
+
+    #[test]
+    fn adaptive_controls_survive_preemption_with_registry_equality() {
+        // Adaptive + preemption + cancellation together: streams stay
+        // byte-identical to an unconstrained adaptive run, α/controls ride
+        // the checkpoint, and the registry equals the Σ of per-response
+        // stats across completed *and* cancelled requests.
+        let hint = Some(ModelPair::get(PairId::Llama68m7b).alpha);
+        let e_cfg = EngineConfig { max_new_tokens: 512, ..Default::default() };
+        let rider_w = projected_admission_bytes(3, 32, &e_cfg, &SchedulerConfig::default());
+        let run = |constrained: bool| {
+            let sched = SchedulerConfig {
+                policy: SchedulePolicy::Priority,
+                kv_watermark_bytes: if constrained { Some(3 * rider_w) } else { None },
+                preempt: constrained,
+                adaptive: true,
+                alpha_hint: hint,
+                ..Default::default()
+            };
+            let coord =
+                Coordinator::start_with(sim_backends(1), EngineId::SpecBranch, e_cfg.clone(), sched);
+            // Victim: low priority, big budget; stream its first round so
+            // the riders provably arrive mid-flight.
+            let (tx, rx) = std::sync::mpsc::channel();
+            let victim = coord.submit_opts(
+                vec![1, 2, 3],
+                256,
+                7,
+                SubmitOpts { stream: Some(tx), ..Default::default() },
+            );
+            rx.recv_timeout(std::time::Duration::from_secs(30))
+                .expect("victim first round");
+            // Two high-priority riders outrank the victim for KV.
+            for i in 0..2u64 {
+                coord.submit_opts(
+                    vec![4, 5, 6],
+                    32,
+                    100 + i,
+                    SubmitOpts { priority: 5, ..Default::default() },
+                );
+            }
+            // One more request, cancelled while queued/running.
+            let doomed = coord.submit(vec![7, 8, 9], 200, 999);
+            coord.cancel(doomed);
+            let mut outs: std::collections::HashMap<u64, Vec<Token>> =
+                std::collections::HashMap::new();
+            let mut stats_total = 0u64;
+            for _ in 0..4 {
+                let r = coord.collect();
+                stats_total += r.stats.generated_tokens;
+                if r.id == victim {
+                    assert_eq!(r.tokens.len(), 256);
+                }
+                if r.id != doomed {
+                    outs.insert(r.id, r.tokens);
+                }
+            }
+            let snap = coord.registry();
+            assert_eq!(
+                snap.generated_tokens, stats_total,
+                "registry must equal Σ per-response stats incl. cancellations"
+            );
+            assert!(snap.adaptive_rounds > 0);
+            coord.shutdown();
+            (outs, snap)
+        };
+        let (free_streams, free_snap) = run(false);
+        let (tight_streams, tight_snap) = run(true);
+        assert!(tight_snap.preemptions >= 1, "the tight watermark must preempt");
+        assert_eq!(tight_snap.resumed, tight_snap.preemptions);
+        assert!(
+            tight_snap.gamma_shrunk_by_pressure > 0,
+            "occupancy above the pressure threshold must shrink speculation"
+        );
+        assert!(free_snap.preemptions == 0);
+        assert_eq!(
+            tight_streams, free_streams,
+            "preempt/resume under adaptive control must keep streams byte-identical"
+        );
+        assert!(
+            tight_snap.kv_projected_peak_bytes <= (3 * rider_w) as u64
+                || tight_snap.preemptions > 0,
+            "watermark accounting sanity"
+        );
     }
 }

@@ -11,8 +11,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::common::{commit_round, has_room, pending_tokens, propose_chain};
-use super::{DecodeState, Engine, StepOutcome};
+use super::common::{commit_round, effective_gamma, has_room, pending_tokens, propose_chain};
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome};
 
 /// λ in the acceptance lower bound. The paper's default (0.15) is tuned
 /// for 32k-token vocabularies; the 64-symbol testbed's entropy range is
@@ -41,13 +41,21 @@ struct AdaEdlState {
 }
 
 impl DecodeState for AdaEdlState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma, k: 1 })
+    }
+
     fn step(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> StepOutcome {
-        if !has_room(session, self.gamma) {
+        // Controls cap the chain; the entropy early-stop still applies
+        // inside that cap (controls steer the envelope, not the signal).
+        let gamma = effective_gamma(controls, self.gamma, session);
+        if !has_room(session, gamma) {
             return StepOutcome { new_tokens: Vec::new(), done: true };
         }
         let epsilon = self.cfg.epsilon;
@@ -56,7 +64,7 @@ impl DecodeState for AdaEdlState {
             session,
             0,
             &pending,
-            self.gamma,
+            gamma,
             self.cfg.draft_temperature,
             rng,
             |q, _| AdaEdl::signal(q) < epsilon,

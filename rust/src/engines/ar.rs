@@ -9,7 +9,7 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::{DecodeState, Engine, StepOutcome};
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome};
 
 pub struct Autoregressive {
     cfg: EngineConfig,
@@ -28,11 +28,13 @@ struct ArState {
 }
 
 impl DecodeState for ArState {
+    // AR never speculates: controls are ignored (`controls()` stays None).
     fn step(
         &mut self,
         session: &mut dyn Session,
         _remaining: usize,
         rng: &mut Pcg32,
+        _controls: Option<SpeculationControls>,
     ) -> StepOutcome {
         if session.capacity_left() <= 2 {
             return StepOutcome { new_tokens: Vec::new(), done: true };

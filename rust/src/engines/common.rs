@@ -125,6 +125,21 @@ pub fn has_room(session: &dyn Session, gamma: usize) -> bool {
     session.capacity_left() > gamma + 2
 }
 
+/// Resolve this round's draft length: the control plane's γ when controls
+/// are installed (clamped to the manifest envelope `[1, block - 1]`), else
+/// the engine's construction-time γ. The `None` arm is the defaulting path
+/// — bit-for-bit the pre-control-plane behavior.
+pub fn effective_gamma(
+    controls: Option<super::SpeculationControls>,
+    static_gamma: usize,
+    session: &dyn Session,
+) -> usize {
+    match controls {
+        Some(c) => c.gamma.clamp(1, session.block().saturating_sub(1).max(1)),
+        None => static_gamma,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,7 +16,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::{DecodeState, Engine, StepOutcome};
+use super::common::effective_gamma;
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome};
 
 pub struct Lookahead {
     cfg: EngineConfig,
@@ -86,17 +87,24 @@ struct LookaheadState {
 }
 
 impl DecodeState for LookaheadState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma, k: 1 })
+    }
+
     fn step(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> StepOutcome {
-        if session.capacity_left() <= self.gamma + 2 {
+        // Controls cap the n-gram speculation chain for this round.
+        let gamma = effective_gamma(controls, self.gamma, session);
+        if session.capacity_left() <= gamma + 2 {
             return StepOutcome { new_tokens: Vec::new(), done: true };
         }
         let committed = session.committed().to_vec();
-        let speculation = self.cache.lookup_chain(&committed, self.gamma);
+        let speculation = self.cache.lookup_chain(&committed, gamma);
 
         let mut block = vec![*committed.last().unwrap()];
         block.extend_from_slice(&speculation);

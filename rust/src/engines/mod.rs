@@ -57,6 +57,22 @@ pub struct StepOutcome {
     pub done: bool,
 }
 
+/// Per-round speculation control inputs — the adaptive control plane's
+/// output, threaded into every round as a parameter. `gamma` is the draft
+/// length to spend this round and `k` the branch-width cap; engines clamp
+/// both to their own manifest envelope (`session.block() - 1` for γ, the
+/// config's `k_max` for k), so a controller can only steer *within* the
+/// limits frozen at [`Engine::begin`]. Passing `None` for the controls
+/// argument runs the engine's construction-time configuration bit-for-bit
+/// — the `--adaptive`-off path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpeculationControls {
+    /// Draft length for the next round (clamped to `[1, block - 1]`).
+    pub gamma: usize,
+    /// Branch-width cap for the next round (clamped to `[1, k_max]`).
+    pub k: usize,
+}
+
 /// Result of the submit phase of a split round ([`DecodeState::step_submit`]).
 pub enum SubmitOutcome {
     /// The round submitted a target verification and suspended at its join
@@ -86,15 +102,26 @@ pub enum SubmitOutcome {
 /// first round (the `split_phases_match_plain_step` test exercises both
 /// forms for the engines that split).
 pub trait DecodeState: Send {
+    /// The speculation envelope this state runs a round with when the
+    /// caller passes no explicit controls: its construction-time γ and k.
+    /// Engines that do not speculate return `None`. This is the defaulting
+    /// path that keeps every pre-control-plane caller bit-for-bit intact.
+    fn controls(&self) -> Option<SpeculationControls> {
+        None
+    }
+
     /// Execute exactly one draft/verify round, committing at most
-    /// `remaining` tokens to the session.
+    /// `remaining` tokens to the session. `controls`, when `Some`, sets
+    /// this round's γ/k (clamped to the engine's envelope); `None` means
+    /// "use [`DecodeState::controls`]" — the static configuration.
     fn step(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> StepOutcome {
-        match self.step_submit(session, remaining, rng) {
+        match self.step_submit(session, remaining, rng, controls) {
             SubmitOutcome::Done(out) => out,
             SubmitOutcome::Submitted(_) => self.step_join(session, remaining, rng),
         }
@@ -103,13 +130,16 @@ pub trait DecodeState: Send {
     /// Drive the round up to (and including) its verification submission,
     /// plus any work that overlaps the verification (branch run-ahead
     /// drafting). Engines without a split round run the whole round here.
+    /// `controls` carries the same per-round meaning as in
+    /// [`DecodeState::step`].
     fn step_submit(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> SubmitOutcome {
-        SubmitOutcome::Done(self.step(session, remaining, rng))
+        SubmitOutcome::Done(self.step(session, remaining, rng, controls))
     }
 
     /// Join the verification submitted by the last [`DecodeState::step_submit`]
@@ -148,7 +178,7 @@ pub trait Engine: Send + Sync {
         let mut state = self.begin(session, prompt);
         let mut produced = 0usize;
         while produced < budget {
-            let out = state.step(session, budget - produced, rng);
+            let out = state.step(session, budget - produced, rng, None);
             produced += out.new_tokens.len();
             if out.done {
                 break;
@@ -182,6 +212,10 @@ pub struct DecodeTask {
     /// reports one consistent `DecodeStats` (`tokens.len() ==
     /// stats.generated_tokens` across the whole preempt/resume chain).
     base_stats: DecodeStats,
+    /// Per-round controls installed by the scheduler's control plane
+    /// ([`DecodeTask::set_controls`]); `None` until the control plane
+    /// engages, which leaves every round on the engine's static config.
+    controls: Option<SpeculationControls>,
 }
 
 /// Checkpointed state of a preempted [`DecodeTask`], taken between rounds:
@@ -202,6 +236,13 @@ pub struct TaskCheckpoint {
     pub rng: Pcg32,
     /// Paged KV bytes the checkpoint released back to the cache.
     pub kv_reclaimed_bytes: usize,
+    /// Per-round controls in effect when the task was preempted; resume
+    /// reinstalls them so adaptation is not reset by a migration.
+    pub controls: Option<SpeculationControls>,
+    /// The control plane's per-request acceptance-rate EWMA at preemption
+    /// time. The task itself never reads this — the coordinator stamps it
+    /// after [`DecodeTask::checkpoint`] and reloads it at re-admission.
+    pub alpha: Option<f64>,
 }
 
 impl TaskCheckpoint {
@@ -251,6 +292,7 @@ impl DecodeTask {
             done: budget == 0,
             pending_verify: None,
             base_stats: DecodeStats::default(),
+            controls: None,
         }
     }
 
@@ -297,6 +339,8 @@ impl DecodeTask {
             stats,
             rng: self.rng,
             kv_reclaimed_bytes,
+            controls: self.controls,
+            alpha: None,
         }
     }
 
@@ -312,7 +356,7 @@ impl DecodeTask {
         mut session: Box<dyn Session + Send>,
         ckpt: TaskCheckpoint,
     ) -> DecodeTask {
-        let TaskCheckpoint { mut prompt, generated, budget, stats, rng, .. } = ckpt;
+        let TaskCheckpoint { mut prompt, generated, budget, stats, rng, controls, .. } = ckpt;
         let prompt_len = prompt.len();
         let produced = generated.len();
         prompt.extend_from_slice(&generated);
@@ -327,6 +371,7 @@ impl DecodeTask {
             done: produced >= budget,
             pending_verify: None,
             base_stats: stats,
+            controls,
         }
     }
 
@@ -350,7 +395,8 @@ impl DecodeTask {
             return StepOutcome { new_tokens: Vec::new(), done: true };
         }
         let remaining = self.budget - self.produced;
-        let out = self.state.step(self.session.as_mut(), remaining, &mut self.rng);
+        let controls = self.controls;
+        let out = self.state.step(self.session.as_mut(), remaining, &mut self.rng, controls);
         self.absorb(out)
     }
 
@@ -364,7 +410,8 @@ impl DecodeTask {
             return TaskPhase::Completed(StepOutcome { new_tokens: Vec::new(), done: true });
         }
         let remaining = self.budget - self.produced;
-        match self.state.step_submit(self.session.as_mut(), remaining, &mut self.rng) {
+        let controls = self.controls;
+        match self.state.step_submit(self.session.as_mut(), remaining, &mut self.rng, controls) {
             SubmitOutcome::Submitted(ticket) => {
                 self.pending_verify = Some(ticket);
                 TaskPhase::Submitted
@@ -408,6 +455,81 @@ impl DecodeTask {
 
     pub fn budget(&self) -> usize {
         self.budget
+    }
+
+    /// Install the next round's speculation controls. They stay in effect
+    /// (and ride through [`DecodeTask::checkpoint`]/[`DecodeTask::resume`])
+    /// until replaced; the engine clamps them to its own envelope each
+    /// round. Never calling this leaves the task on the engine's static
+    /// configuration — bit-for-bit the pre-control-plane behavior.
+    pub fn set_controls(&mut self, controls: SpeculationControls) {
+        self.controls = Some(controls);
+    }
+
+    /// The controls currently steering this task: the scheduler-installed
+    /// ones if any, else the engine's own static envelope (the defaulting
+    /// path), else `None` for engines that do not speculate.
+    pub fn controls(&self) -> Option<SpeculationControls> {
+        self.controls.or_else(|| self.state.controls())
+    }
+
+    /// Backend speed ratio `c = T_p/T_q` — the control plane's cost input
+    /// to `theory::optimal_gamma`/`optimal_branch_retain`.
+    pub fn speed_ratio(&self) -> f64 {
+        self.session.speed_ratio()
+    }
+
+    /// Manifest γ ceiling: the longest draft the session verifies in one
+    /// block (`block - 1`), the hard clamp on any control-plane γ.
+    pub fn gamma_limit(&self) -> usize {
+        self.session.block().saturating_sub(1).max(1)
+    }
+
+    /// Arm the session's accepted-length histogram so the control plane
+    /// can fit a per-request α from it (`buckets = γ_limit + 1`, matching
+    /// the truncated-geometric support `0..=γ`). Idempotent; histogram
+    /// updates never touch token streams or the virtual clock.
+    pub fn arm_accept_hist(&mut self) {
+        let buckets = self.gamma_limit() + 1;
+        let stats = self.session.stats_mut();
+        if stats.accepted_hist.is_none() {
+            stats.accepted_hist = Some(crate::util::stats::Histogram::new(buckets));
+        }
+    }
+
+    /// MLE α from the accepted-length histogram accumulated on this task's
+    /// session chain (armed via [`DecodeTask::arm_accept_hist`]). `None`
+    /// until at least one round has been recorded.
+    pub fn fitted_alpha(&mut self) -> Option<f64> {
+        let mut merged: Option<crate::util::stats::Histogram> = None;
+        if let Some(h) = self.base_stats.accepted_hist.as_ref() {
+            merged = Some(h.clone());
+        }
+        if let Some(h) = self.session.stats_mut().accepted_hist.as_ref() {
+            match merged.as_mut() {
+                Some(m) => m.merge(h),
+                None => merged = Some(h.clone()),
+            }
+        }
+        let h = merged?;
+        if h.total() == 0 {
+            return None;
+        }
+        Some(crate::util::stats::fit_trunc_geometric(&h))
+    }
+
+    /// Record one adaptive round in the task's per-request stats: the γ/k
+    /// the control plane chose and whether KV pressure shrank them. These
+    /// merge across preempt/resume like every other `DecodeStats` field
+    /// and surface in per-request STATS.
+    pub fn note_adaptive_round(&mut self, controls: SpeculationControls, shrunk: bool) {
+        let stats = self.session.stats_mut();
+        stats.adaptive_rounds += 1;
+        stats.round_gamma_sum += controls.gamma as u64;
+        stats.round_k_sum += controls.k as u64;
+        if shrunk {
+            stats.gamma_shrunk_by_pressure += 1;
+        }
     }
 
     /// Consume the task, returning the generated tokens and stats. A task
@@ -694,6 +816,93 @@ mod tests {
         assert_eq!(got.tokens, want.tokens, "twice-preempted stream diverged");
         assert_eq!(got.stats.generated_tokens, 60);
         assert!(got.stats.rounds > 0);
+    }
+
+    #[test]
+    fn controls_ride_checkpoint_resume_and_keep_streams_identical() {
+        // Install per-round controls, preempt, resume: the controls must
+        // survive the checkpoint byte-identically, and under greedy
+        // verification the committed stream must match the uncontrolled
+        // static run (γ/k only steer round structure, never content).
+        let backend = sim_backend();
+        let engine = build(EngineId::SpecBranch, EngineConfig::default());
+        let mut full = DecodeTask::new(
+            engine.as_ref(),
+            backend.new_session(3),
+            &[1, 2, 3, 4],
+            48,
+            Pcg32::new(9),
+        );
+        while !full.is_done() {
+            full.step();
+        }
+        let want = full.finish();
+
+        let mut t = DecodeTask::new(
+            engine.as_ref(),
+            backend.new_session(3),
+            &[1, 2, 3, 4],
+            48,
+            Pcg32::new(9),
+        );
+        // Before the control plane engages, the defaulting path reports
+        // the engine's static envelope.
+        let envelope = t.controls().expect("specbranch speculates");
+        assert!(envelope.gamma >= 1 && envelope.k >= 1);
+        let c = SpeculationControls { gamma: 2, k: 1 };
+        t.set_controls(c);
+        assert_eq!(t.controls(), Some(c));
+        t.step();
+        t.step();
+        assert!(!t.is_done());
+        let ckpt = t.checkpoint();
+        assert_eq!(ckpt.controls, Some(c), "controls must ride the checkpoint");
+        let mut resumed = DecodeTask::resume(engine.as_ref(), backend.new_session(3), ckpt);
+        assert_eq!(resumed.controls(), Some(c), "resume must reinstall controls");
+        while !resumed.is_done() {
+            resumed.step();
+        }
+        let got = resumed.finish();
+        assert_eq!(got.tokens, want.tokens, "controlled+preempted stream diverged");
+        assert_eq!(got.stats.generated_tokens, 48);
+    }
+
+    #[test]
+    fn armed_accept_hist_feeds_fitted_alpha_across_preemption() {
+        let backend = sim_backend();
+        let engine = build(EngineId::SpecBranch, EngineConfig::default());
+        let mut t = DecodeTask::new(
+            engine.as_ref(),
+            backend.new_session(7),
+            &[1, 2, 3],
+            64,
+            Pcg32::new(4),
+        );
+        t.arm_accept_hist();
+        assert!(t.fitted_alpha().is_none(), "no rounds recorded yet");
+        for _ in 0..3 {
+            t.step();
+        }
+        let alpha_before = t.fitted_alpha().expect("rounds recorded");
+        assert!((0.0..=1.0).contains(&alpha_before));
+        let ckpt = t.checkpoint();
+        let mut t = DecodeTask::resume(engine.as_ref(), backend.new_session(7), ckpt);
+        t.arm_accept_hist();
+        // The pre-preemption histogram rides base_stats: the fit still
+        // sees those rounds before the resumed session records any.
+        let alpha_resumed = t.fitted_alpha().expect("history survives preemption");
+        assert!((alpha_resumed - alpha_before).abs() < 1e-9);
+        while !t.is_done() {
+            t.step();
+        }
+        let out = t.finish();
+        let hist = out.stats.accepted_hist.expect("merged histogram");
+        assert!(
+            hist.total() > 0 && hist.total() <= out.stats.rounds,
+            "at most one sample per round ({} vs {})",
+            hist.total(),
+            out.stats.rounds
+        );
     }
 
     #[test]

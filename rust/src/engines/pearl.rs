@@ -19,8 +19,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::common::{commit_round, has_room, propose_chain, Proposal};
-use super::{DecodeState, Engine, StepOutcome};
+use super::common::{commit_round, effective_gamma, has_room, propose_chain, Proposal};
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome};
 
 pub struct Pearl {
     cfg: EngineConfig,
@@ -49,13 +49,22 @@ struct PearlState {
 }
 
 impl DecodeState for PearlState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma, k: 1 })
+    }
+
     fn step(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> StepOutcome {
-        if !has_room(session, 2 * self.gamma) {
+        // Controls size the segments drafted from this round on; a segment
+        // already in flight (post-verify) keeps the length it was drafted
+        // with.
+        let gamma = effective_gamma(controls, self.gamma, session);
+        if !has_room(session, 2 * gamma) {
             return StepOutcome { new_tokens: Vec::new(), done: true };
         }
         let t_draft = self.cfg.draft_temperature;
@@ -76,7 +85,7 @@ impl DecodeState for PearlState {
                     session,
                     0,
                     &[first.tokens[0]],
-                    self.gamma - 1,
+                    gamma - 1,
                     t_draft,
                     rng,
                     |_, _| false,
@@ -124,7 +133,7 @@ impl DecodeState for PearlState {
             session,
             0,
             &[*segment.tokens.last().unwrap()],
-            self.gamma,
+            gamma,
             t_draft,
             rng,
             |_, _| false,

@@ -33,8 +33,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::common::{has_room, pending_tokens, propose_chain, Proposal};
-use super::{DecodeState, Engine, StepOutcome, SubmitOutcome};
+use super::common::{effective_gamma, has_room, pending_tokens, propose_chain, Proposal};
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome, SubmitOutcome};
 
 pub struct SpecBranch {
     cfg: EngineConfig,
@@ -182,23 +182,38 @@ struct PendingJoin {
 impl ParallelState {
     /// Branch-drafting budget per branch while one verification runs:
     /// the speed ratio c bounds total draft steps (§5.2), shared across
-    /// the k batched branches (batch economy ≈ free), halved in PP mode.
-    fn branch_budget(&self, session: &dyn Session) -> usize {
-        let c = session.speed_ratio().max(1.0);
-        let steps = if self.pp_mode { (c / 2.0).floor() } else { c.floor() };
-        (steps as usize).clamp(1, self.gamma_max)
+    /// the k batched branches (batch economy ≈ free). PP mode time-slices
+    /// the draft device, halving utilisation.
+    fn branch_budget(&self, session: &dyn Session, gamma_max: usize) -> usize {
+        let utilisation = if self.pp_mode { 0.5 } else { 1.0 };
+        crate::parallel::draft_steps_during_verify(session, utilisation).clamp(1, gamma_max)
+    }
+
+    /// This round's branch-width cap: the control plane's k when controls
+    /// are installed (clamped to the config's `k_max`), else `k_max`.
+    fn k_cap(&self, controls: Option<SpeculationControls>) -> usize {
+        match controls {
+            Some(c) => c.k.clamp(1, self.cfg.k_max.max(1)),
+            None => self.cfg.k_max,
+        }
     }
 }
 
 impl DecodeState for ParallelState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma_max, k: self.cfg.k_max })
+    }
+
     fn step_submit(
         &mut self,
         session: &mut dyn Session,
         _remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> SubmitOutcome {
         debug_assert!(self.pending.is_none(), "step_submit while a join is pending");
-        let gamma_max = self.gamma_max;
+        let gamma_max = effective_gamma(controls, self.gamma_max, session);
+        let k_cap = self.k_cap(controls);
         let eps = self.cfg.epsilon;
         let t_draft = self.cfg.draft_temperature;
 
@@ -304,7 +319,7 @@ impl DecodeState for ParallelState {
         if session.draft_len(self.main) > fork_len {
             session.draft_rollback(self.main, fork_len);
         }
-        let k = sampling::adaptive_branch_width(conf_b, self.cfg.k_max);
+        let k = sampling::adaptive_branch_width(conf_b, k_cap);
         let candidates: Vec<Token> =
             sampling::top_k_indices(&q_b, k).into_iter().map(|i| i as Token).collect();
         let k = candidates.len();
@@ -319,7 +334,7 @@ impl DecodeState for ParallelState {
         // confidence early stopping — drafting past the next branch
         // point only manufactures rollback (Algorithm 1's
         // "γ = Predictor(...)" applied to the branch stage).
-        let budget = self.branch_budget(session).min(b_cap + 1);
+        let budget = self.branch_budget(session, gamma_max).min(b_cap + 1);
         let mut qs_next = session.draft_forward_batch(&branch_ids, &candidates);
         let mut branches: Vec<BranchState> = branch_ids
             .iter()
@@ -538,20 +553,26 @@ struct SerialPending {
 }
 
 impl DecodeState for SerialState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma_max, k: 1 })
+    }
+
     fn step_submit(
         &mut self,
         session: &mut dyn Session,
         _remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> SubmitOutcome {
         debug_assert!(self.pending.is_none(), "step_submit while a join is pending");
-        if !has_room(session, self.gamma_max) {
+        let gamma_max = effective_gamma(controls, self.gamma_max, session);
+        if !has_room(session, gamma_max) {
             return SubmitOutcome::Done(StepOutcome { new_tokens: Vec::new(), done: true });
         }
         let eps = self.cfg.epsilon;
         let last = *session.committed().last().unwrap();
         let s_t = classify(self.use_hrad, session, self.features.as_deref(), last);
-        let gamma = if s_t == 0 { 1 } else { self.gamma_max };
+        let gamma = if s_t == 0 { 1 } else { gamma_max };
         let confidence_stop = s_t == 1;
         let pending = pending_tokens(session, 0);
         let proposal = propose_chain(

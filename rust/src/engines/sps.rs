@@ -10,8 +10,8 @@ use crate::config::{EngineConfig, EngineId};
 use crate::sampling::{self, Token};
 use crate::util::prng::Pcg32;
 
-use super::common::{commit_round, has_room, pending_tokens, propose_chain};
-use super::{DecodeState, Engine, StepOutcome};
+use super::common::{commit_round, effective_gamma, has_room, pending_tokens, propose_chain};
+use super::{DecodeState, Engine, SpeculationControls, StepOutcome};
 
 pub struct Sps {
     cfg: EngineConfig,
@@ -29,13 +29,19 @@ struct SpsState {
 }
 
 impl DecodeState for SpsState {
+    fn controls(&self) -> Option<SpeculationControls> {
+        Some(SpeculationControls { gamma: self.gamma, k: 1 })
+    }
+
     fn step(
         &mut self,
         session: &mut dyn Session,
         remaining: usize,
         rng: &mut Pcg32,
+        controls: Option<SpeculationControls>,
     ) -> StepOutcome {
-        if !has_room(session, self.gamma) {
+        let gamma = effective_gamma(controls, self.gamma, session);
+        if !has_room(session, gamma) {
             return StepOutcome { new_tokens: Vec::new(), done: true };
         }
         let pending = pending_tokens(session, 0);
@@ -43,7 +49,7 @@ impl DecodeState for SpsState {
             session,
             0,
             &pending,
-            self.gamma,
+            gamma,
             self.cfg.draft_temperature,
             rng,
             |_, _| false,

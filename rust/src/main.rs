@@ -64,6 +64,13 @@ fn print_help() {
                                              blocks per target pass (1=off)\n\
                          [--preempt]  reclaim KV from outranked inflight\n\
                                       work instead of deferring admissions\n\
+                         [--adaptive]  per-round γ/k control plane: plan\n\
+                                      each round from the request's α-EWMA\n\
+                                      and the theory optima, modulated by\n\
+                                      KV pressure / batch width / deadlines\n\
+                         [--pp]  deploy specbranch in pipeline-parallel\n\
+                                 mode (draft run-ahead during verify at PP\n\
+                                 utilisation)\n\
          loadgen flags:  --connections <n> --inflight <m>  mux window per\n\
                                       connection (tagged v2 protocol)\n\
                          --requests <n>  requests per connection\n\
@@ -188,8 +195,13 @@ fn cmd_generate(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let engine_id =
+    let mut engine_id =
         EngineId::parse(args.get_or("engine", "specbranch")).unwrap_or(EngineId::SpecBranch);
+    // --pp: run the SpecBranch engine in its pipeline-parallel deployment
+    // mode (draft run-ahead budgeted at PP utilisation during verify).
+    if args.has("pp") && engine_id == EngineId::SpecBranch {
+        engine_id = EngineId::SpecBranchPp;
+    }
     let workers = args.get_usize("workers", 2);
     let mut backends = Vec::new();
     for _ in 0..workers {
@@ -209,6 +221,15 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     let watermark_mb = args.get_usize("kv-watermark-mb", 0);
+    let adaptive = args.has("adaptive");
+    // Seed the control plane's α-EWMA from the sim pair's calibration when
+    // one is on the command line; other backends start from the default
+    // prior and learn per request.
+    let alpha_hint = if adaptive {
+        ModelPair::parse(args.get_or("pair", "vicuna")).map(|p| ModelPair::get(p).alpha)
+    } else {
+        None
+    };
     let sched = SchedulerConfig {
         policy,
         kv_watermark_bytes: if watermark_mb == 0 {
@@ -220,6 +241,8 @@ fn cmd_serve(args: &Args) -> i32 {
         aging_rounds: args.get_u64("aging", 8),
         verify_batch: args.get_usize("verify-batch", 1),
         preempt: args.has("preempt"),
+        adaptive,
+        alpha_hint,
     };
     let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched);
     let addr = args.get_or("addr", "127.0.0.1:7799");
@@ -231,12 +254,13 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving on {} (engine={} policy={} verify-batch={} preempt={})",
+        "serving on {} (engine={} policy={} verify-batch={} preempt={} adaptive={})",
         server.local_addr(),
         engine_id.name(),
         policy.name(),
         sched.verify_batch.max(1),
-        sched.preempt
+        sched.preempt,
+        sched.adaptive
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
@@ -356,8 +380,9 @@ fn cmd_bench(args: &Args) -> i32 {
 /// CI throughput gate: run the fixed sim smoke workload, write the
 /// measured virtual-clock tokens/sec per engine as JSON, enforce the
 /// always-armed in-run gates (fused `--verify-batch` vs single-request,
-/// the `specbranch-preempt` scenario vs its own no-preemption path, and
-/// the `specbranch-mux` scenario vs its own serial-connection path),
+/// the `specbranch-preempt` scenario vs its own no-preemption path,
+/// the `specbranch-mux` scenario vs its own serial-connection path, and
+/// the `specbranch-adaptive` scenario vs its own static (γ, k) grid),
 /// and compare the deterministic entries against the committed baseline —
 /// exit 1 on any gate failure. All the comparison logic lives in
 /// [`gate`] (`bench_harness::gate`) and is exercised by `cargo test`, so
@@ -412,6 +437,26 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         failed = true;
     }
 
+    // Armed in-run adaptive gate: mixed-alignment workload (well- and
+    // poorly-aligned pairs) under the adaptive control plane vs a static
+    // (γ, k) grid; adaptive must hold the best static's throughput floor,
+    // strictly reduce rollback tokens, and keep streams byte-identical to
+    // the static reference under greedy.
+    let adaptive = gate::adaptive_smoke();
+    println!(
+        "bench-smoke: {:<20} {:>8.1} tok/s  (best static {} {:.1})  rollback {} vs {}",
+        "specbranch-adaptive",
+        adaptive.tokens_per_sec,
+        adaptive.best_static_name,
+        adaptive.best_static_tokens_per_sec,
+        adaptive.rollback_tokens,
+        adaptive.best_static_rollback_tokens,
+    );
+    for f in adaptive.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
+
     // The committed-baseline form of the report carries only the
     // deterministic entries: the specbranch-preempt numbers depend on the
     // preemption point (thread timing), so they are reported but never
@@ -427,6 +472,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         run.entries.iter().map(|e| (e.name, e.detail.clone())).collect();
     engines_json.push(("specbranch-preempt", preempt.detail()));
     engines_json.push(("specbranch-mux", mux.detail()));
+    engines_json.push(("specbranch-adaptive", adaptive.detail()));
     let report = json::obj(vec![
         ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),

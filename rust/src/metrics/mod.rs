@@ -46,6 +46,18 @@ pub struct DecodeStats {
     pub branch_wasted_tokens: u64,
     /// Peak KV bytes (branch-aware; Fig. 7a).
     pub peak_kv_bytes: usize,
+    /// Rounds executed with per-round controls installed by the adaptive
+    /// speculation control plane (`serve --adaptive`).
+    pub adaptive_rounds: u64,
+    /// Σ of the control plane's per-round γ choices (mean =
+    /// `round_gamma_sum / adaptive_rounds`).
+    pub round_gamma_sum: u64,
+    /// Σ of the control plane's per-round k choices.
+    pub round_k_sum: u64,
+    /// Adaptive rounds whose γ/k were shrunk because KV occupancy was
+    /// close to the admission watermark (speculation spent instead of
+    /// admissions deferred).
+    pub gamma_shrunk_by_pressure: u64,
 }
 
 impl DecodeStats {
@@ -88,6 +100,23 @@ impl DecodeStats {
         ar_per_tok / our_per_tok
     }
 
+    /// Mean per-round γ chosen by the control plane (0 when no adaptive
+    /// round ever ran).
+    pub fn mean_round_gamma(&self) -> f64 {
+        if self.adaptive_rounds == 0 {
+            return 0.0;
+        }
+        self.round_gamma_sum as f64 / self.adaptive_rounds as f64
+    }
+
+    /// Mean per-round k chosen by the control plane.
+    pub fn mean_round_k(&self) -> f64 {
+        if self.adaptive_rounds == 0 {
+            return 0.0;
+        }
+        self.round_k_sum as f64 / self.adaptive_rounds as f64
+    }
+
     pub fn merge(&mut self, other: &DecodeStats) {
         self.generated_tokens += other.generated_tokens;
         self.draft_forwards += other.draft_forwards;
@@ -105,6 +134,10 @@ impl DecodeStats {
         self.fused_rounds += other.fused_rounds;
         self.branch_wasted_tokens += other.branch_wasted_tokens;
         self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
+        self.adaptive_rounds += other.adaptive_rounds;
+        self.round_gamma_sum += other.round_gamma_sum;
+        self.round_k_sum += other.round_k_sum;
+        self.gamma_shrunk_by_pressure += other.gamma_shrunk_by_pressure;
         if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {
             // Bucket-wise merge: O(buckets), not O(total count).
             mine.merge(theirs);

@@ -110,6 +110,15 @@ fn stats_json(resp: &Response) -> json::Value {
         ("deadline_met", resp.deadline_met.map(json::Value::Bool).unwrap_or(json::Value::Null)),
         ("queue_ms", json::num(resp.queue_ms)),
         ("total_ms", json::num(resp.total_ms)),
+        // Adaptive control plane (additive; all-zero when `--adaptive` is
+        // off or the request never ran a planned round).
+        ("adaptive_rounds", json::num(resp.stats.adaptive_rounds as f64)),
+        ("mean_round_gamma", json::num(resp.stats.mean_round_gamma())),
+        ("mean_round_k", json::num(resp.stats.mean_round_k())),
+        (
+            "gamma_shrunk_by_pressure",
+            json::num(resp.stats.gamma_shrunk_by_pressure as f64),
+        ),
     ])
 }
 

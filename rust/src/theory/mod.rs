@@ -45,13 +45,32 @@ pub fn p_rollback(alpha: f64, gamma: f64) -> f64 {
     1.0 - p_full_accept(alpha, gamma)
 }
 
+/// Clamp an acceptance-rate estimate into `[0, 1]`; non-finite inputs
+/// (an MLE fed an empty histogram, a 0/0 ratio) degrade to 0 — the most
+/// conservative rate, never a panic downstream.
+fn sane_alpha(alpha: f64) -> f64 {
+    if alpha.is_finite() {
+        alpha.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
 /// Argmin over integer γ in `[1, gamma_max]` of Theorem-1 latency.
+///
+/// Total at the α boundaries: α ≤ 0 (or NaN) short-circuits to γ = 1
+/// (every latency is infinite — drafting buys nothing, so spend the
+/// minimum), α ≥ 1 behaves as the all-accept limit, and `gamma_max == 0`
+/// returns 1. The result is always in `1..=gamma_max.max(1)`.
 pub fn optimal_gamma(alpha: f64, c: f64, t: f64, gamma_max: usize) -> usize {
-    (1..=gamma_max)
+    let alpha = sane_alpha(alpha);
+    if alpha <= 0.0 {
+        return 1;
+    }
+    (1..=gamma_max.max(1))
         .min_by(|&a, &b| {
             t_psd_rollback(alpha, a as f64, c, t)
-                .partial_cmp(&t_psd_rollback(alpha, b as f64, c, t))
-                .unwrap()
+                .total_cmp(&t_psd_rollback(alpha, b as f64, c, t))
         })
         .unwrap_or(1)
 }
@@ -70,10 +89,15 @@ pub fn expected_accepted_capped(alpha: f64, b: usize) -> f64 {
 /// H-RAD implicitly optimises; Fig. 2's γ ≤ c conclusion carries over but
 /// the optimum shifts *below* the Theorem-1 argmin because re-entry is
 /// serialized.
+///
+/// Shares [`optimal_gamma`]'s boundary contract: α is sanitized (NaN → 0,
+/// clamp to `[0, 1]`), `gamma_max == 0` is treated as 1, and the result is
+/// always in `1..=gamma_max.max(1)`.
 pub fn optimal_branch_retain(alpha: f64, c: f64, gamma_max: usize) -> usize {
+    let alpha = sane_alpha(alpha);
     let t = 1.0;
     let mut best = (1usize, f64::NEG_INFINITY);
-    for b in 1..=gamma_max {
+    for b in 1..=gamma_max.max(1) {
         let p_full = alpha.powi(b as i32);
         let tokens = p_full * (b as f64 + 1.0)
             + (1.0 - p_full) * (expected_accepted_capped(alpha, b) + 1.0);
@@ -187,5 +211,43 @@ mod tests {
         let g_low = optimal_gamma(0.4, c, 1.0, 32);
         let g_high = optimal_gamma(0.9, c, 1.0, 32);
         assert!(g_high >= g_low, "{g_low} -> {g_high}");
+    }
+
+    #[test]
+    fn optimal_gamma_is_total_at_alpha_boundaries() {
+        let c = 8.0;
+        for &alpha in &[0.0, 1e-300, 1.0, 1.5, -0.3, f64::NAN, f64::INFINITY] {
+            for &gmax in &[0usize, 1, 8, 32] {
+                let g = optimal_gamma(alpha, c, 1.0, gmax);
+                assert!(
+                    (1..=gmax.max(1)).contains(&g),
+                    "alpha={alpha} gmax={gmax} -> {g}"
+                );
+            }
+        }
+        // α → 0: drafting buys nothing, spend the minimum.
+        assert_eq!(optimal_gamma(0.0, c, 1.0, 32), 1);
+        assert_eq!(optimal_gamma(f64::NAN, c, 1.0, 32), 1);
+        // α → 1: all-accept limit still lands in the γ ≤ c segment.
+        let g1 = optimal_gamma(1.0, c, 1.0, 32);
+        assert!(g1 >= 1 && g1 as f64 <= c, "alpha=1 -> {g1}");
+    }
+
+    #[test]
+    fn branch_retain_is_total_at_alpha_boundaries() {
+        let c = 10.0;
+        for &alpha in &[0.0, 1.0, 2.0, -1.0, f64::NAN, f64::NEG_INFINITY] {
+            for &gmax in &[0usize, 1, 16] {
+                let b = optimal_branch_retain(alpha, c, gmax);
+                assert!(
+                    (1..=gmax.max(1)).contains(&b),
+                    "alpha={alpha} gmax={gmax} -> {b}"
+                );
+            }
+        }
+        // α = 0: every branch rejects, retain the minimum.
+        assert_eq!(optimal_branch_retain(0.0, c, 16), 1);
+        // α = 1: all-accept, retain as much as the cap allows.
+        assert_eq!(optimal_branch_retain(1.0, c, 16), 16);
     }
 }

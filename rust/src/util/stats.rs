@@ -148,7 +148,12 @@ pub fn trunc_geometric_pmf(alpha: f64, gamma: usize) -> Vec<f64> {
 
 /// Expected accepted length of the truncated geometric (Lemma 1):
 /// `E[X] = α(1-α^γ)/(1-α)`.
+///
+/// Total over all inputs: α exactly 1.0 hits the removable singularity
+/// and returns γ; NaN or out-of-range α is clamped into `[0, 1]` so the
+/// result is always finite and in `[0, γ]`.
 pub fn trunc_geometric_mean(alpha: f64, gamma: usize) -> f64 {
+    let alpha = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
     if (1.0 - alpha).abs() < 1e-12 {
         return gamma as f64;
     }
@@ -235,6 +240,42 @@ mod tests {
         }
         let est = fit_trunc_geometric(&h);
         assert!((est - alpha).abs() < 0.01, "est {est}");
+    }
+
+    #[test]
+    fn trunc_geometric_mean_total_at_boundaries() {
+        // α exactly 1.0: the removable singularity resolves to γ.
+        for &gamma in &[0usize, 1, 8, 32] {
+            assert_eq!(trunc_geometric_mean(1.0, gamma), gamma as f64);
+        }
+        // α = 0 and out-of-range / NaN inputs stay finite and in [0, γ].
+        for &alpha in &[0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let m = trunc_geometric_mean(alpha, 8);
+            assert!(m.is_finite() && (0.0..=8.0).contains(&m), "alpha={alpha} -> {m}");
+        }
+        assert_eq!(trunc_geometric_mean(0.0, 8), 0.0);
+    }
+
+    #[test]
+    fn fit_handles_degenerate_histograms() {
+        // All-accept sample: the fit pushes α to the top of the bracket.
+        let mut h = Histogram::new(9);
+        for _ in 0..64 {
+            h.add(8);
+        }
+        let est = fit_trunc_geometric(&h);
+        assert!(est > 0.99 && est.is_finite(), "est {est}");
+        // All-reject sample: α pinned near zero, still finite.
+        let mut h0 = Histogram::new(9);
+        for _ in 0..64 {
+            h0.add(0);
+        }
+        let est0 = fit_trunc_geometric(&h0);
+        assert!(est0 < 0.01 && est0.is_finite(), "est {est0}");
+        // Empty histogram: no observations, finite conservative estimate.
+        let empty = Histogram::new(9);
+        let este = fit_trunc_geometric(&empty);
+        assert!(este.is_finite() && (0.0..=1.0).contains(&este), "est {este}");
     }
 
     #[test]
