@@ -88,6 +88,26 @@ pub type BranchId = usize;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VerifyTicket(pub u64);
 
+/// What [`Session::prefill`] actually paid for, split by the cross-request
+/// prefix cache ([`crate::kvcache::PrefixCache`]):
+///
+/// * `cached_tokens` — block-aligned prompt prefix found cached from a live
+///   or recently-finished request sharing it; skipped, not recomputed.
+/// * `charged_tokens` — the uncached suffix the backend ran (and priced)
+///   draft+target prefill passes for. Always ≥ 1: the pass producing the
+///   next-token logits can never be skipped.
+///
+/// `cached_tokens + charged_tokens == prompt.len()` always. Without a
+/// prefix cache installed, `cached_tokens == 0` and the prefill is
+/// bit-for-bit the uncached behavior.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefillReport {
+    /// Prompt tokens skipped via the cross-request prefix cache.
+    pub cached_tokens: usize,
+    /// Prompt tokens actually processed (and priced) by this prefill.
+    pub charged_tokens: usize,
+}
+
 /// Result of a target verification block.
 #[derive(Clone, Debug)]
 pub struct VerifyOut {
@@ -118,7 +138,14 @@ pub trait Session {
     /// prefill proportionally to the context length (the sim charges one
     /// draft+target pass per `block()` chunk), which is what makes the
     /// repeat-prefill cost of preempting and resuming a request visible.
-    fn prefill(&mut self, prompt: &[Token]);
+    ///
+    /// Backends wired to a cross-request [`crate::kvcache::PrefixCache`]
+    /// are **prefix-aware**: a block-aligned prompt prefix already cached
+    /// by a live or recently-finished request is skipped, and only the
+    /// uncached suffix is processed and priced. The returned
+    /// [`PrefillReport`] says how the prompt split; token streams are
+    /// identical either way (the cache affects cost, never content).
+    fn prefill(&mut self, prompt: &[Token]) -> PrefillReport;
 
     /// One draft forward on `branch`: consume `token`, return the draft
     /// distribution q for the next position. Occupies the draft track.

@@ -407,7 +407,7 @@ impl Session for PjrtSession {
         self.speed_ratio
     }
 
-    fn prefill(&mut self, prompt: &[Token]) {
+    fn prefill(&mut self, prompt: &[Token]) -> super::PrefillReport {
         assert!(self.committed.is_empty(), "prefill called twice");
         assert!(!prompt.is_empty());
         self.committed.extend_from_slice(prompt);
@@ -424,7 +424,11 @@ impl Session for PjrtSession {
         let t = trx.recv().expect("target prefill reply");
         self.stats.draft_busy_ms += d.busy_us as f64 / 1000.0;
         self.stats.target_busy_ms += t.busy_us as f64 / 1000.0;
+        self.stats.prefill_charged_tokens += prompt.len() as u64;
         self.branch_lens[0] = consumed.len();
+        // No cross-request prefix cache on the PJRT path yet: every token
+        // is processed and charged.
+        super::PrefillReport { cached_tokens: 0, charged_tokens: prompt.len() }
     }
 
     fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32> {

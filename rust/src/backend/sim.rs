@@ -27,14 +27,15 @@
 //! `[1−β̂, mid, β̂^γ]` (Eq. 2).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::{ModelPair, Task};
-use crate::kvcache::{BlockCache, SeqId};
+use crate::kvcache::{BlockCache, PrefixCache, PrefixLease, SeqId};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::prng::splitmix64;
 
-use super::{Backend, BranchId, Session, VerifyOut, VerifyTicket};
+use super::{Backend, BranchId, PrefillReport, Session, VerifyOut, VerifyTicket};
 
 /// Sim tuning knobs beyond the pair/task calibration.
 #[derive(Clone, Debug)]
@@ -56,6 +57,11 @@ pub struct SimConfig {
     /// probabilities of Eq. 2 (set it to the engine's draft length).
     pub hrad_gamma_hint: usize,
     pub seed: u64,
+    /// Cross-request prefix cache shared by every session of this backend
+    /// (`serve --prefix-cache`). When installed, `prefill` skips the
+    /// block-aligned cached prompt prefix and only charges the uncached
+    /// suffix; `None` (default) is bit-for-bit the uncached behavior.
+    pub prefix: Option<Arc<PrefixCache>>,
 }
 
 impl SimConfig {
@@ -71,6 +77,7 @@ impl SimConfig {
             hrad_ms: 0.28,
             hrad_gamma_hint: 6,
             seed: 0,
+            prefix: None,
         }
     }
 
@@ -235,6 +242,11 @@ pub struct SimSession {
     /// Salt period controlling context recurrence (n-gram repeats).
     salt_period: u64,
     alpha_eff: f64,
+    /// Live lease on the cross-request prefix cache (`cfg.prefix`): pins
+    /// the prompt's cached chunks for the session's lifetime. Taken (and
+    /// the committed chain published) exactly once, at `release_kv` or
+    /// drop, whichever comes first.
+    prefix_lease: Option<PrefixLease>,
 }
 
 impl SimSession {
@@ -253,7 +265,18 @@ impl SimSession {
             next_ticket: 0,
             salt_period,
             alpha_eff,
+            prefix_lease: None,
             cfg,
+        }
+    }
+
+    /// Publish this session's committed chain to the prefix cache and
+    /// release the prefill lease. Idempotent (the lease is taken once).
+    fn publish_prefix(&mut self) {
+        if let Some(lease) = self.prefix_lease.take() {
+            if let Some(prefix) = &self.cfg.prefix {
+                prefix.publish(&self.committed, lease);
+            }
         }
     }
 
@@ -376,7 +399,7 @@ impl Session for SimSession {
         self.cfg.pair.c
     }
 
-    fn prefill(&mut self, prompt: &[Token]) {
+    fn prefill(&mut self, prompt: &[Token]) -> PrefillReport {
         assert!(self.committed.is_empty(), "prefill called twice");
         assert!(!prompt.is_empty());
         self.committed.extend_from_slice(prompt);
@@ -385,14 +408,32 @@ impl Session for SimSession {
         self.kv.append(seq, main.len().max(1));
         self.kv_seqs.insert(0, seq);
         self.branches.push(Some(main));
-        // Prefill cost: both models process the context block-parallel, in
-        // chunks of the backend's max verify block — one draft pass + one
-        // target pass per chunk. Short fresh prompts keep the old one-pass
-        // cost; a long context (notably the `prompt ⊕ committed` re-prefill
-        // of a preempted-then-resumed request) is priced proportionally to
-        // its length, so preemption's repeat-prefill work is visible on the
-        // virtual clock.
-        let passes = prompt.len().div_ceil(self.cfg.block).max(1) as f64;
+        // Cross-request prefix cache: a block-aligned prompt prefix already
+        // committed by a live or recently-finished session is skipped —
+        // only the uncached suffix is priced below. The lease pins the
+        // cached chunks (and publishes the prompt's own full chunks for
+        // concurrent sharers) until `release_kv`/drop. Placement in the
+        // session-private BlockCache above is untouched: the index models
+        // which tokens skip recomputation, not where they live.
+        let cached = match &self.cfg.prefix {
+            Some(prefix) => {
+                let lease = prefix.acquire(prompt);
+                let cached = lease.cached_tokens;
+                self.prefix_lease = Some(lease);
+                cached
+            }
+            None => 0,
+        };
+        let charged = prompt.len() - cached;
+        // Prefill cost: both models process the (uncached) context
+        // block-parallel, in chunks of the backend's max verify block — one
+        // draft pass + one target pass per chunk. Short fresh prompts keep
+        // the old one-pass cost; a long context (notably the `prompt ⊕
+        // committed` re-prefill of a preempted-then-resumed request) is
+        // priced proportionally to its uncached length, so repeat-prefill
+        // work is visible on the virtual clock and a prefix hit is a
+        // measurable win.
+        let passes = charged.div_ceil(self.cfg.block).max(1) as f64;
         let draft_ms = self.cfg.pair.draft_ms * passes;
         let target_ms = self.cfg.pair.target_ms() * passes;
         self.clock.draft_busy(draft_ms);
@@ -400,7 +441,10 @@ impl Session for SimSession {
         self.clock.join(ready);
         self.stats.draft_busy_ms += draft_ms;
         self.stats.target_busy_ms += target_ms;
+        self.stats.prefill_cached_tokens += cached as u64;
+        self.stats.prefill_charged_tokens += charged as u64;
         self.note_kv_peak();
+        PrefillReport { cached_tokens: cached, charged_tokens: charged }
     }
 
     fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32> {
@@ -637,8 +681,25 @@ impl Session for SimSession {
         for b in self.branches.iter_mut() {
             *b = None;
         }
+        // Leave the committed chain behind in the cross-request prefix
+        // cache (refcount 0, evictable): a preempt → resume re-prefill of
+        // `prompt ⊕ committed`, or a later request sharing the prefix,
+        // hits it instead of paying the passes again.
+        self.publish_prefix();
         debug_assert!(self.kv.check_invariants().is_ok(), "KV invariants after release");
         debug_assert_eq!(self.kv.allocated_blocks(), 0, "all blocks freed on release");
+    }
+}
+
+impl Drop for SimSession {
+    fn drop(&mut self) {
+        // Sessions finishing normally are dropped without `release_kv`:
+        // still publish/unpin so the shared prefix index never leaks
+        // pinned chunks. Skipped mid-panic (the cache mutex may be
+        // poisoned and a drop must not double-panic).
+        if !std::thread::panicking() {
+            self.publish_prefix();
+        }
     }
 }
 
@@ -856,6 +917,39 @@ mod tests {
             (cost(3 * block + 1) - 4.0 * one_pass).abs() < 1e-9,
             "3 blocks + 1 token = four passes"
         );
+    }
+
+    #[test]
+    fn prefix_cache_prefill_charges_only_uncached_suffix() {
+        use crate::kvcache::{PrefixCache, BLOCK_TOKENS, PREFIX_CACHE_DEFAULT_TOKENS};
+        let pair = ModelPair::get(PairId::Llama68m7b);
+        let one_pass = pair.draft_ms + pair.target_ms();
+        let prefix = Arc::new(PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS));
+        let mut cfg = SimConfig::new(pair.clone(), Task::get(TaskId::MtBench));
+        cfg.seed = 5;
+        cfg.prefix = Some(prefix.clone());
+        let prompt: Vec<Token> = (0..(3 * BLOCK_TOKENS + 5) as u32).map(|i| i % 60).collect();
+        // Cold: full charge (53 tokens → ceil(53/17) = 4 passes).
+        let mut a = SimSession::new(cfg.clone());
+        let r = a.prefill(&prompt);
+        assert_eq!((r.cached_tokens, r.charged_tokens), (0, prompt.len()));
+        assert!((a.clock.now - 4.0 * one_pass).abs() < 1e-9);
+        // Second session while the first is still live: the prompt's three
+        // full blocks are cached; only the 5-token tail is charged.
+        let mut b = SimSession::new(cfg.clone());
+        let r = b.prefill(&prompt);
+        assert_eq!((r.cached_tokens, r.charged_tokens), (3 * BLOCK_TOKENS, 5));
+        assert!((b.clock.now - one_pass).abs() < 1e-9, "one pass for the suffix");
+        assert_eq!(b.stats.prefill_cached_tokens, 3 * BLOCK_TOKENS as u64);
+        assert_eq!(b.stats.prefill_charged_tokens, 5);
+        // Committed context is identical either way — the cache moves the
+        // clock, never the tokens.
+        assert_eq!(a.committed(), b.committed());
+        drop(a);
+        drop(b);
+        // Recently-finished reuse after both sessions are gone.
+        assert_eq!(prefix.probe(&prompt), 3 * BLOCK_TOKENS);
+        prefix.check_invariants().unwrap();
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! the tier-1 test suite — so the exact comparisons CI enforces are the
 //! ones `cargo test` verifies on every run.
 //!
-//! Four layers:
+//! Six layers:
 //!
 //! 1. [`smoke_measurements`] — the fixed deterministic workload (virtual
 //!    clock, bit-stable across machines) whose tokens/sec feed both the
@@ -27,13 +27,20 @@
 //!    tokens strictly drop below the best static grid point's, and
 //!    throughput holds the best static's floor — all measured in the
 //!    same invocation.
-//! 5. [`check_baseline`] — the absolute regression gate against the
+//! 5. [`prefix_smoke`] — the armed **in-run** prefix-cache scenario: a
+//!    Zipf-shared-prompt workload (a few hot prefixes, per-request
+//!    tails) with the cross-request prefix cache on vs its cache-off
+//!    twin; asserts the cache actually hit, Σ charged prefill tokens
+//!    strictly dropped, streams stay byte-identical, and throughput
+//!    holds the uncached floor — all measured in the same invocation.
+//! 6. [`check_baseline`] — the absolute regression gate against the
 //!    committed `.github/bench_baseline.json`. A baseline carrying
 //!    `"bootstrap": true` disarms only this layer; once armed, a missing
 //!    engine key is a failure (renaming an engine cannot silently disarm
 //!    the gate).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::backend::sim::{SimBackend, SimConfig};
 use crate::backend::Backend;
@@ -42,6 +49,7 @@ use crate::coordinator::{
     projected_admission_bytes, Coordinator, RegistrySnapshot, SchedulePolicy, SchedulerConfig,
     SubmitOpts,
 };
+use crate::kvcache::{PrefixCache, PREFIX_CACHE_DEFAULT_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::json;
@@ -200,17 +208,16 @@ pub fn preempt_smoke() -> PreemptSmoke {
     let victim_prompt: Vec<Token> = (0..16u32).map(|i| 1 + (i % 7)).collect();
     let rider_prompt = |j: usize| -> Vec<Token> { vec![2 + j as Token, 3, 4, 5] };
 
-    let sched_ref = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let sched_ref = SchedulerConfig::default().with_policy(SchedulePolicy::Priority);
     // Watermark: fits the victim alone, but not the victim plus one rider —
     // the rider burst must preempt to get in.
     let proj_victim =
         projected_admission_bytes(victim_prompt.len(), VICTIM_BUDGET, &engine_cfg, &sched_ref);
     let proj_rider = projected_admission_bytes(4, RIDER_BUDGET, &engine_cfg, &sched_ref);
-    let sched_tight = SchedulerConfig {
-        kv_watermark_bytes: Some(proj_victim + proj_rider / 2),
-        preempt: true,
-        ..sched_ref
-    };
+    let sched_tight = sched_ref
+        .clone()
+        .with_kv_watermark_bytes(Some(proj_victim + proj_rider / 2))
+        .with_preempt(true);
 
     type RunOut = (HashMap<u64, (Vec<Token>, DecodeStats)>, RegistrySnapshot);
     let run = |sched: SchedulerConfig, handshake: bool| -> RunOut {
@@ -222,7 +229,7 @@ pub fn preempt_smoke() -> PreemptSmoke {
             victim_prompt.clone(),
             VICTIM_BUDGET,
             71,
-            SubmitOpts { stream: Some(tx), ..Default::default() },
+            SubmitOpts::new().stream(tx),
         );
         if handshake {
             // Wait for the victim's first committed round, so the rider
@@ -235,7 +242,7 @@ pub fn preempt_smoke() -> PreemptSmoke {
                 rider_prompt(j),
                 RIDER_BUDGET,
                 100 + j as u64,
-                SubmitOpts { priority: if j == 0 { 9 } else { 5 }, ..Default::default() },
+                SubmitOpts::new().priority(if j == 0 { 9 } else { 5 }),
             );
             n += 1;
         }
@@ -542,11 +549,9 @@ pub fn adaptive_smoke() -> AdaptiveSmoke {
             ))];
             let engine_cfg =
                 EngineConfig { gamma, k_max, max_new_tokens: BUDGET, ..Default::default() };
-            let sched = SchedulerConfig {
-                adaptive,
-                alpha_hint: if adaptive { Some(ModelPair::get(pair).alpha) } else { None },
-                ..Default::default()
-            };
+            let sched = SchedulerConfig::default().with_adaptive(adaptive).with_alpha_hint(
+                if adaptive { Some(ModelPair::get(pair).alpha) } else { None },
+            );
             let coord =
                 Coordinator::start_with(backends, EngineId::SpecBranch, engine_cfg, sched);
             let ids: Vec<u64> =
@@ -662,6 +667,183 @@ impl AdaptiveSmoke {
             ("adaptive_rounds", json::num(self.adaptive_rounds as f64)),
             ("mean_round_gamma", json::num(self.mean_round_gamma)),
             ("mean_round_k", json::num(self.mean_round_k)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("registry_equal", json::Value::Bool(self.registry_equal)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-run prefix-cache gate
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-prefix` scenario: a Zipf-shared-prompt
+/// workload (a few hot 48-token prefixes, per-request tails) decoded twice
+/// through twin coordinators — one with the cross-request prefix cache
+/// installed (`serve --prefix-cache`), one without, same prompts and seeds.
+/// Greedy sim decoding keeps the committed streams independent of the
+/// cache, so the gate can hold streams byte-identical while asserting the
+/// cache actually removed repeat prefill work: hits occur, the Σ of charged
+/// prefill tokens strictly drops, and throughput holds the uncached floor.
+pub struct PrefixSmoke {
+    /// Merged virtual-clock tokens/sec of the cache-on run.
+    pub tokens_per_sec: f64,
+    /// Merged tokens/sec of the cache-off twin.
+    pub reference_tokens_per_sec: f64,
+    /// Every cache-on stream matched its cache-off twin byte-for-byte.
+    pub streams_match: bool,
+    /// Σ `prefill_charged_tokens` across the cache-on run's responses.
+    pub prefill_charged_tokens: u64,
+    /// Σ `prefill_charged_tokens` across the cache-off twin (every prompt
+    /// charged in full).
+    pub reference_prefill_charged_tokens: u64,
+    /// `registry.generated_tokens == Σ per-response stats` in both runs.
+    pub registry_equal: bool,
+    /// Registry snapshot of the cache-on run (`prefix_hits`,
+    /// `prefix_tokens_saved`, `prefix_evictions`...).
+    pub registry: RegistrySnapshot,
+}
+
+/// Run the Zipf-shared-prompt prefix scenario through the real coordinator
+/// (one worker per run, virtual clock). Charged-token totals are
+/// order-independent: whichever request of a hot prefix prefills first
+/// inserts its chunks (pinned) and charges in full; every later request of
+/// that prefix hits, so the per-prefix full charge is paid exactly once no
+/// matter how admissions interleave.
+pub fn prefix_smoke() -> PrefixSmoke {
+    const N: usize = 12;
+    const BUDGET: usize = 48;
+    let pair = PairId::Vicuna68m13b;
+    let task = TaskId::MtBench;
+    // Three hot 48-token prefixes (3 cache blocks each) with a Zipf-ish
+    // popularity skew, plus a short per-request tail.
+    let hot = |h: u32| -> Vec<Token> { (0..48u32).map(|i| 1 + ((i * 3 + h * 7) % 11)).collect() };
+    const ASSIGN: [u32; N] = [0, 0, 0, 1, 0, 0, 2, 0, 1, 0, 0, 1];
+    let prompt = |i: usize| -> Vec<Token> {
+        let mut p = hot(ASSIGN[i]);
+        p.extend((0..4u32).map(|j| 2 + ((j + i as u32) % 9)));
+        p
+    };
+
+    type RunOut = (HashMap<u64, (Vec<Token>, DecodeStats)>, RegistrySnapshot, bool);
+    let run = |cache: Option<Arc<PrefixCache>>| -> RunOut {
+        let backends: Vec<Box<dyn Backend + Send>> = (0..1)
+            .map(|_| {
+                let mut cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+                cfg.prefix = cache.clone();
+                Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+            })
+            .collect();
+        let coord = Coordinator::start_with(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: BUDGET, ..Default::default() },
+            SchedulerConfig::default().with_prefix_cache(cache.clone()),
+        );
+        for i in 0..N {
+            coord.submit(prompt(i), BUDGET, 60 + i as u64);
+        }
+        let mut out = HashMap::new();
+        for _ in 0..N {
+            let r = coord.collect();
+            out.insert(r.id, (r.tokens, r.stats));
+        }
+        let snap = coord.registry();
+        coord.shutdown();
+        let sum: u64 = out.values().map(|(_, s)| s.generated_tokens).sum();
+        let equal = snap.generated_tokens == sum;
+        (out, snap, equal)
+    };
+
+    let (reference, _, ref_equal) = run(None);
+    let cache = Arc::new(PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS));
+    let (cached, registry, cached_equal) = run(Some(cache));
+
+    let tps = |m: &HashMap<u64, (Vec<Token>, DecodeStats)>| -> f64 {
+        let tokens: u64 = m.values().map(|(_, s)| s.generated_tokens).sum();
+        let ms: f64 = m.values().map(|(_, s)| s.elapsed_ms).sum();
+        if ms <= 0.0 {
+            0.0
+        } else {
+            tokens as f64 * 1000.0 / ms
+        }
+    };
+    let charged = |m: &HashMap<u64, (Vec<Token>, DecodeStats)>| -> u64 {
+        m.values().map(|(_, s)| s.prefill_charged_tokens).sum()
+    };
+    let streams_match = reference.len() == cached.len()
+        && reference
+            .iter()
+            .all(|(id, (toks, _))| cached.get(id).map(|(t, _)| t == toks).unwrap_or(false));
+    PrefixSmoke {
+        tokens_per_sec: tps(&cached),
+        reference_tokens_per_sec: tps(&reference),
+        streams_match,
+        prefill_charged_tokens: charged(&cached),
+        reference_prefill_charged_tokens: charged(&reference),
+        registry_equal: ref_equal && cached_equal,
+        registry,
+    }
+}
+
+impl PrefixSmoke {
+    /// The armed in-run assertions for the `specbranch-prefix` entry.
+    pub fn failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.registry.prefix_hits == 0 {
+            f.push(
+                "specbranch-prefix: shared-prefix workload produced no cache hit".to_string(),
+            );
+        }
+        if self.registry.prefix_tokens_saved == 0 {
+            f.push("specbranch-prefix: cache hits saved no prefill tokens".to_string());
+        }
+        if self.prefill_charged_tokens >= self.reference_prefill_charged_tokens {
+            f.push(format!(
+                "specbranch-prefix: charged prefill tokens {} not below the uncached \
+                 twin's {} (the cache must remove repeat prefill work)",
+                self.prefill_charged_tokens, self.reference_prefill_charged_tokens
+            ));
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-prefix: streams diverged from the cache-off twin".to_string(),
+            );
+        }
+        if !self.registry_equal {
+            f.push(
+                "specbranch-prefix: registry generated_tokens != Σ per-response stats"
+                    .to_string(),
+            );
+        }
+        let floor = self.reference_tokens_per_sec * (1.0 - tolerance);
+        if self.tokens_per_sec < floor {
+            f.push(format!(
+                "REGRESSION specbranch-prefix: {:.1} tok/s < floor {:.1} \
+                 (cache-off twin {:.1} in the same invocation)",
+                self.tokens_per_sec, floor, self.reference_tokens_per_sec
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-prefix` entry of `BENCH_ci.json`
+    /// (in-run gate only: admission interleaving decides *which* request of
+    /// a hot prefix pays the full charge, so per-request numbers are not
+    /// bit-stable — the totals the gate checks are).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("tokens_per_sec", json::num(self.tokens_per_sec)),
+            ("reference_tokens_per_sec", json::num(self.reference_tokens_per_sec)),
+            ("prefill_charged_tokens", json::num(self.prefill_charged_tokens as f64)),
+            (
+                "reference_prefill_charged_tokens",
+                json::num(self.reference_prefill_charged_tokens as f64),
+            ),
+            ("prefix_hits", json::num(self.registry.prefix_hits as f64)),
+            ("prefix_tokens_saved", json::num(self.registry.prefix_tokens_saved as f64)),
+            ("prefix_evictions", json::num(self.registry.prefix_evictions as f64)),
             ("streams_match", json::Value::Bool(self.streams_match)),
             ("registry_equal", json::Value::Bool(self.registry_equal)),
             ("in_run_gate_only", json::Value::Bool(true)),
@@ -833,6 +1015,22 @@ mod tests {
         // and differ from blind max-depth drafting.
         assert!(run.mean_round_gamma >= 1.0 && run.mean_round_gamma < 12.0);
         assert!(run.mean_round_k >= 1.0);
+        assert!(run.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn prefix_smoke_gates_pass() {
+        // The armed in-run prefix gate: the Zipf-shared workload must hit
+        // the cache, strictly cut the Σ of charged prefill tokens below
+        // the cache-off twin's, keep every stream byte-identical, and hold
+        // the uncached throughput floor.
+        let run = prefix_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.registry.prefix_hits > 0);
+        assert!(run.registry.prefix_tokens_saved > 0);
+        assert!(run.prefill_charged_tokens < run.reference_prefill_charged_tokens);
+        assert!(run.streams_match && run.registry_equal);
         assert!(run.tokens_per_sec > 0.0);
     }
 

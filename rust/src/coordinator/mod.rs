@@ -182,7 +182,7 @@ use crate::config::{EngineConfig, EngineId};
 use crate::engines::{
     self, DecodeTask, Engine, SpeculationControls, StepOutcome, TaskCheckpoint, TaskPhase,
 };
-use crate::kvcache::{BlockCache, BLOCK_TOKENS};
+use crate::kvcache::{BlockCache, PrefixCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::prng::Pcg32;
@@ -218,7 +218,7 @@ impl SchedulePolicy {
 }
 
 /// Scheduler tuning for one [`Coordinator::start_with`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     pub policy: SchedulePolicy,
     /// Admission watermark on projected KV bytes across admitted,
@@ -259,6 +259,13 @@ pub struct SchedulerConfig {
     /// α ([`crate::config::ModelPair::alpha`]). `None` falls back to
     /// [`DEFAULT_ALPHA`]. Ignored unless `adaptive`.
     pub alpha_hint: Option<f64>,
+    /// Cross-request prefix cache shared with the backends (the *same*
+    /// [`Arc`] installed into each worker backend's session config, e.g.
+    /// [`crate::backend::sim::SimConfig::prefix`]): the admission
+    /// projection probes it to discount a request's cached prompt prefix,
+    /// and the registry surfaces its eviction counter. `None` (default)
+    /// disables prefix-aware admission — bit-for-bit the uncached behavior.
+    pub prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 impl Default for SchedulerConfig {
@@ -272,12 +279,64 @@ impl Default for SchedulerConfig {
             preempt: false,
             adaptive: false,
             alpha_hint: None,
+            prefix_cache: None,
         }
     }
 }
 
+/// Builder-style constructors, so adding a field stops being a breaking
+/// edit for every call site: `SchedulerConfig::default().with_policy(..)
+/// .with_preempt(true)`. Each method moves `self`, so chains start from
+/// [`SchedulerConfig::default`] (or any existing config).
+impl SchedulerConfig {
+    pub fn with_policy(mut self, policy: SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_kv_watermark_bytes(mut self, watermark: Option<usize>) -> Self {
+        self.kv_watermark_bytes = watermark;
+        self
+    }
+
+    pub fn with_kv_bytes_per_token(mut self, bytes: Option<usize>) -> Self {
+        self.kv_bytes_per_token = bytes;
+        self
+    }
+
+    pub fn with_aging_rounds(mut self, rounds: u64) -> Self {
+        self.aging_rounds = rounds;
+        self
+    }
+
+    pub fn with_verify_batch(mut self, width: usize) -> Self {
+        self.verify_batch = width;
+        self
+    }
+
+    pub fn with_preempt(mut self, preempt: bool) -> Self {
+        self.preempt = preempt;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: bool) -> Self {
+        self.adaptive = adaptive;
+        self
+    }
+
+    pub fn with_alpha_hint(mut self, hint: Option<f64>) -> Self {
+        self.alpha_hint = hint;
+        self
+    }
+
+    pub fn with_prefix_cache(mut self, cache: Option<Arc<PrefixCache>>) -> Self {
+        self.prefix_cache = cache;
+        self
+    }
+}
+
 /// Resolved per-worker scheduling parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct SchedParams {
     policy: SchedulePolicy,
     kv_watermark_bytes: Option<usize>,
@@ -297,6 +356,9 @@ struct SchedParams {
     alpha_hint: Option<f64>,
     /// Branch-count ceiling for planned controls (`EngineConfig::k_max`).
     k_max: usize,
+    /// Cross-request prefix cache, probed (read-only) by the admission
+    /// projection to discount cached prompt prefixes.
+    prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 /// Resolve one [`SchedulerConfig`] + [`EngineConfig`] into per-worker
@@ -330,6 +392,7 @@ fn resolve_params(
         adaptive: sched_cfg.adaptive,
         alpha_hint: sched_cfg.alpha_hint,
         k_max: k,
+        prefix_cache: sched_cfg.prefix_cache.clone(),
     }
 }
 
@@ -474,6 +537,42 @@ pub struct SubmitOpts {
     /// loses a response, and the registry invariant is unaffected either
     /// way. `None` keeps the outbox path.
     pub on_complete: Option<Sender<Response>>,
+}
+
+/// Fluent construction — the single submission surface behind which the
+/// plain/streaming/option-struct entry points collapsed:
+/// `coord.submit_with(prompt, n, seed, SubmitOpts::new().priority(2)
+/// .deadline_ms(300).stream(tx))`. Every method moves `self`, so options
+/// chain from [`SubmitOpts::new`] without intermediate bindings.
+impl SubmitOpts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Larger = more urgent under [`SchedulePolicy::Priority`].
+    pub fn priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Latency target in ms from submission ([`SchedulePolicy::EarliestDeadline`]
+    /// ordering + [`Response::deadline_met`]).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Per-round streaming channel (tokens land as rounds commit).
+    pub fn stream(mut self, tx: Sender<StreamChunk>) -> Self {
+        self.stream = Some(tx);
+        self
+    }
+
+    /// Per-request completion channel (see the field docs above).
+    pub fn on_complete(mut self, tx: Sender<Response>) -> Self {
+        self.on_complete = Some(tx);
+        self
+    }
 }
 
 /// Per-round streaming update for one request.
@@ -626,12 +725,39 @@ impl Queued {
     /// analytic bound, the admission charges the calibrated one. The min
     /// means calibration only ever tightens — it can admit sooner, never
     /// admit past the watermark where the analytic bound would not.
+    /// With a cross-request prefix cache installed, the cached prompt
+    /// prefix is discounted from the projection *before* block-rounding
+    /// (a hit's blocks are shared, not newly pinned). The probe is
+    /// read-only; the value charged here is stored on the admitted task
+    /// and released verbatim at retire time, so a cached prefix is
+    /// discounted exactly once per admission. A chunk evicted between
+    /// probe and prefill only leaves the projection an over-estimate —
+    /// the watermark invariant's safe direction.
     fn projection(&self, p: &SchedParams) -> usize {
         match &self.entry {
-            AdmissionEntry::Fresh(r) => projected_kv_bytes(r.prompt.len(), r.max_new_tokens, p),
+            AdmissionEntry::Fresh(r) => {
+                let cached = match &p.prefix_cache {
+                    Some(cache) => cache.probe(&r.prompt),
+                    None => 0,
+                };
+                projected_kv_bytes(r.prompt.len() - cached, r.max_new_tokens, p)
+            }
             AdmissionEntry::Resumable(r) => {
-                let analytic =
-                    projected_kv_bytes(r.checkpoint.context_len(), r.checkpoint.remaining_budget(), p);
+                let cached = match &p.prefix_cache {
+                    Some(cache) => {
+                        // The resume re-prefills prompt ⊕ generated; probe
+                        // the exact chain the prefill will walk.
+                        let mut context = r.checkpoint.prompt.clone();
+                        context.extend_from_slice(&r.checkpoint.generated);
+                        cache.probe(&context)
+                    }
+                    None => 0,
+                };
+                let analytic = projected_kv_bytes(
+                    r.checkpoint.context_len() - cached,
+                    r.checkpoint.remaining_budget(),
+                    p,
+                );
                 match observed_kv_projection(&r.checkpoint) {
                     Some(observed) => analytic.min(observed),
                     None => analytic,
@@ -726,6 +852,11 @@ pub struct Registry {
     /// Adaptive rounds shrunk (γ halved, k → 1) because KV occupancy was
     /// within [`KV_PRESSURE_THRESHOLD`] of the admission watermark.
     pub gamma_shrunk_by_pressure: AtomicU64,
+    /// Admissions (fresh or resume) whose prefill hit the cross-request
+    /// prefix cache (skipped at least one block).
+    pub prefix_hits: AtomicU64,
+    /// Prompt tokens those hits skipped — prefill work the cache saved.
+    pub prefix_tokens_saved: AtomicU64,
 }
 
 impl Registry {
@@ -756,6 +887,12 @@ impl Registry {
             inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
             adaptive_rounds,
             gamma_shrunk_by_pressure: self.gamma_shrunk_by_pressure.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_tokens_saved: self.prefix_tokens_saved.load(Ordering::Relaxed),
+            // The eviction counter lives on the cache itself;
+            // [`Coordinator::registry`] overlays it when a cache is
+            // installed (the bare registry has no cache handle).
+            prefix_evictions: 0,
             // Every derived ratio below is total: each guards its zero
             // denominator, so an empty registry snapshots to all-zeros
             // (never NaN — the METRICS json must stay parseable).
@@ -819,6 +956,12 @@ pub struct RegistrySnapshot {
     pub adaptive_rounds: u64,
     /// Adaptive rounds shrunk by KV-watermark pressure.
     pub gamma_shrunk_by_pressure: u64,
+    /// Admissions whose prefill hit the cross-request prefix cache.
+    pub prefix_hits: u64,
+    /// Prompt tokens those hits skipped re-prefilling.
+    pub prefix_tokens_saved: u64,
+    /// Chunks evicted from the prefix cache (refcount-0 LRU leaves).
+    pub prefix_evictions: u64,
     /// Mean context re-prefilled per resume (0 when none resumed).
     pub mean_repeat_prefill_tokens: f64,
     /// Mean width of fused passes (0 when none were issued).
@@ -855,6 +998,9 @@ impl RegistrySnapshot {
             ("mean_round_gamma", json::num(self.mean_round_gamma)),
             ("mean_round_k", json::num(self.mean_round_k)),
             ("gamma_shrunk_by_pressure", json::num(self.gamma_shrunk_by_pressure as f64)),
+            ("prefix_hits", json::num(self.prefix_hits as f64)),
+            ("prefix_tokens_saved", json::num(self.prefix_tokens_saved as f64)),
+            ("prefix_evictions", json::num(self.prefix_evictions as f64)),
             ("mean_repeat_prefill_tokens", json::num(self.mean_repeat_prefill_tokens)),
             ("mean_queue_ms", json::num(self.mean_queue_ms)),
             ("mean_decode_ms", json::num(self.mean_decode_ms)),
@@ -929,14 +1075,16 @@ impl Coordinator {
         Coordinator { shared, workers, next_id: AtomicU64::new(0) }
     }
 
-    /// Enqueue a request; returns its id immediately.
+    /// Enqueue a request; returns its id immediately. Thin wrapper over
+    /// [`Coordinator::submit_with`] with default options.
     pub fn submit(&self, prompt: Vec<Token>, max_new_tokens: usize, seed: u64) -> u64 {
-        self.submit_opts(prompt, max_new_tokens, seed, SubmitOpts::default())
+        self.submit_with(prompt, max_new_tokens, seed, SubmitOpts::new())
     }
 
     /// Enqueue a request whose per-round token deltas are sent over
     /// `stream` as they commit; the final [`Response`] still arrives via
-    /// `collect`/`collect_id`.
+    /// `collect`/`collect_id`. Thin wrapper over
+    /// [`Coordinator::submit_with`].
     pub fn submit_streaming(
         &self,
         prompt: Vec<Token>,
@@ -944,16 +1092,25 @@ impl Coordinator {
         seed: u64,
         stream: Sender<StreamChunk>,
     ) -> u64 {
-        self.submit_opts(
-            prompt,
-            max_new_tokens,
-            seed,
-            SubmitOpts { stream: Some(stream), ..Default::default() },
-        )
+        self.submit_with(prompt, max_new_tokens, seed, SubmitOpts::new().stream(stream))
     }
 
-    /// Enqueue a request with explicit priority/deadline/streaming options.
+    /// Back-compat alias for [`Coordinator::submit_with`].
     pub fn submit_opts(
+        &self,
+        prompt: Vec<Token>,
+        max_new_tokens: usize,
+        seed: u64,
+        opts: SubmitOpts,
+    ) -> u64 {
+        self.submit_with(prompt, max_new_tokens, seed, opts)
+    }
+
+    /// The single submission entry point: enqueue a request under
+    /// fluent-built [`SubmitOpts`] (priority / deadline / streaming /
+    /// completion delivery). `submit`, `submit_streaming`, and
+    /// `submit_opts` are thin wrappers over this.
+    pub fn submit_with(
         &self,
         prompt: Vec<Token>,
         max_new_tokens: usize,
@@ -1078,7 +1235,11 @@ impl Coordinator {
     }
 
     pub fn registry(&self) -> RegistrySnapshot {
-        self.shared.registry.snapshot()
+        let mut snap = self.shared.registry.snapshot();
+        if let Some(cache) = &self.shared.sched.prefix_cache {
+            snap.prefix_evictions = cache.evictions();
+        }
+        snap
     }
 
     /// Stop all workers. Requests still waiting in the admission queue and
@@ -1100,6 +1261,16 @@ impl Coordinator {
         }
         let mut q = self.shared.queues.lock().unwrap();
         q.outbox.drain(..).collect()
+    }
+}
+
+/// Count one admission's prefill against the prefix-cache registry
+/// counters. All-zero reports (no cache installed, or a cold miss) leave
+/// the counters untouched, so the cache-off path is observably unchanged.
+fn note_prefix_hit(registry: &Registry, report: crate::backend::PrefillReport) {
+    if report.cached_tokens > 0 {
+        registry.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        registry.prefix_tokens_saved.fetch_add(report.cached_tokens as u64, Ordering::Relaxed);
     }
 }
 
@@ -1273,7 +1444,7 @@ fn pick_ready_index(
 }
 
 fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared: Arc<Shared>) {
-    let sched = shared.sched;
+    let sched = shared.sched.clone();
     // One scheduling decision: admit a request (fresh or resumable),
     // preempt an inflight task to make room for a blocked higher-ranked
     // arrival, or run one round for a policy-ordered batch of up to
@@ -1417,6 +1588,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             // touches streams or the virtual clock).
                             task.arm_accept_hist();
                         }
+                        note_prefix_hit(&shared.registry, task.prefill_report());
                         vec![Inflight {
                             id: req.id,
                             seed: req.seed,
@@ -1461,6 +1633,10 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         if sched.adaptive {
                             task.arm_accept_hist();
                         }
+                        // A resume's re-prefill of prompt ⊕ committed is
+                        // the prefix cache's best case: the preempted
+                        // session published exactly that chain on release.
+                        note_prefix_hit(&shared.registry, task.prefill_report());
                         vec![Inflight {
                             id: re.id,
                             seed: re.seed,
@@ -2026,7 +2202,7 @@ mod tests {
                 sim_backends(1),
                 EngineId::SpecBranch,
                 EngineConfig { max_new_tokens: 48, ..Default::default() },
-                SchedulerConfig { verify_batch, ..Default::default() },
+                SchedulerConfig::default().with_verify_batch(verify_batch),
             );
             for i in 0..6u64 {
                 coord.submit(vec![1, 2, 3, 1 + (i as u32 % 7)], 48, i);
@@ -2051,7 +2227,7 @@ mod tests {
             sim_backends(1),
             EngineId::SpecBranch,
             EngineConfig { max_new_tokens: 64, ..Default::default() },
-            SchedulerConfig { verify_batch: 8, ..Default::default() },
+            SchedulerConfig::default().with_verify_batch(8),
         );
         for i in 0..8u64 {
             coord.submit(vec![1, 2, 3], 64, i);
@@ -2104,6 +2280,7 @@ mod tests {
             adaptive: false,
             alpha_hint: None,
             k_max: 4,
+            prefix_cache: None,
         };
         let a = projected_kv_bytes(3, 40, &p);
         let b = projected_kv_bytes(3, 400, &p);
@@ -2169,19 +2346,12 @@ mod tests {
             sim_backends(1),
             EngineId::SpecBranch,
             EngineConfig { max_new_tokens: 64, ..Default::default() },
-            SchedulerConfig {
-                policy: SchedulePolicy::Priority,
-                kv_watermark_bytes: Some(2_000_000),
-                ..Default::default()
-            },
+            SchedulerConfig::default()
+                .with_policy(SchedulePolicy::Priority)
+                .with_kv_watermark_bytes(Some(2_000_000)),
         );
         for i in 0..6u64 {
-            coord.submit_opts(
-                vec![1, 2, 3],
-                40,
-                i,
-                SubmitOpts { priority: i as i32, ..Default::default() },
-            );
+            coord.submit_opts(vec![1, 2, 3], 40, i, SubmitOpts::new().priority(i as i32));
         }
         for _ in 0..6 {
             assert_eq!(coord.collect().tokens.len(), 40);
@@ -2253,15 +2423,13 @@ mod tests {
                 sim_backends(1),
                 EngineId::SpecBranch,
                 EngineConfig { max_new_tokens: 48, ..Default::default() },
-                SchedulerConfig {
-                    adaptive,
-                    alpha_hint: if adaptive {
+                SchedulerConfig::default().with_adaptive(adaptive).with_alpha_hint(
+                    if adaptive {
                         Some(ModelPair::get(PairId::Llama68m7b).alpha)
                     } else {
                         None
                     },
-                    ..Default::default()
-                },
+                ),
             );
             for i in 0..6u64 {
                 coord.submit(vec![1, 2, 3, 1 + (i as u32 % 7)], 48, i);
@@ -2342,6 +2510,7 @@ mod tests {
             adaptive: false,
             alpha_hint: None,
             k_max: 4,
+            prefix_cache: None,
         };
         let ckpt = |kv_reclaimed_bytes: usize| TaskCheckpoint {
             prompt: vec![1; 10],
@@ -2477,35 +2646,24 @@ mod tests {
         let e_cfg = EngineConfig { max_new_tokens: 512, ..Default::default() };
         let rider_w = projected_admission_bytes(3, 32, &e_cfg, &SchedulerConfig::default());
         let run = |constrained: bool| {
-            let sched = SchedulerConfig {
-                policy: SchedulePolicy::Priority,
-                kv_watermark_bytes: if constrained { Some(3 * rider_w) } else { None },
-                preempt: constrained,
-                adaptive: true,
-                alpha_hint: hint,
-                ..Default::default()
-            };
+            let sched = SchedulerConfig::default()
+                .with_policy(SchedulePolicy::Priority)
+                .with_kv_watermark_bytes(if constrained { Some(3 * rider_w) } else { None })
+                .with_preempt(constrained)
+                .with_adaptive(true)
+                .with_alpha_hint(hint);
             let coord =
                 Coordinator::start_with(sim_backends(1), EngineId::SpecBranch, e_cfg.clone(), sched);
             // Victim: low priority, big budget; stream its first round so
             // the riders provably arrive mid-flight.
             let (tx, rx) = std::sync::mpsc::channel();
-            let victim = coord.submit_opts(
-                vec![1, 2, 3],
-                256,
-                7,
-                SubmitOpts { stream: Some(tx), ..Default::default() },
-            );
+            let victim =
+                coord.submit_opts(vec![1, 2, 3], 256, 7, SubmitOpts::new().stream(tx));
             rx.recv_timeout(std::time::Duration::from_secs(30))
                 .expect("victim first round");
             // Two high-priority riders outrank the victim for KV.
             for i in 0..2u64 {
-                coord.submit_opts(
-                    vec![4, 5, 6],
-                    32,
-                    100 + i,
-                    SubmitOpts { priority: 5, ..Default::default() },
-                );
+                coord.submit_opts(vec![4, 5, 6], 32, 100 + i, SubmitOpts::new().priority(5));
             }
             // One more request, cancelled while queued/running.
             let doomed = coord.submit(vec![7, 8, 9], 200, 999);

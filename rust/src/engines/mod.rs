@@ -31,7 +31,7 @@ pub mod pearl;
 pub mod specbranch;
 pub mod sps;
 
-use crate::backend::{Session, VerifyTicket};
+use crate::backend::{PrefillReport, Session, VerifyTicket};
 use crate::config::{EngineConfig, EngineId};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
@@ -471,6 +471,20 @@ impl DecodeTask {
     /// path), else `None` for engines that do not speculate.
     pub fn controls(&self) -> Option<SpeculationControls> {
         self.controls.or_else(|| self.state.controls())
+    }
+
+    /// What the prefill on this task's *current* session paid for, split
+    /// by the cross-request prefix cache ([`PrefillReport`]). A resumed
+    /// task reports its resume re-prefill of `prompt ⊕ generated` — the
+    /// path the cache makes nearly free for hot prefixes — not the original
+    /// admission prefill (whose split rides in the carried-over stats).
+    /// All-zero on backends without prefill accounting.
+    pub fn prefill_report(&mut self) -> PrefillReport {
+        let stats = self.session.stats_mut();
+        PrefillReport {
+            cached_tokens: stats.prefill_cached_tokens as usize,
+            charged_tokens: stats.prefill_charged_tokens as usize,
+        }
     }
 
     /// Backend speed ratio `c = T_p/T_q` — the control plane's cost input

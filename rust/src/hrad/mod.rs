@@ -192,7 +192,7 @@ mod tests {
         fn speed_ratio(&self) -> f64 {
             self.0.speed_ratio()
         }
-        fn prefill(&mut self, prompt: &[Token]) {
+        fn prefill(&mut self, prompt: &[Token]) -> crate::backend::PrefillReport {
             self.0.prefill(prompt)
         }
         fn draft_forward(&mut self, branch: BranchId, token: Token) -> Vec<f32> {

@@ -1,16 +1,27 @@
 //! KV-cache management: shared-prefix branch forking (paper §5.2, App. G.3).
 //!
-//! Two layers:
+//! Three layers:
 //! * [`BlockCache`] — a paged, ref-counted block manager (vLLM-style).
 //!   Branches fork in O(1) by sharing prefix blocks (copy-on-write at block
 //!   granularity), which is what keeps SpecBranch's k parallel branches at
 //!   `O(k·γ)` extra memory instead of the `O(k^γ)` of dense token trees
 //!   (App. G.3, Fig. 17). It also powers the Fig. 7(a) memory traces.
+//! * [`PrefixCache`] — the *cross-request* generalisation of the same
+//!   prefix-sharing idea: a block-granular chain-hash index over committed
+//!   token prefixes, so a new request whose prompt shares a block-aligned
+//!   prefix with a live or recently-finished request attaches to the cached
+//!   blocks (refcount bump) instead of re-prefilling. Eviction is
+//!   refcount + LRU, leaf-first, accounted against the same watermark the
+//!   admission controller manages.
 //! * [`TensorKv`] — the concrete f32 cache buffer threaded through the AOT
 //!   artifacts by the PJRT backend (static `(L,2,H,S,D)` storage + logical
 //!   length; slots `>= len` are garbage by the masking contract).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sampling::Token;
 
 pub const BLOCK_TOKENS: usize = 16;
 
@@ -223,6 +234,268 @@ impl BlockCache {
     }
 }
 
+/// One cached block-granular prefix chunk: `key = chain_key(parent_key,
+/// chunk_tokens)`, so a chunk is only reachable through the exact token
+/// sequence leading up to it (a hashed radix trie edge).
+#[derive(Debug)]
+struct PrefixEntry {
+    /// Live sessions currently holding this chunk (pinned against
+    /// eviction). 0 means "recently finished, reusable until evicted".
+    refcount: u32,
+    /// LRU clock value at last acquire/publish touch.
+    last_used: u64,
+    /// Chain key of the preceding chunk (`None` for the first block).
+    parent: Option<u64>,
+    /// Number of cached chunks whose `parent` is this entry. Eviction is
+    /// leaf-first so a surviving chunk always has its full chain cached.
+    child_count: u32,
+}
+
+#[derive(Debug, Default)]
+struct PrefixIndex {
+    entries: HashMap<u64, PrefixEntry>,
+    /// Monotone LRU clock, bumped on every acquire/publish.
+    tick: u64,
+}
+
+/// Cross-request prefix cache: a chain-hash index over committed,
+/// block-aligned token prefixes ([`BLOCK_TOKENS`] granularity).
+///
+/// Sessions `acquire` their prompt at prefill (pinning matched chunks and
+/// publishing the prompt's own full chunks so concurrent requests can share
+/// them), and `publish` their full committed context when the KV is
+/// released, leaving the chain behind at refcount 0 for recently-finished
+/// reuse. Capacity is counted in tokens against the same watermark the
+/// admission controller manages; over capacity, unpinned leaf chunks are
+/// evicted in LRU order.
+///
+/// The index tracks *token identity*, not tensor payloads — in the sim it
+/// captures the timing/charging effect of prefix reuse (prefill passes are
+/// only charged for the uncached suffix) while each session's private
+/// [`BlockCache`] placement stays byte-identical, which is what keeps
+/// cache-on streams bit-for-bit equal to cache-off ones.
+#[derive(Debug)]
+pub struct PrefixCache {
+    inner: Mutex<PrefixIndex>,
+    capacity_tokens: usize,
+    evictions: AtomicU64,
+}
+
+/// Default [`PrefixCache`] capacity when the watermark is unbounded: 1 Mi
+/// tokens (65536 chunks) — large enough that smoke workloads never evict.
+pub const PREFIX_CACHE_DEFAULT_TOKENS: usize = 1 << 20;
+
+/// FNV-1a over one chunk's tokens, chained through the parent key so equal
+/// chunks at different prefix positions get distinct keys. A collision can
+/// only misprice a prefill (tokens are never read back from the index), so
+/// 64-bit FNV is plenty for the sim's accounting purposes.
+fn chain_key(parent: Option<u64>, chunk: &[Token]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET ^ parent.unwrap_or(0x9e37_79b9_7f4a_7c15).wrapping_mul(PRIME);
+    for &t in chunk {
+        h = (h ^ t as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Outcome of [`PrefixCache::acquire`]: how much of the prompt was already
+/// cached, plus the chain keys the session now holds pinned (released via
+/// [`PrefixCache::publish`]).
+#[derive(Debug, Default)]
+pub struct PrefixLease {
+    /// Block-aligned tokens found cached (the prefill charge discount).
+    pub cached_tokens: usize,
+    /// Every chunk key the lease pins (matched and newly published).
+    pub keys: Vec<u64>,
+}
+
+impl PrefixCache {
+    /// Cache bounded at `capacity_tokens` (rounded down to whole blocks).
+    pub fn new(capacity_tokens: usize) -> Self {
+        Self {
+            inner: Mutex::new(PrefixIndex::default()),
+            capacity_tokens,
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Capacity sized from the admission watermark (`watermark_bytes /
+    /// bytes_per_token`), the deployment default: the prefix index never
+    /// accounts for more tokens than the watermark lets decode hold.
+    pub fn for_watermark(watermark_bytes: Option<usize>, bytes_per_token: usize) -> Self {
+        let cap = match watermark_bytes {
+            Some(b) => (b / bytes_per_token.max(1)).max(BLOCK_TOKENS),
+            None => PREFIX_CACHE_DEFAULT_TOKENS,
+        };
+        Self::new(cap)
+    }
+
+    /// Block-aligned tokens of `prompt` a prefill may skip: full chunks
+    /// only, and never the whole prompt — at least one token is always
+    /// recomputed (the forward pass that produces the next-token logits).
+    fn reusable_cap(prompt_len: usize) -> usize {
+        if prompt_len == 0 {
+            return 0;
+        }
+        ((prompt_len - 1) / BLOCK_TOKENS) * BLOCK_TOKENS
+    }
+
+    /// Read-only probe: tokens [`PrefixCache::acquire`] would report cached
+    /// for this prompt right now. The admission controller uses this to
+    /// discount projected KV; a chunk evicted between probe and prefill
+    /// only makes the projection an over-estimate (safe direction).
+    pub fn probe(&self, tokens: &[Token]) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let cap_chunks = Self::reusable_cap(tokens.len()) / BLOCK_TOKENS;
+        let mut key = None;
+        let mut matched = 0;
+        for chunk in tokens.chunks_exact(BLOCK_TOKENS).take(cap_chunks) {
+            let k = chain_key(key, chunk);
+            if !inner.entries.contains_key(&k) {
+                break;
+            }
+            matched += 1;
+            key = Some(k);
+        }
+        matched * BLOCK_TOKENS
+    }
+
+    /// Prefill-time attach: walk the prompt's full chunks, pinning every
+    /// chunk already cached (refcount bump) and publishing the rest so
+    /// concurrent requests sharing the prompt can attach while this one is
+    /// still live. Returns the lease; `cached_tokens` counts only chunks
+    /// that existed *before* this call (the actual prefill discount),
+    /// capped so at least one token is always charged.
+    pub fn acquire(&self, tokens: &[Token]) -> PrefixLease {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let cap = Self::reusable_cap(tokens.len());
+        let mut lease = PrefixLease::default();
+        let mut key = None;
+        let mut run_cached = true;
+        for chunk in tokens.chunks_exact(BLOCK_TOKENS) {
+            let k = chain_key(key, chunk);
+            match inner.entries.get_mut(&k) {
+                Some(e) => {
+                    e.refcount += 1;
+                    e.last_used = tick;
+                    if run_cached && lease.cached_tokens < cap {
+                        lease.cached_tokens += BLOCK_TOKENS;
+                    }
+                }
+                None => {
+                    run_cached = false;
+                    inner.entries.insert(
+                        k,
+                        PrefixEntry { refcount: 1, last_used: tick, parent: key, child_count: 0 },
+                    );
+                    if let Some(p) = key {
+                        inner.entries.get_mut(&p).unwrap().child_count += 1;
+                    }
+                }
+            }
+            lease.keys.push(k);
+            key = Some(k);
+        }
+        self.evict_over_capacity(&mut inner);
+        lease
+    }
+
+    /// Release a lease, publishing the session's full committed context
+    /// (`prompt ⊕ generated`) so its chain outlives the request for
+    /// recently-finished reuse (and so a preempt → resume re-prefill of the
+    /// same context is a hit). Chunks beyond the lease are inserted at
+    /// refcount 0; leased chunks are unpinned. Call exactly once per lease.
+    pub fn publish(&self, committed: &[Token], lease: PrefixLease) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let mut key = None;
+        for (i, chunk) in committed.chunks_exact(BLOCK_TOKENS).enumerate() {
+            let k = chain_key(key, chunk);
+            debug_assert!(
+                i >= lease.keys.len() || lease.keys[i] == k,
+                "published chain diverged from the leased prompt chain"
+            );
+            match inner.entries.get_mut(&k) {
+                Some(e) => e.last_used = tick,
+                None => {
+                    inner.entries.insert(
+                        k,
+                        PrefixEntry { refcount: 0, last_used: tick, parent: key, child_count: 0 },
+                    );
+                    if let Some(p) = key {
+                        inner.entries.get_mut(&p).unwrap().child_count += 1;
+                    }
+                }
+            }
+            key = Some(k);
+        }
+        for k in &lease.keys {
+            let e = inner.entries.get_mut(k).expect("leased chunk vanished while pinned");
+            debug_assert!(e.refcount > 0, "lease refcount underflow");
+            e.refcount -= 1;
+        }
+        self.evict_over_capacity(&mut inner);
+    }
+
+    /// Evict unpinned leaf chunks, LRU-first, until within capacity.
+    /// Pinned chunks (live leases) and interior chunks (cached children)
+    /// are never evicted, so a cached chunk's full chain is always cached.
+    fn evict_over_capacity(&self, inner: &mut PrefixIndex) {
+        let cap_chunks = self.capacity_tokens / BLOCK_TOKENS;
+        while inner.entries.len() > cap_chunks {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refcount == 0 && e.child_count == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            let parent = inner.entries.remove(&k).unwrap().parent;
+            if let Some(p) = parent {
+                inner.entries.get_mut(&p).unwrap().child_count -= 1;
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Chunks evicted over the cache's lifetime (registry counter).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Tokens currently indexed (cached chunks × block size).
+    pub fn indexed_tokens(&self) -> usize {
+        self.inner.lock().unwrap().entries.len() * BLOCK_TOKENS
+    }
+
+    /// Invariant check for tests: parent chains exist, child counts match,
+    /// and the index is within capacity or every over-capacity chunk is
+    /// pinned/interior.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let inner = self.inner.lock().unwrap();
+        let mut child_counts: HashMap<u64, u32> = HashMap::new();
+        for e in inner.entries.values() {
+            if let Some(p) = e.parent {
+                if !inner.entries.contains_key(&p) {
+                    return Err(format!("chunk parent {p} missing (broken chain)"));
+                }
+                *child_counts.entry(p).or_insert(0) += 1;
+            }
+        }
+        for (k, e) in &inner.entries {
+            let c = child_counts.get(k).copied().unwrap_or(0);
+            if e.child_count != c {
+                return Err(format!("chunk {k} child_count {} != {c} children", e.child_count));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Concrete KV tensor for the PJRT backend: static `(L,2,H,S,D)` f32
 /// storage plus the logical length. Forking clones the buffer (the tiny
 /// pair's cache is ~1-4 MB; the *paged* manager above is what models the
@@ -301,6 +574,46 @@ mod tests {
     }
 
     #[test]
+    fn fork_append_cow_keeps_refcounts_and_peak_exact() {
+        // Regression for the CoW-on-shared-tail path: bookkeeping must stay
+        // exact through interleaved fork/append/release, with no leaked
+        // blocks and a peak that counts the CoW copy exactly once.
+        let mut c = BlockCache::new(1024);
+        let s = c.create();
+        c.append(s, BLOCK_TOKENS + 4); // 1 full + 1 partial block
+        assert_eq!(c.allocated_blocks(), 2);
+        let f1 = c.fork(s);
+        let f2 = c.fork(s);
+        c.check_invariants().unwrap(); // tail refcount now 3
+        // Appending into the shared tail must CoW: parent keeps its block,
+        // each child writes into a private copy.
+        c.append(f1, 2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 3, "f1's append CoWs one tail copy");
+        c.append(f2, 1);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 4, "f2's append CoWs its own copy");
+        // The parent's tail is now private again; appending must NOT copy.
+        c.append(s, 1);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 4, "unshared tail appends in place");
+        assert_eq!(c.peak_blocks(), 4, "peak counts each CoW copy once");
+        assert_eq!((c.len(s), c.len(f1), c.len(f2)), (21, 22, 21));
+        // Interleaved release: shared prefix block survives until the last
+        // referencing sequence goes away; nothing leaks.
+        c.release(f1);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 3);
+        c.release(s);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 2, "f2 still holds prefix + its CoW tail");
+        c.release(f2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_blocks(), 0, "no leaked blocks");
+        assert_eq!(c.peak_blocks(), 4, "release never moves the peak");
+    }
+
+    #[test]
     fn release_frees_unshared_blocks() {
         let mut c = BlockCache::new(1024);
         let s = c.create();
@@ -372,6 +685,117 @@ mod tests {
     fn tensor_kv_overflow_panics() {
         let mut kv = TensorKv::zeros(128, 8);
         kv.advance(9);
+    }
+
+    fn toks(n: usize, salt: u32) -> Vec<Token> {
+        (0..n as u32).map(|i| i.wrapping_mul(2654435761).wrapping_add(salt) % 64).collect()
+    }
+
+    #[test]
+    fn prefix_cache_miss_then_hit() {
+        let p = PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS);
+        let prompt = toks(40, 1); // 2 full chunks + 8 tail tokens
+        let lease = p.acquire(&prompt);
+        assert_eq!(lease.cached_tokens, 0, "cold cache: nothing reusable");
+        assert_eq!(lease.keys.len(), 2, "both full chunks published");
+        // A concurrent request sharing the prompt attaches while the first
+        // one is still live.
+        let lease2 = p.acquire(&prompt);
+        assert_eq!(lease2.cached_tokens, 32);
+        p.publish(&prompt, lease2);
+        p.publish(&prompt, lease);
+        p.check_invariants().unwrap();
+        // Recently-finished reuse: still a hit after both released.
+        assert_eq!(p.probe(&prompt), 32);
+    }
+
+    #[test]
+    fn prefix_cache_never_caches_whole_prompt() {
+        let p = PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS);
+        let prompt = toks(2 * BLOCK_TOKENS, 7); // exactly 2 blocks
+        let lease = p.acquire(&prompt);
+        p.publish(&prompt, lease);
+        // Both chunks are indexed, but a block-exact prompt still charges
+        // its final block: the pass producing next-token logits runs.
+        assert_eq!(p.probe(&prompt), BLOCK_TOKENS);
+        let lease = p.acquire(&prompt);
+        assert_eq!(lease.cached_tokens, BLOCK_TOKENS);
+        p.publish(&prompt, lease);
+    }
+
+    #[test]
+    fn prefix_cache_chain_is_position_sensitive() {
+        let p = PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS);
+        let a = toks(BLOCK_TOKENS, 1);
+        let b = toks(BLOCK_TOKENS, 2);
+        let ab: Vec<Token> = a.iter().chain(b.iter()).copied().chain([0, 0]).collect();
+        let ba: Vec<Token> = b.iter().chain(a.iter()).copied().chain([0, 0]).collect();
+        let lease = p.acquire(&ab);
+        p.publish(&ab, lease);
+        // `b` as the *second* chunk of `ab` must not satisfy `b` as a
+        // first chunk — keys chain through the parent.
+        assert_eq!(p.probe(&ba), 0);
+        assert_eq!(p.probe(&ab), 32);
+    }
+
+    #[test]
+    fn prefix_cache_publish_extends_chain_for_resume() {
+        let p = PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS);
+        let prompt = toks(BLOCK_TOKENS + 3, 9);
+        let lease = p.acquire(&prompt);
+        assert_eq!(lease.cached_tokens, 0);
+        // Session commits 29 more tokens, then is preempted: release
+        // publishes prompt ⊕ generated.
+        let mut committed = prompt.clone();
+        committed.extend(toks(29, 11));
+        p.publish(&committed, lease);
+        // Resume re-prefills the full committed context: every full chunk
+        // is a hit (48 committed → 32 reusable under the ≥1-charged cap).
+        let lease = p.acquire(&committed);
+        assert_eq!(lease.cached_tokens, 32);
+        p.publish(&committed, lease);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_cache_evicts_lru_leaves_only() {
+        // Capacity of 4 chunks; two 2-chunk chains.
+        let p = PrefixCache::new(4 * BLOCK_TOKENS);
+        let hot = toks(2 * BLOCK_TOKENS + 1, 1);
+        let cold = toks(2 * BLOCK_TOKENS + 1, 2);
+        let lease = p.acquire(&cold);
+        p.publish(&cold, lease);
+        let lease = p.acquire(&hot);
+        p.publish(&hot, lease);
+        assert_eq!(p.indexed_tokens(), 4 * BLOCK_TOKENS);
+        assert_eq!(p.evictions(), 0);
+        // A third chain overflows capacity: the cold chain goes leaf-first
+        // (the hot chain was touched later), never orphaning a child.
+        let fresh = toks(2 * BLOCK_TOKENS + 1, 3);
+        let lease = p.acquire(&fresh);
+        p.check_invariants().unwrap();
+        assert_eq!(p.evictions(), 2, "exactly the cold chain evicted, leaf-first");
+        assert_eq!(p.probe(&hot), 2 * BLOCK_TOKENS, "hot chain survives");
+        assert_eq!(p.probe(&cold), 0, "cold chain gone");
+        p.publish(&fresh, lease);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_cache_pinned_chunks_survive_eviction_pressure() {
+        let p = PrefixCache::new(2 * BLOCK_TOKENS);
+        let live = toks(2 * BLOCK_TOKENS + 1, 1);
+        let lease = p.acquire(&live); // pins both chunks
+        for salt in 10..14 {
+            let other = toks(2 * BLOCK_TOKENS + 1, salt);
+            let l = p.acquire(&other);
+            p.publish(&other, l);
+        }
+        p.check_invariants().unwrap();
+        // The live lease's chunks were pinned the whole time.
+        assert_eq!(p.probe(&live), 2 * BLOCK_TOKENS);
+        p.publish(&live, lease);
+        p.check_invariants().unwrap();
     }
 
     #[test]

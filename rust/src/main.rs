@@ -21,12 +21,14 @@ use specbranch::bench_harness::{experiments, gate, loadgen, Scale};
 use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
 use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
+use specbranch::kvcache::PrefixCache;
 use specbranch::metrics;
 use specbranch::server::Server;
 use specbranch::token::Tokenizer;
 use specbranch::util::cli::Args;
 use specbranch::util::json;
 use specbranch::util::prng::Pcg32;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
@@ -59,6 +61,10 @@ fn print_help() {
                          --backend <pjrt|sim> [--max-conns <n>]\n\
                          --policy <rr|priority|edf>  scheduling policy\n\
                          --kv-watermark-mb <n>  KV admission watermark (0=off)\n\
+                         [--prefix-cache]  reuse committed block-aligned\n\
+                                      prompt prefixes across requests:\n\
+                                      shared prefixes skip re-prefill and\n\
+                                      admission discounts the cached part\n\
                          --aging <rounds>  priority aging rate (0=off)\n\
                          --verify-batch <n>  fuse up to n requests' verify\n\
                                              blocks per target pass (1=off)\n\
@@ -103,7 +109,14 @@ fn engine_cfg(args: &Args) -> EngineConfig {
     }
 }
 
-fn build_backend(args: &Args) -> Result<Box<dyn Backend + Send>, String> {
+/// `prefix` is the shared cross-request prefix cache (`--prefix-cache`);
+/// the PJRT backend ignores it today (its sessions report full-charge
+/// prefills), so the flag is a sim-path optimisation until the runtime
+/// grows block-granular KV reuse.
+fn build_backend(
+    args: &Args,
+    prefix: Option<Arc<PrefixCache>>,
+) -> Result<Box<dyn Backend + Send>, String> {
     match args.get_or("backend", "pjrt") {
         "pjrt" => {
             let dir = Manifest::default_dir();
@@ -115,7 +128,8 @@ fn build_backend(args: &Args) -> Result<Box<dyn Backend + Send>, String> {
             let pair = ModelPair::parse(args.get_or("pair", "vicuna"))
                 .ok_or("unknown --pair")?;
             let task = Task::parse(args.get_or("task", "mtbench")).ok_or("unknown --task")?;
-            let cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+            let mut cfg = SimConfig::new(ModelPair::get(pair), Task::get(task));
+            cfg.prefix = prefix;
             Ok(Box::new(SimBackend::new(cfg)))
         }
         other => Err(format!("unknown backend '{other}'")),
@@ -130,7 +144,7 @@ fn cmd_generate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let backend = match build_backend(args) {
+    let backend = match build_backend(args, None) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("{e}");
@@ -202,10 +216,25 @@ fn cmd_serve(args: &Args) -> i32 {
     if args.has("pp") && engine_id == EngineId::SpecBranch {
         engine_id = EngineId::SpecBranchPp;
     }
+    let watermark_mb = args.get_usize("kv-watermark-mb", 0);
+    let kv_watermark_bytes =
+        if watermark_mb == 0 { None } else { Some(watermark_mb * 1024 * 1024) };
+    // --prefix-cache: one shared block-granular index over committed
+    // prefixes, handed to every backend (sessions reuse blocks) and to the
+    // scheduler (admission projections discount the cached prefix). Sized
+    // from the admission watermark when one is set.
+    let prefix_cache = if args.has("prefix-cache") {
+        Some(Arc::new(PrefixCache::for_watermark(
+            kv_watermark_bytes,
+            metrics::kv_bytes_per_token(2, 12, 64),
+        )))
+    } else {
+        None
+    };
     let workers = args.get_usize("workers", 2);
     let mut backends = Vec::new();
     for _ in 0..workers {
-        match build_backend(args) {
+        match build_backend(args, prefix_cache.clone()) {
             Ok(b) => backends.push(b),
             Err(e) => {
                 eprintln!("{e}");
@@ -220,7 +249,6 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    let watermark_mb = args.get_usize("kv-watermark-mb", 0);
     let adaptive = args.has("adaptive");
     // Seed the control plane's α-EWMA from the sim pair's calibration when
     // one is on the command line; other backends start from the default
@@ -230,21 +258,16 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         None
     };
-    let sched = SchedulerConfig {
-        policy,
-        kv_watermark_bytes: if watermark_mb == 0 {
-            None
-        } else {
-            Some(watermark_mb * 1024 * 1024)
-        },
-        kv_bytes_per_token: None,
-        aging_rounds: args.get_u64("aging", 8),
-        verify_batch: args.get_usize("verify-batch", 1),
-        preempt: args.has("preempt"),
-        adaptive,
-        alpha_hint,
-    };
-    let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched);
+    let sched = SchedulerConfig::default()
+        .with_policy(policy)
+        .with_kv_watermark_bytes(kv_watermark_bytes)
+        .with_aging_rounds(args.get_u64("aging", 8))
+        .with_verify_batch(args.get_usize("verify-batch", 1))
+        .with_preempt(args.has("preempt"))
+        .with_adaptive(adaptive)
+        .with_alpha_hint(alpha_hint)
+        .with_prefix_cache(prefix_cache);
+    let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched.clone());
     let addr = args.get_or("addr", "127.0.0.1:7799");
     let server = match Server::bind(addr, coord) {
         Ok(s) => s,
@@ -254,13 +277,15 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving on {} (engine={} policy={} verify-batch={} preempt={} adaptive={})",
+        "serving on {} (engine={} policy={} verify-batch={} preempt={} adaptive={} \
+         prefix-cache={})",
         server.local_addr(),
         engine_id.name(),
         policy.name(),
         sched.verify_batch.max(1),
         sched.preempt,
-        sched.adaptive
+        sched.adaptive,
+        sched.prefix_cache.is_some()
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
@@ -381,8 +406,10 @@ fn cmd_bench(args: &Args) -> i32 {
 /// measured virtual-clock tokens/sec per engine as JSON, enforce the
 /// always-armed in-run gates (fused `--verify-batch` vs single-request,
 /// the `specbranch-preempt` scenario vs its own no-preemption path,
-/// the `specbranch-mux` scenario vs its own serial-connection path, and
-/// the `specbranch-adaptive` scenario vs its own static (γ, k) grid),
+/// the `specbranch-mux` scenario vs its own serial-connection path,
+/// the `specbranch-adaptive` scenario vs its own static (γ, k) grid, and
+/// the `specbranch-prefix` Zipf-shared-prompt scenario vs its own
+/// cache-off path),
 /// and compare the deterministic entries against the committed baseline —
 /// exit 1 on any gate failure. All the comparison logic lives in
 /// [`gate`] (`bench_harness::gate`) and is exercised by `cargo test`, so
@@ -457,6 +484,29 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         failed = true;
     }
 
+    // Armed in-run prefix-cache gate: a Zipf-shared-prompt workload (a few
+    // hot prompt prefixes, per-request tails) through the real coordinator
+    // with `--prefix-cache` on vs the cache-off path measured in the same
+    // invocation; the cache must hit, must strictly reduce charged prefill
+    // tokens, must keep streams byte-identical, and must stay within
+    // tolerance on throughput.
+    let prefix = gate::prefix_smoke();
+    println!(
+        "bench-smoke: {:<20} {:>8.1} tok/s  (no-cache {:.1})  hits {}  saved {}  \
+         charged {} vs {}",
+        "specbranch-prefix",
+        prefix.tokens_per_sec,
+        prefix.reference_tokens_per_sec,
+        prefix.registry.prefix_hits,
+        prefix.registry.prefix_tokens_saved,
+        prefix.prefill_charged_tokens,
+        prefix.reference_prefill_charged_tokens,
+    );
+    for f in prefix.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
+
     // The committed-baseline form of the report carries only the
     // deterministic entries: the specbranch-preempt numbers depend on the
     // preemption point (thread timing), so they are reported but never
@@ -473,6 +523,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     engines_json.push(("specbranch-preempt", preempt.detail()));
     engines_json.push(("specbranch-mux", mux.detail()));
     engines_json.push(("specbranch-adaptive", adaptive.detail()));
+    engines_json.push(("specbranch-prefix", prefix.detail()));
     let report = json::obj(vec![
         ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),

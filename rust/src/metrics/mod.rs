@@ -58,6 +58,12 @@ pub struct DecodeStats {
     /// close to the admission watermark (speculation spent instead of
     /// admissions deferred).
     pub gamma_shrunk_by_pressure: u64,
+    /// Prompt tokens the most recent prefill skipped via the cross-request
+    /// prefix cache (`PrefillReport::cached_tokens`; 0 without a cache).
+    pub prefill_cached_tokens: u64,
+    /// Prompt tokens the prefill actually processed and priced
+    /// (`PrefillReport::charged_tokens`).
+    pub prefill_charged_tokens: u64,
 }
 
 impl DecodeStats {
@@ -138,6 +144,8 @@ impl DecodeStats {
         self.round_gamma_sum += other.round_gamma_sum;
         self.round_k_sum += other.round_k_sum;
         self.gamma_shrunk_by_pressure += other.gamma_shrunk_by_pressure;
+        self.prefill_cached_tokens += other.prefill_cached_tokens;
+        self.prefill_charged_tokens += other.prefill_charged_tokens;
         if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {
             // Bucket-wise merge: O(buckets), not O(total count).
             mine.merge(theirs);

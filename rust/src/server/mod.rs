@@ -119,6 +119,11 @@ fn stats_json(resp: &Response) -> json::Value {
             "gamma_shrunk_by_pressure",
             json::num(resp.stats.gamma_shrunk_by_pressure as f64),
         ),
+        // Cross-request prefix cache (additive; zero when `--prefix-cache`
+        // is off). Cached + charged sums to the prompt tokens this request
+        // fed through prefill (repeat prefills after preemption included).
+        ("prefill_cached_tokens", json::num(resp.stats.prefill_cached_tokens as f64)),
+        ("prefill_charged_tokens", json::num(resp.stats.prefill_charged_tokens as f64)),
     ])
 }
 
@@ -321,17 +326,14 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             } else {
                 (None, None)
             };
-            let id = coord.submit_opts(
-                prompt,
-                max_new,
-                42,
-                SubmitOpts {
-                    priority,
-                    deadline_ms,
-                    stream: stream_tx,
-                    on_complete: Some(done_tx),
-                },
-            );
+            let mut opts = SubmitOpts::new().priority(priority).on_complete(done_tx);
+            if let Some(ms) = deadline_ms {
+                opts = opts.deadline_ms(ms);
+            }
+            if let Some(tx) = stream_tx {
+                opts = opts.stream(tx);
+            }
+            let id = coord.submit_opts(prompt, max_new, 42, opts);
             let label = tag.map(|t| t.to_string()).unwrap_or_else(|| id.to_string());
             map.insert(label.clone(), id);
             drop(map);

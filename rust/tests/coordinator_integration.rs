@@ -289,12 +289,7 @@ fn edf_prefers_tight_deadline_that_round_robin_makes_wait() {
     // finishes first, meeting its deadline.
     let submit_pair = |coord: &Coordinator| -> (u64, u64) {
         let a = coord.submit_opts(vec![1, 2, 3], 200, 1, SubmitOpts::default());
-        let b = coord.submit_opts(
-            vec![4, 5, 6],
-            200,
-            2,
-            SubmitOpts { deadline_ms: Some(30_000), ..Default::default() },
-        );
+        let b = coord.submit_opts(vec![4, 5, 6], 200, 2, SubmitOpts::new().deadline_ms(30_000));
         (a, b)
     };
 
@@ -302,7 +297,7 @@ fn edf_prefers_tight_deadline_that_round_robin_makes_wait() {
         backends(1),
         EngineId::Autoregressive,
         EngineConfig { max_new_tokens: 256, ..Default::default() },
-        SchedulerConfig { policy: SchedulePolicy::EarliestDeadline, ..Default::default() },
+        SchedulerConfig::default().with_policy(SchedulePolicy::EarliestDeadline),
     );
     let (_a, b) = submit_pair(&edf);
     let first = edf.collect();
@@ -340,19 +335,12 @@ fn priority_aging_bounds_low_priority_wait() {
             backends(1),
             EngineId::Autoregressive,
             cfg.clone(),
-            SchedulerConfig {
-                policy: SchedulePolicy::Priority,
-                aging_rounds,
-                ..Default::default()
-            },
+            SchedulerConfig::default()
+                .with_policy(SchedulePolicy::Priority)
+                .with_aging_rounds(aging_rounds),
         );
         for i in 0..6u64 {
-            coord.submit_opts(
-                vec![1, 2, 3],
-                80,
-                i,
-                SubmitOpts { priority: 5, ..Default::default() },
-            );
+            coord.submit_opts(vec![1, 2, 3], 80, i, SubmitOpts::new().priority(5));
         }
         let low = coord.submit_opts(vec![4, 5, 6], 8, 99, SubmitOpts::default());
         let mut order = Vec::new();
@@ -387,10 +375,7 @@ fn admission_watermark_bounds_kv_with_zero_drops() {
         backends(2),
         EngineId::SpecBranch,
         EngineConfig { max_new_tokens: 64, gamma: 6, k_max: 4, ..Default::default() },
-        SchedulerConfig {
-            kv_watermark_bytes: Some(watermark),
-            ..Default::default()
-        },
+        SchedulerConfig::default().with_kv_watermark_bytes(Some(watermark)),
     );
     let n = 12u64;
     for i in 0..n {
@@ -427,11 +412,8 @@ fn shutdown_drains_requests_deferred_by_admission_control() {
         backends(1),
         EngineId::Sps,
         EngineConfig { max_new_tokens: 64, ..Default::default() },
-        SchedulerConfig {
-            // Roughly one admitted request at a time.
-            kv_watermark_bytes: Some(1_000_000),
-            ..Default::default()
-        },
+        // Roughly one admitted request at a time.
+        SchedulerConfig::default().with_kv_watermark_bytes(Some(1_000_000)),
     );
     for i in 0..6 {
         coord.submit(vec![1, 2, 3], 30, i);
@@ -456,7 +438,7 @@ fn fused_verification_keeps_registry_invariant_under_mixed_cancellation() {
         backends(2),
         EngineId::SpecBranch,
         EngineConfig { max_new_tokens: 64, ..Default::default() },
-        SchedulerConfig { verify_batch: 4, ..Default::default() },
+        SchedulerConfig::default().with_verify_batch(4),
     );
     let ids: Vec<u64> = (0..8).map(|i| coord.submit(vec![1, 2, 3], 1500, i)).collect();
     assert!(coord.cancel(ids[2]));
@@ -506,7 +488,7 @@ fn fused_streams_match_unbatched_across_workers() {
             backends(2),
             EngineId::SpecBranch,
             EngineConfig { max_new_tokens: 40, ..Default::default() },
-            SchedulerConfig { verify_batch, ..Default::default() },
+            SchedulerConfig::default().with_verify_batch(verify_batch),
         );
         for i in 0..10u64 {
             coord.submit(vec![1, 2, 3, 1 + (i as u32 % 5)], 40, i);
@@ -535,13 +517,11 @@ fn edf_orders_the_batch_composition() {
         backends(1),
         EngineId::Autoregressive,
         EngineConfig { max_new_tokens: 512, ..Default::default() },
-        SchedulerConfig {
-            policy: SchedulePolicy::EarliestDeadline,
-            verify_batch: 2,
-            ..Default::default()
-        },
+        SchedulerConfig::default()
+            .with_policy(SchedulePolicy::EarliestDeadline)
+            .with_verify_batch(2),
     );
-    let deadline = |ms: u64| SubmitOpts { deadline_ms: Some(ms), ..Default::default() };
+    let deadline = |ms: u64| SubmitOpts::new().deadline_ms(ms);
     let a = coord.submit_opts(vec![1, 2, 3], 400, 1, deadline(60_000));
     let b = coord.submit_opts(vec![4, 5, 6], 150, 2, deadline(30_000));
     let c = coord.submit_opts(vec![7, 8, 9], 400, 3, deadline(90_000));
@@ -563,14 +543,12 @@ fn priority_orders_the_batch_composition() {
         backends(1),
         EngineId::Autoregressive,
         EngineConfig { max_new_tokens: 512, ..Default::default() },
-        SchedulerConfig {
-            policy: SchedulePolicy::Priority,
-            aging_rounds: 0,
-            verify_batch: 2,
-            ..Default::default()
-        },
+        SchedulerConfig::default()
+            .with_policy(SchedulePolicy::Priority)
+            .with_aging_rounds(0)
+            .with_verify_batch(2),
     );
-    let pri = |p: i32| SubmitOpts { priority: p, ..Default::default() };
+    let pri = |p: i32| SubmitOpts::new().priority(p);
     let a = coord.submit_opts(vec![1, 2, 3], 400, 1, pri(3));
     let b = coord.submit_opts(vec![4, 5, 6], 150, 2, pri(5));
     let c = coord.submit_opts(vec![7, 8, 9], 400, 3, pri(1));
@@ -592,16 +570,15 @@ fn preemption_reclaims_kv_then_resumes_byte_identical_exact_budgets() {
     // run — exact budgets, one registry count per request across the
     // preempt/resume cycle.
     let e_cfg = EngineConfig { max_new_tokens: 1024, ..Default::default() };
-    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let base = SchedulerConfig::default().with_policy(SchedulePolicy::Priority);
     let proj_600 = projected_admission_bytes(3, 600, &e_cfg, &base);
     let proj_7 = projected_admission_bytes(3, 7, &e_cfg, &base);
     // Fits the 600-budget victim alone, not together with even the
     // 7-budget arrival: the high-priority burst must preempt to get in.
-    let tight = SchedulerConfig {
-        kv_watermark_bytes: Some(proj_600 + proj_7 / 2),
-        preempt: true,
-        ..base
-    };
+    let tight = base
+        .clone()
+        .with_kv_watermark_bytes(Some(proj_600 + proj_7 / 2))
+        .with_preempt(true);
     let mix = [7usize, 40, 150];
 
     // Unconstrained reference: same submission order => same ids => same
@@ -615,7 +592,7 @@ fn preemption_reclaims_kv_then_resumes_byte_identical_exact_budgets() {
                 vec![4 + i as u32, 5, 6],
                 sz,
                 6 + i as u64,
-                SubmitOpts { priority: 9, ..Default::default() },
+                SubmitOpts::new().priority(9),
             );
         }
         let mut out = std::collections::HashMap::new();
@@ -629,12 +606,7 @@ fn preemption_reclaims_kv_then_resumes_byte_identical_exact_budgets() {
 
     let coord = Coordinator::start_with(backends(1), EngineId::SpecBranch, e_cfg, tight);
     let (tx, rx) = std::sync::mpsc::channel();
-    let victim = coord.submit_opts(
-        vec![1, 2, 3],
-        600,
-        5,
-        SubmitOpts { stream: Some(tx), ..Default::default() },
-    );
+    let victim = coord.submit_opts(vec![1, 2, 3], 600, 5, SubmitOpts::new().stream(tx));
     // Wait for the victim's first committed round, so the high-priority
     // arrivals land mid-flight and must preempt rather than defer.
     let first = rx.recv().expect("victim first chunk");
@@ -647,7 +619,7 @@ fn preemption_reclaims_kv_then_resumes_byte_identical_exact_budgets() {
                 vec![4 + i as u32, 5, 6],
                 sz,
                 6 + i as u64,
-                SubmitOpts { priority: 9, ..Default::default() },
+                SubmitOpts::new().priority(9),
             )
         })
         .collect();
@@ -706,7 +678,7 @@ fn oversized_arrival_preempts_inflight_and_is_admitted_alone() {
     // inflight victim, preempts it to drain the cache to zero, runs alone
     // (projection above the watermark), and the victim resumes after.
     let e_cfg = EngineConfig { max_new_tokens: 1024, ..Default::default() };
-    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let base = SchedulerConfig::default().with_policy(SchedulePolicy::Priority);
     let proj_300 = projected_admission_bytes(3, 300, &e_cfg, &base);
     let proj_700 = projected_admission_bytes(3, 700, &e_cfg, &base);
     let watermark = proj_300 + proj_300 / 2;
@@ -715,14 +687,12 @@ fn oversized_arrival_preempts_inflight_and_is_admitted_alone() {
         backends(1),
         EngineId::Sps,
         e_cfg,
-        SchedulerConfig { kv_watermark_bytes: Some(watermark), preempt: true, ..base },
+        base.with_kv_watermark_bytes(Some(watermark)).with_preempt(true),
     );
     let (tx, rx) = std::sync::mpsc::channel();
-    let victim = coord
-        .submit_opts(vec![1, 2, 3], 300, 0, SubmitOpts { stream: Some(tx), ..Default::default() });
+    let victim = coord.submit_opts(vec![1, 2, 3], 300, 0, SubmitOpts::new().stream(tx));
     assert!(!rx.recv().expect("victim round").done);
-    let big =
-        coord.submit_opts(vec![4, 5, 6], 700, 1, SubmitOpts { priority: 9, ..Default::default() });
+    let big = coord.submit_opts(vec![4, 5, 6], 700, 1, SubmitOpts::new().priority(9));
     let first = coord.collect();
     assert_eq!(first.id, big, "the oversized request runs alone while the victim waits");
     assert_eq!(first.tokens.len(), 700);
@@ -754,17 +724,14 @@ fn pathological_watermark_preempt_resume_makes_progress_no_livelock() {
         backends(1),
         EngineId::SpecBranch,
         e_cfg,
-        SchedulerConfig {
-            policy: SchedulePolicy::Priority,
-            kv_watermark_bytes: Some(1),
-            preempt: true,
-            aging_rounds: 2,
-            ..Default::default()
-        },
+        SchedulerConfig::default()
+            .with_policy(SchedulePolicy::Priority)
+            .with_kv_watermark_bytes(Some(1))
+            .with_preempt(true)
+            .with_aging_rounds(2),
     );
     let (tx, rx) = std::sync::mpsc::channel();
-    let first = coord
-        .submit_opts(vec![1, 2, 3], 240, 0, SubmitOpts { stream: Some(tx), ..Default::default() });
+    let first = coord.submit_opts(vec![1, 2, 3], 240, 0, SubmitOpts::new().stream(tx));
     assert!(!rx.recv().expect("first round").done);
     let mut ids = vec![first];
     for (i, &p) in [5i32, 3, 9, 1].iter().enumerate() {
@@ -772,7 +739,7 @@ fn pathological_watermark_preempt_resume_makes_progress_no_livelock() {
             vec![2 + i as u32, 3, 4],
             240,
             1 + i as u64,
-            SubmitOpts { priority: p, ..Default::default() },
+            SubmitOpts::new().priority(p),
         ));
     }
     let mut stats_sum = 0u64;
@@ -801,32 +768,22 @@ fn cancel_while_preempted_returns_partial_and_registry_holds() {
     // a second cancellation lands mid-decode; two more requests complete.
     // The registry token equality must span all of it.
     let e_cfg = EngineConfig { max_new_tokens: 8192, ..Default::default() };
-    let base = SchedulerConfig { policy: SchedulePolicy::Priority, ..Default::default() };
+    let base = SchedulerConfig::default().with_policy(SchedulePolicy::Priority);
     let proj_400 = projected_admission_bytes(3, 400, &e_cfg, &base);
     let watermark = proj_400 + proj_400 / 2;
     let coord = Coordinator::start_with(
         backends(1),
         EngineId::SpecBranch,
         e_cfg,
-        SchedulerConfig { kv_watermark_bytes: Some(watermark), preempt: true, ..base },
+        base.with_kv_watermark_bytes(Some(watermark)).with_preempt(true),
     );
     let (tx, rx) = std::sync::mpsc::channel();
-    let victim = coord.submit_opts(
-        vec![1, 2, 3],
-        400,
-        0,
-        SubmitOpts { stream: Some(tx), ..Default::default() },
-    );
+    let victim = coord.submit_opts(vec![1, 2, 3], 400, 0, SubmitOpts::new().stream(tx));
     assert!(!rx.recv().expect("victim round").done);
     // An oversized long-running high-priority request: preempts the victim
     // and then holds the cache, so the victim must sit in the admission
     // queue as a resumable entry (it cannot re-fit while the big one runs).
-    let big = coord.submit_opts(
-        vec![4, 5, 6],
-        8000,
-        1,
-        SubmitOpts { priority: 9, ..Default::default() },
-    );
+    let big = coord.submit_opts(vec![4, 5, 6], 8000, 1, SubmitOpts::new().priority(9));
     let mut polls = 0;
     while coord.registry().preemptions == 0 {
         polls += 1;
@@ -870,6 +827,99 @@ fn cancel_while_preempted_returns_partial_and_registry_holds() {
 }
 
 #[test]
+fn preempt_resume_hits_prefix_cache_with_identical_streams() {
+    // A preempted victim's resume re-prefill of prompt ⊕ committed must hit
+    // the cross-request prefix cache (the checkpoint published the committed
+    // chain when it released KV), so each resume charges at most the final
+    // partial block — while the committed streams stay byte-identical to a
+    // cache-off twin and the registry still equals the per-response sum.
+    use specbranch::kvcache::{PrefixCache, BLOCK_TOKENS};
+    use std::sync::Arc;
+
+    let prompt: Vec<u32> = (1..=40).collect();
+    let run = |cache: Option<Arc<PrefixCache>>| {
+        let backends: Vec<Box<dyn Backend + Send>> = (0..1)
+            .map(|_| {
+                let mut cfg = SimConfig::new(
+                    ModelPair::get(PairId::Deepseek13b33b),
+                    Task::get(TaskId::HumanEval),
+                );
+                cfg.prefix = cache.clone();
+                Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+            })
+            .collect();
+        let coord = Coordinator::start_with(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 256, ..Default::default() },
+            SchedulerConfig::default()
+                .with_policy(SchedulePolicy::Priority)
+                .with_kv_watermark_bytes(Some(1))
+                .with_preempt(true)
+                .with_prefix_cache(cache.clone()),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let victim = coord.submit_opts(prompt.clone(), 200, 3, SubmitOpts::new().stream(tx));
+        // First committed round: the rider provably lands mid-flight, and
+        // the victim's shield has cleared, so the 1-byte watermark preempts.
+        assert!(!rx.recv().expect("victim first round").done);
+        let rider = coord.submit_opts(vec![90, 91, 92], 32, 4, SubmitOpts::new().priority(9));
+        let mut out = std::collections::HashMap::new();
+        let mut stats_sum = 0u64;
+        let mut victim_stats = None;
+        for _ in 0..2 {
+            let r = coord.collect();
+            assert_eq!(r.status, ResponseStatus::Completed);
+            assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+            stats_sum += r.stats.generated_tokens;
+            if r.id == victim {
+                assert_eq!(r.tokens.len(), 200);
+                victim_stats = Some(r.stats.clone());
+            } else {
+                assert_eq!(r.id, rider);
+                assert_eq!(r.tokens.len(), 32);
+            }
+            out.insert(r.id, r.tokens);
+        }
+        let snap = coord.registry();
+        assert_eq!(snap.generated_tokens, stats_sum, "registry == Σ per-response stats");
+        assert!(snap.preemptions >= 1, "the 1-byte watermark must preempt the victim");
+        assert_eq!(snap.resumed, snap.preemptions);
+        assert_eq!(coord.kv_projected_in_use(), 0);
+        coord.shutdown();
+        (out, victim_stats.unwrap(), snap)
+    };
+
+    let cache = Arc::new(PrefixCache::new(1 << 20));
+    let (cached_streams, victim_on, snap_on) = run(Some(cache));
+    let (plain_streams, victim_off, snap_off) = run(None);
+    assert_eq!(cached_streams, plain_streams, "prefix cache must not change any stream");
+
+    // Cache-off charges the full context on the first prefill *and* every
+    // resume re-prefill; cache-on finds the published chain and re-charges
+    // only the uncached tail (≤ one block per resume).
+    assert_eq!(victim_off.prefill_cached_tokens, 0);
+    assert_eq!(snap_off.prefix_hits, 0);
+    assert!(
+        victim_on.prefill_cached_tokens >= 2 * BLOCK_TOKENS as u64,
+        "resume must reuse the published prompt ⊕ committed chain (cached {})",
+        victim_on.prefill_cached_tokens
+    );
+    assert!(
+        victim_on.prefill_charged_tokens
+            <= prompt.len() as u64 + snap_on.resumed * BLOCK_TOKENS as u64,
+        "each resume may charge at most the final partial block (charged {})",
+        victim_on.prefill_charged_tokens
+    );
+    assert!(
+        victim_on.prefill_charged_tokens < victim_off.prefill_charged_tokens,
+        "the cache must strictly reduce repeat prefill charges"
+    );
+    assert!(snap_on.prefix_hits >= 1, "the resume admit must count as a prefix hit");
+    assert!(snap_on.prefix_tokens_saved >= 2 * BLOCK_TOKENS as u64);
+}
+
+#[test]
 fn queue_delay_visible_under_backlog() {
     let coord = Coordinator::start(
         backends(1),
@@ -906,7 +956,7 @@ fn on_complete_channel_delivers_instead_of_outbox() {
             vec![1, 2, 3, 1 + (i as u32 % 7)],
             24,
             i,
-            SubmitOpts { on_complete: Some(tx), ..Default::default() },
+            SubmitOpts::new().on_complete(tx),
         );
         rxs.push((id, rx));
     }
@@ -939,12 +989,7 @@ fn dropped_on_complete_receiver_falls_back_to_outbox() {
     );
     let (tx, rx) = std::sync::mpsc::channel();
     drop(rx);
-    let id = coord.submit_opts(
-        vec![4, 5, 6],
-        16,
-        7,
-        SubmitOpts { on_complete: Some(tx), ..Default::default() },
-    );
+    let id = coord.submit_opts(vec![4, 5, 6], 16, 7, SubmitOpts::new().on_complete(tx));
     let r = coord.collect_id(id);
     assert_eq!(r.tokens.len(), 16);
     let snap = coord.registry();
@@ -972,7 +1017,7 @@ fn mux_style_mixed_cancel_keeps_registry_equality() {
             vec![1, 2, 3, 1 + i as u32],
             500,
             i,
-            SubmitOpts { on_complete: Some(tx), stream: Some(stx), ..Default::default() },
+            SubmitOpts::new().on_complete(tx).stream(stx),
         );
         victims.push((id, rx, srx));
     }
@@ -982,7 +1027,7 @@ fn mux_style_mixed_cancel_keeps_registry_equality() {
             vec![4, 5, 6, 1 + i as u32],
             20,
             10 + i,
-            SubmitOpts { on_complete: Some(tx), ..Default::default() },
+            SubmitOpts::new().on_complete(tx),
         );
         runners.push((id, rx));
     }
