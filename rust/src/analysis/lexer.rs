@@ -1,0 +1,518 @@
+//! A lightweight Rust source model for the line-level lints: a character
+//! state machine (no `syn`, no proc-macro machinery — the workspace must
+//! stay offline-buildable) that separates code from comments and string
+//! literals, collects `lint:allow` pragmas, marks test-only line ranges,
+//! and resolves function bodies by brace matching.
+//!
+//! The model is deliberately token-free: rules match substrings against
+//! *code text* in which every comment and string literal has been blanked
+//! to spaces (newlines preserved, so line numbers survive). That is exactly
+//! the right fidelity for the rule catalogue — `Instant::now` inside a doc
+//! comment or a fixture string must not fire — while staying a few hundred
+//! lines of std-only Rust.
+
+/// One `lint:allow(<rule>): <reason>` pragma, parsed from a comment. A
+/// pragma suppresses matching findings on its own line and the line
+/// directly below it (so it can trail a violation or sit above it).
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line the pragma comment is on.
+    pub line: usize,
+    pub rule: String,
+    /// Justification text after the `:`. Empty = malformed (reported).
+    pub reason: String,
+}
+
+/// A function definition resolved by the lexer: its name and the 1-based
+/// inclusive line range of `fn … { … }`.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+/// One scanned source file: raw lines, comment/string-blanked code lines,
+/// pragmas, and a per-line test mask (`#[cfg(test)]` / `#[test]` bodies).
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Raw source lines (string literals intact — counter-sync reads JSON
+    /// key literals from these).
+    pub lines: Vec<String>,
+    /// Code text: comments and string/char literals blanked to spaces,
+    /// line structure preserved. All pattern rules scan these.
+    pub code: Vec<String>,
+    pub pragmas: Vec<Pragma>,
+    test_mask: Vec<bool>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl SourceFile {
+    pub fn from_source(path: &str, text: &str) -> SourceFile {
+        let chars: Vec<char> = text.chars().collect();
+        // `code` gets code chars; `notes` gets comment chars; each stream
+        // blanks the other's chars so both keep the exact line structure.
+        let mut code = String::with_capacity(text.len());
+        let mut notes = String::with_capacity(text.len());
+        let mut i = 0;
+        let n = chars.len();
+        let keep = |c: char| if c == '\n' { '\n' } else { ' ' };
+        while i < n {
+            let c = chars[i];
+            // Line comment (also covers /// and //! doc comments).
+            if c == '/' && chars.get(i + 1) == Some(&'/') {
+                while i < n && chars[i] != '\n' {
+                    code.push(keep(chars[i]));
+                    notes.push(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Block comment, nested per Rust's lexer.
+            if c == '/' && chars.get(i + 1) == Some(&'*') {
+                let mut depth = 0usize;
+                while i < n {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        code.push(' ');
+                        notes.push('/');
+                        i += 1;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        code.push(' ');
+                        notes.push('*');
+                        i += 1;
+                        if depth == 0 {
+                            code.push(' ');
+                            notes.push('/');
+                            i += 1;
+                            break;
+                        }
+                    }
+                    code.push(keep(chars[i]));
+                    notes.push(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Raw (and raw-byte) string literals: r"…", r#"…"#, br#"…"#.
+            let prev_ident = i > 0 && is_ident(chars[i - 1]);
+            if !prev_ident && (c == 'r' || (c == 'b' && chars.get(i + 1) == Some(&'r'))) {
+                let mut j = i + if c == 'b' { 2 } else { 1 };
+                let mut hashes = 0usize;
+                while chars.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'"') {
+                    // Blank from i through the closing quote + hashes.
+                    let closer: Vec<char> =
+                        format!("\"{}", "#".repeat(hashes)).chars().collect();
+                    let mut k = j + 1;
+                    while k < n {
+                        if chars[k] == '"' && chars[k..].starts_with(&closer) {
+                            k += closer.len();
+                            break;
+                        }
+                        k += 1;
+                    }
+                    while i < k.min(n) {
+                        code.push(keep(chars[i]));
+                        notes.push(keep(chars[i]));
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            // Plain (and byte) string literals with escapes.
+            if c == '"' || (c == 'b' && !prev_ident && chars.get(i + 1) == Some(&'"')) {
+                if c == 'b' {
+                    code.push(' ');
+                    notes.push(' ');
+                    i += 1;
+                }
+                code.push(' '); // opening quote
+                notes.push(' ');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        code.push(keep(chars[i]));
+                        notes.push(keep(chars[i]));
+                        i += 1;
+                        if i < n {
+                            code.push(keep(chars[i]));
+                            notes.push(keep(chars[i]));
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    let done = chars[i] == '"';
+                    code.push(keep(chars[i]));
+                    notes.push(keep(chars[i]));
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                continue;
+            }
+            // Char literal vs. lifetime: 'x' / '\n' are literals, 'a in
+            // `&'a str` is a lifetime (no closing quote right after).
+            if c == '\'' {
+                let is_char_lit = match chars.get(i + 1) {
+                    Some('\\') => true,
+                    Some(_) => chars.get(i + 2) == Some(&'\''),
+                    None => false,
+                };
+                if is_char_lit {
+                    code.push(' ');
+                    notes.push(' ');
+                    i += 1;
+                    if chars.get(i) == Some(&'\\') {
+                        // Escape: blank until the closing quote (handles
+                        // multi-char escapes like '\u{1F600}').
+                        while i < n && chars[i] != '\'' {
+                            code.push(keep(chars[i]));
+                            notes.push(keep(chars[i]));
+                            i += 1;
+                        }
+                        if i < n {
+                            code.push(' ');
+                            notes.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        // 'x' — exactly one char + closing quote.
+                        for _ in 0..2 {
+                            if i < n {
+                                code.push(keep(chars[i]));
+                                notes.push(keep(chars[i]));
+                                i += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+            }
+            code.push(c);
+            notes.push(keep(c));
+            i += 1;
+        }
+        let lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let code: Vec<String> = code.lines().map(|l| l.to_string()).collect();
+        let notes: Vec<String> = notes.lines().map(|l| l.to_string()).collect();
+        let pragmas = parse_pragmas(&notes);
+        let test_mask = test_mask(&code);
+        SourceFile { path: path.to_string(), lines, code, pragmas, test_mask }
+    }
+
+    /// True when `line` (1-based) sits inside a `#[cfg(test)]` module or a
+    /// `#[test]` function body.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_mask.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Every function definition in the file (nested fns included), with
+    /// resolved body line ranges.
+    pub fn fns(&self) -> Vec<FnSpan> {
+        let flat: Vec<char> = self.flat_code();
+        let starts = line_starts(&flat);
+        let mut spans = Vec::new();
+        let mut i = 0;
+        while i + 1 < flat.len() {
+            // `fn` keyword with word boundaries on both sides.
+            if flat[i] == 'f'
+                && flat[i + 1] == 'n'
+                && (i == 0 || !is_ident(flat[i - 1]))
+                && flat.get(i + 2).is_some_and(|c| c.is_whitespace())
+            {
+                let mut j = i + 2;
+                while j < flat.len() && flat[j].is_whitespace() {
+                    j += 1;
+                }
+                let name_start = j;
+                while j < flat.len() && is_ident(flat[j]) {
+                    j += 1;
+                }
+                if j > name_start {
+                    let name: String = flat[name_start..j].iter().collect();
+                    // Walk to the body `{` at paren depth 0; a `;` first
+                    // means a bodiless trait method — skip it.
+                    let mut depth = 0i32;
+                    let mut k = j;
+                    let mut open = None;
+                    while k < flat.len() {
+                        match flat[k] {
+                            '(' => depth += 1,
+                            ')' => depth -= 1,
+                            '{' if depth == 0 => {
+                                open = Some(k);
+                                break;
+                            }
+                            ';' if depth == 0 => break,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    if let Some(open) = open {
+                        if let Some(close) = match_brace(&flat, open) {
+                            spans.push(FnSpan {
+                                name,
+                                start_line: line_of(&starts, i),
+                                end_line: line_of(&starts, close),
+                            });
+                            i = open + 1; // nested fns still discovered
+                            continue;
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+        spans
+    }
+
+    /// Line range of the first function named `name`, if any.
+    pub fn fn_span(&self, name: &str) -> Option<(usize, usize)> {
+        self.fns().into_iter().find(|f| f.name == name).map(|f| (f.start_line, f.end_line))
+    }
+
+    /// Line range of `struct <name> { … }` (or `enum`), if defined here.
+    pub fn item_span(&self, keyword: &str, name: &str) -> Option<(usize, usize)> {
+        let flat: Vec<char> = self.flat_code();
+        let starts = line_starts(&flat);
+        let pat: Vec<char> = format!("{keyword} {name}").chars().collect();
+        let mut i = 0;
+        while i + pat.len() <= flat.len() {
+            if flat[i..].starts_with(&pat)
+                && (i == 0 || !is_ident(flat[i - 1]))
+                && !is_ident(*flat.get(i + pat.len()).unwrap_or(&' '))
+            {
+                let mut k = i + pat.len();
+                while k < flat.len() && flat[k] != '{' && flat[k] != ';' {
+                    k += 1;
+                }
+                if flat.get(k) == Some(&'{') {
+                    if let Some(close) = match_brace(&flat, k) {
+                        return Some((line_of(&starts, i), line_of(&starts, close)));
+                    }
+                }
+            }
+            i += 1;
+        }
+        None
+    }
+
+    fn flat_code(&self) -> Vec<char> {
+        let mut flat = Vec::new();
+        for l in &self.code {
+            flat.extend(l.chars());
+            flat.push('\n');
+        }
+        flat
+    }
+}
+
+/// Offsets (into the flat char stream) where each line begins.
+fn line_starts(flat: &[char]) -> Vec<usize> {
+    let mut starts = vec![0];
+    for (i, &c) in flat.iter().enumerate() {
+        if c == '\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// 1-based line containing flat offset `idx`.
+fn line_of(starts: &[usize], idx: usize) -> usize {
+    match starts.binary_search(&idx) {
+        Ok(l) => l + 1,
+        Err(l) => l,
+    }
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(flat: &[char], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (off, &c) in flat[open..].iter().enumerate() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + off);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse `lint:allow(<rule>): <reason>` pragmas from the comment stream.
+/// Only a comment whose body *starts* with the marker counts — prose that
+/// mentions the syntax mid-sentence is not a pragma.
+fn parse_pragmas(notes: &[String]) -> Vec<Pragma> {
+    let mut pragmas = Vec::new();
+    for (li, line) in notes.iter().enumerate() {
+        let body = line.trim_start().trim_start_matches(['/', '!', '*']).trim_start();
+        let Some(rest) = body.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            pragmas.push(Pragma { line: li + 1, rule: rest.to_string(), reason: String::new() });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let after = &rest[close + 1..];
+        let reason = after.strip_prefix(':').unwrap_or("").trim().to_string();
+        pragmas.push(Pragma { line: li + 1, rule, reason });
+    }
+    pragmas
+}
+
+/// Per-line test mask: lines inside a brace block introduced by
+/// `#[cfg(test)]` or `#[test]`. An attribute followed by a `;` before any
+/// `{` (e.g. a cfg'd `use`) marks nothing.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut flat = Vec::new();
+    for l in code {
+        flat.extend(l.chars());
+        flat.push('\n');
+    }
+    let starts = line_starts(&flat);
+    let mut mask = vec![false; code.len()];
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let pchars: Vec<char> = pat.chars().collect();
+        let mut i = 0;
+        while i + pchars.len() <= flat.len() {
+            if flat[i..].starts_with(&pchars) {
+                let mut k = i + pchars.len();
+                while k < flat.len() && flat[k] != '{' && flat[k] != ';' {
+                    k += 1;
+                }
+                if flat.get(k) == Some(&'{') {
+                    if let Some(close) = match_brace(&flat, k) {
+                        let (a, b) = (line_of(&starts, i), line_of(&starts, close));
+                        for m in mask.iter_mut().take(b.min(mask.len())).skip(a - 1) {
+                            *m = true;
+                        }
+                    }
+                }
+                i = i + pchars.len();
+                continue;
+            }
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Occurrences of `pat` in `line` that start at a word boundary (the char
+/// before the match is not part of an identifier). Returns byte offsets.
+pub fn find_pattern(line: &str, pat: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    let first_alnum = pat.chars().next().is_some_and(is_ident);
+    while let Some(off) = line[from..].find(pat) {
+        let at = from + off;
+        let bounded = !first_alnum
+            || at == 0
+            || !line[..at].chars().next_back().is_some_and(is_ident);
+        if bounded {
+            hits.push(at);
+        }
+        from = at + pat.len().max(1);
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = \"Instant::now()\"; // Instant::now\nlet b = 1; /* thread_rng */\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(!f.code[0].contains("Instant"));
+        assert!(!f.code[1].contains("thread_rng"));
+        assert!(f.code[0].contains("let a ="));
+        assert_eq!(f.lines.len(), f.code.len());
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let _r = r#\"panic!(\"#; 'x' }\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(!f.code[0].contains("panic!"), "raw string content must blank: {}", f.code[0]);
+        assert!(f.code[0].contains("fn f<'a>"), "lifetimes survive: {}", f.code[0]);
+        let span = f.fn_span("f").expect("fn f resolved");
+        assert_eq!(span, (1, 1));
+    }
+
+    #[test]
+    fn pragmas_parse_with_rule_and_reason() {
+        let src = "// lint:allow(determinism): wall-clock reporting only\nlet t = now();\n// lint:allow(panic-path)\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert_eq!(f.pragmas.len(), 2);
+        assert_eq!(f.pragmas[0].line, 1);
+        assert_eq!(f.pragmas[0].rule, "determinism");
+        assert_eq!(f.pragmas[0].reason, "wall-clock reporting only");
+        assert_eq!(f.pragmas[1].rule, "panic-path");
+        assert!(f.pragmas[1].reason.is_empty(), "missing reason surfaces as empty");
+    }
+
+    #[test]
+    fn prose_mentioning_the_syntax_is_not_a_pragma() {
+        let src = "// pragmas look like lint:allow(rule): reason\nlet x = 1;\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(f.pragmas.is_empty());
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_modules() {
+        let src = "fn live() { work(); }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(3));
+        assert!(f.is_test_line(5));
+    }
+
+    #[test]
+    fn fn_spans_brace_match_through_nesting() {
+        let src = "fn outer() {\n    if x { y(); }\n    inner();\n}\nfn inner() { z(); }\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert_eq!(f.fn_span("outer"), Some((1, 4)));
+        assert_eq!(f.fn_span("inner"), Some((5, 5)));
+        assert_eq!(f.fn_span("missing"), None);
+    }
+
+    #[test]
+    fn trait_method_decls_have_no_span() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n}\nfn real() { body(); }\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert_eq!(f.fn_span("decl"), None);
+        assert_eq!(f.fn_span("real"), Some((4, 4)));
+    }
+
+    #[test]
+    fn find_pattern_respects_word_boundaries() {
+        assert_eq!(find_pattern("debug_assert!(x)", "assert!("), Vec::<usize>::new());
+        assert_eq!(find_pattern("assert!(x)", "assert!("), vec![0]);
+        assert_eq!(find_pattern("a.unwrap();b.unwrap()", ".unwrap()"), vec![1, 11]);
+    }
+
+    #[test]
+    fn item_span_finds_struct_bodies() {
+        let src = "pub struct Registry {\n    pub a: AtomicU64,\n}\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert_eq!(f.item_span("struct", "Registry"), Some((1, 3)));
+        assert_eq!(f.item_span("struct", "Nope"), None);
+    }
+}

@@ -1,0 +1,412 @@
+//! Repo-specific static analysis (`specbranch analyze`).
+//!
+//! Clippy checks Rust; nothing checks *this repo's* invariants — the rules
+//! that make byte-identity, registry equality, and poison-free shared
+//! state survive refactors. This module is a dependency-free lint pass
+//! (no `syn`, no proc macros: the workspace builds offline) with five
+//! rules:
+//!
+//! | rule            | invariant it pins                                          |
+//! |-----------------|------------------------------------------------------------|
+//! | `determinism`   | scheduling code takes time from `util::clock::Clock`, never |
+//! |                 | ambient `Instant::now`/`SystemTime`/`thread_rng`/sleep      |
+//! | `panic-path`    | coordinator-worker and server reader/writer thread bodies   |
+//! |                 | never `unwrap`/`expect`/`panic!` (a panic there poisons the |
+//! |                 | shared queues and wedges every in-flight request)           |
+//! | `counter-sync`  | every `Registry` counter reaches `snapshot()`, the METRICS  |
+//! |                 | JSON, docs/PROTOCOL.md and the ARCHITECTURE counter table;  |
+//! |                 | every `DecodeStats` field is folded by `merge()`            |
+//! | `api-discipline`| `SchedulerConfig`/`SubmitOpts` are built via builders, and  |
+//! |                 | scheduler code drives `DecodeTask::step`, never a           |
+//! |                 | run-to-completion `.generate(` loop                         |
+//! | `lock-order`    | no two functions acquire the same pair of mutexes in        |
+//! |                 | opposite orders                                             |
+//!
+//! Sanctioned exceptions are annotated in source with a pragma comment of
+//! the form `lint:allow(<rule>): <reason>` (written after `//`), which
+//! suppresses matching findings on its own line and the line below. A
+//! pragma with an unknown rule or an empty reason is itself an error; a
+//! pragma that suppresses nothing is a warning (`--deny-warnings` turns
+//! it fatal, which is how CI runs).
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::SourceFile;
+use rules::CounterSyncInputs;
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// One lint violation (or, with `warning`, a non-fatal nit).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+    pub warning: bool,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = if self.warning { "warning" } else { "error" };
+        write!(f, "{sev}[{}] {}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+/// The outcome of one analysis pass.
+pub struct Report {
+    /// Sorted by (file, line, rule) for stable CLI/CI output.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn error_count(&self) -> usize {
+        self.findings.iter().filter(|f| !f.warning).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.warning).count()
+    }
+
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.error_count() == 0 && (!deny_warnings || self.warning_count() == 0)
+    }
+}
+
+/// Thread-body functions held to the panic-path rule, keyed by source
+/// file. Renaming one of these without updating the table is an error
+/// (the rule reports unresolvable scope entries), so the lint can never
+/// silently go vacuous.
+const PANIC_SCOPES: &[(&str, &[&str])] = &[
+    (
+        "rust/src/coordinator/mod.rs",
+        &[
+            "worker_loop",
+            "plan_controls",
+            "finish_inflight",
+            "preempt_inflight",
+            "retire_resumable_cancelled",
+            "publish_response",
+            "note_prefix_hit",
+        ],
+    ),
+    ("rust/src/server/mod.rs", &["handle_conn", "writer_loop", "spawn_forwarder"]),
+];
+
+/// Modules whose mutexes guard cross-request shared state: the
+/// `.lock().unwrap()` steering ban and the lock-order rule apply here.
+fn is_shared_state(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator")
+        || path.starts_with("rust/src/server")
+        || path.starts_with("rust/src/kvcache")
+}
+
+/// Run every rule over an already-parsed source set. Pure — fixture tests
+/// feed synthetic trees through this. `files` should be sorted by path
+/// (the repo walker guarantees it) so lock-order findings land
+/// deterministically.
+pub fn analyze_sources(files: &[SourceFile], protocol_md: &str, architecture_md: &str) -> Report {
+    let mut findings = Vec::new();
+    for f in files {
+        if f.path.starts_with("rust/src/") {
+            findings.extend(rules::determinism(f));
+        }
+        if is_shared_state(&f.path) {
+            findings.extend(rules::lock_steering(f));
+        }
+        for (scope_path, fns) in PANIC_SCOPES {
+            if f.path == *scope_path {
+                findings.extend(rules::panic_path(f, fns));
+            }
+        }
+        findings.extend(rules::api_discipline(f, f.path.starts_with("rust/src/coordinator")));
+    }
+    let shared: Vec<&SourceFile> = files.iter().filter(|f| is_shared_state(&f.path)).collect();
+    findings.extend(rules::lock_order(&shared));
+    let co = files.iter().find(|f| f.path == "rust/src/coordinator/mod.rs");
+    let me = files.iter().find(|f| f.path == "rust/src/metrics/mod.rs");
+    if let (Some(co), Some(me)) = (co, me) {
+        findings.extend(rules::counter_sync(&CounterSyncInputs {
+            coordinator: co,
+            metrics: me,
+            protocol_md,
+            architecture_md,
+        }));
+    }
+    apply_pragmas(files, &mut findings);
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Report { findings, files_scanned: files.len() }
+}
+
+fn pragma_well_formed(p: &lexer::Pragma) -> bool {
+    rules::KNOWN_RULES.contains(&p.rule.as_str()) && !p.reason.trim().is_empty()
+}
+
+/// Drop findings covered by a well-formed `lint:allow` pragma (same file,
+/// matching rule, pragma on the finding's line or the line above), then
+/// report malformed pragmas as errors and unused ones as warnings.
+fn apply_pragmas(files: &[SourceFile], findings: &mut Vec<Finding>) {
+    use std::collections::HashSet;
+    let mut used: HashSet<(usize, usize)> = HashSet::new();
+    let kept: Vec<Finding> = findings
+        .drain(..)
+        .filter(|f| {
+            let Some(fi) = files.iter().position(|s| s.path == f.file) else {
+                return true;
+            };
+            let mut suppressed = false;
+            for (pi, p) in files[fi].pragmas.iter().enumerate() {
+                if pragma_well_formed(p)
+                    && p.rule == f.rule
+                    && (p.line == f.line || p.line + 1 == f.line)
+                {
+                    used.insert((fi, pi));
+                    suppressed = true;
+                }
+            }
+            !suppressed
+        })
+        .collect();
+    *findings = kept;
+    for (fi, file) in files.iter().enumerate() {
+        for (pi, p) in file.pragmas.iter().enumerate() {
+            if !rules::KNOWN_RULES.contains(&p.rule.as_str()) {
+                findings.push(Finding {
+                    rule: rules::RULE_PRAGMA,
+                    file: file.path.clone(),
+                    line: p.line,
+                    message: format!(
+                        "pragma names unknown rule `{}` (known: {})",
+                        p.rule,
+                        rules::KNOWN_RULES.join(", ")
+                    ),
+                    warning: false,
+                });
+            } else if p.reason.trim().is_empty() {
+                findings.push(Finding {
+                    rule: rules::RULE_PRAGMA,
+                    file: file.path.clone(),
+                    line: p.line,
+                    message: format!(
+                        "pragma for `{}` has no `: <reason>` justification",
+                        p.rule
+                    ),
+                    warning: false,
+                });
+            } else if !used.contains(&(fi, pi)) {
+                findings.push(Finding {
+                    rule: rules::RULE_PRAGMA,
+                    file: file.path.clone(),
+                    line: p.line,
+                    message: format!("unused lint:allow({}) pragma suppresses nothing", p.rule),
+                    warning: true,
+                });
+            }
+        }
+    }
+}
+
+/// Analyze a repo checkout rooted at `root`: every `.rs` file under
+/// `rust/src`, `rust/tests` and `examples`, plus the two docs counter-sync
+/// cross-references. Errors are I/O-shaped only (missing docs, unreadable
+/// sources) — lint violations come back inside the `Report`.
+pub fn analyze_repo(root: &Path) -> Result<Report, String> {
+    let mut paths = Vec::new();
+    for sub in ["rust/src", "rust/tests", "examples", "rust/examples"] {
+        collect_rs(&root.join(sub), &mut paths);
+    }
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("no .rs sources under {} — wrong --root?", root.display()));
+    }
+    let mut files = Vec::new();
+    for p in &paths {
+        let text =
+            fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel: Vec<String> = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect();
+        files.push(SourceFile::from_source(&rel.join("/"), &text));
+    }
+    let protocol = read_doc(root, "docs/PROTOCOL.md")?;
+    let architecture = read_doc(root, "docs/ARCHITECTURE.md")?;
+    Ok(analyze_sources(&files, &protocol, &architecture))
+}
+
+fn read_doc(root: &Path, rel: &str) -> Result<String, String> {
+    fs::read_to_string(root.join(rel))
+        .map_err(|e| format!("read {rel}: {e} (counter-sync needs it)"))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return; // optional roots (examples/) may not exist
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name != "target" && name != "vendor" && !name.starts_with('.') {
+                collect_rs(&path, out);
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean_fixture() -> Vec<SourceFile> {
+        // A miniature repo that satisfies every rule, including the
+        // counter-sync anchors (Registry/snapshot/to_json, DecodeStats/
+        // merge) and every panic-path scope function.
+        let coordinator = "\
+pub struct Registry {\n    pub completed: AtomicU64,\n}\n\
+impl Registry {\n    pub fn snapshot(&self) { let _ = self.completed.load(SeqCst); }\n}\n\
+impl RegistrySnapshot {\n    pub fn to_json(&self) { obj(vec![(\"completed\", 0)]) }\n}\n\
+fn plan_controls() {}\nfn worker_loop() { let q = lock_or_recover(&queues); drop(q); }\n\
+fn finish_inflight() {}\nfn preempt_inflight() {}\nfn retire_resumable_cancelled() {}\n\
+fn publish_response() {}\nfn note_prefix_hit() {}\n";
+        let metrics = "\
+pub struct DecodeStats {\n    pub rounds: u64,\n}\n\
+impl DecodeStats {\n    pub fn merge(&mut self, o: &DecodeStats) { self.rounds += o.rounds; }\n}\n";
+        let server = "\
+fn handle_conn() { let t = lock_or_recover(&tags); drop(t); }\n\
+fn writer_loop() {}\nfn spawn_forwarder() {}\n";
+        vec![
+            SourceFile::from_source("rust/src/coordinator/mod.rs", coordinator),
+            SourceFile::from_source("rust/src/metrics/mod.rs", metrics),
+            SourceFile::from_source("rust/src/server/mod.rs", server),
+        ]
+    }
+
+    #[test]
+    fn clean_fixture_reports_nothing() {
+        let files = clean_fixture();
+        let report = analyze_sources(&files, "| completed |", "| completed |");
+        assert!(report.findings.is_empty(), "{:#?}", report.findings);
+        assert!(report.is_clean(true));
+        assert_eq!(report.files_scanned, 3);
+    }
+
+    #[test]
+    fn seeded_violations_surface_for_every_rule() {
+        let mut files = clean_fixture();
+        files.push(SourceFile::from_source(
+            "rust/src/extra.rs",
+            "fn tick() { let t = Instant::now(); }\n\
+             fn cfg() { let c = SchedulerConfig { workers: 1 }; }\n",
+        ));
+        // Violate panic-path inside a scoped fn, and invert a lock pair.
+        files[0] = SourceFile::from_source(
+            "rust/src/coordinator/mod.rs",
+            &files[0]
+                .lines
+                .join("\n")
+                .replace(
+                    "fn worker_loop() { let q = lock_or_recover(&queues); drop(q); }",
+                    "fn worker_loop() { let q = lock_or_recover(&queues); \
+                     let t = lock_or_recover(&tags); q.pop().unwrap(); }",
+                ),
+        );
+        files[2] = SourceFile::from_source(
+            "rust/src/server/mod.rs",
+            &files[2].lines.join("\n").replace(
+                "fn handle_conn() { let t = lock_or_recover(&tags); drop(t); }",
+                "fn handle_conn() { let t = lock_or_recover(&tags); \
+                 let q = lock_or_recover(&queues); drop(t); }",
+            ),
+        );
+        // Desync the docs: `completed` no longer documented.
+        let report = analyze_sources(&files, "", "");
+        let rules_hit: std::collections::HashSet<&str> =
+            report.findings.iter().map(|f| f.rule).collect();
+        for rule in rules::KNOWN_RULES {
+            assert!(rules_hit.contains(rule), "rule {rule} must fire, got {:#?}", report.findings);
+        }
+        assert!(!report.is_clean(false));
+    }
+
+    #[test]
+    fn pragmas_suppress_and_malformed_pragmas_report() {
+        let mut files = clean_fixture();
+        files.push(SourceFile::from_source(
+            "rust/src/extra.rs",
+            "// lint:allow(determinism): sanctioned wall-clock epoch for this fixture\n\
+             fn tick() { let t = Instant::now(); }\n\
+             // lint:allow(determinism): suppresses nothing\n\
+             fn idle() {}\n\
+             // lint:allow(nonsense): not a rule\n\
+             // lint:allow(panic-path)\n",
+        ));
+        let report = analyze_sources(&files, "| completed |", "| completed |");
+        assert!(
+            !report.findings.iter().any(|f| f.rule == rules::RULE_DETERMINISM),
+            "pragma on the line above must suppress: {:#?}",
+            report.findings
+        );
+        let pragma_errors: Vec<&Finding> = report
+            .findings
+            .iter()
+            .filter(|f| f.rule == rules::RULE_PRAGMA && !f.warning)
+            .collect();
+        assert_eq!(pragma_errors.len(), 2, "unknown rule + missing reason: {pragma_errors:#?}");
+        let unused: Vec<&Finding> = report
+            .findings
+            .iter()
+            .filter(|f| f.rule == rules::RULE_PRAGMA && f.warning)
+            .collect();
+        assert_eq!(unused.len(), 1, "{unused:#?}");
+        assert_eq!(unused[0].line, 3);
+        assert!(report.is_clean(false), "warnings alone stay non-fatal by default");
+        assert!(!report.is_clean(true), "--deny-warnings turns unused pragmas fatal");
+    }
+
+    #[test]
+    fn missing_scope_fn_is_an_error_not_a_silent_pass() {
+        let mut files = clean_fixture();
+        files[2] = SourceFile::from_source(
+            "rust/src/server/mod.rs",
+            "fn handle_conn() {}\nfn writer_loop() {}\n", // spawn_forwarder renamed away
+        );
+        let report = analyze_sources(&files, "| completed |", "| completed |");
+        assert!(
+            report
+                .findings
+                .iter()
+                .any(|f| f.rule == rules::RULE_PANIC_PATH && f.message.contains("spawn_forwarder")),
+            "{:#?}",
+            report.findings
+        );
+    }
+
+    #[test]
+    fn findings_are_sorted_and_counted() {
+        let mut files = clean_fixture();
+        files.push(SourceFile::from_source(
+            "rust/src/aaa.rs",
+            "fn a() { let t = SystemTime::now(); }\nfn b() { let t = Instant::now(); }\n",
+        ));
+        let report = analyze_sources(&files, "| completed |", "| completed |");
+        assert_eq!(report.error_count(), 2);
+        assert_eq!(report.warning_count(), 0);
+        let lines: Vec<usize> = report.findings.iter().map(|f| f.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+        let shown = format!("{}", report.findings[0]);
+        assert!(shown.starts_with("error[determinism] rust/src/aaa.rs:1:"), "{shown}");
+    }
+}

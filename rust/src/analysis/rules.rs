@@ -1,0 +1,680 @@
+//! The five repo-specific lint rules. Each rule is a pure function over
+//! [`SourceFile`]s (plus doc text for counter-sync) so fixtures in tests
+//! can exercise violations without touching the real tree. Scope decisions
+//! — which files each rule sees — live in the parent module's
+//! [`super::analyze_sources`]; the functions here assume they were handed
+//! the right inputs.
+
+use super::lexer::{find_pattern, SourceFile};
+use super::Finding;
+
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_PANIC_PATH: &str = "panic-path";
+pub const RULE_COUNTER_SYNC: &str = "counter-sync";
+pub const RULE_API: &str = "api-discipline";
+pub const RULE_LOCK_ORDER: &str = "lock-order";
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// Every rule a pragma may name. `pragma` itself is not allow-able.
+pub const KNOWN_RULES: &[&str] =
+    &[RULE_DETERMINISM, RULE_PANIC_PATH, RULE_COUNTER_SYNC, RULE_API, RULE_LOCK_ORDER];
+
+fn finding(rule: &'static str, file: &SourceFile, line: usize, message: String) -> Finding {
+    Finding { rule, file: file.path.clone(), line, message, warning: false }
+}
+
+// ---------------------------------------------------------------------------
+// determinism
+// ---------------------------------------------------------------------------
+
+/// Byte-identity across fused/preempted/adaptive/prefix runs is the repo's
+/// core invariant; ambient time and entropy are how it silently dies. The
+/// sanctioned seam is `util::clock::Clock` — everything else needs a pragma.
+const AMBIENT_SOURCES: &[&str] = &["Instant::now", "SystemTime", "thread_rng", "thread::sleep"];
+
+pub fn determinism(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.code.iter().enumerate() {
+        let ln = idx + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        for pat in AMBIENT_SOURCES {
+            if !find_pattern(line, pat).is_empty() {
+                out.push(finding(
+                    RULE_DETERMINISM,
+                    file,
+                    ln,
+                    format!(
+                        "ambient `{pat}` in scheduling code; route timestamps through \
+                         util::clock::Clock (or pragma a sanctioned wall-clock site)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// panic-path
+// ---------------------------------------------------------------------------
+
+/// Macro-ish constructs that abort the thread. `.unwrap()` / `.expect(` on
+/// the coordinator worker or a server connection thread poisons the shared
+/// queue mutex and wedges every other request — use
+/// `util::sync::lock_or_recover` and explicit `if let` instead.
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+    "assert!(",
+    "assert_eq!(",
+    "assert_ne!(",
+];
+
+/// Check the named thread-body functions of `file` for panicking
+/// constructs. A scoped function that cannot be resolved is itself an
+/// error: a rename must update the scope table, never silently un-lint.
+pub fn panic_path(file: &SourceFile, scoped_fns: &[&str]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for name in scoped_fns {
+        let Some((start, end)) = file.fn_span(name) else {
+            out.push(finding(
+                RULE_PANIC_PATH,
+                file,
+                1,
+                format!(
+                    "scoped function `{name}` not found; update the panic-path scope \
+                     table in analysis/mod.rs if it was renamed"
+                ),
+            ));
+            continue;
+        };
+        for ln in start..=end {
+            if file.is_test_line(ln) {
+                continue;
+            }
+            let line = &file.code[ln - 1];
+            for pat in PANIC_PATTERNS {
+                if !find_pattern(line, pat).is_empty() {
+                    out.push(finding(
+                        RULE_PANIC_PATH,
+                        file,
+                        ln,
+                        format!(
+                            "`{pat}` inside thread body `{name}`: a panic here poisons \
+                             shared state for every in-flight request; recover or \
+                             propagate instead"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Steering half of panic-path: `.lock().unwrap()` anywhere in shared-state
+/// modules (not just the scoped thread bodies) must go through
+/// `util::sync::lock_or_recover` so one panicked round can never wedge the
+/// rest of the fleet.
+pub fn lock_steering(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.code.iter().enumerate() {
+        let ln = idx + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        for pat in [".lock().unwrap()", ".lock().expect("] {
+            if !find_pattern(line, pat).is_empty() {
+                out.push(finding(
+                    RULE_PANIC_PATH,
+                    file,
+                    ln,
+                    format!("`{pat}` on shared state: use util::sync::lock_or_recover"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// counter-sync
+// ---------------------------------------------------------------------------
+
+/// Registry counters whose METRICS key is derived rather than verbatim.
+const COUNTER_ALIASES: &[(&str, &str)] = &[
+    ("queue_us_total", "mean_queue_ms"),
+    ("decode_us_total", "mean_decode_ms"),
+    ("kv_projected_peak", "kv_projected_peak_bytes"),
+    ("round_gamma_sum", "mean_round_gamma"),
+    ("round_k_sum", "mean_round_k"),
+];
+
+fn metrics_key(field: &str) -> &str {
+    COUNTER_ALIASES
+        .iter()
+        .find(|(f, _)| *f == field)
+        .map(|(_, k)| *k)
+        .unwrap_or(field)
+}
+
+/// Everything counter-sync reads. Pure inputs so the fixture tests can
+/// seed a desynced registry and watch the rule fail.
+pub struct CounterSyncInputs<'a> {
+    /// `coordinator/mod.rs`: holds `Registry`, `snapshot()`, `to_json()`.
+    pub coordinator: &'a SourceFile,
+    /// `metrics/mod.rs`: holds `DecodeStats` and its `merge()`.
+    pub metrics: &'a SourceFile,
+    pub protocol_md: &'a str,
+    pub architecture_md: &'a str,
+}
+
+/// `pub <ident>:` fields of a struct span, optionally filtered to lines
+/// mentioning `require` (e.g. `AtomicU64`).
+fn pub_fields(
+    file: &SourceFile,
+    span: (usize, usize),
+    require: Option<&str>,
+) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for ln in span.0..=span.1 {
+        let line = &file.code[ln - 1];
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub ") else { continue };
+        let Some(colon) = rest.find(':') else { continue };
+        let name = rest[..colon].trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            continue;
+        }
+        if let Some(req) = require {
+            if !line.contains(req) {
+                continue;
+            }
+        }
+        out.push((name.to_string(), ln));
+    }
+    out
+}
+
+/// String-literal identifiers on the RAW lines of a span — the METRICS
+/// JSON keys passed to the object builder (strings are blanked in code
+/// text, so keys must come from the raw source).
+fn quoted_idents(file: &SourceFile, span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for ln in span.0..=span.1 {
+        let raw = &file.lines[ln - 1];
+        let mut rest = raw.as_str();
+        while let Some(open) = rest.find('"') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('"') else { break };
+            let lit = &tail[..close];
+            if !lit.is_empty() && lit.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                out.push((lit.to_string(), ln));
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    out
+}
+
+fn span_contains_word(file: &SourceFile, span: (usize, usize), word: &str) -> bool {
+    (span.0..=span.1).any(|ln| !find_pattern(&file.code[ln - 1], word).is_empty())
+}
+
+pub fn counter_sync(inp: &CounterSyncInputs) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let co = inp.coordinator;
+
+    // -- Registry counters ---------------------------------------------------
+    let Some(reg_span) = co.item_span("struct", "Registry") else {
+        out.push(finding(RULE_COUNTER_SYNC, co, 1, "struct Registry not found".into()));
+        return out;
+    };
+    let counters = pub_fields(co, reg_span, Some("AtomicU64"));
+    if counters.is_empty() {
+        out.push(finding(
+            RULE_COUNTER_SYNC,
+            co,
+            reg_span.0,
+            "Registry has no AtomicU64 counters; counter-sync would be vacuous".into(),
+        ));
+    }
+    let snapshot_span = co.fn_span("snapshot");
+    if snapshot_span.is_none() {
+        out.push(finding(RULE_COUNTER_SYNC, co, reg_span.0, "fn snapshot() not found".into()));
+    }
+    let json_span = co.fn_span("to_json");
+    let json_keys: Vec<(String, usize)> =
+        json_span.map(|s| quoted_idents(co, s)).unwrap_or_default();
+    if json_span.is_none() {
+        out.push(finding(RULE_COUNTER_SYNC, co, reg_span.0, "fn to_json() not found".into()));
+    }
+    for (field, ln) in &counters {
+        if let Some(span) = snapshot_span {
+            if !span_contains_word(co, span, field) {
+                out.push(finding(
+                    RULE_COUNTER_SYNC,
+                    co,
+                    *ln,
+                    format!("Registry counter `{field}` is never read in snapshot()"),
+                ));
+            }
+        }
+        let key = metrics_key(field);
+        if json_span.is_some() && !json_keys.iter().any(|(k, _)| k == key) {
+            out.push(finding(
+                RULE_COUNTER_SYNC,
+                co,
+                *ln,
+                format!("Registry counter `{field}` (key `{key}`) missing from METRICS JSON"),
+            ));
+        }
+    }
+    // Every METRICS key must be documented where operators look for it.
+    for (key, ln) in &json_keys {
+        if !inp.protocol_md.contains(key.as_str()) {
+            out.push(finding(
+                RULE_COUNTER_SYNC,
+                co,
+                *ln,
+                format!("METRICS key `{key}` is not documented in docs/PROTOCOL.md"),
+            ));
+        }
+        if !inp.architecture_md.contains(key.as_str()) {
+            out.push(finding(
+                RULE_COUNTER_SYNC,
+                co,
+                *ln,
+                format!("METRICS key `{key}` is missing from the ARCHITECTURE counter table"),
+            ));
+        }
+    }
+
+    // -- DecodeStats ---------------------------------------------------------
+    let me = inp.metrics;
+    let Some(ds_span) = me.item_span("struct", "DecodeStats") else {
+        out.push(finding(RULE_COUNTER_SYNC, me, 1, "struct DecodeStats not found".into()));
+        return out;
+    };
+    let ds_fields = pub_fields(me, ds_span, None);
+    match me.fn_span("merge") {
+        Some(merge_span) => {
+            for (field, ln) in &ds_fields {
+                if !span_contains_word(me, merge_span, field) {
+                    out.push(finding(
+                        RULE_COUNTER_SYNC,
+                        me,
+                        *ln,
+                        format!(
+                            "DecodeStats field `{field}` is not folded in merge(); \
+                             registry equality drops it silently"
+                        ),
+                    ));
+                }
+            }
+        }
+        None => {
+            out.push(finding(RULE_COUNTER_SYNC, me, ds_span.0, "fn merge() not found".into()));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// api-discipline
+// ---------------------------------------------------------------------------
+
+/// Config types that must be constructed through their builders so new
+/// fields get defaults everywhere at once (the PR 7 contract).
+const BUILDER_ONLY: &[&str] = &["SchedulerConfig", "SubmitOpts"];
+
+pub fn api_discipline(file: &SourceFile, in_scheduler: bool) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.code.iter().enumerate() {
+        let ln = idx + 1;
+        // Struct-literal ban applies to tests too — a test that spells out
+        // every field breaks on the next added field.
+        for ty in BUILDER_ONLY {
+            let lit = format!("{ty} {{");
+            if find_pattern(line, &lit).is_empty() {
+                continue;
+            }
+            if line.contains("struct ") || line.contains("impl ") || line.contains("trait ") {
+                continue;
+            }
+            out.push(finding(
+                RULE_API,
+                file,
+                ln,
+                format!("struct-literal `{ty} {{ … }}`: construct via builder methods"),
+            ));
+        }
+        // Run-to-completion loops are banned in scheduler code: everything
+        // must go through the step-wise DecodeTask API so rounds interleave.
+        if in_scheduler && !file.is_test_line(ln) && !find_pattern(line, ".generate(").is_empty() {
+            out.push(finding(
+                RULE_API,
+                file,
+                ln,
+                "run-to-completion `.generate(` in scheduler code; drive DecodeTask::step"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// lock-order
+// ---------------------------------------------------------------------------
+
+/// Mutex acquisitions of one function, in source order, deduped to first
+/// occurrence per lock name.
+fn lock_sequence(file: &SourceFile, span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut seq: Vec<(String, usize)> = Vec::new();
+    let mut push = |name: String, ln: usize| {
+        if !name.is_empty() && !seq.iter().any(|(n, _)| *n == name) {
+            seq.push((name, ln));
+        }
+    };
+    for ln in span.0..=span.1 {
+        let line = &file.code[ln - 1];
+        // `<path>.lock()` — the lock name is the last path segment.
+        for at in find_pattern(line, ".lock()") {
+            let name: String = line[..at]
+                .chars()
+                .rev()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect();
+            push(name, ln);
+        }
+        // `lock_or_recover(&<path>)` — same, inside the call parens.
+        for at in find_pattern(line, "lock_or_recover(") {
+            let tail = &line[at + "lock_or_recover(".len()..];
+            if let Some(close) = tail.find(')') {
+                let arg = &tail[..close];
+                let name = arg
+                    .rsplit(|c: char| !(c.is_alphanumeric() || c == '_'))
+                    .find(|s| !s.is_empty())
+                    .unwrap_or("")
+                    .to_string();
+                push(name, ln);
+            }
+        }
+    }
+    seq
+}
+
+/// Cross-file pairwise ordering check: if any function acquires lock `a`
+/// then `b` while another acquires `b` then `a`, the pair can deadlock.
+/// Files must be pre-sorted by path so findings are deterministic.
+pub fn lock_order(files: &[&SourceFile]) -> Vec<Finding> {
+    use std::collections::HashMap;
+    let mut first_seen: HashMap<(String, String), (String, String, usize)> = HashMap::new();
+    let mut out = Vec::new();
+    for file in files {
+        for f in file.fns() {
+            if file.is_test_line(f.start_line) {
+                continue;
+            }
+            let seq = lock_sequence(file, (f.start_line, f.end_line));
+            for i in 0..seq.len() {
+                for j in (i + 1)..seq.len() {
+                    let (a, _) = &seq[i];
+                    let (b, bl) = &seq[j];
+                    if let Some((of, ofn, _)) = first_seen.get(&(b.clone(), a.clone())) {
+                        out.push(finding(
+                            RULE_LOCK_ORDER,
+                            file,
+                            *bl,
+                            format!(
+                                "lock order conflict: `{}` acquires `{a}` before `{b}`, \
+                                 but `{ofn}` in {of} acquires `{b}` before `{a}`",
+                                f.name
+                            ),
+                        ));
+                    }
+                    first_seen
+                        .entry((a.clone(), b.clone()))
+                        .or_insert_with(|| (file.path.clone(), f.name.clone(), *bl));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(path: &str, body: &str) -> SourceFile {
+        SourceFile::from_source(path, body)
+    }
+
+    #[test]
+    fn determinism_flags_ambient_time_but_not_tests_or_comments() {
+        let body = "fn tick() {\n    let t = Instant::now();\n}\n\
+                    // Instant::now in prose\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                    fn t() { let _ = Instant::now(); }\n}\n";
+        let f = src("rust/src/x.rs", body);
+        let hits = determinism(&f);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+        assert_eq!(hits[0].rule, RULE_DETERMINISM);
+    }
+
+    #[test]
+    fn determinism_catches_every_banned_source() {
+        for pat in ["Instant::now()", "SystemTime::now()", "thread_rng()", "thread::sleep(d)"] {
+            let f = src("x.rs", &format!("fn f() {{ let _ = {pat}; }}\n"));
+            assert_eq!(determinism(&f).len(), 1, "{pat} must be flagged");
+        }
+    }
+
+    #[test]
+    fn panic_path_flags_only_scoped_fns_and_reports_missing_scopes() {
+        let body = "fn worker_loop() {\n    q.pop().unwrap();\n}\n\
+                    fn helper() {\n    q.pop().unwrap();\n}\n";
+        let f = src("rust/src/coordinator/mod.rs", body);
+        let hits = panic_path(&f, &["worker_loop", "vanished_fn"]);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert_eq!(hits[0].line, 2, "unwrap inside worker_loop");
+        assert!(hits[1].message.contains("vanished_fn"), "missing scope is itself an error");
+    }
+
+    #[test]
+    fn panic_path_ignores_debug_assert_and_unwrap_or() {
+        let body = "fn worker_loop() {\n    debug_assert!(x);\n    let v = o.unwrap_or(3);\n}\n";
+        let f = src("x.rs", body);
+        assert!(panic_path(&f, &["worker_loop"]).is_empty());
+    }
+
+    #[test]
+    fn lock_steering_rejects_lock_unwrap() {
+        let body = "fn f() {\n    let g = self.queues.lock().unwrap();\n}\n";
+        let f = src("rust/src/coordinator/mod.rs", body);
+        let hits = lock_steering(&f);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("lock_or_recover"));
+    }
+
+    #[test]
+    fn api_discipline_bans_struct_literals_but_not_definitions() {
+        let body = "pub struct SchedulerConfig {\n    pub workers: usize,\n}\n\
+                    impl SchedulerConfig {\n    fn mk() {\n        \
+                    let c = SchedulerConfig { workers: 1 };\n    }\n}\n";
+        let f = src("x.rs", body);
+        let hits = api_discipline(&f, false);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 6);
+    }
+
+    #[test]
+    fn api_discipline_bans_generate_loops_only_in_scheduler() {
+        let body = "fn run() {\n    let out = task.generate(1000);\n}\n";
+        let in_sched = api_discipline(&src("rust/src/coordinator/x.rs", body), true);
+        assert_eq!(in_sched.len(), 1);
+        let outside = api_discipline(&src("rust/src/main.rs", body), false);
+        assert!(outside.is_empty());
+    }
+
+    #[test]
+    fn lock_order_flags_inverted_pairs_across_files() {
+        let a = src(
+            "rust/src/coordinator/mod.rs",
+            "fn step() {\n    let q = queues.lock();\n    let t = tags.lock();\n}\n",
+        );
+        let b = src(
+            "rust/src/server/mod.rs",
+            "fn pump() {\n    let t = lock_or_recover(&tags);\n    let q = lock_or_recover(&self.queues);\n}\n",
+        );
+        let hits = lock_order(&[&a, &b]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("queues"));
+        assert!(hits[0].message.contains("tags"));
+        let consistent = lock_order(&[&a]);
+        assert!(consistent.is_empty());
+    }
+
+    #[test]
+    fn lock_order_ignores_single_lock_functions() {
+        let a = src("x.rs", "fn f() {\n    let q = queues.lock();\n}\n\
+                             fn g() {\n    let t = tags.lock();\n}\n");
+        assert!(lock_order(&[&a]).is_empty());
+    }
+
+    fn sync_fixture(
+        registry: &str,
+        snapshot: &str,
+        to_json: &str,
+        protocol: &str,
+        arch: &str,
+    ) -> Vec<Finding> {
+        let coordinator = format!(
+            "pub struct Registry {{\n{registry}}}\nimpl Registry {{\n    \
+             pub fn snapshot(&self) {{\n{snapshot}    }}\n}}\n\
+             impl RegistrySnapshot {{\n    pub fn to_json(&self) {{\n{to_json}    }}\n}}\n"
+        );
+        let metrics = "pub struct DecodeStats {\n    pub rounds: u64,\n}\n\
+                       impl DecodeStats {\n    pub fn merge(&mut self, o: &DecodeStats) {\n        \
+                       self.rounds += o.rounds;\n    }\n}\n";
+        let co = SourceFile::from_source("rust/src/coordinator/mod.rs", &coordinator);
+        let me = SourceFile::from_source("rust/src/metrics/mod.rs", metrics);
+        counter_sync(&CounterSyncInputs {
+            coordinator: &co,
+            metrics: &me,
+            protocol_md: protocol,
+            architecture_md: arch,
+        })
+    }
+
+    #[test]
+    fn counter_sync_passes_a_fully_wired_counter() {
+        let hits = sync_fixture(
+            "    pub completed: AtomicU64,\n",
+            "        let c = self.completed.load(SeqCst);\n",
+            "        (\"completed\", c)\n",
+            "| completed |",
+            "| completed |",
+        );
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    #[test]
+    fn counter_sync_fails_when_a_counter_misses_each_surface() {
+        // Missing from snapshot().
+        let h = sync_fixture(
+            "    pub completed: AtomicU64,\n",
+            "        let c = 0;\n",
+            "        (\"completed\", c)\n",
+            "| completed |",
+            "| completed |",
+        );
+        assert!(h.iter().any(|f| f.message.contains("snapshot")), "{h:?}");
+        // Missing from METRICS JSON.
+        let h = sync_fixture(
+            "    pub completed: AtomicU64,\n",
+            "        let c = self.completed.load(SeqCst);\n",
+            "        let _ = c;\n",
+            "| completed |",
+            "| completed |",
+        );
+        assert!(h.iter().any(|f| f.message.contains("METRICS JSON")), "{h:?}");
+        // Missing from PROTOCOL.md.
+        let h = sync_fixture(
+            "    pub completed: AtomicU64,\n",
+            "        let c = self.completed.load(SeqCst);\n",
+            "        (\"completed\", c)\n",
+            "no keys here",
+            "| completed |",
+        );
+        assert!(h.iter().any(|f| f.message.contains("PROTOCOL.md")), "{h:?}");
+        // Missing from the ARCHITECTURE table.
+        let h = sync_fixture(
+            "    pub completed: AtomicU64,\n",
+            "        let c = self.completed.load(SeqCst);\n",
+            "        (\"completed\", c)\n",
+            "| completed |",
+            "no table",
+        );
+        assert!(h.iter().any(|f| f.message.contains("ARCHITECTURE")), "{h:?}");
+    }
+
+    #[test]
+    fn counter_sync_respects_aliases_and_merge_folding() {
+        let h = sync_fixture(
+            "    pub queue_us_total: AtomicU64,\n",
+            "        let q = self.queue_us_total.load(SeqCst);\n",
+            "        (\"mean_queue_ms\", q)\n",
+            "| mean_queue_ms |",
+            "| mean_queue_ms |",
+        );
+        assert!(h.is_empty(), "aliased counter must pass: {h:?}");
+
+        // A DecodeStats field absent from merge() is flagged.
+        let co = SourceFile::from_source(
+            "rust/src/coordinator/mod.rs",
+            "pub struct Registry {\n    pub completed: AtomicU64,\n}\n\
+             impl R {\n    pub fn snapshot(&self) { let _ = self.completed; }\n    \
+             pub fn to_json(&self) { (\"completed\", 0) }\n}\n",
+        );
+        let me = SourceFile::from_source(
+            "rust/src/metrics/mod.rs",
+            "pub struct DecodeStats {\n    pub rounds: u64,\n    pub dropped_field: u64,\n}\n\
+             impl DecodeStats {\n    pub fn merge(&mut self, o: &DecodeStats) {\n        \
+             self.rounds += o.rounds;\n    }\n}\n",
+        );
+        let h = counter_sync(&CounterSyncInputs {
+            coordinator: &co,
+            metrics: &me,
+            protocol_md: "| completed |",
+            architecture_md: "| completed |",
+        });
+        assert_eq!(h.len(), 1, "{h:?}");
+        assert!(h[0].message.contains("dropped_field"));
+        assert!(h[0].message.contains("merge"));
+    }
+
+    #[test]
+    fn counter_sync_guards_against_vacuous_passes() {
+        let co = SourceFile::from_source("rust/src/coordinator/mod.rs", "fn nothing() {}\n");
+        let me = SourceFile::from_source("rust/src/metrics/mod.rs", "fn nothing() {}\n");
+        let h = counter_sync(&CounterSyncInputs {
+            coordinator: &co,
+            metrics: &me,
+            protocol_md: "",
+            architecture_md: "",
+        });
+        assert!(h.iter().any(|f| f.message.contains("Registry not found")), "{h:?}");
+    }
+}

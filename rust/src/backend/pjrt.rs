@@ -102,6 +102,7 @@ fn draft_worker(
                 sessions.remove(&id);
             }
             DraftCmd::Prefill { id, tokens, reply } => {
+                // lint:allow(determinism): real-hardware busy time for the draft prefill pass
                 let t0 = Instant::now();
                 let sess = sessions.get_mut(&id).expect("unknown draft session");
                 let kv = sess.branches[0].as_mut().unwrap();
@@ -122,6 +123,7 @@ fn draft_worker(
                 let _ = reply.send(Reply { value: (), busy_us: t0.elapsed().as_micros() as u64 });
             }
             DraftCmd::Forward { id, branch, token, reply } => {
+                // lint:allow(determinism): real-hardware busy time for a draft forward
                 let t0 = Instant::now();
                 let sess = sessions.get_mut(&id).expect("unknown draft session");
                 let kv = sess.branches[branch].as_mut().expect("released branch");
@@ -158,6 +160,7 @@ fn draft_worker(
                 sess.branches[branch].as_mut().expect("released branch").truncate(len);
             }
             DraftCmd::Hrad { features, token, reply } => {
+                // lint:allow(determinism): real-hardware busy time for an H-RAD prediction
                 let t0 = Instant::now();
                 let out = hrad
                     .run(&[Arg::F32(&features), Arg::ScalarI32(token as i32)])
@@ -207,6 +210,7 @@ fn target_worker(
                 sessions.remove(&id);
             }
             TargetCmd::Prefill { id, tokens, reply } => {
+                // lint:allow(determinism): real-hardware busy time for the target prefill pass
                 let t0 = Instant::now();
                 let sess = sessions.get_mut(&id).expect("unknown target session");
                 for chunk_toks in tokens.chunks(block) {
@@ -226,6 +230,7 @@ fn target_worker(
                 let _ = reply.send(Reply { value: (), busy_us: t0.elapsed().as_micros() as u64 });
             }
             TargetCmd::Verify { id, tokens, reply } => {
+                // lint:allow(determinism): real-hardware busy time for a target verification pass
                 let t0 = Instant::now();
                 let sess = sessions.get_mut(&id).expect("unknown target session");
                 let n = tokens.len();
@@ -348,6 +353,7 @@ impl PjrtBackend {
             pending: HashMap::new(),
             next_ticket: 0,
             stats: DecodeStats::with_hist(self.manifest.gamma_max),
+            // lint:allow(determinism): real sessions report real elapsed wall time
             started: Instant::now(),
             speed_ratio: *self.speed_ratio.lock().unwrap(),
         }
@@ -547,6 +553,7 @@ impl Session for PjrtSession {
     }
 
     fn overhead(&mut self, ms: f64) {
+        // lint:allow(determinism): engine overheads on real hardware are spent as real time
         std::thread::sleep(std::time::Duration::from_micros((ms * 1000.0) as u64));
     }
 

@@ -105,6 +105,7 @@ fn drive_connection(addr: &str, conn: usize, cfg: &LoadgenConfig) -> Result<(u64
 /// Run the load against a server at `addr`. Spawns one thread per
 /// connection; blocks until every request has completed.
 pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    // lint:allow(determinism): loadgen reports real client-side wall-clock latency
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..cfg.connections.max(1))
         .map(|conn| {

@@ -175,7 +175,6 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::config::{EngineConfig, EngineId};
@@ -185,7 +184,9 @@ use crate::engines::{
 use crate::kvcache::{BlockCache, PrefixCache, BLOCK_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
+use crate::util::clock::{Clock, Tick};
 use crate::util::prng::Pcg32;
+use crate::util::sync::{lock_or_recover, wait_or_recover};
 
 /// Ready-queue and admission ordering.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -266,6 +267,12 @@ pub struct SchedulerConfig {
     /// and the registry surfaces its eviction counter. `None` (default)
     /// disables prefix-aware admission — bit-for-bit the uncached behavior.
     pub prefix_cache: Option<Arc<PrefixCache>>,
+    /// Time source for every scheduling timestamp (admission times, EDF
+    /// deadlines, queue/decode durations): [`Clock::wall`] (default) for
+    /// real latencies, [`Clock::virtual_clock`] for deterministic tests —
+    /// the `determinism` lint forbids raw `Instant::now()` in scheduling
+    /// code, so this seam is the only way time enters the coordinator.
+    pub clock: Clock,
 }
 
 impl Default for SchedulerConfig {
@@ -280,6 +287,7 @@ impl Default for SchedulerConfig {
             adaptive: false,
             alpha_hint: None,
             prefix_cache: None,
+            clock: Clock::wall(),
         }
     }
 }
@@ -333,6 +341,12 @@ impl SchedulerConfig {
         self.prefix_cache = cache;
         self
     }
+
+    /// Inject the scheduler's time source (see [`SchedulerConfig::clock`]).
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
+        self
+    }
 }
 
 /// Resolved per-worker scheduling parameters.
@@ -359,6 +373,8 @@ struct SchedParams {
     /// Cross-request prefix cache, probed (read-only) by the admission
     /// projection to discount cached prompt prefixes.
     prefix_cache: Option<Arc<PrefixCache>>,
+    /// Time source for all scheduling timestamps.
+    clock: Clock,
 }
 
 /// Resolve one [`SchedulerConfig`] + [`EngineConfig`] into per-worker
@@ -393,6 +409,7 @@ fn resolve_params(
         alpha_hint: sched_cfg.alpha_hint,
         k_max: k,
         prefix_cache: sched_cfg.prefix_cache.clone(),
+        clock: sched_cfg.clock.clone(),
     }
 }
 
@@ -454,11 +471,14 @@ fn plan_controls(batch: &mut [Inflight], kv_pressure: f64, p: &SchedParams, regi
     // EDF: a request inside its deadline slack window gets one more draft
     // token per round — more speculation where latency matters most.
     if p.policy == SchedulePolicy::EarliestDeadline {
-        let now = Instant::now();
+        let now = p.clock.now();
         for (t, c) in batch.iter().zip(plans.iter_mut()) {
-            let tight = t.deadline_at.is_some_and(|dl| {
-                dl.saturating_duration_since(now) < Duration::from_millis(EDF_TIGHT_SLACK_MS)
-            });
+            // Saturating remaining slack: a past-due deadline reads as 0
+            // remaining and is therefore tight, exactly like the previous
+            // `saturating_duration_since` arithmetic.
+            let tight = t
+                .deadline_at
+                .is_some_and(|dl| dl.micros_since(now) < EDF_TIGHT_SLACK_MS * 1000);
             if tight {
                 c.gamma = (c.gamma + 1).min(t.task.gamma_limit());
             }
@@ -623,9 +643,10 @@ struct Inflight {
     /// Request seed — a preemption needs it to rebuild a matching session.
     seed: u64,
     task: DecodeTask,
-    enqueued_at: Instant,
-    /// Delay between submission and *first* admission, wall clock (ms) —
-    /// preserved across preempt/resume cycles.
+    /// Submission time on the scheduler clock ([`SchedParams::clock`]).
+    enqueued_at: Tick,
+    /// Delay between submission and *first* admission, scheduler clock
+    /// (ms) — preserved across preempt/resume cycles.
     queue_ms: f64,
     /// Accumulated on-worker decode time (prefill + all rounds), µs.
     decode_us: u64,
@@ -635,7 +656,7 @@ struct Inflight {
     priority: i32,
     deadline_ms: Option<u64>,
     /// Absolute deadline (None = no deadline or out-of-range).
-    deadline_at: Option<Instant>,
+    deadline_at: Option<Tick>,
     /// Scheduling decisions that passed this task over (priority aging).
     waits: u64,
     /// Projected KV bytes charged against the admission watermark.
@@ -658,9 +679,10 @@ struct Inflight {
 /// re-admission (`Resumable`), with shared aging state.
 struct Queued {
     entry: AdmissionEntry,
-    /// Original submission time (preserved across preemption, so EDF
-    /// deadlines and total_ms stay anchored to the first submit).
-    at: Instant,
+    /// Original submission time on the scheduler clock (preserved across
+    /// preemption, so EDF deadlines and total_ms stay anchored to the
+    /// first submit).
+    at: Tick,
     /// Admission decisions that passed this request over (priority aging).
     waits: u64,
 }
@@ -709,7 +731,7 @@ impl Queued {
         }
     }
 
-    fn deadline_at(&self) -> Option<Instant> {
+    fn deadline_at(&self) -> Option<Tick> {
         abs_deadline(self.at, self.deadline_ms())
     }
 
@@ -1118,7 +1140,7 @@ impl Coordinator {
         opts: SubmitOpts,
     ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.shared.queues);
         let now_inflight = self.shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
         self.shared.registry.inflight_peak.fetch_max(now_inflight, Ordering::Relaxed);
         q.inbox.push_back(Queued {
@@ -1132,7 +1154,7 @@ impl Coordinator {
                 stream: opts.stream,
                 on_complete: opts.on_complete,
             }),
-            at: Instant::now(),
+            at: self.shared.sched.clock.now(),
             waits: 0,
         });
         self.shared.cv_in.notify_one();
@@ -1147,7 +1169,7 @@ impl Coordinator {
     /// the race: the request completes normally.
     pub fn cancel(&self, id: u64) -> bool {
         let shared = &*self.shared;
-        let mut q = shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&shared.queues);
         // Still waiting for (re-)admission: retire from the queue. A fresh
         // request never started decode (empty response); a preempted
         // resumable entry carries its checkpoint's partial tokens + stats.
@@ -1160,7 +1182,7 @@ impl Coordinator {
                     if let Some(tx) = &req.stream {
                         let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
                     }
-                    let queue_ms = at.elapsed().as_secs_f64() * 1000.0;
+                    let queue_ms = shared.sched.clock.now().ms_since(at);
                     publish_response(
                         shared,
                         Response {
@@ -1198,30 +1220,32 @@ impl Coordinator {
 
     /// Block until any response is ready.
     pub fn collect(&self) -> Response {
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.shared.queues);
         loop {
             if let Some(r) = q.outbox.pop_front() {
                 return r;
             }
-            q = self.shared.cv_out.wait(q).unwrap();
+            q = wait_or_recover(&self.shared.cv_out, q);
         }
     }
 
     /// Block until the response for `id` is ready (other responses stay
     /// queued for their own collectors).
     pub fn collect_id(&self, id: u64) -> Response {
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.shared.queues);
         loop {
             if let Some(pos) = q.outbox.iter().position(|r| r.id == id) {
-                return q.outbox.remove(pos).expect("position just found");
+                if let Some(r) = q.outbox.remove(pos) {
+                    return r;
+                }
             }
-            q = self.shared.cv_out.wait(q).unwrap();
+            q = wait_or_recover(&self.shared.cv_out, q);
         }
     }
 
     /// Non-blocking poll.
     pub fn try_collect(&self) -> Option<Response> {
-        self.shared.queues.lock().unwrap().outbox.pop_front()
+        lock_or_recover(&self.shared.queues).outbox.pop_front()
     }
 
     pub fn pending(&self) -> u64 {
@@ -1231,7 +1255,7 @@ impl Coordinator {
     /// Σ projected KV bytes of admitted, unfinished requests — the quantity
     /// the admission watermark bounds. Returns to 0 when the pool drains.
     pub fn kv_projected_in_use(&self) -> usize {
-        self.shared.queues.lock().unwrap().kv_projected_bytes
+        lock_or_recover(&self.shared.queues).kv_projected_bytes
     }
 
     pub fn registry(&self) -> RegistrySnapshot {
@@ -1252,14 +1276,14 @@ impl Coordinator {
             // lock from its stop-check until it parks on the condvar, so
             // without the lock the notify could land in that window and be
             // lost, deadlocking join() below.
-            let _q = self.shared.queues.lock().unwrap();
+            let _q = lock_or_recover(&self.shared.queues);
             self.shared.stop.store(true, Ordering::SeqCst);
             self.shared.cv_in.notify_all();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.shared.queues);
         q.outbox.drain(..).collect()
     }
 }
@@ -1281,12 +1305,12 @@ fn projected_kv_bytes(prompt_len: usize, max_new_tokens: usize, p: &SchedParams)
     tokens.div_ceil(BLOCK_TOKENS) * BLOCK_TOKENS * p.kv_bytes_per_token
 }
 
-fn abs_deadline(at: Instant, deadline_ms: Option<u64>) -> Option<Instant> {
-    deadline_ms.and_then(|ms| at.checked_add(Duration::from_millis(ms)))
+fn abs_deadline(at: Tick, deadline_ms: Option<u64>) -> Option<Tick> {
+    deadline_ms.and_then(|ms| at.checked_add_millis(ms))
 }
 
 /// `true` if deadline `a` orders strictly before `b` (None = never due).
-fn deadline_before(a: Option<Instant>, b: Option<Instant>) -> bool {
+fn deadline_before(a: Option<Tick>, b: Option<Tick>) -> bool {
     match (a, b) {
         (Some(x), Some(y)) => x < y,
         (Some(_), None) => true,
@@ -1384,7 +1408,7 @@ fn pick_preempt_victim(
             // Victim = the latest-deadline task (no deadline = latest of
             // all) among those strictly after the arrival's deadline.
             let arr_dl = arrival.deadline_at();
-            let mut best: Option<(usize, Option<Instant>)> = None;
+            let mut best: Option<(usize, Option<Tick>)> = None;
             for (i, t) in ready.iter().enumerate() {
                 if t.shield || !deadline_before(arr_dl, t.deadline_at) {
                     continue;
@@ -1460,7 +1484,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
     }
     loop {
         let work = {
-            let mut q = shared.queues.lock().unwrap();
+            let mut q = lock_or_recover(&shared.queues);
             loop {
                 // Admission first — new arrivals join the running batch
                 // before the next round of existing work — but only while
@@ -1478,30 +1502,34 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                         Some(w) => q.kv_projected_bytes + proj <= w || q.kv_projected_bytes == 0,
                     };
                     if window_ok && fits_kv {
-                        if sched.policy == SchedulePolicy::Priority {
-                            for (j, e) in q.inbox.iter_mut().enumerate() {
-                                if j != idx {
+                        if let Some(entry) = q.inbox.remove(idx) {
+                            // Aging charges everything the admission passed
+                            // over — i.e. every entry still in the inbox
+                            // after the winner left it.
+                            if sched.policy == SchedulePolicy::Priority {
+                                for e in q.inbox.iter_mut() {
                                     e.waits += 1;
                                 }
                             }
+                            q.kv_projected_bytes += proj;
+                            q.last_deferred = None;
+                            shared
+                                .registry
+                                .kv_projected_peak
+                                .fetch_max(q.kv_projected_bytes as u64, Ordering::Relaxed);
+                            q.stepping.insert(entry.id());
+                            break Work::Admit(Box::new(entry), proj);
                         }
-                        let entry = q.inbox.remove(idx).expect("index in range");
-                        q.kv_projected_bytes += proj;
-                        q.last_deferred = None;
-                        shared
-                            .registry
-                            .kv_projected_peak
-                            .fetch_max(q.kv_projected_bytes as u64, Ordering::Relaxed);
-                        q.stepping.insert(entry.id());
-                        break Work::Admit(Box::new(entry), proj);
+                        continue;
                     }
                     // Blocked arrival. With preemption enabled, a strictly
                     // higher-ranked arrival may reclaim KV from the
                     // lowest-ranked unshielded ready task instead of
                     // waiting for it to finish.
                     if sched.preempt {
-                        if let Some(v) = pick_preempt_victim(&q.ready, &q.inbox[idx], &sched) {
-                            let victim = q.ready.remove(v).expect("index in range");
+                        let victim = pick_preempt_victim(&q.ready, &q.inbox[idx], &sched)
+                            .and_then(|v| q.ready.remove(v));
+                        if let Some(victim) = victim {
                             // Hold the id in `stepping` while the
                             // checkpoint runs outside the lock, so a racing
                             // cancel() is flagged rather than reported
@@ -1534,10 +1562,9 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 let mut batch: Vec<Inflight> = Vec::new();
                 while batch.len() < sched.verify_batch {
                     let pick = pick_ready_index(&q.ready, sched.policy, sched.aging_rounds);
-                    let Some(i) = pick else {
+                    let Some(t) = pick.and_then(|i| q.ready.remove(i)) else {
                         break;
                     };
-                    let t = q.ready.remove(i).expect("index in range");
                     q.stepping.insert(t.id);
                     batch.push(t);
                 }
@@ -1563,13 +1590,13 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 if shared.stop.load(Ordering::SeqCst) && q.inbox.is_empty() {
                     return;
                 }
-                q = shared.cv_in.wait(q).unwrap();
+                q = wait_or_recover(&shared.cv_in, q);
             }
         };
         let (batch, ran_round): (Vec<Inflight>, bool) = match work {
             Work::Admit(entry, kv_projected) => {
                 let enqueued_at = entry.at;
-                let admitted_at = Instant::now();
+                let admitted_at = sched.clock.now();
                 let admitted = match entry.entry {
                     AdmissionEntry::Fresh(req) => {
                         let deadline_at = abs_deadline(enqueued_at, req.deadline_ms);
@@ -1594,9 +1621,8 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             seed: req.seed,
                             task,
                             enqueued_at,
-                            queue_ms: admitted_at.duration_since(enqueued_at).as_secs_f64()
-                                * 1000.0,
-                            decode_us: admitted_at.elapsed().as_micros() as u64,
+                            queue_ms: admitted_at.ms_since(enqueued_at),
+                            decode_us: sched.clock.now().micros_since(admitted_at),
                             stream: req.stream,
                             on_complete: req.on_complete,
                             priority: req.priority,
@@ -1643,7 +1669,8 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                             task,
                             enqueued_at,
                             queue_ms: re.queue_ms,
-                            decode_us: re.decode_us + admitted_at.elapsed().as_micros() as u64,
+                            decode_us: re.decode_us
+                                + sched.clock.now().micros_since(admitted_at),
                             stream: re.stream,
                             on_complete: re.on_complete,
                             priority: re.priority,
@@ -1676,9 +1703,9 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 let mut outcomes: Vec<Option<StepOutcome>> = Vec::with_capacity(batch.len());
                 let mut width = 0usize;
                 for t in batch.iter_mut() {
-                    let t0 = Instant::now();
+                    let t0 = sched.clock.now();
                     let phase = t.task.step_submit();
-                    t.decode_us += t0.elapsed().as_micros() as u64;
+                    t.decode_us += sched.clock.now().micros_since(t0);
                     match phase {
                         TaskPhase::Submitted => {
                             width += 1;
@@ -1702,9 +1729,9 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                     let out = match slot {
                         Some(out) => out,
                         None => {
-                            let t0 = Instant::now();
+                            let t0 = sched.clock.now();
                             let out = t.task.step_join();
-                            t.decode_us += t0.elapsed().as_micros() as u64;
+                            t.decode_us += sched.clock.now().micros_since(t0);
                             out
                         }
                     };
@@ -1735,7 +1762,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 (batch, true)
             }
         };
-        let mut q = shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&shared.queues);
         let mut retire: Vec<(Inflight, bool)> = Vec::new();
         let mut requeued = 0usize;
         for mut t in batch {
@@ -1785,7 +1812,7 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
         kv_projected,
         ..
     } = t;
-    let total_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
+    let total_ms = shared.sched.clock.now().ms_since(enqueued_at);
     // Flush the stream terminator for requests that never got one from a
     // round: zero-budget completions and cancellations between rounds.
     if let Some(tx) = &stream {
@@ -1800,6 +1827,7 @@ fn finish_inflight(t: Inflight, cancelled: bool, shared: &Shared) {
         // The step-wise engines honor the budget exactly, so the
         // coordinator aggregate and the per-request stats must agree — no
         // truncation here.
+        // lint:allow(panic-path): a violated registry-equality invariant must abort loudly, not be served
         assert_eq!(
             out.tokens.len() as u64,
             out.stats.generated_tokens,
@@ -1869,7 +1897,7 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
     // The victim's KV projection was already returned to the admission
     // budget by the scheduling decision that picked it (under the queues
     // lock), so concurrent workers never double-preempt for one arrival.
-    let mut q = shared.queues.lock().unwrap();
+    let mut q = lock_or_recover(&shared.queues);
     q.stepping.remove(&id);
     if q.cancel_requested.remove(&id) {
         drop(q);
@@ -1891,7 +1919,7 @@ fn preempt_inflight(t: Inflight, shared: &Shared) {
 /// re-admission: its response carries the checkpoint's partial tokens and
 /// real stats, exactly like a between-rounds cancellation. The queues lock
 /// must NOT be held.
-fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: Instant) {
+fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: Tick) {
     let ResumeEntry {
         id,
         checkpoint,
@@ -1905,7 +1933,7 @@ fn retire_resumable_cancelled(shared: &Shared, entry: ResumeEntry, enqueued_at: 
     if let Some(tx) = &stream {
         let _ = tx.send(StreamChunk { id, tokens: Vec::new(), done: true });
     }
-    let total_ms = enqueued_at.elapsed().as_secs_f64() * 1000.0;
+    let total_ms = shared.sched.clock.now().ms_since(enqueued_at);
     shared.registry.decode_us_total.fetch_add(decode_us, Ordering::Relaxed);
     publish_response(
         shared,
@@ -1955,7 +1983,7 @@ fn publish_response(
     // resubmission racing the KV watermark) must already see the freed
     // projection and the decremented inflight count.
     {
-        let mut q = shared.queues.lock().unwrap();
+        let mut q = lock_or_recover(&shared.queues);
         q.kv_projected_bytes = q.kv_projected_bytes.saturating_sub(kv_projected);
     }
     shared.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -1966,7 +1994,7 @@ fn publish_response(
         None => Some(resp),
     };
     if let Some(resp) = leftover {
-        shared.queues.lock().unwrap().outbox.push_back(resp);
+        lock_or_recover(&shared.queues).outbox.push_back(resp);
     }
     shared.cv_out.notify_all();
     shared.cv_in.notify_all();
@@ -2014,6 +2042,73 @@ mod tests {
         assert_eq!(snap.cancelled, 0);
         assert_eq!(snap.generated_tokens, n * 40);
         assert!(snap.rounds >= n, "at least one round per request");
+        coord.shutdown();
+    }
+
+    /// A backend whose session construction panics for one trigger seed —
+    /// the injected failure for the poison-recovery regression test below.
+    struct PanickingBackend {
+        inner: SimBackend,
+        trigger_seed: u64,
+    }
+
+    impl Backend for PanickingBackend {
+        fn new_session(&self, seed: u64) -> Box<dyn crate::backend::Session + Send> {
+            if seed == self.trigger_seed {
+                panic!("injected worker panic (trigger seed {seed})");
+            }
+            self.inner.new_session(seed)
+        }
+
+        fn name(&self) -> String {
+            format!("panicking({})", self.inner.name())
+        }
+    }
+
+    /// One worker dying mid-admission must not wedge the fleet: the other
+    /// worker keeps draining the shared queues (every lock site recovers
+    /// from poisoning via `lock_or_recover`), every surviving request
+    /// completes, and registry equality still holds over the survivors.
+    #[test]
+    fn panicked_round_does_not_wedge_other_workers() {
+        const TRIGGER: u64 = u64::MAX;
+        let backends: Vec<Box<dyn Backend + Send>> = (0..2)
+            .map(|_| {
+                let cfg = SimConfig::new(
+                    ModelPair::get(PairId::Llama68m7b),
+                    Task::get(TaskId::MtBench),
+                );
+                Box::new(PanickingBackend { inner: SimBackend::new(cfg), trigger_seed: TRIGGER })
+                    as Box<dyn Backend + Send>
+            })
+            .collect();
+        let coord = Coordinator::start(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 32, ..Default::default() },
+        );
+        // The poison request goes first, so a worker dies while the rest of
+        // the load is still queued behind it.
+        coord.submit(vec![1, 2, 3], 32, TRIGGER);
+        let survivors = 8u64;
+        for i in 0..survivors {
+            coord.submit(vec![1, 2, 3, (i % 5) as u32 + 1], 32, i);
+        }
+        let mut stats_total = 0u64;
+        for _ in 0..survivors {
+            let r = coord.collect();
+            assert_eq!(r.tokens.len(), 32, "surviving workers keep serving");
+            assert_eq!(r.status, ResponseStatus::Completed);
+            stats_total += r.stats.generated_tokens;
+        }
+        let snap = coord.registry();
+        assert_eq!(snap.completed, survivors);
+        assert_eq!(
+            snap.generated_tokens, stats_total,
+            "a panicked admission must not skew registry equality"
+        );
+        // Shutdown still joins cleanly: the dead worker's handle reports
+        // its panic, the survivor drains and exits.
         coord.shutdown();
     }
 
@@ -2281,6 +2376,7 @@ mod tests {
             alpha_hint: None,
             k_max: 4,
             prefix_cache: None,
+            clock: Clock::virtual_clock(),
         };
         let a = projected_kv_bytes(3, 40, &p);
         let b = projected_kv_bytes(3, 400, &p);
@@ -2511,6 +2607,7 @@ mod tests {
             alpha_hint: None,
             k_max: 4,
             prefix_cache: None,
+            clock: Clock::virtual_clock(),
         };
         let ckpt = |kv_reclaimed_bytes: usize| TaskCheckpoint {
             prompt: vec![1; 10],
@@ -2534,7 +2631,7 @@ mod tests {
                 decode_us: 0,
                 queue_ms: 0.0,
             }),
-            at: Instant::now(),
+            at: Tick::ZERO,
             waits: 0,
         };
         // context 32, remaining 78: analytic = (32+78+10)/16 blocks.
@@ -2590,7 +2687,7 @@ mod tests {
                 decode_us: 0,
                 queue_ms: 0.0,
             }),
-            at: Instant::now(),
+            at: Tick::ZERO,
             waits: 0,
         };
         let charged = queued.projection(&p);

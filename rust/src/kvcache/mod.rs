@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::sampling::Token;
+use crate::util::sync::lock_or_recover;
 
 pub const BLOCK_TOKENS: usize = 16;
 
@@ -346,7 +347,7 @@ impl PrefixCache {
     /// discount projected KV; a chunk evicted between probe and prefill
     /// only makes the projection an over-estimate (safe direction).
     pub fn probe(&self, tokens: &[Token]) -> usize {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_or_recover(&self.inner);
         let cap_chunks = Self::reusable_cap(tokens.len()) / BLOCK_TOKENS;
         let mut key = None;
         let mut matched = 0;
@@ -368,7 +369,7 @@ impl PrefixCache {
     /// that existed *before* this call (the actual prefill discount),
     /// capped so at least one token is always charged.
     pub fn acquire(&self, tokens: &[Token]) -> PrefixLease {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         let cap = Self::reusable_cap(tokens.len());
@@ -409,7 +410,7 @@ impl PrefixCache {
     /// same context is a hit). Chunks beyond the lease are inserted at
     /// refcount 0; leased chunks are unpinned. Call exactly once per lease.
     pub fn publish(&self, committed: &[Token], lease: PrefixLease) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         let mut key = None;
@@ -469,14 +470,14 @@ impl PrefixCache {
 
     /// Tokens currently indexed (cached chunks × block size).
     pub fn indexed_tokens(&self) -> usize {
-        self.inner.lock().unwrap().entries.len() * BLOCK_TOKENS
+        lock_or_recover(&self.inner).entries.len() * BLOCK_TOKENS
     }
 
     /// Invariant check for tests: parent chains exist, child counts match,
     /// and the index is within capacity or every over-capacity chunk is
     /// pinned/interior.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_or_recover(&self.inner);
         let mut child_counts: HashMap<u64, u32> = HashMap::new();
         for e in inner.entries.values() {
             if let Some(p) = e.parent {

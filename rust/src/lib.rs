@@ -22,7 +22,17 @@
 //! the README and architecture map live in [`docs`], and the full wire
 //! protocol specification (v1 + the tagged multiplexed v2) is embedded in
 //! [`server`].
+//!
+//! Repo-specific invariants (determinism, panic-safety on worker threads,
+//! counter/doc sync, builder-only config APIs, lock ordering) are enforced
+//! by the [`analysis`] module, exposed as `specbranch analyze`.
 
+// The whole crate is safe Rust; the PJRT FFI lives behind the `xla` crate's
+// own boundary. Enforced here so a stray `unsafe` block can't slip into
+// scheduling code unreviewed.
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod backend;
 pub mod bench_harness;
 pub mod config;

@@ -5,6 +5,8 @@
 //!   serve      start the line-protocol TCP server over the coordinator
 //!   loadgen    mux load generator: N connections × M in-flight requests
 //!   bench      regenerate a paper experiment (same code as `cargo bench`)
+//!   analyze    repo-specific static analysis (determinism, panic-path,
+//!              counter-sync, api-discipline, lock-order)
 //!   info       list model pairs / tasks / engines and artifact status
 //!
 //! Examples:
@@ -13,6 +15,8 @@
 //!   specbranch serve --addr 127.0.0.1:7799 --workers 2
 //!   specbranch loadgen --connections 4 --inflight 8 --requests 16
 //!   specbranch bench --exp table2
+
+#![deny(unsafe_code)]
 
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::sim::{SimBackend, SimConfig};
@@ -39,6 +43,7 @@ fn main() {
         "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
+        "analyze" => cmd_analyze(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -52,7 +57,7 @@ fn print_help() {
     println!(
         "specbranch — speculative decoding via hybrid drafting and \
          rollback-aware branch parallelism\n\n\
-         USAGE: specbranch <generate|serve|loadgen|bench|bench-smoke|info> [flags]\n\n\
+         USAGE: specbranch <generate|serve|loadgen|bench|bench-smoke|analyze|info> [flags]\n\n\
          generate flags: --prompt <text> --engine <name> --backend <pjrt|sim>\n\
                          --pair <llama|vicuna|deepseek|llama3.1> --task <name>\n\
                          --max-new <n> --gamma <n> --epsilon <f> --seed <n>\n\
@@ -93,8 +98,42 @@ fn print_help() {
                          --baseline <file>  fail on >tolerance regression\n\
                          --tolerance <f>    (default 0.15)\n\
                          --pin <file>  also write the report over <file>\n\
-                                       (re-pins the committed baseline)"
+                                       (re-pins the committed baseline)\n\
+         analyze flags:  --root <dir>  repo checkout to scan (default: .)\n\
+                         [--deny-warnings]  unused allow-pragmas are fatal\n\
+                         rules: determinism panic-path counter-sync\n\
+                                api-discipline lock-order; sanctioned\n\
+                                exceptions carry a source comment pragma\n\
+                                `lint:allow(<rule>): <reason>`"
     );
+}
+
+/// `specbranch analyze`: run the repo-specific lint pass. Exit 0 when the
+/// tree is clean, 1 on findings (warnings fatal with `--deny-warnings`),
+/// 2 when the checkout itself can't be scanned.
+fn cmd_analyze(args: &Args) -> i32 {
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let deny_warnings = args.has("deny-warnings");
+    let report = match specbranch::analysis::analyze_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            return 2;
+        }
+    };
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    let (errors, warnings) = (report.error_count(), report.warning_count());
+    println!(
+        "analyze: {} files scanned, {errors} error(s), {warnings} warning(s)",
+        report.files_scanned
+    );
+    if report.is_clean(deny_warnings) {
+        0
+    } else {
+        1
+    }
 }
 
 fn engine_cfg(args: &Args) -> EngineConfig {
@@ -158,6 +197,7 @@ fn cmd_generate(args: &Args) -> i32 {
     let engine = engines::build(engine_id, cfg.clone());
     let session = backend.new_session(cfg.seed);
     let stream = args.has("stream");
+    // lint:allow(determinism): CLI wall-clock reporting only (never feeds scheduling)
     let t0 = std::time::Instant::now();
     // Drive the step-wise API directly: one draft/verify round per step,
     // streaming each round's tokens when asked.

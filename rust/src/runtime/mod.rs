@@ -124,6 +124,7 @@ impl Executable {
             literals.push(lit);
         }
 
+        // lint:allow(determinism): real PJRT execution is timed on the wall clock (xla feature only)
         let t0 = Instant::now();
         let result = self.exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
         let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;

@@ -40,6 +40,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::coordinator::{Coordinator, Response, StreamChunk, SubmitOpts};
 use crate::token::Tokenizer;
 use crate::util::json;
+use crate::util::sync::lock_or_recover;
 
 pub struct Server {
     listener: TcpListener,
@@ -194,7 +195,7 @@ fn spawn_forwarder(
             }
         }
         let resp = done_rx.recv();
-        tags.lock().unwrap().remove(&label);
+        lock_or_recover(&tags).remove(&label);
         if let Ok(resp) = resp {
             let _ = events.send(ConnEvent::Done { label, resp: Box::new(resp) });
         }
@@ -241,7 +242,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 format!("CANCELLED {} {}", id, if hit { "ok" } else { "miss" })
             } else if is_tag(target) {
                 // v2: cancel this connection's in-flight tagged request.
-                let id = tags.lock().unwrap().get(target).copied();
+                let id = lock_or_recover(&tags).get(target).copied();
                 let hit = id.map(|id| coord.cancel(id)).unwrap_or(false);
                 format!("CANCELLED {} {}", target, if hit { "ok" } else { "miss" })
             } else {
@@ -311,7 +312,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             // forwarder's removal (which can fire the instant the request
             // completes) can never race the insertion, and a duplicate tag
             // is rejected before it reaches the coordinator.
-            let mut map = tags.lock().unwrap();
+            let mut map = lock_or_recover(&tags);
             if let Some(t) = tag {
                 if map.contains_key(t) {
                     drop(map);
@@ -347,7 +348,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     // count in the registry, so `generated_tokens == Σ per-response stats`
     // survives client crashes. The forwarders drain the cancelled
     // responses and drop their event senders, which lets the writer exit.
-    let orphans: Vec<u64> = tags.lock().unwrap().values().copied().collect();
+    let orphans: Vec<u64> = lock_or_recover(&tags).values().copied().collect();
     for id in orphans {
         coord.cancel(id);
     }

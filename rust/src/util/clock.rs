@@ -1,0 +1,156 @@
+//! Scheduler time source: a monotonic tick counter behind one seam.
+//!
+//! Every scheduling timestamp in the coordinator (admission times, EDF
+//! absolute deadlines, queue/decode durations) is a [`Tick`] read from a
+//! [`Clock`], never a raw `std::time::Instant`. That single seam is what
+//! the `determinism` lint of [`crate::analysis`] enforces: the only
+//! sanctioned `Instant::now()` in scheduling code lives in
+//! [`Clock::wall`], and tests that need reproducible time inject
+//! [`Clock::virtual_clock`] and advance it explicitly.
+//!
+//! Ticks are microseconds since the clock's epoch (construction time for a
+//! wall clock, zero for a virtual one). They are plain `u64`s — totally
+//! ordered, `Copy`, and serializable into the µs-denominated registry
+//! counters without conversion.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A point in scheduler time: microseconds since the owning [`Clock`]'s
+/// epoch. Comparisons are only meaningful between ticks of the same clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tick(u64);
+
+impl Tick {
+    /// The clock epoch itself.
+    pub const ZERO: Tick = Tick(0);
+
+    pub fn from_micros(us: u64) -> Tick {
+        Tick(us)
+    }
+
+    pub fn micros(self) -> u64 {
+        self.0
+    }
+
+    /// Microseconds elapsed since `earlier` (saturating: a tick earlier
+    /// than `earlier` reads as 0, mirroring
+    /// `Instant::saturating_duration_since`).
+    pub fn micros_since(self, earlier: Tick) -> u64 {
+        self.0.saturating_sub(earlier.0)
+    }
+
+    /// Milliseconds elapsed since `earlier`, as the fractional wall-style
+    /// value the response metadata reports.
+    pub fn ms_since(self, earlier: Tick) -> f64 {
+        self.micros_since(earlier) as f64 / 1000.0
+    }
+
+    /// This tick plus `ms` milliseconds; `None` on overflow (mirroring
+    /// `Instant::checked_add`, which deadline math relies on).
+    pub fn checked_add_millis(self, ms: u64) -> Option<Tick> {
+        ms.checked_mul(1000).and_then(|us| self.0.checked_add(us)).map(Tick)
+    }
+}
+
+/// The time source scheduling code reads [`Tick`]s from.
+///
+/// * [`Clock::wall`] — anchored to a real `Instant` epoch; production
+///   servers use it so queue/decode timings report real latencies.
+/// * [`Clock::virtual_clock`] — an atomic counter advanced only by
+///   [`Clock::advance_micros`]; deterministic tests and simulations use it
+///   so aging, deadlines, and admission ordering are reproducible.
+///
+/// Cloning a clock shares its epoch (wall) or its counter (virtual), so a
+/// handle and its workers always agree on what "now" means.
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Real time relative to the construction-time epoch.
+    Wall(Instant),
+    /// Simulated time: the shared counter IS the current tick.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A wall clock anchored now. This is the single sanctioned wall-time
+    /// read in scheduling code; everything downstream consumes [`Tick`]s.
+    pub fn wall() -> Clock {
+        // lint:allow(determinism): the one sanctioned wall-clock epoch — every other scheduling timestamp derives from this Clock seam
+        Clock::Wall(Instant::now())
+    }
+
+    /// A virtual clock starting at [`Tick::ZERO`]; advances only via
+    /// [`Clock::advance_micros`].
+    pub fn virtual_clock() -> Clock {
+        Clock::Virtual(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn now(&self) -> Tick {
+        match self {
+            Clock::Wall(epoch) => Tick(epoch.elapsed().as_micros() as u64),
+            Clock::Virtual(t) => Tick(t.load(Ordering::SeqCst)),
+        }
+    }
+
+    /// Advance a virtual clock by `us` microseconds. No-op on a wall clock
+    /// (real time cannot be steered; callers gate on [`Clock::is_virtual`]
+    /// when advancing must take effect).
+    pub fn advance_micros(&self, us: u64) {
+        if let Clock::Virtual(t) = self {
+            t.fetch_add(us, Ordering::SeqCst);
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_only_moves_when_advanced() {
+        let c = Clock::virtual_clock();
+        assert!(c.is_virtual());
+        assert_eq!(c.now(), Tick::ZERO);
+        c.advance_micros(1_500);
+        assert_eq!(c.now().micros(), 1_500);
+        // Clones share the counter.
+        let c2 = c.clone();
+        c2.advance_micros(500);
+        assert_eq!(c.now().micros(), 2_000);
+    }
+
+    #[test]
+    fn tick_arithmetic() {
+        let a = Tick::from_micros(2_000);
+        let b = Tick::from_micros(5_500);
+        assert_eq!(b.micros_since(a), 3_500);
+        assert_eq!(a.micros_since(b), 0, "earlier-minus-later saturates");
+        assert!((b.ms_since(a) - 3.5).abs() < 1e-12);
+        assert_eq!(a.checked_add_millis(3), Some(Tick::from_micros(5_000)));
+        assert_eq!(a.checked_add_millis(u64::MAX), None);
+        assert!(a < b);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic_nondecreasing() {
+        let c = Clock::wall();
+        assert!(!c.is_virtual());
+        let t0 = c.now();
+        let t1 = c.now();
+        assert!(t1 >= t0);
+        // advance_micros on a wall clock is an explicit no-op.
+        c.advance_micros(1_000_000_000);
+        assert!(c.now().micros() < 1_000_000_000);
+    }
+}

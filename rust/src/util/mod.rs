@@ -2,7 +2,9 @@
 //! rand/serde/clap/criterion/proptest — see DESIGN.md §3 substitutions).
 
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;
+pub mod sync;

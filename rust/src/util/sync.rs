@@ -1,0 +1,97 @@
+//! Poison-recovering synchronization helpers for worker threads.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked round into a pool-wide
+//! outage: the panic poisons the mutex, every other worker's `unwrap()`
+//! then panics on the `PoisonError`, and the coordinator wedges with
+//! requests stranded in its queues. The coordinator's shared state is a
+//! set of plain queues and counters that are valid between any two
+//! operations (each critical section completes its queue mutation before
+//! unlocking, and the panicking code runs *outside* the lock — sessions
+//! are stepped after the queues are released), so the right response to a
+//! poisoned lock is to take the data and keep serving.
+//!
+//! The `panic-path` lint of [`crate::analysis`] steers every
+//! `.lock().unwrap()` in coordinator/server/kvcache code here.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked. The
+/// returned guard is the same guard `lock().unwrap()` would produce on the
+/// happy path; on poison it is the inner guard of the `PoisonError`, which
+/// still owns the mutex.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Wait on `cv` with `guard`, recovering the re-acquired guard if the
+/// mutex was poisoned while this thread slept.
+pub fn wait_or_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    /// Poison `m` by panicking a thread while it holds the lock.
+    fn poison(m: &Arc<Mutex<Vec<u32>>>) {
+        let m2 = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            g.push(1);
+            panic!("poison the mutex on purpose");
+        })
+        .join();
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn lock_or_recover_survives_poison_and_sees_consistent_state() {
+        let m = Arc::new(Mutex::new(vec![0u32]));
+        poison(&m);
+        // lock().unwrap() would panic here; recovery hands back the data.
+        let mut g = lock_or_recover(&m);
+        assert_eq!(*g, vec![0, 1], "mutations before the panic are intact");
+        g.push(2);
+        drop(g);
+        assert_eq!(*lock_or_recover(&m), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn wait_or_recover_wakes_through_a_poisoned_mutex() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let waiter = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut ready = lock_or_recover(m);
+                while !*ready {
+                    ready = wait_or_recover(cv, ready);
+                }
+            })
+        };
+        // Flip the flag from a thread that panics while holding the lock:
+        // the waiter must still observe the update and exit.
+        let setter = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+                // Panic while still holding the guard: the waiter's wakeup
+                // re-acquires a poisoned mutex.
+                panic!("poison while holding the lock");
+            })
+        };
+        let _ = setter.join();
+        waiter.join().expect("waiter must not wedge on poison");
+    }
+}
