@@ -331,8 +331,11 @@ pub fn counter_sync(inp: &CounterSyncInputs) -> Vec<Finding> {
 // ---------------------------------------------------------------------------
 
 /// Config types that must be constructed through their builders so new
-/// fields get defaults everywhere at once (the PR 7 contract).
-const BUILDER_ONLY: &[&str] = &["SchedulerConfig", "SubmitOpts"];
+/// fields get defaults everywhere at once (the PR 7 contract, extended to
+/// the workload scenario API: a new traffic knob must not break every
+/// call site that composes a scenario).
+const BUILDER_ONLY: &[&str] =
+    &["SchedulerConfig", "SubmitOpts", "Workload", "TrafficClass", "LoadgenConfig"];
 
 pub fn api_discipline(file: &SourceFile, in_scheduler: bool) -> Vec<Finding> {
     let mut out = Vec::new();
@@ -342,7 +345,9 @@ pub fn api_discipline(file: &SourceFile, in_scheduler: bool) -> Vec<Finding> {
         // every field breaks on the next added field.
         for ty in BUILDER_ONLY {
             let lit = format!("{ty} {{");
-            if find_pattern(line, &lit).is_empty() {
+            let hits = find_pattern(line, &lit);
+            // A `-> Ty {` match is a signature's body brace, not a literal.
+            if !hits.iter().any(|&at| !line[..at].ends_with("-> ")) {
                 continue;
             }
             if line.contains("struct ") || line.contains("impl ") || line.contains("trait ") {
@@ -517,6 +522,25 @@ mod tests {
         let hits = api_discipline(&f, false);
         assert_eq!(hits.len(), 1, "{hits:?}");
         assert_eq!(hits[0].line, 6);
+    }
+
+    #[test]
+    fn api_discipline_covers_the_workload_types() {
+        // The scenario API's config types are builder-only too: literal
+        // construction outside a `struct `/`impl `/`trait ` line is a
+        // finding for each of them.
+        for ty in ["Workload", "TrafficClass", "LoadgenConfig"] {
+            let f = src("x.rs", &format!("fn mk() {{\n    let w = {ty} {{ seed: 1 }};\n}}\n"));
+            let hits = api_discipline(&f, false);
+            assert_eq!(hits.len(), 1, "{ty} literal must be flagged: {hits:?}");
+            assert_eq!(hits[0].rule, RULE_API);
+        }
+        let ok = src(
+            "x.rs",
+            "impl Workload {\n    pub fn new(seed: u64) -> Workload {\n        \
+             Self { seed }\n    }\n}\n",
+        );
+        assert!(api_discipline(&ok, false).is_empty(), "Self-literals inside impls pass");
     }
 
     #[test]

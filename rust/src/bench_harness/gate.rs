@@ -2,7 +2,7 @@
 //! the tier-1 test suite — so the exact comparisons CI enforces are the
 //! ones `cargo test` verifies on every run.
 //!
-//! Six layers:
+//! Eight layers:
 //!
 //! 1. [`smoke_measurements`] — the fixed deterministic workload (virtual
 //!    clock, bit-stable across machines) whose tokens/sec feed both the
@@ -33,7 +33,20 @@
 //!    twin; asserts the cache actually hit, Σ charged prefill tokens
 //!    strictly dropped, streams stay byte-identical, and throughput
 //!    holds the uncached floor — all measured in the same invocation.
-//! 6. [`check_baseline`] — the absolute regression gate against the
+//! 6. [`scenario_prefix_smoke`] — the armed **in-run** percentile gate on
+//!    the `rag-shared-prefix` workload scenario: the full scenario
+//!    pipeline (schedule → real server measurement → queueing replay)
+//!    with the prefix cache on vs its cache-off twin; asserts the cache
+//!    hit, charged prefill strictly dropped, streams stayed
+//!    byte-identical, and the cache strictly improved p95 TTFT under the
+//!    ramp overload.
+//! 7. [`scenario_slo_smoke`] — the armed **in-run** percentile gate on
+//!    the `slo-tiered-mix` scenario: the adaptive control plane against a
+//!    static γ grid over the same scheduled requests; asserts the
+//!    controller planned rounds, streams stayed byte-identical under
+//!    greedy, and adaptive strictly beat the best static point on p99
+//!    end-to-end latency while holding its deadline-hit rate.
+//! 8. [`check_baseline`] — the absolute regression gate against the
 //!    committed `.github/bench_baseline.json`. A baseline carrying
 //!    `"bootstrap": true` disarms only this layer; once armed, a missing
 //!    engine key is a failure (renaming an engine cannot silently disarm
@@ -54,7 +67,9 @@ use crate::metrics::DecodeStats;
 use crate::sampling::Token;
 use crate::util::json;
 
+use super::report::ScenarioReport;
 use super::runner::{default_gamma, Runner, Scale};
+use super::workload::{Measurement, Scenario};
 
 /// One gated engine entry of the smoke workload.
 pub struct SmokeEntry {
@@ -852,6 +867,305 @@ impl PrefixSmoke {
 }
 
 // ---------------------------------------------------------------------------
+// In-run scenario percentile gates
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-scenario-prefix` gate: the
+/// `rag-shared-prefix` scenario (a diurnal ramp of Zipf-shared 64-token
+/// prompt templates) run through the full pipeline — schedule → real
+/// server measurement → deterministic queueing replay — with the prefix
+/// cache on, against its cache-off twin over the *same* scheduled
+/// requests. Greedy decoding keeps the committed streams independent of
+/// the cache, so the gate holds streams byte-identical while asserting
+/// the cache removed repeat prefill work and that the saved work shows up
+/// where operators feel it: strictly lower p95 TTFT under the ramp's
+/// backlog.
+pub struct ScenarioPrefixSmoke {
+    /// p95 TTFT (queue wait + time to first committed token) with the
+    /// cache on, from the replayed scenario records.
+    pub cached_ttft_p95: f64,
+    /// p95 TTFT of the cache-off twin.
+    pub uncached_ttft_p95: f64,
+    pub prefix_hits: u64,
+    pub prefix_tokens_saved: u64,
+    /// Σ `prefill_charged_tokens` across the cache-on run's responses.
+    pub prefill_charged_tokens: u64,
+    /// Σ charged prefill of the cache-off twin (every prompt in full).
+    pub reference_prefill_charged_tokens: u64,
+    /// Every cache-on stream matched its cache-off twin byte-for-byte.
+    pub streams_match: bool,
+    /// `registry.generated_tokens == Σ per-response stats` in both runs.
+    pub registry_equal: bool,
+    /// Full scenario report of the cache-on run (the CI artifact).
+    pub report: ScenarioReport,
+    /// Scenario report of the cache-off twin.
+    pub reference: ScenarioReport,
+}
+
+/// Run the `rag-shared-prefix` scenario and its cache-off twin over one
+/// shared schedule.
+pub fn scenario_prefix_smoke() -> ScenarioPrefixSmoke {
+    let on = Scenario::named("rag-shared-prefix").expect("rag-shared-prefix is a named scenario");
+    let specs = on.schedule();
+    let on_m = on.measure(&specs).expect("rag-shared-prefix: cache-on measurement");
+    let off = on.clone().prefix_cache(false);
+    let off_m = off.measure(&specs).expect("rag-shared-prefix: cache-off measurement");
+    let streams_match = on_m.requests.len() == off_m.requests.len()
+        && on_m.requests.iter().zip(&off_m.requests).all(|(a, b)| a.text == b.text);
+    let registry_equal = on_m.registry_equal() && off_m.registry_equal();
+    let prefix_hits = on_m.registry_sum("prefix_hits");
+    let prefix_tokens_saved = on_m.registry_sum("prefix_tokens_saved");
+    let charged =
+        |m: &Measurement| m.requests.iter().map(|r| r.prefill_charged_tokens).sum::<u64>();
+    let prefill_charged_tokens = charged(&on_m);
+    let reference_prefill_charged_tokens = charged(&off_m);
+    let on_rec = on.replay(&specs, &on_m.requests);
+    let off_rec = off.replay(&specs, &off_m.requests);
+    let mut extras = on_m.extras();
+    extras.push(("prefix_hits".to_string(), prefix_hits as f64));
+    extras.push(("prefix_tokens_saved".to_string(), prefix_tokens_saved as f64));
+    let report = ScenarioReport::new("rag-shared-prefix", on.seed, "virtual", on_rec, extras);
+    let reference = ScenarioReport::new(
+        "rag-shared-prefix-cache-off",
+        off.seed,
+        "virtual",
+        off_rec,
+        off_m.extras(),
+    );
+    ScenarioPrefixSmoke {
+        cached_ttft_p95: report.summary.ttft_p95,
+        uncached_ttft_p95: reference.summary.ttft_p95,
+        prefix_hits,
+        prefix_tokens_saved,
+        prefill_charged_tokens,
+        reference_prefill_charged_tokens,
+        streams_match,
+        registry_equal,
+        report,
+        reference,
+    }
+}
+
+impl ScenarioPrefixSmoke {
+    /// The armed in-run assertions for `specbranch-scenario-prefix`. The
+    /// percentile comparison is strict — both runs share one schedule and
+    /// one acceptance-draw stream, so no tolerance is owed.
+    pub fn failures(&self, _tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.prefix_hits == 0 {
+            f.push(
+                "specbranch-scenario-prefix: shared-prefix scenario produced no cache hit"
+                    .to_string(),
+            );
+        }
+        if self.prefix_tokens_saved == 0 {
+            f.push(
+                "specbranch-scenario-prefix: cache hits saved no prefill tokens".to_string(),
+            );
+        }
+        if self.prefill_charged_tokens >= self.reference_prefill_charged_tokens {
+            f.push(format!(
+                "specbranch-scenario-prefix: charged prefill tokens {} not below the \
+                 uncached twin's {}",
+                self.prefill_charged_tokens, self.reference_prefill_charged_tokens
+            ));
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-scenario-prefix: streams diverged from the cache-off twin"
+                    .to_string(),
+            );
+        }
+        if !self.registry_equal {
+            f.push(
+                "specbranch-scenario-prefix: registry generated_tokens != Σ per-response stats"
+                    .to_string(),
+            );
+        }
+        if self.cached_ttft_p95 >= self.uncached_ttft_p95 {
+            f.push(format!(
+                "REGRESSION specbranch-scenario-prefix: p95 TTFT {:.1} ms with the cache \
+                 not below the cache-off twin's {:.1} ms (removed prefill work must reach \
+                 the latency tail)",
+                self.cached_ttft_p95, self.uncached_ttft_p95
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-scenario-prefix` entry of
+    /// `BENCH_ci.json` (in-run gate only: the comparison is against the
+    /// cache-off twin measured in the same invocation).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("scenario", json::s(&self.report.scenario)),
+            ("cached_ttft_p95", json::num(self.cached_ttft_p95)),
+            ("uncached_ttft_p95", json::num(self.uncached_ttft_p95)),
+            ("prefix_hits", json::num(self.prefix_hits as f64)),
+            ("prefix_tokens_saved", json::num(self.prefix_tokens_saved as f64)),
+            ("prefill_charged_tokens", json::num(self.prefill_charged_tokens as f64)),
+            (
+                "reference_prefill_charged_tokens",
+                json::num(self.reference_prefill_charged_tokens as f64),
+            ),
+            ("goodput_tokens_per_sec", json::num(self.report.summary.goodput_tokens_per_sec)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("registry_equal", json::Value::Bool(self.registry_equal)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+/// Result of the `specbranch-scenario-slo` gate: the `slo-tiered-mix`
+/// scenario (Poisson arrivals of an urgent well-drafted chat tier plus a
+/// patient poorly-drafted digest tier on a second model pair) measured
+/// under the adaptive control plane and under a static γ grid
+/// {2, 6, 12}, all over one shared schedule, then replayed through the
+/// same priority queueing model. Per-request speculation seeds are fixed,
+/// so acceptance draws are correlated across configurations and the
+/// comparison is low-variance; greedy decoding keeps the committed
+/// streams byte-identical across all four runs.
+pub struct ScenarioSloSmoke {
+    /// p99 end-to-end latency of the adaptive run.
+    pub e2e_p99: f64,
+    /// Best (lowest) static-γ p99 in the same invocation.
+    pub best_static_e2e_p99: f64,
+    pub best_static_name: String,
+    /// Deadline-hit rate of the adaptive run.
+    pub deadline_hit_rate: f64,
+    /// Best (highest) static-γ deadline-hit rate.
+    pub best_static_deadline_hit_rate: f64,
+    /// Rounds the adaptive control plane actually planned.
+    pub adaptive_rounds: u64,
+    pub streams_match: bool,
+    pub registry_equal: bool,
+    /// Full scenario report of the adaptive run (the CI artifact).
+    pub report: ScenarioReport,
+    /// Reports of the static grid points.
+    pub statics: Vec<(String, ScenarioReport)>,
+}
+
+/// Run the `slo-tiered-mix` scenario under adaptive control and a static
+/// γ grid over one shared schedule.
+pub fn scenario_slo_smoke() -> ScenarioSloSmoke {
+    let base = Scenario::named("slo-tiered-mix").expect("slo-tiered-mix is a named scenario");
+    let specs = base.schedule();
+    let adaptive_m = base.measure(&specs).expect("slo-tiered-mix: adaptive measurement");
+    let adaptive_rec = base.replay(&specs, &adaptive_m.requests);
+    let report = ScenarioReport::new(
+        "slo-tiered-mix",
+        base.seed,
+        "virtual",
+        adaptive_rec,
+        adaptive_m.extras(),
+    );
+    let mut streams_match = true;
+    let mut registry_equal = adaptive_m.registry_equal();
+    let mut statics: Vec<(String, ScenarioReport)> = Vec::new();
+    for g in [2usize, 6, 12] {
+        let name = format!("static-g{g}");
+        let w = base.clone().adaptive(false).gamma(g);
+        let m = w
+            .measure(&specs)
+            .unwrap_or_else(|e| panic!("slo-tiered-mix: {name} measurement: {e}"));
+        streams_match = streams_match
+            && m.requests.len() == adaptive_m.requests.len()
+            && m.requests.iter().zip(&adaptive_m.requests).all(|(a, b)| a.text == b.text);
+        registry_equal = registry_equal && m.registry_equal();
+        let rec = w.replay(&specs, &m.requests);
+        let scenario = format!("slo-tiered-mix-{name}");
+        statics.push((name, ScenarioReport::new(&scenario, w.seed, "virtual", rec, m.extras())));
+    }
+    let (best_static_name, best_static_e2e_p99) = statics
+        .iter()
+        .map(|(n, r)| (n.clone(), r.summary.e2e_p99))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite p99"))
+        .expect("static grid nonempty");
+    let best_static_deadline_hit_rate = statics
+        .iter()
+        .map(|(_, r)| r.summary.deadline_hit_rate.unwrap_or(0.0))
+        .fold(0.0f64, f64::max);
+    let adaptive_rounds = adaptive_m.requests.iter().map(|r| r.adaptive_rounds).sum();
+    ScenarioSloSmoke {
+        e2e_p99: report.summary.e2e_p99,
+        best_static_e2e_p99,
+        best_static_name,
+        deadline_hit_rate: report.summary.deadline_hit_rate.unwrap_or(0.0),
+        best_static_deadline_hit_rate,
+        adaptive_rounds,
+        streams_match,
+        registry_equal,
+        report,
+        statics,
+    }
+}
+
+impl ScenarioSloSmoke {
+    /// The armed in-run assertions for `specbranch-scenario-slo`. The p99
+    /// comparison is strict: acceptance draws are shared across
+    /// configurations, and per-tier the adaptive plan strictly dominates
+    /// every grid point's per-token cost, so the tail must improve.
+    pub fn failures(&self, _tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.adaptive_rounds == 0 {
+            f.push(
+                "specbranch-scenario-slo: the control plane never planned a round".to_string(),
+            );
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-scenario-slo: adaptive streams diverged from the static \
+                 references under greedy decoding"
+                    .to_string(),
+            );
+        }
+        if !self.registry_equal {
+            f.push(
+                "specbranch-scenario-slo: registry generated_tokens != Σ per-response stats"
+                    .to_string(),
+            );
+        }
+        if self.e2e_p99 >= self.best_static_e2e_p99 {
+            f.push(format!(
+                "REGRESSION specbranch-scenario-slo: adaptive p99 e2e {:.1} ms not below \
+                 the best static's {:.1} ms ({})",
+                self.e2e_p99, self.best_static_e2e_p99, self.best_static_name
+            ));
+        }
+        if self.deadline_hit_rate < self.best_static_deadline_hit_rate {
+            f.push(format!(
+                "REGRESSION specbranch-scenario-slo: adaptive deadline-hit rate {:.3} \
+                 below the best static's {:.3}",
+                self.deadline_hit_rate, self.best_static_deadline_hit_rate
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-scenario-slo` entry of
+    /// `BENCH_ci.json` (in-run gate only: the grid is measured in the
+    /// same invocation).
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("scenario", json::s(&self.report.scenario)),
+            ("e2e_p99", json::num(self.e2e_p99)),
+            ("best_static", json::s(&self.best_static_name)),
+            ("best_static_e2e_p99", json::num(self.best_static_e2e_p99)),
+            ("deadline_hit_rate", json::num(self.deadline_hit_rate)),
+            (
+                "best_static_deadline_hit_rate",
+                json::num(self.best_static_deadline_hit_rate),
+            ),
+            ("adaptive_rounds", json::num(self.adaptive_rounds as f64)),
+            ("goodput_tokens_per_sec", json::num(self.report.summary.goodput_tokens_per_sec)),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("registry_equal", json::Value::Bool(self.registry_equal)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Absolute baseline gate
 // ---------------------------------------------------------------------------
 
@@ -1046,5 +1360,43 @@ mod tests {
         assert_eq!(run.registry.resumed, run.registry.preemptions);
         assert!(run.registry.repeat_prefill_tokens > 0);
         assert!(run.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn scenario_prefix_smoke_gates_pass() {
+        // The armed in-run scenario-percentile gate: the rag-shared-prefix
+        // scenario must hit the cache, strictly cut charged prefill below
+        // the cache-off twin, keep streams byte-identical, and strictly
+        // improve p95 TTFT through the queueing replay.
+        let run = scenario_prefix_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.prefix_hits > 0 && run.prefix_tokens_saved > 0);
+        assert!(run.prefill_charged_tokens < run.reference_prefill_charged_tokens);
+        assert!(run.cached_ttft_p95 < run.uncached_ttft_p95);
+        assert!(run.streams_match && run.registry_equal);
+        assert_eq!(run.report.summary.cancelled, 0, "rag scenario has no cancel class");
+        assert_eq!(run.report.summary.requests, 28);
+    }
+
+    #[test]
+    fn scenario_slo_smoke_gates_pass() {
+        // The armed in-run SLO gate: on the tiered-deadline mix the
+        // adaptive control plane must plan rounds, keep streams
+        // byte-identical to every static grid point under greedy, strictly
+        // beat the best static p99 e2e latency, and hold its
+        // deadline-hit rate.
+        let run = scenario_slo_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.adaptive_rounds > 0);
+        assert!(run.e2e_p99 < run.best_static_e2e_p99);
+        assert!(run.deadline_hit_rate >= run.best_static_deadline_hit_rate);
+        assert!(run.streams_match && run.registry_equal);
+        assert_eq!(run.statics.len(), 3);
+        assert!(
+            run.report.summary.deadline_hit_rate.is_some(),
+            "every slo-tiered-mix class carries a deadline"
+        );
     }
 }

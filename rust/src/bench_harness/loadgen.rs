@@ -1,24 +1,32 @@
-//! Mux load generator: drive a live server's tagged (v2) wire protocol
-//! with N connections × M in-flight requests per connection, and report
-//! wall-clock plus virtual-clock throughput.
+//! Live-wire load generator: drive a running server's tagged (v2) mux
+//! protocol with a [`Workload`]'s request list and report real
+//! client-side wall-clock latencies as a [`ScenarioReport`].
 //!
-//! This is the measurement half of the multiplexed protocol: one
-//! connection with `inflight > 1` keeps that many requests live in the
-//! coordinator simultaneously (observable as `inflight_peak` in the
-//! server metrics), which is exactly what serialized v1 clients could
-//! never do. The CLI `specbranch loadgen` subcommand and the CI
-//! bench-smoke artifact both ride this module, so the numbers in
-//! `LOADGEN_ci.json` are produced by the same code paths the tests
-//! exercise.
+//! This is the wall-time twin of the deterministic scenario path
+//! ([`Workload::run_report`]): the same scheduled requests, but
+//! submitted over N real TCP connections each keeping a closed-loop
+//! window of `inflight` streamed requests open. TTFT is measured to the
+//! first `PART` frame, end-to-end latency to the final reply; both are
+//! machine-dependent wall times (the report's `time_domain` is
+//! `"wall"`), while `service_ms` still carries the per-request virtual
+//! decode clock so throughput can be cross-checked against the
+//! deterministic layer. Arrival-time offsets and `cancel_after_ms` are
+//! replay-layer semantics and are not paced here — the live path is a
+//! closed-loop stress shape, not a timed replay.
+
+use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::server::Client;
-use crate::util::json;
+use crate::bench_harness::report::{RequestRecord, ScenarioReport};
+use crate::bench_harness::workload::{Arrival, LengthDist, RequestSpec, Workload};
+use crate::server::{Client, MuxEvent, MuxOpts};
 
-/// One load-generation run: every connection keeps a closed-loop window
-/// of `inflight` tagged requests open until it has completed
-/// `requests_per_conn` of them.
+/// Legacy flag-bag for the pre-scenario loadgen CLI. Thin wrapper kept so
+/// `--connections/--inflight/--requests/--max-new` invocations continue
+/// to work; new code should compose a [`Workload`] directly.
+#[deprecated(note = "compose a bench_harness::workload::Workload instead")]
 #[derive(Clone, Copy, Debug)]
 pub struct LoadgenConfig {
     pub connections: usize,
@@ -27,117 +35,199 @@ pub struct LoadgenConfig {
     pub max_new: usize,
 }
 
+#[allow(deprecated)]
 impl Default for LoadgenConfig {
     fn default() -> Self {
         Self { connections: 2, inflight: 4, requests_per_conn: 8, max_new: 48 }
     }
 }
 
-/// Aggregate results of one [`run`].
-#[derive(Clone, Copy, Debug)]
-pub struct LoadgenReport {
-    pub connections: usize,
-    pub inflight: usize,
-    pub total_requests: u64,
-    pub generated_tokens: u64,
-    /// Wall-clock duration of the whole run (ms) and the throughput it
-    /// implies — machine-dependent, reported for operators.
-    pub wall_ms: f64,
-    pub wall_tokens_per_sec: f64,
-    /// Σ per-request virtual decode clock (ms) and the deterministic
-    /// throughput it implies — bit-stable on the sim backend.
-    pub clock_ms: f64,
-    pub clock_tokens_per_sec: f64,
-    /// High-water mark of concurrently in-flight requests, read from the
-    /// server's METRICS after the run; proves the mux overlapped work.
-    pub inflight_peak: u64,
-}
+#[allow(deprecated)]
+impl LoadgenConfig {
+    pub fn connections(mut self, n: usize) -> Self {
+        self.connections = n;
+        self
+    }
 
-impl LoadgenReport {
-    pub fn to_json(&self) -> json::Value {
-        json::obj(vec![
-            ("connections", json::num(self.connections as f64)),
-            ("inflight", json::num(self.inflight as f64)),
-            ("total_requests", json::num(self.total_requests as f64)),
-            ("generated_tokens", json::num(self.generated_tokens as f64)),
-            ("wall_ms", json::num(self.wall_ms)),
-            ("wall_tokens_per_sec", json::num(self.wall_tokens_per_sec)),
-            ("clock_ms", json::num(self.clock_ms)),
-            ("clock_tokens_per_sec", json::num(self.clock_tokens_per_sec)),
-            ("inflight_peak", json::num(self.inflight_peak as f64)),
-        ])
+    pub fn inflight(mut self, n: usize) -> Self {
+        self.inflight = n;
+        self
+    }
+
+    pub fn requests_per_conn(mut self, n: usize) -> Self {
+        self.requests_per_conn = n;
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    /// The workload equivalent of the legacy flags: a closed-loop run of
+    /// `connections × requests_per_conn` fixed-length requests.
+    pub fn into_workload(self, seed: u64) -> Workload {
+        Workload::new(seed)
+            .connections(self.connections.max(1))
+            .inflight(self.inflight.max(1))
+            .requests(self.connections.max(1) * self.requests_per_conn)
+            .arrival(Arrival::closed_loop(self.inflight.max(1)))
+            .lengths(LengthDist::fixed(24), LengthDist::fixed(self.max_new.max(1)))
     }
 }
 
-/// Drive one connection's closed loop: keep up to `inflight` tagged
-/// requests open, awaiting the oldest and refilling until
-/// `requests_per_conn` have completed. Returns (tokens, virtual clock ms).
-fn drive_connection(addr: &str, conn: usize, cfg: &LoadgenConfig) -> Result<(u64, f64)> {
+/// One in-flight request of a connection's closed-loop window.
+struct Pending {
+    spec: RequestSpec,
+    at: Instant,
+    /// Submission offset from the shared run start (ms).
+    arrival_ms: f64,
+    /// Wall time to the first streamed `PART`, once seen.
+    ttft_ms: Option<f64>,
+}
+
+fn submit_spec(
+    client: &mut Client,
+    spec: &RequestSpec,
+    t0: Instant,
+    inflight: &mut HashMap<String, Pending>,
+) -> Result<()> {
+    let tag = format!("q{}", spec.index);
+    let opts = MuxOpts {
+        streaming: true,
+        priority: spec.priority,
+        deadline_ms: spec.deadline_ms,
+    };
+    client
+        .submit_with(&tag, &spec.prompt, spec.max_new, opts)
+        .with_context(|| format!("submitting {tag}"))?;
+    // lint:allow(determinism): loadgen timestamps real wire submissions
+    let at = Instant::now();
+    let arrival_ms = at.duration_since(t0).as_secs_f64() * 1000.0;
+    inflight.insert(tag, Pending { spec: spec.clone(), at, arrival_ms, ttft_ms: None });
+    Ok(())
+}
+
+/// Drive one connection's closed loop: keep up to `window` streamed
+/// requests open, recording wall TTFT (first `PART`) and e2e (final
+/// reply) per request, refilling the window as replies land.
+fn drive_connection(
+    addr: &str,
+    specs: &[RequestSpec],
+    window: usize,
+    t0: Instant,
+) -> Result<Vec<RequestRecord>> {
     let mut client = Client::connect(addr)?;
-    let tag = |r: usize| format!("c{conn}r{r}");
-    let prompt = |r: usize| format!("load c{conn} r{r} the quick brown fox jumps over");
-    let window = cfg.inflight.max(1);
-    let mut submitted = 0usize;
-    while submitted < cfg.requests_per_conn && submitted < window {
-        client.submit(&tag(submitted), &prompt(submitted), cfg.max_new)?;
-        submitted += 1;
+    let mut inflight: HashMap<String, Pending> = HashMap::new();
+    let mut records = Vec::with_capacity(specs.len());
+    let window = window.max(1);
+    let mut next = 0usize;
+    while next < specs.len() && next < window {
+        submit_spec(&mut client, &specs[next], t0, &mut inflight)?;
+        next += 1;
     }
-    let mut tokens = 0u64;
-    let mut clock_ms = 0.0f64;
-    for r in 0..cfg.requests_per_conn {
-        let (reply, _parts) = client.await_reply(&tag(r))?;
-        let generated = reply
-            .stats
-            .get("generated")
-            .and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow!("reply without generated count"))?;
-        tokens += generated as u64;
-        clock_ms += reply.stats.get("elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        if submitted < cfg.requests_per_conn {
-            client.submit(&tag(submitted), &prompt(submitted), cfg.max_new)?;
-            submitted += 1;
+    while records.len() < specs.len() {
+        match client.next_event()? {
+            MuxEvent::Part { tag, .. } => {
+                if let Some(p) = inflight.get_mut(&tag) {
+                    if p.ttft_ms.is_none() {
+                        p.ttft_ms = Some(p.at.elapsed().as_secs_f64() * 1000.0);
+                    }
+                }
+            }
+            MuxEvent::Done { tag, reply } => {
+                let p = inflight
+                    .remove(&tag)
+                    .ok_or_else(|| anyhow!("reply for unknown tag '{tag}'"))?;
+                let stat = |key: &str| -> Result<f64> {
+                    reply
+                        .stats
+                        .get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow!("request {tag}: reply stats missing '{key}'"))
+                };
+                let generated = stat("generated")?;
+                let service_ms = stat("elapsed_ms")?;
+                let e2e_ms = p.at.elapsed().as_secs_f64() * 1000.0;
+                let ttft_ms = p.ttft_ms.unwrap_or(e2e_ms);
+                let tpot_ms =
+                    if generated > 1.0 { (e2e_ms - ttft_ms) / (generated - 1.0) } else { 0.0 };
+                records.push(RequestRecord {
+                    index: p.spec.index,
+                    class: p.spec.class.clone(),
+                    arrival_ms: p.arrival_ms,
+                    start_ms: p.arrival_ms,
+                    ttft_ms,
+                    e2e_ms,
+                    service_ms,
+                    tpot_ms,
+                    generated_tokens: generated as u64,
+                    cancelled: false,
+                    deadline_ms: p.spec.deadline_ms.map(|d| d as f64),
+                    deadline_met: p.spec.deadline_ms.map(|d| e2e_ms <= d as f64),
+                });
+                if next < specs.len() {
+                    submit_spec(&mut client, &specs[next], t0, &mut inflight)?;
+                    next += 1;
+                }
+            }
+            MuxEvent::Err { tag, msg } => {
+                let scope = tag.map(|t| format!(" for '{t}'")).unwrap_or_default();
+                return Err(anyhow!("server error{scope}: {msg}"));
+            }
+            MuxEvent::Cancelled { .. } | MuxEvent::Metrics(_) => {}
         }
     }
     client.quit()?;
-    Ok((tokens, clock_ms))
+    Ok(records)
 }
 
-/// Run the load against a server at `addr`. Spawns one thread per
-/// connection; blocks until every request has completed.
-pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+/// Run a workload against a live server at `addr`. Spawns one thread per
+/// connection (requests split round-robin by index), blocks until every
+/// request has completed, and folds the wall-clock records plus run-wide
+/// throughput extras into a `"wall"`-domain [`ScenarioReport`].
+pub fn run(addr: &str, scenario: &str, w: &Workload) -> Result<ScenarioReport> {
+    let specs = w.schedule();
+    let connections = w.connections.max(1);
+    let mut per_conn: Vec<Vec<RequestSpec>> = vec![Vec::new(); connections];
+    for s in &specs {
+        per_conn[s.index % connections].push(s.clone());
+    }
     // lint:allow(determinism): loadgen reports real client-side wall-clock latency
-    let t0 = std::time::Instant::now();
-    let handles: Vec<_> = (0..cfg.connections.max(1))
-        .map(|conn| {
+    let t0 = Instant::now();
+    let handles: Vec<_> = per_conn
+        .into_iter()
+        .map(|conn_specs| {
             let addr = addr.to_string();
-            let cfg = *cfg;
-            std::thread::spawn(move || drive_connection(&addr, conn, &cfg))
+            let window = w.inflight;
+            std::thread::spawn(move || drive_connection(&addr, &conn_specs, window, t0))
         })
         .collect();
-    let mut tokens = 0u64;
-    let mut clock_ms = 0.0f64;
-    for h in handles {
-        let (t, c) = h.join().map_err(|_| anyhow!("loadgen connection panicked"))??;
-        tokens += t;
-        clock_ms += c;
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(specs.len());
+    for (conn, h) in handles.into_iter().enumerate() {
+        let conn_records = h
+            .join()
+            .map_err(|_| anyhow!("loadgen connection {conn} panicked"))?
+            .with_context(|| format!("loadgen connection {conn}"))?;
+        records.extend(conn_records);
     }
+    records.sort_by_key(|r| r.index);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let clock_ms: f64 = records.iter().map(|r| r.service_ms).sum();
+    let tokens: u64 = records.iter().map(|r| r.generated_tokens).sum();
     let mut probe = Client::connect(addr).context("metrics probe")?;
     let metrics = probe.metrics()?;
-    let inflight_peak =
-        metrics.get("inflight_peak").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let inflight_peak = metrics.get("inflight_peak").and_then(|v| v.as_f64()).unwrap_or(0.0);
     probe.quit()?;
-    let total = (cfg.connections.max(1) * cfg.requests_per_conn) as u64;
     let tps = |ms: f64| if ms <= 0.0 { 0.0 } else { tokens as f64 * 1000.0 / ms };
-    Ok(LoadgenReport {
-        connections: cfg.connections.max(1),
-        inflight: cfg.inflight.max(1),
-        total_requests: total,
-        generated_tokens: tokens,
-        wall_ms,
-        wall_tokens_per_sec: tps(wall_ms),
-        clock_ms,
-        clock_tokens_per_sec: tps(clock_ms),
-        inflight_peak,
-    })
+    let extras: Vec<(String, f64)> = vec![
+        ("connections".to_string(), connections as f64),
+        ("inflight".to_string(), w.inflight as f64),
+        ("wall_ms".to_string(), wall_ms),
+        ("wall_tokens_per_sec".to_string(), tps(wall_ms)),
+        ("clock_ms".to_string(), clock_ms),
+        ("clock_tokens_per_sec".to_string(), tps(clock_ms)),
+        ("inflight_peak".to_string(), inflight_peak),
+    ];
+    Ok(ScenarioReport::new(scenario, w.seed, "wall", records, extras))
 }

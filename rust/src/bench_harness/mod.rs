@@ -9,5 +9,6 @@ pub mod gate;
 pub mod loadgen;
 pub mod report;
 pub mod runner;
+pub mod workload;
 
 pub use runner::{BatchedRun, Runner, Scale};

@@ -1,11 +1,14 @@
 //! Report formatting + persistence for the bench harness: aligned text
-//! tables (what `cargo bench` prints) and JSON files under
-//! `target/bench_reports/` (what EXPERIMENTS.md quotes).
+//! tables (what `cargo bench` prints), JSON files under
+//! `target/bench_reports/` (what EXPERIMENTS.md quotes), and the shared
+//! [`ScenarioReport`] schema that `loadgen`, the scenario gates, and the
+//! CI artifacts all serialize through.
 
 use std::io::Write as _;
 use std::path::PathBuf;
 
 use crate::util::json::{self, Value};
+use crate::util::stats;
 
 /// A simple aligned text table.
 pub struct Table {
@@ -106,6 +109,229 @@ pub fn emit(name: &str, tables: &[Table]) {
     let v = json::arr(tables.iter().map(|t| t.to_json()).collect());
     let path = save(name, &v);
     println!("[report saved to {}]", path.display());
+}
+
+/// One request's timings inside a scenario run. `arrival_ms`-relative
+/// fields are in the report's `time_domain` (virtual scheduler clock for
+/// scenario replays, wall clock for live `loadgen` runs).
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    /// Position in the workload's submission order.
+    pub index: usize,
+    /// Traffic-class name the request was drawn from.
+    pub class: String,
+    /// Offset of the request's arrival from the run start (ms).
+    pub arrival_ms: f64,
+    /// Offset at which service actually began (ms; ≥ `arrival_ms`).
+    pub start_ms: f64,
+    /// Arrival → first committed output token (queue wait included).
+    pub ttft_ms: f64,
+    /// Arrival → completion (or cancellation), end to end.
+    pub e2e_ms: f64,
+    /// Decode service time alone (the per-request virtual decode clock).
+    pub service_ms: f64,
+    /// Mean time per output token after the first (TPOT).
+    pub tpot_ms: f64,
+    pub generated_tokens: u64,
+    pub cancelled: bool,
+    /// Deadline the request carried, if any (ms from arrival).
+    pub deadline_ms: Option<f64>,
+    /// Whether the deadline was met; `None` when no deadline was set.
+    pub deadline_met: Option<bool>,
+}
+
+impl RequestRecord {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("index", json::num(self.index as f64)),
+            ("class", json::s(&self.class)),
+            ("arrival_ms", json::num(self.arrival_ms)),
+            ("start_ms", json::num(self.start_ms)),
+            ("ttft_ms", json::num(self.ttft_ms)),
+            ("e2e_ms", json::num(self.e2e_ms)),
+            ("service_ms", json::num(self.service_ms)),
+            ("tpot_ms", json::num(self.tpot_ms)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+            ("cancelled", json::b(self.cancelled)),
+            (
+                "deadline_ms",
+                self.deadline_ms.map(json::num).unwrap_or(Value::Null),
+            ),
+            (
+                "deadline_met",
+                self.deadline_met.map(json::b).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+}
+
+/// Percentile roll-up of a scenario's [`RequestRecord`]s. Quantiles use
+/// exact nearest-rank extraction ([`stats::quantile`]), so two identical
+/// record sets always summarize to identical bytes.
+#[derive(Clone, Debug)]
+pub struct ScenarioSummary {
+    pub requests: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub generated_tokens: u64,
+    /// Run start → last completion (ms).
+    pub makespan_ms: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_p99: f64,
+    pub tpot_p50: f64,
+    /// Fraction of deadline-carrying, non-cancelled requests that met
+    /// their deadline; `None` when the scenario carries no deadlines.
+    pub deadline_hit_rate: Option<f64>,
+    /// Tokens from non-cancelled requests that met their deadline (or
+    /// carried none), per second of makespan.
+    pub goodput_tokens_per_sec: f64,
+}
+
+impl ScenarioSummary {
+    /// Aggregate records into percentiles. Cancelled requests count
+    /// toward `requests`/`cancelled` but are excluded from the latency
+    /// percentiles and goodput.
+    pub fn from_records(records: &[RequestRecord]) -> ScenarioSummary {
+        let done: Vec<&RequestRecord> = records.iter().filter(|r| !r.cancelled).collect();
+        let makespan_ms = records
+            .iter()
+            .map(|r| r.arrival_ms + r.e2e_ms)
+            .fold(0.0f64, f64::max);
+        let ttft: Vec<f64> = done.iter().map(|r| r.ttft_ms).collect();
+        let e2e: Vec<f64> = done.iter().map(|r| r.e2e_ms).collect();
+        let tpot: Vec<f64> = done
+            .iter()
+            .filter(|r| r.generated_tokens > 1)
+            .map(|r| r.tpot_ms)
+            .collect();
+        let (ttft_p50, ttft_p95, ttft_p99) = stats::p50_p95_p99(&ttft);
+        let (e2e_p50, e2e_p95, e2e_p99) = stats::p50_p95_p99(&e2e);
+        let with_deadline: Vec<&&RequestRecord> =
+            done.iter().filter(|r| r.deadline_ms.is_some()).collect();
+        let deadline_hit_rate = if with_deadline.is_empty() {
+            None
+        } else {
+            let hit = with_deadline.iter().filter(|r| r.deadline_met == Some(true)).count();
+            Some(hit as f64 / with_deadline.len() as f64)
+        };
+        let good_tokens: u64 = done
+            .iter()
+            .filter(|r| r.deadline_met != Some(false))
+            .map(|r| r.generated_tokens)
+            .sum();
+        let goodput_tokens_per_sec = if makespan_ms > 0.0 {
+            good_tokens as f64 * 1000.0 / makespan_ms
+        } else {
+            0.0
+        };
+        ScenarioSummary {
+            requests: records.len() as u64,
+            completed: done.len() as u64,
+            cancelled: (records.len() - done.len()) as u64,
+            generated_tokens: done.iter().map(|r| r.generated_tokens).sum(),
+            makespan_ms,
+            ttft_p50,
+            ttft_p95,
+            ttft_p99,
+            e2e_p50,
+            e2e_p95,
+            e2e_p99,
+            tpot_p50: stats::quantile(&tpot, 50.0),
+            deadline_hit_rate,
+            goodput_tokens_per_sec,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("cancelled", json::num(self.cancelled as f64)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+            ("makespan_ms", json::num(self.makespan_ms)),
+            ("ttft_p50", json::num(self.ttft_p50)),
+            ("ttft_p95", json::num(self.ttft_p95)),
+            ("ttft_p99", json::num(self.ttft_p99)),
+            ("e2e_p50", json::num(self.e2e_p50)),
+            ("e2e_p95", json::num(self.e2e_p95)),
+            ("e2e_p99", json::num(self.e2e_p99)),
+            ("tpot_p50", json::num(self.tpot_p50)),
+            (
+                "deadline_hit_rate",
+                self.deadline_hit_rate.map(json::num).unwrap_or(Value::Null),
+            ),
+            ("goodput_tokens_per_sec", json::num(self.goodput_tokens_per_sec)),
+        ])
+    }
+}
+
+/// The one report schema every scenario surface shares: per-request
+/// records plus a percentile summary, serialized with sorted keys so two
+/// same-seed runs produce byte-identical JSON. `BENCH_ci.json` scenario
+/// sections, `LOADGEN_ci.json`, `SCENARIO_<name>.json`, and the gate
+/// details all carry this shape.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name (or `adhoc` for legacy flag-driven loadgen runs).
+    pub scenario: String,
+    pub seed: u64,
+    /// `"virtual"` (deterministic scheduler clock) or `"wall"` (live
+    /// loadgen timing — machine-dependent, excluded from byte-equality
+    /// claims).
+    pub time_domain: String,
+    pub records: Vec<RequestRecord>,
+    pub summary: ScenarioSummary,
+    /// Surface-specific scalars (e.g. loadgen's `wall_tokens_per_sec`,
+    /// a gate's `prefix_hits`). Kept sorted by key at construction.
+    pub extras: Vec<(String, f64)>,
+}
+
+impl ScenarioReport {
+    /// Build a report from records: summarizes, sorts `extras` by key.
+    pub fn new(
+        scenario: &str,
+        seed: u64,
+        time_domain: &str,
+        records: Vec<RequestRecord>,
+        mut extras: Vec<(String, f64)>,
+    ) -> ScenarioReport {
+        extras.sort_by(|a, b| a.0.cmp(&b.0));
+        let summary = ScenarioSummary::from_records(&records);
+        ScenarioReport {
+            scenario: scenario.to_string(),
+            seed,
+            time_domain: time_domain.to_string(),
+            records,
+            summary,
+            extras,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("scenario", json::s(&self.scenario)),
+            ("seed", json::num(self.seed as f64)),
+            ("time_domain", json::s(&self.time_domain)),
+            ("summary", self.summary.to_json()),
+            (
+                "records",
+                json::arr(self.records.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "extras",
+                json::obj(
+                    self.extras
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 pub fn f2(x: f64) -> String {

@@ -1,0 +1,1111 @@
+//! Compositional workload scenarios: deterministic, seeded traffic shapes
+//! driven end-to-end through the real server + coordinator.
+//!
+//! The module answers the survey critique that speculative-decoding gains
+//! must be reported across workload regimes, not one smoke shape: a
+//! [`Workload`] composes an arrival process ([`Arrival`]), heavy-tailed
+//! length distributions ([`LengthDist`]), prefix popularity
+//! ([`PrefixPopularity`]) and a weighted blend of [`TrafficClass`]es into
+//! a reproducible request list, and three named [`Scenario`]s
+//! (`chat-bursty`, `rag-shared-prefix`, `slo-tiered-mix`) exercise the
+//! prefix cache, the adaptive control plane and the priority/deadline
+//! scheduler under those shapes.
+//!
+//! Execution is two-layered so the result is bit-deterministic:
+//!
+//! 1. **Measure** ([`Workload::measure`]) — every request is decoded
+//!    through a real TCP [`Server`] + [`Coordinator`] (one worker,
+//!    virtual scheduler clock, round-robin admission, all submissions
+//!    before any await, no priorities/deadlines passed down), which makes
+//!    each request's *service* profile — virtual decode clock, TTFT to
+//!    the first committed token, generated tokens, prefill charge — a
+//!    pure function of the workload seed.
+//! 2. **Replay** ([`Workload::replay`]) — a deterministic virtual-time
+//!    queueing simulation dispatches those measured service profiles over
+//!    `replay_servers` servers under the scenario's scheduling policy
+//!    (FIFO / priority / EDF), models closed-loop windows and client
+//!    cancellations, and emits the per-request
+//!    [`RequestRecord`]s that [`ScenarioReport`] summarizes into exact
+//!    p50/p95/p99 percentiles, deadline-hit rate and goodput.
+//!
+//! Two same-seed runs therefore produce byte-identical `ScenarioReport`
+//! JSON — the property `rust/tests/workload_suite.rs` pins and the
+//! percentile gates in [`super::gate`] rely on.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::backend::sim::{SimBackend, SimConfig};
+use crate::backend::Backend;
+use crate::bench_harness::report::{RequestRecord, ScenarioReport};
+use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use crate::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
+use crate::kvcache::{PrefixCache, PREFIX_CACHE_DEFAULT_TOKENS};
+use crate::server::{Client, Server};
+use crate::util::clock::Clock;
+use crate::util::json;
+use crate::util::prng::Pcg32;
+
+/// Characters workload prompts are built from: a strict subset of the
+/// tokenizer alphabet (1 char = 1 token) that excludes spaces, newlines
+/// and `=` so generated prompts can never collide with the wire
+/// protocol's option words (`pri=`, `deadline=`) or line framing.
+const PROMPT_CHARSET: &[u8; 36] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+
+fn rand_text(rng: &mut Pcg32, len: usize) -> String {
+    (0..len.max(1))
+        .map(|_| PROMPT_CHARSET[rng.below(PROMPT_CHARSET.len() as u32) as usize] as char)
+        .collect()
+}
+
+/// Deterministic shared-prefix text for one (class, template) pair —
+/// identical across every request that draws the template, so the prefix
+/// cache's chain-keyed chunks hit.
+fn template_text(class_idx: usize, template: usize, len: usize) -> String {
+    (0..len)
+        .map(|i| {
+            let k = (class_idx * 31 + template * 7 + i * 3) % PROMPT_CHARSET.len();
+            PROMPT_CHARSET[k] as char
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Primitives: arrivals, lengths, prefix popularity
+// ---------------------------------------------------------------------------
+
+/// Arrival process of a workload. `schedule` returns nondecreasing
+/// microsecond offsets from the run start; open-loop processes use
+/// exponential gaps (Poisson) or Lewis thinning against the peak rate
+/// (bursty / ramp), all from the workload's seeded PRNG.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// All requests available at t=0; concurrency is bounded by the
+    /// closed-loop window (loadgen: per-connection in-flight window;
+    /// replay: effective server count).
+    ClosedLoop { concurrency: usize },
+    /// Open-loop Poisson arrivals at a constant rate.
+    Poisson { rate_per_sec: f64 },
+    /// On/off bursts: `burst_per_sec` during `on_ms` windows,
+    /// `base_per_sec` during the `off_ms` gaps between them.
+    Bursty { base_per_sec: f64, burst_per_sec: f64, on_ms: u64, off_ms: u64 },
+    /// Diurnal-style linear ramp from `start_per_sec` to `end_per_sec`
+    /// over `ramp_ms`, constant afterwards.
+    Ramp { start_per_sec: f64, end_per_sec: f64, ramp_ms: u64 },
+}
+
+impl Arrival {
+    pub fn closed_loop(concurrency: usize) -> Arrival {
+        Arrival::ClosedLoop { concurrency }
+    }
+
+    pub fn poisson(rate_per_sec: f64) -> Arrival {
+        Arrival::Poisson { rate_per_sec }
+    }
+
+    pub fn bursty(base_per_sec: f64, burst_per_sec: f64, on_ms: u64, off_ms: u64) -> Arrival {
+        Arrival::Bursty { base_per_sec, burst_per_sec, on_ms, off_ms }
+    }
+
+    pub fn ramp(start_per_sec: f64, end_per_sec: f64, ramp_ms: u64) -> Arrival {
+        Arrival::Ramp { start_per_sec, end_per_sec, ramp_ms }
+    }
+
+    /// Draw `n` arrival offsets (µs, nondecreasing).
+    pub fn schedule(&self, n: usize, rng: &mut Pcg32) -> Vec<u64> {
+        match *self {
+            Arrival::ClosedLoop { .. } => vec![0; n],
+            Arrival::Poisson { rate_per_sec } => {
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += exp_gap(rng, rate_per_sec);
+                        (t * 1e6) as u64
+                    })
+                    .collect()
+            }
+            Arrival::Bursty { base_per_sec, burst_per_sec, on_ms, off_ms } => {
+                let cycle = (on_ms + off_ms).max(1) as f64 / 1000.0;
+                let on = on_ms as f64 / 1000.0;
+                let peak = base_per_sec.max(burst_per_sec);
+                thin(n, rng, peak, |t| {
+                    if t % cycle < on { burst_per_sec } else { base_per_sec }
+                })
+            }
+            Arrival::Ramp { start_per_sec, end_per_sec, ramp_ms } => {
+                let ramp = ramp_ms.max(1) as f64 / 1000.0;
+                let peak = start_per_sec.max(end_per_sec);
+                thin(n, rng, peak, |t| {
+                    start_per_sec + (end_per_sec - start_per_sec) * (t / ramp).min(1.0)
+                })
+            }
+        }
+    }
+}
+
+/// One exponential inter-arrival gap (seconds) at `rate` events/sec.
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> f64 {
+    // next_f64 ∈ [0,1) so the argument of ln is in (0,1] — total.
+    -(1.0 - rng.next_f64()).ln() / rate.max(1e-9)
+}
+
+/// Lewis thinning: candidates at the peak rate, accepted with
+/// probability rate(t)/peak — an exact sampler for any bounded
+/// time-varying rate function.
+fn thin(n: usize, rng: &mut Pcg32, peak: f64, rate_at: impl Fn(f64) -> f64) -> Vec<u64> {
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += exp_gap(rng, peak);
+        if rng.next_f64() * peak.max(1e-9) < rate_at(t) {
+            out.push((t * 1e6) as u64);
+        }
+    }
+    out
+}
+
+/// Token-length distribution for prompts and outputs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LengthDist {
+    Fixed(usize),
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: usize, hi: usize },
+    /// Heavy-tailed log-normal around `median`, capped at `cap`.
+    LogNormal { median: f64, sigma: f64, cap: usize },
+}
+
+impl LengthDist {
+    pub fn fixed(n: usize) -> LengthDist {
+        LengthDist::Fixed(n)
+    }
+
+    pub fn uniform(lo: usize, hi: usize) -> LengthDist {
+        LengthDist::Uniform { lo, hi }
+    }
+
+    pub fn log_normal(median: f64, sigma: f64, cap: usize) -> LengthDist {
+        LengthDist::LogNormal { median, sigma, cap }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => {
+                let (lo, hi) = (lo.min(hi), lo.max(hi));
+                lo + rng.below((hi - lo + 1) as u32) as usize
+            }
+            LengthDist::LogNormal { median, sigma, cap } => {
+                let x = (median.max(1.0).ln() + sigma * rng.normal()).exp();
+                (x.round() as usize).clamp(1, cap.max(1))
+            }
+        }
+    }
+}
+
+/// Prompt-prefix popularity: unique prompts, or a Zipf-skewed draw over a
+/// small pool of shared templates (the shape the cross-request prefix
+/// cache is built for).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrefixPopularity {
+    /// Every prompt is independent random text.
+    Unique,
+    /// `templates` shared prefixes of `prefix_tokens` tokens each, drawn
+    /// with probability ∝ rank^-exponent; the class's prompt-length
+    /// distribution then sizes the per-request unique tail.
+    Zipf { templates: usize, exponent: f64, prefix_tokens: usize },
+}
+
+impl PrefixPopularity {
+    pub fn unique() -> PrefixPopularity {
+        PrefixPopularity::Unique
+    }
+
+    pub fn zipf(templates: usize, exponent: f64, prefix_tokens: usize) -> PrefixPopularity {
+        PrefixPopularity::Zipf { templates: templates.max(1), exponent, prefix_tokens }
+    }
+}
+
+fn zipf_index(rng: &mut Pcg32, templates: usize, exponent: f64) -> usize {
+    let total: f64 = (1..=templates).map(|i| (i as f64).powf(-exponent)).sum();
+    let mut u = rng.next_f64() * total;
+    for i in 0..templates {
+        u -= ((i + 1) as f64).powf(-exponent);
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    templates - 1
+}
+
+// ---------------------------------------------------------------------------
+// Traffic classes and the workload builder
+// ---------------------------------------------------------------------------
+
+/// One stream of a blended workload: model pair, task, lengths, prefix
+/// popularity and SLO attributes, drawn with probability ∝ `weight`.
+/// Construct via [`TrafficClass::new`] + the builder methods — the
+/// api-discipline lint bans struct-literal construction at call sites.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    pub name: String,
+    pub weight: f64,
+    pub pair: PairId,
+    pub task: TaskId,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    pub prefixes: PrefixPopularity,
+    /// Larger = more urgent under the priority replay policy.
+    pub priority: i32,
+    /// Deadline in ms from arrival (EDF replay + deadline-hit metric).
+    pub deadline_ms: Option<u64>,
+    /// Client cancellation this long after arrival (replay-modelled).
+    pub cancel_after_ms: Option<u64>,
+}
+
+impl TrafficClass {
+    pub fn new(name: &str) -> TrafficClass {
+        Self {
+            name: name.to_string(),
+            weight: 1.0,
+            pair: PairId::Vicuna68m13b,
+            task: TaskId::MtBench,
+            prompt_len: LengthDist::uniform(16, 32),
+            output_len: LengthDist::uniform(32, 48),
+            prefixes: PrefixPopularity::Unique,
+            priority: 0,
+            deadline_ms: None,
+            cancel_after_ms: None,
+        }
+    }
+
+    pub fn weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+
+    pub fn pair(mut self, pair: PairId) -> Self {
+        self.pair = pair;
+        self
+    }
+
+    pub fn task(mut self, task: TaskId) -> Self {
+        self.task = task;
+        self
+    }
+
+    pub fn prompt_len(mut self, dist: LengthDist) -> Self {
+        self.prompt_len = dist;
+        self
+    }
+
+    pub fn output_len(mut self, dist: LengthDist) -> Self {
+        self.output_len = dist;
+        self
+    }
+
+    pub fn prefixes(mut self, pop: PrefixPopularity) -> Self {
+        self.prefixes = pop;
+        self
+    }
+
+    pub fn priority(mut self, pri: i32) -> Self {
+        self.priority = pri;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn cancel_after_ms(mut self, ms: u64) -> Self {
+        self.cancel_after_ms = Some(ms);
+        self
+    }
+}
+
+/// One fully-specified request drawn from a workload: everything the
+/// measurement and replay layers need, fixed at schedule time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestSpec {
+    /// Position in submission order (== index into the schedule).
+    pub index: usize,
+    pub class: String,
+    pub pair: PairId,
+    pub task: TaskId,
+    pub arrival_us: u64,
+    pub prompt: String,
+    pub prompt_tokens: usize,
+    pub max_new: usize,
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
+    pub cancel_after_ms: Option<u64>,
+    /// Shared-prefix template index, when the class draws Zipf prefixes.
+    pub template: Option<usize>,
+}
+
+/// A composable workload: seed + arrival process + traffic blend +
+/// execution options. Construct via `Workload::new(seed)` and the
+/// builder methods (struct literals are lint-banned at call sites);
+/// `.lengths(…)`/`.prefixes(…)`/`.pair(…)`/`.task(…)` shape the implicit
+/// single class, `.blend(…)` replaces it with an explicit mix.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub seed: u64,
+    pub arrival: Arrival,
+    pub requests: usize,
+    /// Live-loadgen fan-out (ignored by the deterministic scenario path).
+    pub connections: usize,
+    /// Live-loadgen per-connection closed-loop window.
+    pub inflight: usize,
+    pub engine: EngineId,
+    pub adaptive: bool,
+    pub prefix_cache: bool,
+    /// Static draft length γ; 0 = the engine default.
+    pub gamma: usize,
+    /// Server pool size the replay layer dispatches over.
+    pub replay_servers: usize,
+    /// Dispatch policy of the replay layer.
+    pub policy: SchedulePolicy,
+    base: TrafficClass,
+    classes: Vec<TrafficClass>,
+}
+
+impl Workload {
+    pub fn new(seed: u64) -> Workload {
+        Self {
+            seed,
+            arrival: Arrival::closed_loop(4),
+            requests: 16,
+            connections: 2,
+            inflight: 4,
+            engine: EngineId::SpecBranch,
+            adaptive: false,
+            prefix_cache: false,
+            gamma: 0,
+            replay_servers: 2,
+            policy: SchedulePolicy::RoundRobin,
+            base: TrafficClass::new("default"),
+            classes: Vec::new(),
+        }
+    }
+
+    pub fn arrival(mut self, arrival: Arrival) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn connections(mut self, n: usize) -> Self {
+        self.connections = n.max(1);
+        self
+    }
+
+    pub fn inflight(mut self, n: usize) -> Self {
+        self.inflight = n.max(1);
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineId) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.adaptive = on;
+        self
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = on;
+        self
+    }
+
+    pub fn gamma(mut self, gamma: usize) -> Self {
+        self.gamma = gamma;
+        self
+    }
+
+    pub fn replay_servers(mut self, n: usize) -> Self {
+        self.replay_servers = n.max(1);
+        self
+    }
+
+    pub fn policy(mut self, policy: SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Prompt/output length distributions of the implicit single class.
+    pub fn lengths(mut self, prompt: LengthDist, output: LengthDist) -> Self {
+        self.base = self.base.prompt_len(prompt).output_len(output);
+        self
+    }
+
+    /// Prefix popularity of the implicit single class.
+    pub fn prefixes(mut self, pop: PrefixPopularity) -> Self {
+        self.base = self.base.prefixes(pop);
+        self
+    }
+
+    pub fn pair(mut self, pair: PairId) -> Self {
+        self.base = self.base.pair(pair);
+        self
+    }
+
+    pub fn task(mut self, task: TaskId) -> Self {
+        self.base = self.base.task(task);
+        self
+    }
+
+    /// Replace the implicit single class with an explicit weighted blend.
+    pub fn blend(mut self, classes: Vec<TrafficClass>) -> Self {
+        self.classes = classes;
+        self
+    }
+
+    fn effective_classes(&self) -> Vec<TrafficClass> {
+        if self.classes.is_empty() {
+            vec![self.base.clone()]
+        } else {
+            self.classes.clone()
+        }
+    }
+
+    /// Expand the workload into its deterministic request list. Five
+    /// forked PRNG sub-streams (arrivals, class mix, lengths, prefix
+    /// popularity, tail text) keep each dimension's draws independent of
+    /// the others' sample counts.
+    pub fn schedule(&self) -> Vec<RequestSpec> {
+        let mut root = Pcg32::new(self.seed);
+        let mut arrival_rng = root.fork(1);
+        let mut class_rng = root.fork(2);
+        let mut len_rng = root.fork(3);
+        let mut prefix_rng = root.fork(4);
+        let mut tail_rng = root.fork(5);
+        let arrivals = self.arrival.schedule(self.requests, &mut arrival_rng);
+        let classes = self.effective_classes();
+        let weights: Vec<f32> = classes.iter().map(|c| c.weight.max(0.0) as f32).collect();
+        let mut specs = Vec::with_capacity(self.requests);
+        for (i, &arrival_us) in arrivals.iter().enumerate() {
+            let ci = if classes.len() == 1 { 0 } else { class_rng.categorical(&weights) };
+            let c = &classes[ci];
+            let max_new = c.output_len.sample(&mut len_rng);
+            let (prompt, prompt_tokens, template) = match c.prefixes {
+                PrefixPopularity::Unique => {
+                    let len = c.prompt_len.sample(&mut len_rng);
+                    (rand_text(&mut tail_rng, len), len.max(1), None)
+                }
+                PrefixPopularity::Zipf { templates, exponent, prefix_tokens } => {
+                    let t = zipf_index(&mut prefix_rng, templates, exponent);
+                    let tail = c.prompt_len.sample(&mut len_rng);
+                    let mut p = template_text(ci, t, prefix_tokens);
+                    p.push_str(&rand_text(&mut tail_rng, tail));
+                    (p, prefix_tokens + tail.max(1), Some(t))
+                }
+            };
+            specs.push(RequestSpec {
+                index: i,
+                class: c.name.clone(),
+                pair: c.pair,
+                task: c.task,
+                arrival_us,
+                prompt,
+                prompt_tokens,
+                max_new,
+                priority: c.priority,
+                deadline_ms: c.deadline_ms,
+                cancel_after_ms: c.cancel_after_ms,
+                template,
+            });
+        }
+        specs
+    }
+
+    /// Decode every request through a real TCP server + coordinator and
+    /// return its deterministic service profile. One server per (pair,
+    /// task) group — a sim backend is calibrated per pair/task — each
+    /// with a single worker, virtual scheduler clock and round-robin
+    /// admission; all of a group's requests are submitted (in index
+    /// order, over one connection) before any reply is awaited, so
+    /// admission order, prefix-cache hit pattern and the adaptive
+    /// control plane's per-request γ plans are all seed-deterministic.
+    /// Priorities, deadlines and cancellations are *not* passed to the
+    /// coordinator here — they are replay-layer semantics.
+    pub fn measure(&self, specs: &[RequestSpec]) -> Result<Measurement> {
+        let mut groups: Vec<((PairId, TaskId), Vec<usize>)> = Vec::new();
+        for (pos, s) in specs.iter().enumerate() {
+            match groups.iter_mut().find(|(k, _)| *k == (s.pair, s.task)) {
+                Some((_, v)) => v.push(pos),
+                None => groups.push(((s.pair, s.task), vec![pos])),
+            }
+        }
+        let mut per: Vec<Option<MeasuredRequest>> = vec![None; specs.len()];
+        let mut group_metrics = Vec::new();
+        for ((pair, task), idxs) in &groups {
+            let cache = if self.prefix_cache {
+                Some(Arc::new(PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS)))
+            } else {
+                None
+            };
+            let backends: Vec<Box<dyn Backend + Send>> = (0..1)
+                .map(|_| {
+                    let mut cfg = SimConfig::new(ModelPair::get(*pair), Task::get(*task));
+                    cfg.prefix = cache.clone();
+                    Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+                })
+                .collect();
+            let budget = idxs.iter().map(|&i| specs[i].max_new).max().unwrap_or(48);
+            let gamma = if self.gamma > 0 { self.gamma } else { EngineConfig::default().gamma };
+            let alpha_hint = if self.adaptive {
+                Some(Task::get(*task).effective_alpha(ModelPair::get(*pair).alpha))
+            } else {
+                None
+            };
+            let sched = SchedulerConfig::default()
+                .with_clock(Clock::virtual_clock())
+                .with_adaptive(self.adaptive)
+                .with_alpha_hint(alpha_hint)
+                .with_prefix_cache(cache);
+            let coord = Coordinator::start_with(
+                backends,
+                self.engine,
+                EngineConfig { gamma, max_new_tokens: budget, ..Default::default() },
+                sched,
+            );
+            let server = Server::bind("127.0.0.1:0", coord).context("binding workload server")?;
+            let addr = server.local_addr().to_string();
+            std::thread::spawn(move || server.serve(None));
+            let mut client = Client::connect(&addr).context("connecting workload client")?;
+            for &i in idxs {
+                client
+                    .submit(&format!("r{i}"), &specs[i].prompt, specs[i].max_new)
+                    .with_context(|| format!("submitting request {i}"))?;
+            }
+            for &i in idxs {
+                let (reply, _parts) = client
+                    .await_reply(&format!("r{i}"))
+                    .with_context(|| format!("awaiting request {i}"))?;
+                let stat = |key: &str| -> Result<f64> {
+                    reply
+                        .stats
+                        .get(key)
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow!("request {i}: reply stats missing '{key}'"))
+                };
+                per[i] = Some(MeasuredRequest {
+                    generated: stat("generated")? as u64,
+                    service_ms: stat("elapsed_ms")?,
+                    ttft_service_ms: stat("ttft_ms")?,
+                    adaptive_rounds: stat("adaptive_rounds").unwrap_or(0.0) as u64,
+                    prefill_cached_tokens: stat("prefill_cached_tokens").unwrap_or(0.0) as u64,
+                    prefill_charged_tokens: stat("prefill_charged_tokens").unwrap_or(0.0) as u64,
+                    text: reply.text,
+                });
+            }
+            let metrics = client.metrics().context("workload metrics probe")?;
+            let _ = client.quit();
+            group_metrics.push(GroupMetrics { pair: *pair, task: *task, metrics });
+        }
+        let requests = per
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.ok_or_else(|| anyhow!("request {i} was never measured")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Measurement { requests, groups: group_metrics })
+    }
+
+    /// Replay the measured service profiles through a deterministic
+    /// virtual-time queueing simulation: `replay_servers` servers, the
+    /// workload's dispatch policy, closed-loop windows and modelled
+    /// cancellations. Pure integer-microsecond event simulation — no
+    /// threads, no wall clock — so records are bit-stable.
+    pub fn replay(
+        &self,
+        specs: &[RequestSpec],
+        measured: &[MeasuredRequest],
+    ) -> Vec<RequestRecord> {
+        assert_eq!(specs.len(), measured.len(), "specs/measured length mismatch");
+        let n = specs.len();
+        let servers = match self.arrival {
+            Arrival::ClosedLoop { concurrency } => {
+                self.replay_servers.min(concurrency.max(1)).max(1)
+            }
+            _ => self.replay_servers.max(1),
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (specs[i].arrival_us, i));
+        let mut server_free = vec![0u64; servers];
+        let mut pending: Vec<usize> = Vec::new();
+        let mut next = 0usize;
+        let mut records: Vec<Option<RequestRecord>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        let us_ms = |us: u64| us as f64 / 1000.0;
+        while done < n {
+            let si = (0..server_free.len())
+                .min_by_key(|&k| server_free[k])
+                .expect("at least one replay server");
+            let mut now = server_free[si];
+            if pending.is_empty() {
+                now = now.max(specs[order[next]].arrival_us);
+            }
+            while next < n && specs[order[next]].arrival_us <= now {
+                pending.push(order[next]);
+                next += 1;
+            }
+            let pos = match self.policy {
+                SchedulePolicy::RoundRobin => (0..pending.len())
+                    .min_by_key(|&p| {
+                        let i = pending[p];
+                        (specs[i].arrival_us, i)
+                    })
+                    .expect("pending nonempty"),
+                SchedulePolicy::Priority => (0..pending.len())
+                    .min_by_key(|&p| {
+                        let i = pending[p];
+                        (std::cmp::Reverse(specs[i].priority), specs[i].arrival_us, i)
+                    })
+                    .expect("pending nonempty"),
+                SchedulePolicy::EarliestDeadline => (0..pending.len())
+                    .min_by_key(|&p| {
+                        let i = pending[p];
+                        let abs = specs[i]
+                            .deadline_ms
+                            .map(|ms| specs[i].arrival_us.saturating_add(ms * 1000))
+                            .unwrap_or(u64::MAX);
+                        (abs, specs[i].arrival_us, i)
+                    })
+                    .expect("pending nonempty"),
+            };
+            let i = pending.remove(pos);
+            let spec = &specs[i];
+            let m = &measured[i];
+            let arrival = spec.arrival_us;
+            let start = now.max(arrival);
+            let service_us = (m.service_ms * 1000.0).round() as u64;
+            let ttft_service_us = (m.ttft_service_ms * 1000.0).round() as u64;
+            let cancel_at = spec.cancel_after_ms.map(|ms| arrival.saturating_add(ms * 1000));
+            let deadline_f = spec.deadline_ms.map(|d| d as f64);
+            let rec = if let Some(c) = cancel_at.filter(|&c| c <= start) {
+                // Cancelled while still queued: the server is never
+                // occupied, so dispatch capacity is returned to the pool.
+                RequestRecord {
+                    index: i,
+                    class: spec.class.clone(),
+                    arrival_ms: us_ms(arrival),
+                    start_ms: us_ms(c),
+                    ttft_ms: us_ms(c - arrival),
+                    e2e_ms: us_ms(c - arrival),
+                    service_ms: 0.0,
+                    tpot_ms: 0.0,
+                    generated_tokens: 0,
+                    cancelled: true,
+                    deadline_ms: deadline_f,
+                    deadline_met: None,
+                }
+            } else {
+                let end_full = start + service_us;
+                let end = cancel_at.map(|c| c.min(end_full)).unwrap_or(end_full);
+                server_free[si] = end;
+                let cancelled = end < end_full;
+                let served_us = end - start;
+                let (tokens, ttft_us) = if !cancelled {
+                    (m.generated, (start - arrival) + ttft_service_us)
+                } else if served_us >= ttft_service_us && m.generated > 0 {
+                    // Mid-decode cancel: prorate the committed tokens.
+                    let frac = served_us as f64 / service_us.max(1) as f64;
+                    (
+                        (m.generated as f64 * frac).floor() as u64,
+                        (start - arrival) + ttft_service_us,
+                    )
+                } else {
+                    (0, end - arrival)
+                };
+                let tpot = if m.generated > 1 {
+                    (m.service_ms - m.ttft_service_ms) / (m.generated - 1) as f64
+                } else {
+                    0.0
+                };
+                RequestRecord {
+                    index: i,
+                    class: spec.class.clone(),
+                    arrival_ms: us_ms(arrival),
+                    start_ms: us_ms(start),
+                    ttft_ms: us_ms(ttft_us),
+                    e2e_ms: us_ms(end - arrival),
+                    service_ms: us_ms(served_us),
+                    tpot_ms: tpot,
+                    generated_tokens: tokens,
+                    cancelled,
+                    deadline_ms: deadline_f,
+                    deadline_met: if cancelled {
+                        None
+                    } else {
+                        spec.deadline_ms.map(|d| end - arrival <= d * 1000)
+                    },
+                }
+            };
+            records[i] = Some(rec);
+            done += 1;
+        }
+        records.into_iter().map(|r| r.expect("every request replayed")).collect()
+    }
+
+    /// Schedule → measure → replay → [`ScenarioReport`], with the
+    /// deterministic measurement totals attached as extras.
+    pub fn run_report(&self, name: &str) -> Result<ScenarioReport> {
+        let specs = self.schedule();
+        let measured = self.measure(&specs)?;
+        let records = self.replay(&specs, &measured.requests);
+        Ok(ScenarioReport::new(name, self.seed, "virtual", records, measured.extras()))
+    }
+}
+
+/// One request's deterministic service profile out of [`Workload::measure`].
+#[derive(Clone, Debug)]
+pub struct MeasuredRequest {
+    pub generated: u64,
+    /// Per-request virtual decode clock (prefill + rounds), ms.
+    pub service_ms: f64,
+    /// Session start → first committed token, within `service_ms`.
+    pub ttft_service_ms: f64,
+    pub adaptive_rounds: u64,
+    pub prefill_cached_tokens: u64,
+    pub prefill_charged_tokens: u64,
+    /// Committed text — the stream-identity surface the gates compare.
+    pub text: String,
+}
+
+/// Registry snapshot of one (pair, task) measurement group.
+pub struct GroupMetrics {
+    pub pair: PairId,
+    pub task: TaskId,
+    pub metrics: json::Value,
+}
+
+/// Everything [`Workload::measure`] observed.
+pub struct Measurement {
+    /// Index-aligned with the scheduled specs.
+    pub requests: Vec<MeasuredRequest>,
+    pub groups: Vec<GroupMetrics>,
+}
+
+impl Measurement {
+    /// Σ of a registry counter across the measurement groups.
+    pub fn registry_sum(&self, key: &str) -> u64 {
+        self.groups
+            .iter()
+            .map(|g| g.metrics.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64)
+            .sum()
+    }
+
+    /// Registry/per-response consistency: the coordinator's
+    /// `generated_tokens` counter equals the Σ of per-reply stats.
+    pub fn registry_equal(&self) -> bool {
+        self.registry_sum("generated_tokens")
+            == self.requests.iter().map(|r| r.generated).sum::<u64>()
+    }
+
+    /// Deterministic totals worth carrying in a report's extras.
+    pub fn extras(&self) -> Vec<(String, f64)> {
+        let sum = |f: fn(&MeasuredRequest) -> u64| -> f64 {
+            self.requests.iter().map(f).sum::<u64>() as f64
+        };
+        vec![
+            ("adaptive_rounds".to_string(), sum(|r| r.adaptive_rounds)),
+            ("prefill_cached_tokens".to_string(), sum(|r| r.prefill_cached_tokens)),
+            ("prefill_charged_tokens".to_string(), sum(|r| r.prefill_charged_tokens)),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Named scenarios
+// ---------------------------------------------------------------------------
+
+/// The named scenario library.
+pub struct Scenario;
+
+impl Scenario {
+    pub const NAMES: [&'static str; 3] =
+        ["chat-bursty", "rag-shared-prefix", "slo-tiered-mix"];
+
+    /// Look up a named scenario's workload definition.
+    ///
+    /// * `chat-bursty` — on/off bursts of a priority-tiered chat mix
+    ///   (log-normal interactive traffic, uniform background fill, a
+    ///   sliver of impatient clients that cancel at 400 ms), dispatched
+    ///   by priority.
+    /// * `rag-shared-prefix` — a diurnal ramp of RAG lookups sharing four
+    ///   Zipf-popular 64-token prompt templates with short unique tails;
+    ///   runs with the cross-request prefix cache on.
+    /// * `slo-tiered-mix` — Poisson arrivals of a two-tier SLO mix (an
+    ///   urgent well-drafted chat tier and a patient poorly-drafted
+    ///   digest tier on a second model pair) under the adaptive
+    ///   speculation control plane.
+    pub fn named(name: &str) -> Option<Workload> {
+        match name {
+            "chat-bursty" => Some(
+                Workload::new(11)
+                    .requests(24)
+                    .arrival(Arrival::bursty(1.0, 6.0, 1500, 1500))
+                    .engine(EngineId::SpecBranch)
+                    .policy(SchedulePolicy::Priority)
+                    .replay_servers(2)
+                    .blend(vec![
+                        TrafficClass::new("interactive")
+                            .weight(0.70)
+                            .pair(PairId::Vicuna68m13b)
+                            .task(TaskId::MtBench)
+                            .prompt_len(LengthDist::log_normal(24.0, 0.6, 96))
+                            .output_len(LengthDist::log_normal(48.0, 0.5, 96))
+                            .priority(5),
+                        TrafficClass::new("background")
+                            .weight(0.25)
+                            .pair(PairId::Vicuna68m13b)
+                            .task(TaskId::Qa)
+                            .prompt_len(LengthDist::uniform(32, 64))
+                            .output_len(LengthDist::uniform(48, 96))
+                            .priority(1),
+                        TrafficClass::new("impatient")
+                            .weight(0.05)
+                            .pair(PairId::Vicuna68m13b)
+                            .task(TaskId::MtBench)
+                            .prompt_len(LengthDist::uniform(16, 32))
+                            .output_len(LengthDist::uniform(32, 64))
+                            .priority(5)
+                            .cancel_after_ms(400),
+                    ]),
+            ),
+            "rag-shared-prefix" => Some(
+                Workload::new(7)
+                    .requests(28)
+                    .arrival(Arrival::ramp(1.0, 5.0, 6000))
+                    .engine(EngineId::SpecBranch)
+                    .policy(SchedulePolicy::RoundRobin)
+                    .replay_servers(2)
+                    .prefix_cache(true)
+                    .pair(PairId::Vicuna68m13b)
+                    .task(TaskId::Rag)
+                    .prefixes(PrefixPopularity::zipf(4, 1.1, 64))
+                    .lengths(LengthDist::uniform(8, 16), LengthDist::uniform(32, 48)),
+            ),
+            "slo-tiered-mix" => Some(
+                Workload::new(5)
+                    .requests(40)
+                    .arrival(Arrival::poisson(3.0))
+                    .engine(EngineId::Sps)
+                    .adaptive(true)
+                    .policy(SchedulePolicy::Priority)
+                    .replay_servers(2)
+                    .blend(vec![
+                        TrafficClass::new("chat")
+                            .weight(0.55)
+                            .pair(PairId::Vicuna68m13b)
+                            .task(TaskId::Translation)
+                            .prompt_len(LengthDist::uniform(24, 40))
+                            .output_len(LengthDist::uniform(32, 64))
+                            .priority(8)
+                            .deadline_ms(4000),
+                        TrafficClass::new("digest")
+                            .weight(0.45)
+                            .pair(PairId::Deepseek13b33b)
+                            .task(TaskId::CnnDm)
+                            .prompt_len(LengthDist::uniform(48, 72))
+                            .output_len(LengthDist::uniform(48, 80))
+                            .priority(2)
+                            .deadline_ms(7000),
+                    ]),
+            ),
+            _ => None,
+        }
+    }
+}
+
+/// Run one named scenario end-to-end and return its report.
+pub fn run_scenario(name: &str) -> Result<ScenarioReport> {
+    let w = Scenario::named(name).ok_or_else(|| {
+        anyhow!("unknown scenario '{name}' (known: {})", Scenario::NAMES.join(", "))
+    })?;
+    w.run_report(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic() {
+        for name in Scenario::NAMES {
+            let w = Scenario::named(name).expect("named scenario");
+            assert_eq!(w.schedule(), w.schedule(), "{name} schedule not reproducible");
+        }
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing() {
+        let mut rng = Pcg32::new(3);
+        for arrival in [
+            Arrival::closed_loop(4),
+            Arrival::poisson(5.0),
+            Arrival::bursty(1.0, 8.0, 500, 500),
+            Arrival::ramp(1.0, 6.0, 2000),
+        ] {
+            let times = arrival.schedule(64, &mut rng);
+            assert_eq!(times.len(), 64);
+            assert!(times.windows(2).all(|w| w[0] <= w[1]), "{arrival:?} not sorted");
+        }
+        assert!(Arrival::closed_loop(4).schedule(8, &mut rng).iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn bursty_is_denser_in_bursts() {
+        let mut rng = Pcg32::new(9);
+        let times = Arrival::bursty(0.5, 20.0, 1000, 1000).schedule(200, &mut rng);
+        let cycle_us = 2_000_000u64;
+        let on = times.iter().filter(|&&t| t % cycle_us < 1_000_000).count();
+        assert!(on > times.len() * 3 / 4, "only {on}/200 arrivals in burst windows");
+    }
+
+    #[test]
+    fn length_dists_respect_bounds() {
+        let mut rng = Pcg32::new(5);
+        for _ in 0..200 {
+            assert_eq!(LengthDist::fixed(7).sample(&mut rng), 7);
+            let u = LengthDist::uniform(8, 16).sample(&mut rng);
+            assert!((8..=16).contains(&u), "uniform out of range: {u}");
+            let l = LengthDist::log_normal(24.0, 0.6, 96).sample(&mut rng);
+            assert!((1..=96).contains(&l), "lognormal out of range: {l}");
+        }
+    }
+
+    #[test]
+    fn zipf_prefers_the_head() {
+        let mut rng = Pcg32::new(7);
+        let mut counts = [0usize; 4];
+        for _ in 0..400 {
+            counts[zipf_index(&mut rng, 4, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[3], "zipf head {counts:?} not favored");
+        assert!(counts.iter().all(|&c| c > 0), "zipf never drew a tail template: {counts:?}");
+    }
+
+    #[test]
+    fn shared_prefixes_are_shared_and_prompt_charset_is_safe() {
+        let w = Scenario::named("rag-shared-prefix").expect("scenario");
+        let specs = w.schedule();
+        let mut by_template: std::collections::HashMap<usize, String> =
+            std::collections::HashMap::new();
+        for s in &specs {
+            let t = s.template.expect("zipf template");
+            let prefix = &s.prompt[..64];
+            by_template
+                .entry(t)
+                .and_modify(|p| assert_eq!(p, prefix, "template {t} prefix diverged"))
+                .or_insert_with(|| prefix.to_string());
+            assert_eq!(s.prompt.len(), s.prompt_tokens, "1 char = 1 token");
+            assert!(
+                s.prompt.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit()),
+                "prompt leaked outside the safe charset: {}",
+                s.prompt
+            );
+        }
+        assert!(by_template.len() > 1, "zipf draw collapsed to one template");
+    }
+
+    #[test]
+    fn blend_draws_every_class() {
+        let w = Scenario::named("chat-bursty").expect("scenario");
+        let specs = w.schedule();
+        let interactive = specs.iter().filter(|s| s.class == "interactive").count();
+        let background = specs.iter().filter(|s| s.class == "background").count();
+        assert!(interactive > background, "weights ignored: {interactive} vs {background}");
+        assert!(background > 0, "background class never drawn");
+    }
+
+    #[test]
+    fn replay_models_queueing_priorities_and_cancels() {
+        // Two requests arriving together on one server: the
+        // higher-priority one starts first, the other waits.
+        let spec = |i: usize, pri: i32, cancel: Option<u64>| RequestSpec {
+            index: i,
+            class: format!("c{pri}"),
+            pair: PairId::Vicuna68m13b,
+            task: TaskId::MtBench,
+            arrival_us: 0,
+            prompt: "abc".to_string(),
+            prompt_tokens: 3,
+            max_new: 8,
+            priority: pri,
+            deadline_ms: Some(1500),
+            cancel_after_ms: cancel,
+            template: None,
+        };
+        let m = |ms: f64| MeasuredRequest {
+            generated: 8,
+            service_ms: ms,
+            ttft_service_ms: 100.0,
+            adaptive_rounds: 0,
+            prefill_cached_tokens: 0,
+            prefill_charged_tokens: 3,
+            text: "xxxxxxxx".to_string(),
+        };
+        let w = Workload::new(1)
+            .arrival(Arrival::poisson(1.0))
+            .policy(SchedulePolicy::Priority)
+            .replay_servers(1);
+        let specs = vec![spec(0, 1, None), spec(1, 9, None), spec(2, 1, Some(500))];
+        let rec = w.replay(&specs, &[m(1000.0), m(1000.0), m(1000.0)]);
+        assert_eq!(rec[1].start_ms, 0.0, "high priority should dispatch first");
+        assert!((rec[1].ttft_ms - 100.0).abs() < 1e-9);
+        assert!((rec[1].e2e_ms - 1000.0).abs() < 1e-9);
+        assert_eq!(rec[1].deadline_met, Some(true));
+        // Request 0 waits behind request 1 and misses its deadline.
+        assert!((rec[0].start_ms - 1000.0).abs() < 1e-9);
+        assert!((rec[0].e2e_ms - 2000.0).abs() < 1e-9);
+        assert_eq!(rec[0].deadline_met, Some(false));
+        // Request 2 is cancelled at 500 ms, before it ever starts.
+        assert!(rec[2].cancelled);
+        assert_eq!(rec[2].generated_tokens, 0);
+        assert!((rec[2].e2e_ms - 500.0).abs() < 1e-9);
+        assert_eq!(rec[2].deadline_met, None);
+    }
+
+    #[test]
+    fn replay_truncates_mid_decode_cancels() {
+        let specs = vec![RequestSpec {
+            index: 0,
+            class: "c".to_string(),
+            pair: PairId::Vicuna68m13b,
+            task: TaskId::MtBench,
+            arrival_us: 0,
+            prompt: "abc".to_string(),
+            prompt_tokens: 3,
+            max_new: 10,
+            priority: 0,
+            deadline_ms: None,
+            cancel_after_ms: Some(600),
+            template: None,
+        }];
+        let measured = vec![MeasuredRequest {
+            generated: 10,
+            service_ms: 1000.0,
+            ttft_service_ms: 100.0,
+            adaptive_rounds: 0,
+            prefill_cached_tokens: 0,
+            prefill_charged_tokens: 3,
+            text: "xxxxxxxxxx".to_string(),
+        }];
+        let w = Workload::new(1).arrival(Arrival::poisson(1.0)).replay_servers(1);
+        let rec = w.replay(&specs, &measured);
+        assert!(rec[0].cancelled);
+        assert!((rec[0].e2e_ms - 600.0).abs() < 1e-9);
+        assert!((rec[0].service_ms - 600.0).abs() < 1e-9);
+        assert_eq!(rec[0].generated_tokens, 6, "tokens prorated to the served fraction");
+    }
+}

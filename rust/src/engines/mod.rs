@@ -381,6 +381,14 @@ impl DecodeTask {
             out.new_tokens.len() <= self.budget - self.produced,
             "engine overshot its per-request budget"
         );
+        if self.produced == 0 && !out.new_tokens.is_empty() {
+            // First committed token of this decode cycle: stamp TTFT from
+            // the session clock (the backend synced `elapsed_ms` when it
+            // committed this round). `DecodeStats::merge` makes the value
+            // request-absolute across preempt/resume cycles.
+            let stats = self.session.stats_mut();
+            stats.ttft_ms = stats.elapsed_ms;
+        }
         self.produced += out.new_tokens.len();
         if self.produced >= self.budget {
             out.done = true;

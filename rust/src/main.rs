@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   generate   one-shot generation (PJRT artifacts or simulator)
 //!   serve      start the line-protocol TCP server over the coordinator
-//!   loadgen    mux load generator: N connections × M in-flight requests
+//!   loadgen    workload scenarios (--scenario) or the legacy mux load
+//!              generator: N connections × M in-flight requests
 //!   bench      regenerate a paper experiment (same code as `cargo bench`)
 //!   analyze    repo-specific static analysis (determinism, panic-path,
 //!              counter-sync, api-discipline, lock-order)
@@ -13,6 +14,7 @@
 //!   specbranch generate --prompt "the only way" --engine specbranch
 //!   specbranch generate --backend sim --pair vicuna --task mtbench
 //!   specbranch serve --addr 127.0.0.1:7799 --workers 2
+//!   specbranch loadgen --scenario rag-shared-prefix
 //!   specbranch loadgen --connections 4 --inflight 8 --requests 16
 //!   specbranch bench --exp table2
 
@@ -21,7 +23,8 @@
 use specbranch::backend::pjrt::PjrtBackend;
 use specbranch::backend::sim::{SimBackend, SimConfig};
 use specbranch::backend::Backend;
-use specbranch::bench_harness::{experiments, gate, loadgen, Scale};
+use specbranch::bench_harness::report::ScenarioReport;
+use specbranch::bench_harness::{experiments, gate, loadgen, workload, Scale};
 use specbranch::config::{EngineConfig, EngineId, Manifest, ModelPair, PairId, Task};
 use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
@@ -82,10 +85,19 @@ fn print_help() {
                          [--pp]  deploy specbranch in pipeline-parallel\n\
                                  mode (draft run-ahead during verify at PP\n\
                                  utilisation)\n\
-         loadgen flags:  --connections <n> --inflight <m>  mux window per\n\
+         loadgen flags:  --scenario <chat-bursty|rag-shared-prefix|\n\
+                                     slo-tiered-mix|all>  run a named\n\
+                                      workload scenario in-process on the\n\
+                                      deterministic virtual clock; prints\n\
+                                      p50/p95/p99 and writes\n\
+                                      SCENARIO_<name>.json\n\
+                         legacy flags (deprecated thin wrappers over the\n\
+                         workload builder API):\n\
+                         --connections <n> --inflight <m>  mux window per\n\
                                       connection (tagged v2 protocol)\n\
                          --requests <n>  requests per connection\n\
                          --max-new <n>  per-request token budget\n\
+                         --seed <n>  workload seed (default 0)\n\
                          --out <file>  json report (default LOADGEN.json)\n\
                          [--addr <host:port>]  target a running serve;\n\
                                       default self-hosts a sim server\n\
@@ -332,19 +344,86 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
-/// Drive the multiplexed (v2) wire protocol: `--connections` client
+/// Print one scenario report's percentile roll-up.
+fn print_scenario_summary(r: &ScenarioReport) {
+    let s = &r.summary;
+    println!(
+        "loadgen[{}]: {} requests ({} cancelled), {} tokens, makespan {:.1} ms \
+         ({} clock)",
+        r.scenario, s.requests, s.cancelled, s.generated_tokens, s.makespan_ms, r.time_domain
+    );
+    println!(
+        "loadgen[{}]: ttft p50/p95/p99 {:.1}/{:.1}/{:.1} ms | e2e p50/p95/p99 \
+         {:.1}/{:.1}/{:.1} ms | tpot p50 {:.2} ms",
+        r.scenario,
+        s.ttft_p50,
+        s.ttft_p95,
+        s.ttft_p99,
+        s.e2e_p50,
+        s.e2e_p95,
+        s.e2e_p99,
+        s.tpot_p50
+    );
+    match s.deadline_hit_rate {
+        Some(rate) => println!(
+            "loadgen[{}]: goodput {:.1} tok/s, deadline hit rate {:.1}%",
+            r.scenario,
+            s.goodput_tokens_per_sec,
+            rate * 100.0
+        ),
+        None => println!(
+            "loadgen[{}]: goodput {:.1} tok/s",
+            r.scenario, s.goodput_tokens_per_sec
+        ),
+    }
+}
+
+/// `--scenario <name|all>`: run named workload scenarios end-to-end
+/// in-process (schedule → real server measurement → deterministic
+/// queueing replay) and write `SCENARIO_<name>.json` each. Without
+/// `--scenario`, the legacy mux loadgen path: `--connections` client
 /// connections, each keeping `--inflight` tagged requests live at once,
-/// `--requests` per connection in total. By default a sim-backed server is
-/// self-hosted in-process (so the command is a one-liner); `--addr` aims
-/// the same load at a running `serve`. Writes the json report shared with
-/// the CI bench-smoke artifact.
+/// `--requests` per connection — the old flags are thin deprecated
+/// wrappers over the workload builder, reported through the same
+/// [`ScenarioReport`] schema. By default the legacy path self-hosts a
+/// sim-backed server in-process; `--addr` aims the load at a running
+/// `serve`.
 fn cmd_loadgen(args: &Args) -> i32 {
-    let cfg = loadgen::LoadgenConfig {
-        connections: args.get_usize("connections", 2),
-        inflight: args.get_usize("inflight", 4),
-        requests_per_conn: args.get_usize("requests", 8),
-        max_new: args.get_usize("max-new", 48),
-    };
+    if let Some(which) = args.get("scenario") {
+        let names: Vec<&str> = if which == "all" {
+            workload::Scenario::NAMES.to_vec()
+        } else {
+            vec![which]
+        };
+        for name in names {
+            let report = match workload::run_scenario(name) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("loadgen: scenario '{name}' failed: {e:#}");
+                    return 1;
+                }
+            };
+            print_scenario_summary(&report);
+            let path = format!("SCENARIO_{name}.json");
+            if let Err(e) = std::fs::write(&path, report.to_json().to_string_pretty() + "\n") {
+                eprintln!("loadgen: cannot write {path}: {e}");
+                return 2;
+            }
+            println!("loadgen: scenario report written to {path}");
+        }
+        return 0;
+    }
+    println!(
+        "loadgen: note: the flag-driven path is deprecated; prefer \
+         `--scenario <name|all>` or the workload builder API"
+    );
+    #[allow(deprecated)]
+    let w = loadgen::LoadgenConfig::default()
+        .connections(args.get_usize("connections", 2))
+        .inflight(args.get_usize("inflight", 4))
+        .requests_per_conn(args.get_usize("requests", 8))
+        .max_new(args.get_usize("max-new", 48))
+        .into_workload(args.get_u64("seed", 0));
     let out_path = args.get_or("out", "LOADGEN.json");
     let addr = match args.get("addr") {
         Some(a) => a.to_string(),
@@ -383,25 +462,17 @@ fn cmd_loadgen(args: &Args) -> i32 {
             addr
         }
     };
-    let report = match loadgen::run(&addr, &cfg) {
+    let report = match loadgen::run(&addr, "adhoc", &w) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("loadgen failed: {e:#}");
             return 1;
         }
     };
-    println!(
-        "loadgen: {} connections x {} inflight, {} requests, {} tokens",
-        report.connections, report.inflight, report.total_requests, report.generated_tokens
-    );
-    println!(
-        "loadgen: wall {:.1} ms ({:.1} tok/s) | virtual clock {:.1} ms ({:.1} tok/s)",
-        report.wall_ms,
-        report.wall_tokens_per_sec,
-        report.clock_ms,
-        report.clock_tokens_per_sec
-    );
-    println!("loadgen: coordinator inflight peak {}", report.inflight_peak);
+    print_scenario_summary(&report);
+    for (k, v) in &report.extras {
+        println!("loadgen[adhoc]: {k} = {v:.1}");
+    }
     if let Err(e) = std::fs::write(out_path, report.to_json().to_string_pretty() + "\n") {
         eprintln!("loadgen: cannot write {out_path}: {e}");
         return 2;
@@ -447,9 +518,11 @@ fn cmd_bench(args: &Args) -> i32 {
 /// always-armed in-run gates (fused `--verify-batch` vs single-request,
 /// the `specbranch-preempt` scenario vs its own no-preemption path,
 /// the `specbranch-mux` scenario vs its own serial-connection path,
-/// the `specbranch-adaptive` scenario vs its own static (γ, k) grid, and
+/// the `specbranch-adaptive` scenario vs its own static (γ, k) grid,
 /// the `specbranch-prefix` Zipf-shared-prompt scenario vs its own
-/// cache-off path),
+/// cache-off path, and the workload-scenario percentile gates —
+/// `rag-shared-prefix` p95 TTFT vs its cache-off twin and
+/// `slo-tiered-mix` p99/deadline-hit vs its static γ grid),
 /// and compare the deterministic entries against the committed baseline —
 /// exit 1 on any gate failure. All the comparison logic lives in
 /// [`gate`] (`bench_harness::gate`) and is exercised by `cargo test`, so
@@ -547,6 +620,66 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         failed = true;
     }
 
+    // Armed in-run scenario percentile gates: named workload scenarios
+    // end-to-end (seeded schedule → real server measurement →
+    // deterministic queueing replay), compared against twins measured in
+    // the same invocation. rag-shared-prefix must turn removed prefill
+    // work into a strictly better p95 TTFT; slo-tiered-mix must beat the
+    // best static γ on p99 e2e while holding its deadline-hit rate.
+    let sprefix = gate::scenario_prefix_smoke();
+    println!(
+        "bench-smoke: {:<20} p95 ttft {:>6.1} ms (cache-off {:.1})  hits {}  saved {}",
+        "scenario-prefix",
+        sprefix.cached_ttft_p95,
+        sprefix.uncached_ttft_p95,
+        sprefix.prefix_hits,
+        sprefix.prefix_tokens_saved,
+    );
+    for f in sprefix.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
+    let sslo = gate::scenario_slo_smoke();
+    println!(
+        "bench-smoke: {:<20} p99 e2e {:>7.1} ms (best static {} {:.1})  \
+         deadline hit {:.1}% vs {:.1}%",
+        "scenario-slo",
+        sslo.e2e_p99,
+        sslo.best_static_name,
+        sslo.best_static_e2e_p99,
+        sslo.deadline_hit_rate * 100.0,
+        sslo.best_static_deadline_hit_rate * 100.0,
+    );
+    for f in sslo.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
+    // chat-bursty carries no armed comparison; it still runs end-to-end so
+    // its report lands next to the gated scenarios in the CI artifacts.
+    let chat = match workload::run_scenario("chat-bursty") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-smoke: chat-bursty scenario failed: {e:#}");
+            return 2;
+        }
+    };
+    println!(
+        "bench-smoke: {:<20} e2e p95 {:>7.1} ms, {} requests ({} cancelled)",
+        "scenario-chat", chat.summary.e2e_p95, chat.summary.requests, chat.summary.cancelled,
+    );
+    for (name, rep) in [
+        ("chat-bursty", &chat),
+        ("rag-shared-prefix", &sprefix.report),
+        ("slo-tiered-mix", &sslo.report),
+    ] {
+        let path = format!("SCENARIO_{name}.json");
+        if let Err(e) = std::fs::write(&path, rep.to_json().to_string_pretty() + "\n") {
+            eprintln!("bench-smoke: cannot write {path}: {e}");
+            return 2;
+        }
+        println!("bench-smoke: scenario report written to {path}");
+    }
+
     // The committed-baseline form of the report carries only the
     // deterministic entries: the specbranch-preempt numbers depend on the
     // preemption point (thread timing), so they are reported but never
@@ -564,6 +697,8 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     engines_json.push(("specbranch-mux", mux.detail()));
     engines_json.push(("specbranch-adaptive", adaptive.detail()));
     engines_json.push(("specbranch-prefix", prefix.detail()));
+    engines_json.push(("specbranch-scenario-prefix", sprefix.detail()));
+    engines_json.push(("specbranch-scenario-slo", sslo.detail()));
     let report = json::obj(vec![
         ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),

@@ -64,6 +64,10 @@ pub struct DecodeStats {
     /// Prompt tokens the prefill actually processed and priced
     /// (`PrefillReport::charged_tokens`).
     pub prefill_charged_tokens: u64,
+    /// Time to first token (virtual ms): elapsed time from session start
+    /// (prefill included) to the round that committed the request's first
+    /// output token. 0.0 until a token commits.
+    pub ttft_ms: f64,
 }
 
 impl DecodeStats {
@@ -146,6 +150,17 @@ impl DecodeStats {
         self.gamma_shrunk_by_pressure += other.gamma_shrunk_by_pressure;
         self.prefill_cached_tokens += other.prefill_cached_tokens;
         self.prefill_charged_tokens += other.prefill_charged_tokens;
+        // ttft_ms: the first committed token wins. In the preempt/resume
+        // direction (`self` = the later cycle, `other` = the earlier base)
+        // the earlier cycle's TTFT is already request-absolute; a TTFT first
+        // observed in the later cycle is offset by the earlier elapsed time.
+        self.ttft_ms = if other.ttft_ms > 0.0 {
+            other.ttft_ms
+        } else if self.ttft_ms > 0.0 {
+            other.elapsed_ms + self.ttft_ms
+        } else {
+            0.0
+        };
         if let (Some(mine), Some(theirs)) = (&mut self.accepted_hist, &other.accepted_hist) {
             // Bucket-wise merge: O(buckets), not O(total count).
             mine.merge(theirs);

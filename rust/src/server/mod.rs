@@ -107,6 +107,9 @@ fn stats_json(resp: &Response) -> json::Value {
         ("rollback_rate", json::num(resp.stats.rollback_rate())),
         ("tokens_per_sec", json::num(resp.stats.tokens_per_sec())),
         ("elapsed_ms", json::num(resp.stats.elapsed_ms)),
+        // Time to first token on the backend's virtual clock (prefill +
+        // the first committed round); 0 if no token was ever committed.
+        ("ttft_ms", json::num(resp.stats.ttft_ms)),
         ("cancelled", json::Value::Bool(resp.is_cancelled())),
         ("deadline_met", resp.deadline_met.map(json::Value::Bool).unwrap_or(json::Value::Null)),
         ("queue_ms", json::num(resp.queue_ms)),

@@ -96,6 +96,10 @@ pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+pub fn b(v: bool) -> Value {
+    Value::Bool(v)
+}
+
 fn emit(v: &Value, out: &mut String, indent: usize, pretty: bool) {
     let pad = |out: &mut String, n: usize| {
         if pretty {

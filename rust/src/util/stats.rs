@@ -82,6 +82,30 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Exact quantile by the nearest-rank method on a sorted copy: the
+/// smallest sample `x` such that at least `q`% of the sample is `<= x`
+/// (`sorted[ceil(q/100 · n) - 1]`). Unlike [`percentile`] this never
+/// interpolates — the result is always an observed sample, so two runs
+/// that measured identical values report byte-identical quantiles — and
+/// it is total: an empty sample returns 0.0 instead of panicking.
+/// `q` is clamped into (0, 100].
+pub fn quantile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let q = if q.is_finite() { q.clamp(0.0, 100.0) } else { 100.0 };
+    let rank = ((q / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// The (p50, p95, p99) triple of a sample via [`quantile`] — the latency
+/// summary every [`crate::bench_harness::report::ScenarioReport`] carries.
+pub fn p50_p95_p99(samples: &[f64]) -> (f64, f64, f64) {
+    (quantile(samples, 50.0), quantile(samples, 95.0), quantile(samples, 99.0))
+}
+
 /// Integer-bucket histogram (e.g. accepted-length distribution).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -204,6 +228,53 @@ mod tests {
         assert_eq!(percentile(&v, 50.0), 3.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
         assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_nearest_rank_pins_known_samples() {
+        // n = 10, ranks: p50 -> ceil(5.0) = 5th (index 4), p95 -> ceil(9.5)
+        // = 10th (index 9), p99 -> ceil(9.9) = 10th (index 9).
+        let v: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        assert_eq!(quantile(&v, 50.0), 5.0);
+        assert_eq!(quantile(&v, 95.0), 10.0);
+        assert_eq!(quantile(&v, 99.0), 10.0);
+        // n = 100: p50 -> 50th (index 49), p95 -> 95th, p99 -> 99th.
+        let big: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(quantile(&big, 50.0), 50.0);
+        assert_eq!(quantile(&big, 95.0), 95.0);
+        assert_eq!(quantile(&big, 99.0), 99.0);
+        assert_eq!(quantile(&big, 100.0), 100.0);
+        // Order independence: quantile sorts internally.
+        let shuffled = [3.0, 1.0, 2.0];
+        assert_eq!(quantile(&shuffled, 50.0), 2.0);
+        // The result is always an observed sample, never an interpolation.
+        let two = [1.0, 100.0];
+        assert_eq!(quantile(&two, 50.0), 1.0);
+        assert_eq!(quantile(&two, 95.0), 100.0);
+    }
+
+    #[test]
+    fn quantile_total_on_empty_and_degenerate_inputs() {
+        assert_eq!(quantile(&[], 50.0), 0.0);
+        assert_eq!(quantile(&[], 99.0), 0.0);
+        let (p50, p95, p99) = p50_p95_p99(&[]);
+        assert_eq!((p50, p95, p99), (0.0, 0.0, 0.0));
+        // Single sample: every quantile is that sample.
+        assert_eq!(quantile(&[7.5], 1.0), 7.5);
+        assert_eq!(quantile(&[7.5], 99.0), 7.5);
+        // q = 0 clamps to the minimum rank, NaN q clamps to the max.
+        assert_eq!(quantile(&[1.0, 2.0], 0.0), 1.0);
+        assert_eq!(quantile(&[1.0, 2.0], f64::NAN), 2.0);
+    }
+
+    #[test]
+    fn p50_p95_p99_matches_quantile() {
+        let v: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        let (p50, p95, p99) = p50_p95_p99(&v);
+        assert_eq!(p50, quantile(&v, 50.0));
+        assert_eq!(p95, quantile(&v, 95.0));
+        assert_eq!(p99, quantile(&v, 99.0));
+        assert_eq!((p50, p95, p99), (10.0, 19.0, 20.0));
     }
 
     #[test]

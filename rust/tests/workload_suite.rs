@@ -1,0 +1,50 @@
+//! End-to-end determinism of the compositional workload suite: every
+//! named scenario must produce an identical request schedule and a
+//! byte-identical `ScenarioReport` JSON across repeated same-seed runs.
+//! This is the contract that makes the percentile gates meaningful —
+//! a flaky schedule or a wall-clock leak into the report would show up
+//! here as a byte diff.
+
+use specbranch::bench_harness::workload::{self, Scenario};
+
+#[test]
+fn named_scenarios_schedule_deterministically() {
+    for name in Scenario::NAMES {
+        let w = Scenario::named(name).expect(name);
+        let a = w.schedule();
+        let b = w.schedule();
+        assert_eq!(a, b, "{name}: same-seed schedules must be identical");
+        assert!(!a.is_empty(), "{name}: scenario must schedule requests");
+        for pair in a.windows(2) {
+            assert!(
+                pair[0].arrival_us <= pair[1].arrival_us,
+                "{name}: arrivals must be nondecreasing"
+            );
+        }
+    }
+}
+
+#[test]
+fn named_scenarios_produce_byte_identical_reports() {
+    for name in Scenario::NAMES {
+        let r1 = workload::run_scenario(name).expect(name);
+        let r2 = workload::run_scenario(name).expect(name);
+        assert_eq!(r1.time_domain, "virtual", "{name}: deterministic path is virtual-time");
+        let j1 = r1.to_json().to_string_pretty();
+        let j2 = r2.to_json().to_string_pretty();
+        assert_eq!(j1, j2, "{name}: same-seed runs must serialize identically");
+    }
+}
+
+#[test]
+fn scenario_reports_carry_populated_summaries() {
+    let r = workload::run_scenario("chat-bursty").expect("chat-bursty");
+    let s = &r.summary;
+    assert!(s.requests > 0, "summary must count requests");
+    assert!(s.generated_tokens > 0, "summary must count generated tokens");
+    assert!(s.e2e_p50 > 0.0, "p50 e2e must be positive");
+    assert!(s.e2e_p99 >= s.e2e_p95, "p99 must dominate p95");
+    assert!(s.e2e_p95 >= s.e2e_p50, "p95 must dominate p50");
+    assert!(s.ttft_p95 > 0.0, "TTFT percentiles must be populated");
+    assert!(s.goodput_tokens_per_sec > 0.0, "goodput must be positive");
+}
