@@ -95,6 +95,10 @@ const PANIC_SCOPES: &[(&str, &[&str])] = &[
         ],
     ),
     ("rust/src/server/mod.rs", &["handle_conn", "writer_loop", "spawn_forwarder"]),
+    (
+        "rust/src/server/router.rs",
+        &["place", "drain", "rebalance_once", "fleet_snapshot"],
+    ),
 ];
 
 /// Modules whose mutexes guard cross-request shared state: the

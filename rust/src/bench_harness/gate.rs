@@ -2,7 +2,7 @@
 //! the tier-1 test suite — so the exact comparisons CI enforces are the
 //! ones `cargo test` verifies on every run.
 //!
-//! Eight layers:
+//! Nine layers:
 //!
 //! 1. [`smoke_measurements`] — the fixed deterministic workload (virtual
 //!    clock, bit-stable across machines) whose tokens/sec feed both the
@@ -46,7 +46,15 @@
 //!    controller planned rounds, streams stayed byte-identical under
 //!    greedy, and adaptive strictly beat the best static point on p99
 //!    end-to-end latency while holding its deadline-hit rate.
-//! 8. [`check_baseline`] — the absolute regression gate against the
+//! 8. [`fleet_smoke`] — the armed **in-run** fleet scenario: the same
+//!    submissions through a two-replica [`Fleet`] (prefix-affine router,
+//!    live migration via drain) vs one coordinator; asserts the drain
+//!    actually migrated a mid-flight request, every stream is
+//!    byte-identical to the single-replica twin, fleet-summed registry
+//!    counters reconcile with Σ per-response stats (each migration
+//!    counted exactly once), and throughput holds the single-replica
+//!    floor — all measured in the same invocation.
+//! 9. [`check_baseline`] — the absolute regression gate against the
 //!    committed `.github/bench_baseline.json`. A baseline carrying
 //!    `"bootstrap": true` disarms only this layer; once armed, a missing
 //!    engine key is a failure (renaming an engine cannot silently disarm
@@ -65,6 +73,9 @@ use crate::coordinator::{
 use crate::kvcache::{PrefixCache, PREFIX_CACHE_DEFAULT_TOKENS};
 use crate::metrics::DecodeStats;
 use crate::sampling::Token;
+use crate::server::router::Fleet;
+use crate::server::Frontend;
+use crate::util::clock::Clock;
 use crate::util::json;
 
 use super::report::ScenarioReport;
@@ -1166,6 +1177,220 @@ impl ScenarioSloSmoke {
 }
 
 // ---------------------------------------------------------------------------
+// In-run fleet gate
+// ---------------------------------------------------------------------------
+
+/// Result of the `specbranch-fleet` scenario: one long streaming victim
+/// plus a rider burst through a two-replica [`Fleet`], with the victim's
+/// replica drained mid-flight (checkpoint → live migration → resume on the
+/// other replica) — against the identical submissions through a single
+/// coordinator in the same invocation.
+pub struct FleetSmoke {
+    /// Merged virtual-clock tokens/sec of the fleet run (includes the
+    /// migrated victim's repeat-prefill cost on the destination).
+    pub tokens_per_sec: f64,
+    /// Merged tokens/sec of the single-replica twin.
+    pub reference_tokens_per_sec: f64,
+    /// Every request's token stream matched the single-replica twin's
+    /// (keyed by submission order — the fleet namespaces ids per replica).
+    pub streams_match: bool,
+    /// Fleet-summed `generated_tokens` equals Σ per-response stats.
+    pub registry_equal: bool,
+    /// Σ per-response `stats.migrations` over the fleet run's responses.
+    pub response_migrations: u64,
+    /// That Σ equals the fleet-summed registry `migrations` — each
+    /// migration counted exactly once, on the destination replica and on
+    /// the checkpoint that rode it.
+    pub migrations_reconcile: bool,
+    /// Fleet-summed registry snapshot of the migrated run.
+    pub registry: RegistrySnapshot,
+}
+
+/// Run the drain-mid-flight fleet scenario. The token streams are
+/// deterministic (greedy sim decoding); only the migration *point* — and
+/// with it the destination's repeat-prefill cost — depends on thread
+/// timing, which is why this entry gates in-run against its own
+/// single-replica reference instead of an absolute baseline.
+pub fn fleet_smoke() -> FleetSmoke {
+    // Like the preemption gate, the victim budget is sized so the victim
+    // is still decoding (~80 rounds left) when the drain lands right
+    // after its first streamed round.
+    const VICTIM_BUDGET: usize = 512;
+    const RIDER_BUDGET: usize = 48;
+    const RIDERS: usize = 6;
+    let pair = PairId::Vicuna68m13b;
+    let task = TaskId::MtBench;
+    let engine_cfg = EngineConfig {
+        gamma: default_gamma(pair),
+        max_new_tokens: 96,
+        ..Default::default()
+    };
+    let mk_coord = |base: u64, stride: u64| -> Coordinator {
+        let backends: Vec<Box<dyn Backend + Send>> = vec![Box::new(SimBackend::new(
+            SimConfig::new(ModelPair::get(pair), Task::get(task)),
+        ))];
+        Coordinator::start_with(
+            backends,
+            EngineId::SpecBranch,
+            engine_cfg.clone(),
+            SchedulerConfig::default().with_clock(Clock::virtual_clock()),
+        )
+        .with_id_namespace(base, stride)
+    };
+    let victim_prompt: Vec<Token> = (0..12u32).map(|i| 1 + (i % 7)).collect();
+    // Rider prompts are shorter than one KV block, so each prompt is its
+    // own routing key — distinct first tokens spread them across replicas.
+    let rider_prompt = |j: usize| -> Vec<Token> { vec![10 + j as Token, 3, 4, 5] };
+
+    // Responses keyed by submission order, not id: the two runs namespace
+    // ids differently (stride 1 vs stride 2), but under greedy decoding
+    // the committed chains depend only on the prompts.
+    type RunOut = (Vec<Option<(Vec<Token>, DecodeStats)>>, RegistrySnapshot);
+    let submit_all = |front: &dyn Frontend,
+                      rxs: &mut Vec<std::sync::mpsc::Receiver<crate::coordinator::Response>>| {
+        let (stream_tx, stream_rx) = std::sync::mpsc::channel();
+        let (tx, rx) = std::sync::mpsc::channel();
+        front.submit_opts(
+            victim_prompt.clone(),
+            VICTIM_BUDGET,
+            71,
+            SubmitOpts::new().stream(stream_tx).on_complete(tx),
+        );
+        rxs.push(rx);
+        // Wait for the victim's first committed round so a drain catches
+        // it mid-flight: a live migration, not a queued hand-off.
+        let _ = stream_rx.recv();
+        for j in 0..RIDERS {
+            let (tx, rx) = std::sync::mpsc::channel();
+            front.submit_opts(
+                rider_prompt(j),
+                RIDER_BUDGET,
+                100 + j as u64,
+                SubmitOpts::new().on_complete(tx),
+            );
+            rxs.push(rx);
+        }
+    };
+    let await_all =
+        |rxs: Vec<std::sync::mpsc::Receiver<crate::coordinator::Response>>|
+         -> Vec<Option<(Vec<Token>, DecodeStats)>> {
+            rxs.into_iter().map(|rx| rx.recv().ok().map(|r| (r.tokens, r.stats))).collect()
+        };
+
+    let reference: RunOut = {
+        let coord = mk_coord(0, 1);
+        let mut rxs = Vec::new();
+        submit_all(&coord, &mut rxs);
+        let out = await_all(rxs);
+        let snap = coord.registry();
+        coord.shutdown();
+        (out, snap)
+    };
+    let fleet_run: RunOut = {
+        let fleet = Fleet::new(vec![mk_coord(0, 2), mk_coord(1, 2)]);
+        let mut rxs = Vec::new();
+        submit_all(&fleet, &mut rxs);
+        // Drain the victim's replica: everything on it — the mid-flight
+        // victim included — checkpoints and resumes on the other replica.
+        let src = fleet.place(&victim_prompt);
+        fleet.drain(src);
+        let out = await_all(rxs);
+        let snap = fleet.fleet_snapshot();
+        fleet.shutdown();
+        (out, snap)
+    };
+
+    let tps = |m: &[Option<(Vec<Token>, DecodeStats)>]| -> f64 {
+        let tokens: u64 = m.iter().flatten().map(|(_, s)| s.generated_tokens).sum();
+        let ms: f64 = m.iter().flatten().map(|(_, s)| s.elapsed_ms).sum();
+        if ms <= 0.0 {
+            0.0
+        } else {
+            tokens as f64 * 1000.0 / ms
+        }
+    };
+    let (ref_out, _) = &reference;
+    let (fleet_out, registry) = &fleet_run;
+    let streams_match = ref_out.len() == fleet_out.len()
+        && ref_out.iter().zip(fleet_out.iter()).all(|(a, b)| match (a, b) {
+            (Some((ta, _)), Some((tb, _))) => ta == tb,
+            _ => false,
+        });
+    let fleet_generated: u64 =
+        fleet_out.iter().flatten().map(|(_, s)| s.generated_tokens).sum();
+    let fleet_migrations: u64 = fleet_out.iter().flatten().map(|(_, s)| s.migrations).sum();
+    FleetSmoke {
+        tokens_per_sec: tps(fleet_out),
+        reference_tokens_per_sec: tps(ref_out),
+        streams_match,
+        registry_equal: registry.generated_tokens == fleet_generated,
+        response_migrations: fleet_migrations,
+        migrations_reconcile: registry.migrations == fleet_migrations,
+        registry: *registry,
+    }
+}
+
+impl FleetSmoke {
+    /// The armed in-run assertions for the `specbranch-fleet` entry.
+    pub fn failures(&self, tolerance: f64) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.registry.migrations == 0 {
+            f.push(
+                "specbranch-fleet: draining the victim's replica produced no live migration"
+                    .to_string(),
+            );
+        }
+        if !self.streams_match {
+            f.push(
+                "specbranch-fleet: streams diverged from the single-replica twin".to_string(),
+            );
+        }
+        if !self.registry_equal {
+            f.push(
+                "specbranch-fleet: fleet registry generated_tokens != Σ per-response stats"
+                    .to_string(),
+            );
+        }
+        if !self.migrations_reconcile {
+            f.push(format!(
+                "specbranch-fleet: fleet registry counts {} migrations but the responses \
+                 carry Σ {} (each migration must be counted exactly once)",
+                self.registry.migrations, self.response_migrations,
+            ));
+        }
+        let floor = self.reference_tokens_per_sec * (1.0 - tolerance);
+        if self.tokens_per_sec < floor {
+            f.push(format!(
+                "REGRESSION specbranch-fleet: {:.1} tok/s < floor {:.1} \
+                 (single-replica twin {:.1} in the same invocation)",
+                self.tokens_per_sec, floor, self.reference_tokens_per_sec
+            ));
+        }
+        f
+    }
+
+    /// Report fields for the `specbranch-fleet` entry of `BENCH_ci.json`.
+    /// In-run gate only: the migration point is thread-timing dependent,
+    /// so its absolute tokens/sec is not bit-stable.
+    pub fn detail(&self) -> json::Value {
+        json::obj(vec![
+            ("tokens_per_sec", json::num(self.tokens_per_sec)),
+            ("reference_tokens_per_sec", json::num(self.reference_tokens_per_sec)),
+            ("replicas", json::num(2.0)),
+            ("migrations", json::num(self.registry.migrations as f64)),
+            (
+                "repeat_prefill_tokens",
+                json::num(self.registry.repeat_prefill_tokens as f64),
+            ),
+            ("streams_match", json::Value::Bool(self.streams_match)),
+            ("registry_equal", json::Value::Bool(self.registry_equal)),
+            ("migrations_reconcile", json::Value::Bool(self.migrations_reconcile)),
+            ("in_run_gate_only", json::Value::Bool(true)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Absolute baseline gate
 // ---------------------------------------------------------------------------
 
@@ -1359,6 +1584,23 @@ mod tests {
         assert!(run.registry.preemptions >= 1);
         assert_eq!(run.registry.resumed, run.registry.preemptions);
         assert!(run.registry.repeat_prefill_tokens > 0);
+        assert!(run.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn fleet_smoke_gates_pass() {
+        // The armed in-run fleet gate: draining the victim's replica must
+        // produce a live mid-flight migration, streams must stay
+        // byte-identical to the single-replica twin, fleet-summed registry
+        // counters must reconcile with Σ per-response stats (migrations
+        // counted exactly once), and throughput must hold the
+        // single-replica floor.
+        let run = fleet_smoke();
+        let failures = run.failures(0.15);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(run.registry.migrations >= 1);
+        assert!(run.streams_match && run.registry_equal && run.migrations_reconcile);
+        assert_eq!(run.response_migrations, run.registry.migrations);
         assert!(run.tokens_per_sec > 0.0);
     }
 

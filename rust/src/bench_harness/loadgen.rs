@@ -10,9 +10,13 @@
 //! machine-dependent wall times (the report's `time_domain` is
 //! `"wall"`), while `service_ms` still carries the per-request virtual
 //! decode clock so throughput can be cross-checked against the
-//! deterministic layer. Arrival-time offsets and `cancel_after_ms` are
-//! replay-layer semantics and are not paced here — the live path is a
-//! closed-loop stress shape, not a timed replay.
+//! deterministic layer. Arrival offsets and `cancel_after_ms` are paced
+//! live from the schedule: a request is submitted when its arrival time
+//! comes (window permitting), an impatient request still in flight at
+//! `arrival + cancel_after_ms` is cancelled over the wire, and one whose
+//! patience ran out while it was still waiting to be submitted is
+//! retired client-side — it never reaches the router at all, exactly
+//! like the replay layer's queued-cancel model.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -22,6 +26,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::bench_harness::report::{RequestRecord, ScenarioReport};
 use crate::bench_harness::workload::{Arrival, LengthDist, RequestSpec, Workload};
 use crate::server::{Client, MuxEvent, MuxOpts};
+use crate::util::json;
 
 /// Legacy flag-bag for the pre-scenario loadgen CLI. Thin wrapper kept so
 /// `--connections/--inflight/--requests/--max-new` invocations continue
@@ -76,7 +81,7 @@ impl LoadgenConfig {
     }
 }
 
-/// One in-flight request of a connection's closed-loop window.
+/// One in-flight request of a connection's paced window.
 struct Pending {
     spec: RequestSpec,
     at: Instant,
@@ -84,6 +89,8 @@ struct Pending {
     arrival_ms: f64,
     /// Wall time to the first streamed `PART`, once seen.
     ttft_ms: Option<f64>,
+    /// A wire `CANCEL` was already sent for this tag.
+    cancel_sent: bool,
 }
 
 fn submit_spec(
@@ -104,13 +111,19 @@ fn submit_spec(
     // lint:allow(determinism): loadgen timestamps real wire submissions
     let at = Instant::now();
     let arrival_ms = at.duration_since(t0).as_secs_f64() * 1000.0;
-    inflight.insert(tag, Pending { spec: spec.clone(), at, arrival_ms, ttft_ms: None });
+    inflight.insert(
+        tag,
+        Pending { spec: spec.clone(), at, arrival_ms, ttft_ms: None, cancel_sent: false },
+    );
     Ok(())
 }
 
-/// Drive one connection's closed loop: keep up to `window` streamed
-/// requests open, recording wall TTFT (first `PART`) and e2e (final
-/// reply) per request, refilling the window as replies land.
+/// Drive one connection from the scenario schedule: submit each request
+/// when its arrival offset comes (keeping at most `window` streamed
+/// requests open), fire wire cancels when an impatient request's
+/// `cancel_after_ms` elapses, and retire requests whose patience ran out
+/// while still waiting to be submitted without ever touching the router.
+/// Records wall TTFT (first `PART`) and e2e (final reply) per request.
 fn drive_connection(
     addr: &str,
     specs: &[RequestSpec],
@@ -122,12 +135,67 @@ fn drive_connection(
     let mut records = Vec::with_capacity(specs.len());
     let window = window.max(1);
     let mut next = 0usize;
-    while next < specs.len() && next < window {
-        submit_spec(&mut client, &specs[next], t0, &mut inflight)?;
-        next += 1;
-    }
     while records.len() < specs.len() {
-        match client.next_event()? {
+        let now_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        // Admit from the schedule. A request whose cancel deadline has
+        // already passed while it waited (arrival + cancel_after behind
+        // the clock) is retired client-side before the submission check
+        // runs, so it never reaches the router — mirroring the replay
+        // layer's queued-cancel model.
+        while next < specs.len() {
+            let spec = &specs[next];
+            let arrival_ms = spec.arrival_us as f64 / 1000.0;
+            let cancel_at = spec.cancel_after_ms.map(|c| arrival_ms + c as f64);
+            if let Some(at) = cancel_at.filter(|&at| at <= now_ms) {
+                records.push(RequestRecord {
+                    index: spec.index,
+                    class: spec.class.clone(),
+                    arrival_ms,
+                    start_ms: at,
+                    ttft_ms: at - arrival_ms,
+                    e2e_ms: at - arrival_ms,
+                    service_ms: 0.0,
+                    tpot_ms: 0.0,
+                    generated_tokens: 0,
+                    cancelled: true,
+                    deadline_ms: spec.deadline_ms.map(|d| d as f64),
+                    deadline_met: None,
+                });
+                next += 1;
+                continue;
+            }
+            if arrival_ms <= now_ms && inflight.len() < window {
+                submit_spec(&mut client, spec, t0, &mut inflight)?;
+                next += 1;
+                continue;
+            }
+            break;
+        }
+        // Fire wire cancels for submitted requests whose patience ran
+        // out; the server's final reply still lands as a Done frame with
+        // `cancelled: true` and the tokens committed so far.
+        let due: Vec<String> = inflight
+            .iter()
+            .filter(|(_, p)| !p.cancel_sent)
+            .filter(|(_, p)| {
+                p.spec
+                    .cancel_after_ms
+                    .map(|c| p.spec.arrival_us as f64 / 1000.0 + c as f64 <= now_ms)
+                    .unwrap_or(false)
+            })
+            .map(|(tag, _)| tag.clone())
+            .collect();
+        for tag in due {
+            client.cancel_tag(&tag).with_context(|| format!("cancelling {tag}"))?;
+            if let Some(p) = inflight.get_mut(&tag) {
+                p.cancel_sent = true;
+            }
+        }
+        let ev = match client.try_next_event(std::time::Duration::from_millis(2))? {
+            Some(ev) => ev,
+            None => continue,
+        };
+        match ev {
             MuxEvent::Part { tag, .. } => {
                 if let Some(p) = inflight.get_mut(&tag) {
                     if p.ttft_ms.is_none() {
@@ -148,6 +216,8 @@ fn drive_connection(
                 };
                 let generated = stat("generated")?;
                 let service_ms = stat("elapsed_ms")?;
+                let cancelled =
+                    matches!(reply.stats.get("cancelled"), Some(json::Value::Bool(true)));
                 let e2e_ms = p.at.elapsed().as_secs_f64() * 1000.0;
                 let ttft_ms = p.ttft_ms.unwrap_or(e2e_ms);
                 let tpot_ms =
@@ -162,14 +232,14 @@ fn drive_connection(
                     service_ms,
                     tpot_ms,
                     generated_tokens: generated as u64,
-                    cancelled: false,
+                    cancelled,
                     deadline_ms: p.spec.deadline_ms.map(|d| d as f64),
-                    deadline_met: p.spec.deadline_ms.map(|d| e2e_ms <= d as f64),
+                    deadline_met: if cancelled {
+                        None
+                    } else {
+                        p.spec.deadline_ms.map(|d| e2e_ms <= d as f64)
+                    },
                 });
-                if next < specs.len() {
-                    submit_spec(&mut client, &specs[next], t0, &mut inflight)?;
-                    next += 1;
-                }
             }
             MuxEvent::Err { tag, msg } => {
                 let scope = tag.map(|t| format!(" for '{t}'")).unwrap_or_default();
@@ -230,4 +300,58 @@ pub fn run(addr: &str, scenario: &str, w: &Workload) -> Result<ScenarioReport> {
         ("inflight_peak".to_string(), inflight_peak),
     ];
     Ok(ScenarioReport::new(scenario, w.seed, "wall", records, extras))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::bench_harness::workload::TrafficClass;
+    use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+    use crate::coordinator::{Coordinator, SchedulerConfig};
+    use crate::server::Server;
+    use crate::util::clock::Clock;
+
+    fn sim_server() -> String {
+        let backends: Vec<Box<dyn Backend + Send>> = vec![Box::new(SimBackend::new(
+            SimConfig::new(ModelPair::get(PairId::Vicuna68m13b), Task::get(TaskId::MtBench)),
+        ))];
+        let coord = Coordinator::start_with(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 32, ..Default::default() },
+            SchedulerConfig::default().with_clock(Clock::virtual_clock()),
+        );
+        let server = Server::bind("127.0.0.1:0", coord).expect("binding loadgen test server");
+        let addr = server.local_addr().to_string();
+        std::thread::spawn(move || server.serve(None));
+        addr
+    }
+
+    /// A request whose patience runs out before it is ever submitted is
+    /// retired client-side by the pacing loop: every record reports
+    /// cancelled with zero tokens, and the server's registry never sees
+    /// the request at all — neither as a completion nor as a wire cancel.
+    #[test]
+    fn cancelled_before_arrival_never_reaches_the_router() {
+        let addr = sim_server();
+        let w = Workload::new(7)
+            .requests(6)
+            .connections(2)
+            .inflight(2)
+            .blend(vec![TrafficClass::new("impatient").cancel_after_ms(0)]);
+        let report = run(&addr, "impatient", &w).expect("loadgen run");
+        assert_eq!(report.records.len(), 6);
+        for r in &report.records {
+            assert!(r.cancelled, "request {} should be retired client-side", r.index);
+            assert_eq!(r.generated_tokens, 0, "request {} must not decode", r.index);
+        }
+        let mut probe = Client::connect(&addr).expect("metrics probe");
+        let metrics = probe.metrics().expect("metrics");
+        let count = |k: &str| metrics.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        assert_eq!(count("completed"), 0.0, "no request may reach the router");
+        assert_eq!(count("cancelled"), 0.0, "no wire cancel may reach the router");
+        probe.quit().expect("probe quit");
+    }
 }

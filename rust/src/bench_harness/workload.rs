@@ -6,10 +6,11 @@
 //! [`Workload`] composes an arrival process ([`Arrival`]), heavy-tailed
 //! length distributions ([`LengthDist`]), prefix popularity
 //! ([`PrefixPopularity`]) and a weighted blend of [`TrafficClass`]es into
-//! a reproducible request list, and three named [`Scenario`]s
-//! (`chat-bursty`, `rag-shared-prefix`, `slo-tiered-mix`) exercise the
-//! prefix cache, the adaptive control plane and the priority/deadline
-//! scheduler under those shapes.
+//! a reproducible request list, and four named [`Scenario`]s
+//! (`chat-bursty`, `rag-shared-prefix`, `slo-tiered-mix`,
+//! `multi-replica-rag`) exercise the prefix cache, the adaptive control
+//! plane, the priority/deadline scheduler and the replicated
+//! prefix-affine router under those shapes.
 //!
 //! Execution is two-layered so the result is bit-deterministic:
 //!
@@ -42,6 +43,7 @@ use crate::bench_harness::report::{RequestRecord, ScenarioReport};
 use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
 use crate::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use crate::kvcache::{PrefixCache, PREFIX_CACHE_DEFAULT_TOKENS};
+use crate::server::router::Fleet;
 use crate::server::{Client, Server};
 use crate::util::clock::Clock;
 use crate::util::json;
@@ -368,6 +370,13 @@ pub struct Workload {
     pub replay_servers: usize,
     /// Dispatch policy of the replay layer.
     pub policy: SchedulePolicy,
+    /// Coordinator replicas behind the prefix-affine router (1 = a lone
+    /// coordinator, no router). Each replica gets its own single-worker
+    /// backend, its own virtual clock and — when `prefix_cache` is on —
+    /// its own private cache, so measurement stays seed-deterministic:
+    /// affinity-only routing makes each replica's admission order a pure
+    /// function of the scheduled prompts.
+    pub replicas: usize,
     base: TrafficClass,
     classes: Vec<TrafficClass>,
 }
@@ -386,9 +395,16 @@ impl Workload {
             gamma: 0,
             replay_servers: 2,
             policy: SchedulePolicy::RoundRobin,
+            replicas: 1,
             base: TrafficClass::new("default"),
             classes: Vec::new(),
         }
+    }
+
+    /// Coordinator replicas behind the prefix-affine router (1 = off).
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n.max(1);
+        self
     }
 
     pub fn arrival(mut self, arrival: Arrival) -> Self {
@@ -535,8 +551,11 @@ impl Workload {
     /// order, over one connection) before any reply is awaited, so
     /// admission order, prefix-cache hit pattern and the adaptive
     /// control plane's per-request γ plans are all seed-deterministic.
-    /// Priorities, deadlines and cancellations are *not* passed to the
-    /// coordinator here — they are replay-layer semantics.
+    /// With `replicas > 1` the group's server fronts a [`Fleet`] of
+    /// single-worker coordinators under affinity-only routing, which
+    /// preserves all of the above per replica. Priorities, deadlines and
+    /// cancellations are *not* passed to the coordinator here — they are
+    /// replay-layer semantics.
     pub fn measure(&self, specs: &[RequestSpec]) -> Result<Measurement> {
         let mut groups: Vec<((PairId, TaskId), Vec<usize>)> = Vec::new();
         for (pos, s) in specs.iter().enumerate() {
@@ -548,18 +567,6 @@ impl Workload {
         let mut per: Vec<Option<MeasuredRequest>> = vec![None; specs.len()];
         let mut group_metrics = Vec::new();
         for ((pair, task), idxs) in &groups {
-            let cache = if self.prefix_cache {
-                Some(Arc::new(PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS)))
-            } else {
-                None
-            };
-            let backends: Vec<Box<dyn Backend + Send>> = (0..1)
-                .map(|_| {
-                    let mut cfg = SimConfig::new(ModelPair::get(*pair), Task::get(*task));
-                    cfg.prefix = cache.clone();
-                    Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
-                })
-                .collect();
             let budget = idxs.iter().map(|&i| specs[i].max_new).max().unwrap_or(48);
             let gamma = if self.gamma > 0 { self.gamma } else { EngineConfig::default().gamma };
             let alpha_hint = if self.adaptive {
@@ -567,18 +574,46 @@ impl Workload {
             } else {
                 None
             };
-            let sched = SchedulerConfig::default()
-                .with_clock(Clock::virtual_clock())
-                .with_adaptive(self.adaptive)
-                .with_alpha_hint(alpha_hint)
-                .with_prefix_cache(cache);
-            let coord = Coordinator::start_with(
-                backends,
-                self.engine,
-                EngineConfig { gamma, max_new_tokens: budget, ..Default::default() },
-                sched,
-            );
-            let server = Server::bind("127.0.0.1:0", coord).context("binding workload server")?;
+            // One single-worker coordinator per replica, each with its own
+            // virtual clock and (when enabled) its own private prefix
+            // cache — determinism needs replicas not to share either.
+            let mk_coord = |r: usize| -> Coordinator {
+                let cache = if self.prefix_cache {
+                    Some(Arc::new(PrefixCache::new(PREFIX_CACHE_DEFAULT_TOKENS)))
+                } else {
+                    None
+                };
+                let backends: Vec<Box<dyn Backend + Send>> = (0..1)
+                    .map(|_| {
+                        let mut cfg = SimConfig::new(ModelPair::get(*pair), Task::get(*task));
+                        cfg.prefix = cache.clone();
+                        Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+                    })
+                    .collect();
+                let sched = SchedulerConfig::default()
+                    .with_clock(Clock::virtual_clock())
+                    .with_adaptive(self.adaptive)
+                    .with_alpha_hint(alpha_hint)
+                    .with_prefix_cache(cache);
+                Coordinator::start_with(
+                    backends,
+                    self.engine,
+                    EngineConfig { gamma, max_new_tokens: budget, ..Default::default() },
+                    sched,
+                )
+                .with_id_namespace(r as u64, self.replicas.max(1) as u64)
+            };
+            let server = if self.replicas > 1 {
+                // Affinity-only routing (no load spill): placement is a
+                // pure function of each prompt's first block, so each
+                // replica's admission order is the deterministic
+                // subsequence of submission order that hashes to it.
+                let fleet = Fleet::new((0..self.replicas).map(mk_coord).collect());
+                Server::bind_frontend("127.0.0.1:0", Arc::new(fleet))
+            } else {
+                Server::bind("127.0.0.1:0", mk_coord(0))
+            }
+            .context("binding workload server")?;
             let addr = server.local_addr().to_string();
             std::thread::spawn(move || server.serve(None));
             let mut client = Client::connect(&addr).context("connecting workload client")?;
@@ -832,8 +867,8 @@ impl Measurement {
 pub struct Scenario;
 
 impl Scenario {
-    pub const NAMES: [&'static str; 3] =
-        ["chat-bursty", "rag-shared-prefix", "slo-tiered-mix"];
+    pub const NAMES: [&'static str; 4] =
+        ["chat-bursty", "rag-shared-prefix", "slo-tiered-mix", "multi-replica-rag"];
 
     /// Look up a named scenario's workload definition.
     ///
@@ -848,6 +883,10 @@ impl Scenario {
     ///   urgent well-drafted chat tier and a patient poorly-drafted
     ///   digest tier on a second model pair) under the adaptive
     ///   speculation control plane.
+    /// * `multi-replica-rag` — the RAG shape served by two replicated
+    ///   coordinators behind the prefix-affine router, each replica with
+    ///   its own prefix cache: Zipf-hot templates route by their first
+    ///   block, so each replica's cache only ever sees its own templates.
     pub fn named(name: &str) -> Option<Workload> {
         match name {
             "chat-bursty" => Some(
@@ -921,6 +960,20 @@ impl Scenario {
                             .priority(2)
                             .deadline_ms(7000),
                     ]),
+            ),
+            "multi-replica-rag" => Some(
+                Workload::new(13)
+                    .requests(28)
+                    .arrival(Arrival::ramp(2.0, 6.0, 5000))
+                    .engine(EngineId::SpecBranch)
+                    .policy(SchedulePolicy::RoundRobin)
+                    .replay_servers(2)
+                    .replicas(2)
+                    .prefix_cache(true)
+                    .pair(PairId::Vicuna68m13b)
+                    .task(TaskId::Rag)
+                    .prefixes(PrefixPopularity::zipf(6, 1.1, 48))
+                    .lengths(LengthDist::uniform(8, 16), LengthDist::uniform(24, 40)),
             ),
             _ => None,
         }

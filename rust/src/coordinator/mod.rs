@@ -879,6 +879,11 @@ pub struct Registry {
     pub prefix_hits: AtomicU64,
     /// Prompt tokens those hits skipped — prefill work the cache saved.
     pub prefix_tokens_saved: AtomicU64,
+    /// Live cross-replica migrations admitted *into* this coordinator: a
+    /// checkpoint extracted from another replica and re-admitted here by
+    /// the fleet router. Counted on the destination only, so summing the
+    /// counter across a fleet counts each migration exactly once.
+    pub migrations: AtomicU64,
 }
 
 impl Registry {
@@ -911,6 +916,7 @@ impl Registry {
             gamma_shrunk_by_pressure: self.gamma_shrunk_by_pressure.load(Ordering::Relaxed),
             prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
             prefix_tokens_saved: self.prefix_tokens_saved.load(Ordering::Relaxed),
+            migrations: self.migrations.load(Ordering::Relaxed),
             // The eviction counter lives on the cache itself;
             // [`Coordinator::registry`] overlays it when a cache is
             // installed (the bare registry has no cache handle).
@@ -952,7 +958,7 @@ impl Registry {
     }
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RegistrySnapshot {
     pub completed: u64,
     pub cancelled: u64,
@@ -982,6 +988,8 @@ pub struct RegistrySnapshot {
     pub prefix_hits: u64,
     /// Prompt tokens those hits skipped re-prefilling.
     pub prefix_tokens_saved: u64,
+    /// Live cross-replica migrations admitted into this coordinator.
+    pub migrations: u64,
     /// Chunks evicted from the prefix cache (refcount-0 LRU leaves).
     pub prefix_evictions: u64,
     /// Mean context re-prefilled per resume (0 when none resumed).
@@ -1023,6 +1031,7 @@ impl RegistrySnapshot {
             ("prefix_hits", json::num(self.prefix_hits as f64)),
             ("prefix_tokens_saved", json::num(self.prefix_tokens_saved as f64)),
             ("prefix_evictions", json::num(self.prefix_evictions as f64)),
+            ("migrations", json::num(self.migrations as f64)),
             ("mean_repeat_prefill_tokens", json::num(self.mean_repeat_prefill_tokens)),
             ("mean_queue_ms", json::num(self.mean_queue_ms)),
             ("mean_decode_ms", json::num(self.mean_decode_ms)),
@@ -1039,6 +1048,12 @@ struct Shared {
     cv_out: Condvar,
     registry: Registry,
     stop: AtomicBool,
+    /// Drain mode: workers schedule nothing (no admissions, no rounds) so
+    /// parked tasks stay in the ready queue where
+    /// [`Coordinator::extract_migratable`] can checkpoint them
+    /// deterministically. Overridden by `stop` — shutdown's
+    /// drain-to-completion guarantee survives a coordinator left draining.
+    draining: AtomicBool,
     inflight: AtomicU64,
     sched: SchedParams,
 }
@@ -1048,6 +1063,42 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Id assignment is `id_base + k * id_stride` (k = 0, 1, 2, …). The
+    /// default namespace (0, 1) is the historical dense sequence; a fleet
+    /// gives replica i the namespace (i, n) so ids stay globally unique
+    /// across replicas and a migrated request keeps its id.
+    id_base: u64,
+    id_stride: u64,
+}
+
+/// A request extracted from one coordinator for re-admission on another —
+/// the fleet router's live-migration unit. Opaque: it carries either a
+/// queued, never-admitted request (a cheap move) or a between-rounds
+/// checkpoint (tokens + stats + rng captured, source KV released) plus the
+/// scheduling metadata that must survive the hop. Produced by
+/// [`Coordinator::extract_migratable`], consumed exactly once by
+/// [`Coordinator::admit_migrated`].
+pub struct MigrationTicket {
+    entry: AdmissionEntry,
+    at: Tick,
+    waits: u64,
+    live: bool,
+}
+
+impl MigrationTicket {
+    /// The migrating request's id (preserved across the hop).
+    pub fn id(&self) -> u64 {
+        match &self.entry {
+            AdmissionEntry::Fresh(r) => r.id,
+            AdmissionEntry::Resumable(r) => r.id,
+        }
+    }
+
+    /// True when the ticket carries a decode checkpoint (the request had
+    /// already run on the source) — the migrations the counters report.
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
 }
 
 impl Coordinator {
@@ -1078,6 +1129,7 @@ impl Coordinator {
             cv_out: Condvar::new(),
             registry: Registry::default(),
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
             sched,
         });
@@ -1094,7 +1146,18 @@ impl Coordinator {
                 .expect("spawn worker");
             workers.push(handle);
         }
-        Coordinator { shared, workers, next_id: AtomicU64::new(0) }
+        Coordinator { shared, workers, next_id: AtomicU64::new(0), id_base: 0, id_stride: 1 }
+    }
+
+    /// Re-key id assignment to `base + k·stride` (k = 0, 1, 2, …). A fleet
+    /// gives replica i the namespace `(i, n)` so every replica mints
+    /// globally unique ids and cross-replica migration never re-labels a
+    /// request. Call before the first submission; a zero stride is pinned
+    /// to 1 so ids always advance.
+    pub fn with_id_namespace(mut self, base: u64, stride: u64) -> Coordinator {
+        self.id_base = base;
+        self.id_stride = stride.max(1);
+        self
     }
 
     /// Enqueue a request; returns its id immediately. Thin wrapper over
@@ -1139,7 +1202,7 @@ impl Coordinator {
         seed: u64,
         opts: SubmitOpts,
     ) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let id = self.id_base + self.next_id.fetch_add(1, Ordering::SeqCst) * self.id_stride;
         let mut q = lock_or_recover(&self.shared.queues);
         let now_inflight = self.shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
         self.shared.registry.inflight_peak.fetch_max(now_inflight, Ordering::Relaxed);
@@ -1264,6 +1327,149 @@ impl Coordinator {
             snap.prefix_evictions = cache.evictions();
         }
         snap
+    }
+
+    /// Enter or leave drain mode: while draining, workers schedule nothing
+    /// (no admissions, no new rounds), so mid-round tasks finish their
+    /// current round and park in the ready queue where
+    /// [`Coordinator::extract_migratable`] can checkpoint them without
+    /// racing the worker pool. Requests are NOT retired by draining — they
+    /// wait, migrate, or (on [`Coordinator::shutdown`], which overrides
+    /// this flag) run to completion.
+    pub fn set_draining(&self, on: bool) {
+        // Store + notify under the queues lock for the same reason
+        // shutdown() does: a worker holds the lock from its drain-check to
+        // its condvar park, so a bare notify could land in that window and
+        // be lost.
+        let _q = lock_or_recover(&self.shared.queues);
+        self.shared.draining.store(on, Ordering::SeqCst);
+        self.shared.cv_in.notify_all();
+    }
+
+    /// Whether this coordinator is currently in drain mode (placement
+    /// skips draining replicas).
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Extract one request for live migration to another replica.
+    ///
+    /// Queued (never-admitted) requests move first — there is no decode
+    /// state to capture. Otherwise a parked ready task is checkpointed
+    /// between rounds exactly like a preemption (committed tokens + stats
+    /// + rng captured, KV released back to the source cache) and the
+    /// resumable entry rides the ticket; unshielded tasks are preferred,
+    /// but a drain may take a shielded one — moving a paid prefill beats
+    /// stranding the request on a dying replica. Returns `None` when
+    /// nothing is extractable *right now*: queues empty, or every
+    /// in-flight task is mid-round on a worker (callers yield and retry;
+    /// [`Coordinator::set_draining`] guarantees mid-round tasks park).
+    ///
+    /// A cancellation racing the checkpoint wins: the request retires on
+    /// this coordinator with its partial tokens — counted exactly once, as
+    /// everywhere — and `None` is returned.
+    pub fn extract_migratable(&self) -> Option<MigrationTicket> {
+        let shared = &*self.shared;
+        let mut q = lock_or_recover(&shared.queues);
+        if let Some(mut e) = q.inbox.pop_front() {
+            drop(q);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            let live = match &mut e.entry {
+                AdmissionEntry::Fresh(_) => false,
+                AdmissionEntry::Resumable(re) => {
+                    // A checkpoint crossing replicas is a migration even
+                    // when a preemption (not this call) produced it.
+                    re.checkpoint.stats.migrations += 1;
+                    true
+                }
+            };
+            return Some(MigrationTicket { entry: e.entry, at: e.at, waits: e.waits, live });
+        }
+        let pick = q
+            .ready
+            .iter()
+            .position(|t| !t.shield)
+            .or_else(|| if q.ready.is_empty() { None } else { Some(0) });
+        let t = pick.and_then(|i| q.ready.remove(i))?;
+        // Hold the id in `stepping` while the checkpoint runs outside the
+        // lock (a racing cancel() is flagged, not reported unknown) and
+        // return the projection to the admission budget now, like the
+        // preemption path does.
+        q.stepping.insert(t.id);
+        q.kv_projected_bytes = q.kv_projected_bytes.saturating_sub(t.kv_projected);
+        drop(q);
+        let Inflight {
+            id,
+            seed,
+            task,
+            enqueued_at,
+            queue_ms,
+            decode_us,
+            stream,
+            on_complete,
+            priority,
+            deadline_ms,
+            alpha,
+            ..
+        } = t;
+        let mut checkpoint = task.checkpoint();
+        checkpoint.alpha = alpha;
+        shared
+            .registry
+            .kv_reclaimed_bytes
+            .fetch_add(checkpoint.kv_reclaimed_bytes as u64, Ordering::Relaxed);
+        let mut entry = ResumeEntry {
+            id,
+            seed,
+            checkpoint,
+            priority,
+            deadline_ms,
+            stream,
+            on_complete,
+            decode_us,
+            queue_ms,
+        };
+        let mut q = lock_or_recover(&shared.queues);
+        q.stepping.remove(&id);
+        if q.cancel_requested.remove(&id) {
+            // The request retires here without ever crossing replicas, so
+            // its stats must not claim a migration.
+            drop(q);
+            retire_resumable_cancelled(shared, entry, enqueued_at);
+            return None;
+        }
+        drop(q);
+        entry.checkpoint.stats.migrations += 1;
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        // The freed KV budget may unblock a deferred admission.
+        shared.cv_in.notify_all();
+        Some(MigrationTicket {
+            entry: AdmissionEntry::Resumable(entry),
+            at: enqueued_at,
+            waits: 0,
+            live: true,
+        })
+    }
+
+    /// Admit a request migrated off another replica. The ticket keeps its
+    /// original submission time (fleet replicas share a scheduler clock,
+    /// so EDF deadlines and `total_ms` stay anchored to the first submit)
+    /// and its checkpointed scheduling metadata; the regular resumable
+    /// admission path then re-prefills and continues byte-identically
+    /// under greedy verification. A live ticket counts one `migrations`
+    /// here on the destination — never on the source — so fleet-summed
+    /// counters count each migration exactly once.
+    pub fn admit_migrated(&self, ticket: MigrationTicket) {
+        let MigrationTicket { entry, at, waits, live } = ticket;
+        let now_inflight = self.shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.shared.registry.inflight_peak.fetch_max(now_inflight, Ordering::Relaxed);
+        if live {
+            self.shared.registry.migrations.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut q = lock_or_recover(&self.shared.queues);
+        q.inbox.push_back(Queued { entry, at, waits });
+        drop(q);
+        self.shared.cv_in.notify_one();
     }
 
     /// Stop all workers. Requests still waiting in the admission queue and
@@ -1486,12 +1692,23 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
         let work = {
             let mut q = lock_or_recover(&shared.queues);
             loop {
+                // Drain mode (fleet migration): schedule nothing — no
+                // admissions, no rounds — so parked tasks stay put for
+                // `extract_migratable`. `stop` overrides the pause:
+                // shutdown's drain-to-completion guarantee holds even for
+                // a coordinator left in drain mode.
+                let paused = shared.draining.load(Ordering::SeqCst)
+                    && !shared.stop.load(Ordering::SeqCst);
                 // Admission first — new arrivals join the running batch
                 // before the next round of existing work — but only while
                 // the batch window has room and the KV watermark admits the
                 // projected footprint, so a flood of arrivals can neither
                 // starve in-flight decoding nor oversubscribe the cache.
-                let pick = pick_admission_index(&q.inbox, sched.policy, sched.aging_rounds);
+                let pick = if paused {
+                    None
+                } else {
+                    pick_admission_index(&q.inbox, sched.policy, sched.aging_rounds)
+                };
                 if let Some(idx) = pick {
                     let window_ok = q.ready.len() < sched.max_ready;
                     let proj = q.inbox[idx].projection(&sched);
@@ -1560,7 +1777,7 @@ fn worker_loop(backend: Box<dyn Backend + Send>, engine: Box<dyn Engine>, shared
                 // policy per pick so the *batch composition* (and the
                 // submit/join order within it) stays policy-ordered.
                 let mut batch: Vec<Inflight> = Vec::new();
-                while batch.len() < sched.verify_batch {
+                while !paused && batch.len() < sched.verify_batch {
                     let pick = pick_ready_index(&q.ready, sched.policy, sched.aging_rounds);
                     let Some(t) = pick.and_then(|i| q.ready.remove(i)) else {
                         break;

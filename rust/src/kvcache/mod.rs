@@ -300,6 +300,17 @@ fn chain_key(parent: Option<u64>, chunk: &[Token]) -> u64 {
     h
 }
 
+/// Routing key over a prompt's first block-aligned chunk: the same
+/// [`chain_key`] hash the [`PrefixCache`] index starts every chain with,
+/// truncated to `min(len, BLOCK_TOKENS)` tokens. Two prompts sharing their
+/// first block — the head of any cacheable shared prefix — get the same
+/// key, so a consistent-hash router placing on this key sends prefix
+/// siblings to the same replica and keeps that replica's prefix cache hot.
+/// Pure function of the token values alone (no cache state, no topology).
+pub fn prefix_route_key(tokens: &[Token]) -> u64 {
+    chain_key(None, &tokens[..tokens.len().min(BLOCK_TOKENS)])
+}
+
 /// Outcome of [`PrefixCache::acquire`]: how much of the prompt was already
 /// cached, plus the chain keys the session now holds pinned (released via
 /// [`PrefixCache::publish`]).

@@ -30,6 +30,7 @@ use specbranch::coordinator::{Coordinator, SchedulePolicy, SchedulerConfig};
 use specbranch::engines::{self, DecodeTask};
 use specbranch::kvcache::PrefixCache;
 use specbranch::metrics;
+use specbranch::server::router::Fleet;
 use specbranch::server::Server;
 use specbranch::token::Tokenizer;
 use specbranch::util::cli::Args;
@@ -85,6 +86,16 @@ fn print_help() {
                          [--pp]  deploy specbranch in pipeline-parallel\n\
                                  mode (draft run-ahead during verify at PP\n\
                                  utilisation)\n\
+                         --replicas <n>  run n replicated coordinators\n\
+                                      behind the prefix-affine router\n\
+                                      (protocol unchanged; ids stay\n\
+                                      globally unique)\n\
+                         --spill-inflight <n>  in-flight count past which\n\
+                                      placement spills off the affinity\n\
+                                      replica (default 8)\n\
+                         [--migrate]  level load by live-migrating\n\
+                                      checkpointed requests between\n\
+                                      replicas (requires --replicas > 1)\n\
          loadgen flags:  --scenario <chat-bursty|rag-shared-prefix|\n\
                                      slo-tiered-mix|all>  run a named\n\
                                       workload scenario in-process on the\n\
@@ -275,25 +286,8 @@ fn cmd_serve(args: &Args) -> i32 {
     // prefixes, handed to every backend (sessions reuse blocks) and to the
     // scheduler (admission projections discount the cached prefix). Sized
     // from the admission watermark when one is set.
-    let prefix_cache = if args.has("prefix-cache") {
-        Some(Arc::new(PrefixCache::for_watermark(
-            kv_watermark_bytes,
-            metrics::kv_bytes_per_token(2, 12, 64),
-        )))
-    } else {
-        None
-    };
     let workers = args.get_usize("workers", 2);
-    let mut backends = Vec::new();
-    for _ in 0..workers {
-        match build_backend(args, prefix_cache.clone()) {
-            Ok(b) => backends.push(b),
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        }
-    }
+    let replicas = args.get_usize("replicas", 1).max(1);
     let policy = match SchedulePolicy::parse(args.get_or("policy", "rr")) {
         Some(p) => p,
         None => {
@@ -310,18 +304,74 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         None
     };
-    let sched = SchedulerConfig::default()
-        .with_policy(policy)
-        .with_kv_watermark_bytes(kv_watermark_bytes)
-        .with_aging_rounds(args.get_u64("aging", 8))
-        .with_verify_batch(args.get_usize("verify-batch", 1))
-        .with_preempt(args.has("preempt"))
-        .with_adaptive(adaptive)
-        .with_alpha_hint(alpha_hint)
-        .with_prefix_cache(prefix_cache);
-    let coord = Coordinator::start_with(backends, engine_id, engine_cfg(args), sched.clone());
+    // One full coordinator per replica: each gets its own worker backends,
+    // its own KV watermark, its own (optional) prefix cache, and a
+    // disjoint id namespace so request ids stay globally unique — and
+    // stable — across live migration.
+    let mut coords = Vec::new();
+    for r in 0..replicas {
+        // --prefix-cache: one shared block-granular index over committed
+        // prefixes, handed to this replica's backends (sessions reuse
+        // blocks) and to its scheduler (admission projections discount
+        // the cached prefix). Sized from the admission watermark when one
+        // is set. Per-replica on purpose: the router's prefix affinity is
+        // what keeps a template's requests landing on the same cache.
+        let prefix_cache = if args.has("prefix-cache") {
+            Some(Arc::new(PrefixCache::for_watermark(
+                kv_watermark_bytes,
+                metrics::kv_bytes_per_token(2, 12, 64),
+            )))
+        } else {
+            None
+        };
+        let mut backends = Vec::new();
+        for _ in 0..workers {
+            match build_backend(args, prefix_cache.clone()) {
+                Ok(b) => backends.push(b),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        }
+        let sched = SchedulerConfig::default()
+            .with_policy(policy)
+            .with_kv_watermark_bytes(kv_watermark_bytes)
+            .with_aging_rounds(args.get_u64("aging", 8))
+            .with_verify_batch(args.get_usize("verify-batch", 1))
+            .with_preempt(args.has("preempt"))
+            .with_adaptive(adaptive)
+            .with_alpha_hint(alpha_hint)
+            .with_prefix_cache(prefix_cache);
+        coords.push(
+            Coordinator::start_with(backends, engine_id, engine_cfg(args), sched)
+                .with_id_namespace(r as u64, replicas as u64),
+        );
+    }
     let addr = args.get_or("addr", "127.0.0.1:7799");
-    let server = match Server::bind(addr, coord) {
+    let migrate = args.has("migrate");
+    let bound = if replicas > 1 {
+        let fleet = Arc::new(
+            Fleet::new(coords).with_spill_threshold(args.get_u64("spill-inflight", 8)),
+        );
+        if migrate {
+            // Periodic load leveling: move one checkpointed request from
+            // the hottest to the coldest replica whenever the in-flight
+            // spread warrants the repeat-prefill cost.
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || loop {
+                std::thread::park_timeout(std::time::Duration::from_millis(50));
+                f.rebalance_once();
+            });
+        }
+        Server::bind_frontend(addr, fleet)
+    } else {
+        match coords.pop() {
+            Some(coord) => Server::bind(addr, coord),
+            None => return 2,
+        }
+    };
+    let server = match bound {
         Ok(s) => s,
         Err(e) => {
             eprintln!("bind failed: {e:#}");
@@ -329,15 +379,17 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving on {} (engine={} policy={} verify-batch={} preempt={} adaptive={} \
-         prefix-cache={})",
+        "serving on {} (engine={} policy={} replicas={} verify-batch={} preempt={} \
+         adaptive={} prefix-cache={} migrate={})",
         server.local_addr(),
         engine_id.name(),
         policy.name(),
-        sched.verify_batch.max(1),
-        sched.preempt,
-        sched.adaptive,
-        sched.prefix_cache.is_some()
+        replicas,
+        args.get_usize("verify-batch", 1).max(1),
+        args.has("preempt"),
+        adaptive,
+        args.has("prefix-cache"),
+        migrate
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     server.serve(max_conns);
@@ -654,6 +706,26 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         eprintln!("bench-smoke: {f}");
         failed = true;
     }
+    // Armed in-run fleet gate: the same submissions through a two-replica
+    // fleet (prefix-affine router, victim's replica drained mid-flight)
+    // vs a single coordinator; must produce a live migration, keep every
+    // stream byte-identical to the single-replica twin, reconcile
+    // fleet-summed registry counters with Σ per-response stats, and hold
+    // the single-replica throughput floor.
+    let fleet = gate::fleet_smoke();
+    println!(
+        "bench-smoke: {:<20} {:>8.1} tok/s  (single-replica {:.1})  migrations {}  \
+         repeat_prefill {}",
+        "specbranch-fleet",
+        fleet.tokens_per_sec,
+        fleet.reference_tokens_per_sec,
+        fleet.registry.migrations,
+        fleet.registry.repeat_prefill_tokens,
+    );
+    for f in fleet.failures(tolerance) {
+        eprintln!("bench-smoke: {f}");
+        failed = true;
+    }
     // chat-bursty carries no armed comparison; it still runs end-to-end so
     // its report lands next to the gated scenarios in the CI artifacts.
     let chat = match workload::run_scenario("chat-bursty") {
@@ -667,10 +739,26 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         "bench-smoke: {:<20} e2e p95 {:>7.1} ms, {} requests ({} cancelled)",
         "scenario-chat", chat.summary.e2e_p95, chat.summary.requests, chat.summary.cancelled,
     );
+    // multi-replica-rag runs the fleet measurement path end-to-end (two
+    // replicas behind the prefix-affine router) with no armed comparison
+    // of its own — the specbranch-fleet gate above carries the armed
+    // assertions; the report lands next to the gated scenarios.
+    let fleet_rag = match workload::run_scenario("multi-replica-rag") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-smoke: multi-replica-rag scenario failed: {e:#}");
+            return 2;
+        }
+    };
+    println!(
+        "bench-smoke: {:<20} e2e p95 {:>7.1} ms, {} requests over 2 replicas",
+        "scenario-fleet", fleet_rag.summary.e2e_p95, fleet_rag.summary.requests,
+    );
     for (name, rep) in [
         ("chat-bursty", &chat),
         ("rag-shared-prefix", &sprefix.report),
         ("slo-tiered-mix", &sslo.report),
+        ("multi-replica-rag", &fleet_rag),
     ] {
         let path = format!("SCENARIO_{name}.json");
         if let Err(e) = std::fs::write(&path, rep.to_json().to_string_pretty() + "\n") {
@@ -699,6 +787,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     engines_json.push(("specbranch-prefix", prefix.detail()));
     engines_json.push(("specbranch-scenario-prefix", sprefix.detail()));
     engines_json.push(("specbranch-scenario-slo", sslo.detail()));
+    engines_json.push(("specbranch-fleet", fleet.detail()));
     let report = json::obj(vec![
         ("workload", run.workload.clone()),
         ("engines", json::obj(engines_json)),

@@ -68,6 +68,11 @@ pub struct DecodeStats {
     /// (prefill included) to the round that committed the request's first
     /// output token. 0.0 until a token commits.
     pub ttft_ms: f64,
+    /// Cross-replica live migrations this request underwent: checkpoints
+    /// extracted from one coordinator and resumed on another by the fleet
+    /// router. 0 outside `serve --replicas`. Rides the checkpoint, so a
+    /// request migrated twice reports 2 no matter where it finishes.
+    pub migrations: u64,
 }
 
 impl DecodeStats {
@@ -150,6 +155,7 @@ impl DecodeStats {
         self.gamma_shrunk_by_pressure += other.gamma_shrunk_by_pressure;
         self.prefill_cached_tokens += other.prefill_cached_tokens;
         self.prefill_charged_tokens += other.prefill_charged_tokens;
+        self.migrations += other.migrations;
         // ttft_ms: the first committed token wins. In the preempt/resume
         // direction (`self` = the later cycle, `other` = the earlier base)
         // the earlier cycle's TTFT is already request-absolute; a TTFT first

@@ -38,20 +38,66 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{Coordinator, Response, StreamChunk, SubmitOpts};
+use crate::sampling::Token;
 use crate::token::Tokenizer;
 use crate::util::json;
 use crate::util::sync::lock_or_recover;
 
+pub mod router;
+
+/// The submission surface a connection handler drives: one [`Coordinator`],
+/// or a whole [`router::Fleet`] of replicas behind placement and live
+/// migration. The wire protocol is frontend-agnostic — framing, tag
+/// bookkeeping and orphan cancellation are identical either way, which is
+/// what lets `serve --replicas N` speak v1/v2 to clients unchanged.
+pub trait Frontend: Send + Sync + 'static {
+    /// Enqueue a request under fluent-built [`SubmitOpts`]; returns its
+    /// globally unique id.
+    fn submit_opts(&self, prompt: Vec<Token>, max_new: usize, seed: u64, opts: SubmitOpts)
+        -> u64;
+    /// Cancel by global id (any connection's request); `true` if found
+    /// live.
+    fn cancel(&self, id: u64) -> bool;
+    /// The `METRICS` reply payload (fleet frontends aggregate replicas).
+    fn metrics_json(&self) -> json::Value;
+}
+
+impl Frontend for Coordinator {
+    fn submit_opts(
+        &self,
+        prompt: Vec<Token>,
+        max_new: usize,
+        seed: u64,
+        opts: SubmitOpts,
+    ) -> u64 {
+        Coordinator::submit_opts(self, prompt, max_new, seed, opts)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        Coordinator::cancel(self, id)
+    }
+
+    fn metrics_json(&self) -> json::Value {
+        self.registry().to_json()
+    }
+}
+
 pub struct Server {
     listener: TcpListener,
-    coordinator: Arc<Coordinator>,
+    frontend: Arc<dyn Frontend>,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. "127.0.0.1:0"); returns the bound server.
     pub fn bind(addr: &str, coordinator: Coordinator) -> Result<Server> {
+        Self::bind_frontend(addr, Arc::new(coordinator))
+    }
+
+    /// Bind over any [`Frontend`] — a single coordinator or a
+    /// [`router::Fleet`].
+    pub fn bind_frontend(addr: &str, frontend: Arc<dyn Frontend>) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        Ok(Server { listener, coordinator: Arc::new(coordinator) })
+        Ok(Server { listener, frontend })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
@@ -64,9 +110,9 @@ impl Server {
         for stream in self.listener.incoming() {
             match stream {
                 Ok(s) => {
-                    let coord = Arc::clone(&self.coordinator);
+                    let coord = Arc::clone(&self.frontend);
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(s, &coord) {
+                        if let Err(e) = handle_conn(s, &*coord) {
                             eprintln!("connection error: {e:#}");
                         }
                     });
@@ -128,6 +174,9 @@ fn stats_json(resp: &Response) -> json::Value {
         // fed through prefill (repeat prefills after preemption included).
         ("prefill_cached_tokens", json::num(resp.stats.prefill_cached_tokens as f64)),
         ("prefill_charged_tokens", json::num(resp.stats.prefill_charged_tokens as f64)),
+        // Fleet live migration (additive; zero outside `serve --replicas`):
+        // how many cross-replica checkpoint/resume hops this request rode.
+        ("migrations", json::num(resp.stats.migrations as f64)),
     ])
 }
 
@@ -205,7 +254,7 @@ fn spawn_forwarder(
     });
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+fn handle_conn(stream: TcpStream, coord: &dyn Frontend) -> Result<()> {
     let tok = Tokenizer::new();
     let mut reader = BufReader::new(stream.try_clone()?);
     let (events, events_rx) = channel::<ConnEvent>();
@@ -232,8 +281,9 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
         }
         if line == "METRICS" {
             // Canonical snapshot serialization lives on RegistrySnapshot,
-            // shared with the bench-smoke metrics artifact.
-            let v = coord.registry().to_json();
+            // shared with the bench-smoke metrics artifact; a fleet
+            // frontend replies with the aggregated cross-replica snapshot.
+            let v = coord.metrics_json();
             let _ = events.send(ConnEvent::Line(format!("METRICS {v}")));
             continue;
         }
@@ -377,6 +427,10 @@ pub struct Client {
     inflight: HashSet<String>,
     /// Frames read off the wire while blocking for some other reply.
     queued: VecDeque<MuxEvent>,
+    /// Bytes of an incomplete line left behind by a timed-out
+    /// [`Client::try_next_event`]; the next read (timed or blocking)
+    /// continues the same line, so frames are never torn.
+    partial: String,
 }
 
 #[derive(Debug)]
@@ -474,21 +528,49 @@ impl Client {
             writer: stream,
             inflight: HashSet::new(),
             queued: VecDeque::new(),
+            partial: String::new(),
         })
     }
 
     fn read_line(&mut self) -> Result<String> {
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
+        // Continue any partial line a timed-out read left behind.
+        if self.reader.read_line(&mut self.partial)? == 0 && self.partial.is_empty() {
             return Err(anyhow!("server closed connection"));
         }
-        Ok(line.trim_end().to_string())
+        Ok(std::mem::take(&mut self.partial).trim_end().to_string())
+    }
+
+    /// Wait up to `timeout` for one full line. `Ok(None)` on timeout; any
+    /// bytes already read stay buffered in `self.partial` and the next
+    /// read — timed or blocking — continues the same line.
+    fn try_read_line(&mut self, timeout: std::time::Duration) -> Result<Option<String>> {
+        let timeout = timeout.max(std::time::Duration::from_millis(1));
+        self.reader.get_ref().set_read_timeout(Some(timeout))?;
+        let res = self.reader.read_line(&mut self.partial);
+        self.reader.get_ref().set_read_timeout(None)?;
+        match res {
+            Ok(0) if self.partial.is_empty() => Err(anyhow!("server closed connection")),
+            Ok(_) => Ok(Some(std::mem::take(&mut self.partial).trim_end().to_string())),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e.into()),
+        }
     }
 
     /// Read one frame off the wire (an `OK` consumes its adjacent `STATS`
     /// too). Does not consult the buffered-event queue.
     fn pump(&mut self) -> Result<MuxEvent> {
         let line = self.read_line()?;
+        self.parse_frame(line)
+    }
+
+    /// Demultiplex one already-read line; an `OK` frame blocks for its
+    /// adjacent `STATS` line (the server writes them back-to-back).
+    fn parse_frame(&mut self, line: String) -> Result<MuxEvent> {
         if let Some(rest) = line.strip_prefix("PART ") {
             let (label, chunk) = rest.split_once(' ').unwrap_or((rest, ""));
             return Ok(MuxEvent::Part { tag: label.to_string(), text: chunk.to_string() });
@@ -632,6 +714,24 @@ impl Client {
             return Ok(ev);
         }
         self.pump()
+    }
+
+    /// Like [`Client::next_event`], but gives up after `timeout` with
+    /// `Ok(None)` instead of blocking — the paced loadgen loop uses this
+    /// to interleave scheduled arrivals and cancels with reply draining.
+    /// A frame in progress when the timeout fires is continued, never
+    /// torn, by the next read.
+    pub fn try_next_event(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<MuxEvent>> {
+        if let Some(ev) = self.queued.pop_front() {
+            return Ok(Some(ev));
+        }
+        match self.try_read_line(timeout)? {
+            Some(line) => self.parse_frame(line).map(Some),
+            None => Ok(None),
+        }
     }
 
     /// Cancel this connection's in-flight tagged request mid-decode.

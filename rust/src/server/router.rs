@@ -1,0 +1,498 @@
+//! Replicated coordinators behind a prefix-affine router.
+//!
+//! A [`Fleet`] owns N replicas — each a full [`Coordinator`] with its own
+//! backends, KV watermark and (optionally) its own prefix cache — and
+//! implements [`Frontend`], so `serve --replicas N` speaks protocol
+//! v1/v2 to clients completely unchanged: the TCP layer cannot tell a
+//! fleet from a single coordinator.
+//!
+//! Placement is two-level:
+//!
+//! 1. **Prefix affinity** — a consistent hash over the prompt's first
+//!    block-aligned chunk ([`crate::kvcache::prefix_route_key`], the same
+//!    FNV chain key a [`crate::kvcache::PrefixCache`] starts its chains
+//!    with). Requests sharing a hot template land on the same replica,
+//!    so its private prefix cache keeps hitting; adding a replica moves
+//!    only ~1/N of the key space (virtual-node ring).
+//! 2. **Load spill** — a replica already holding
+//!    [`Fleet::with_spill_threshold`] in-flight requests gives the
+//!    request up to the least-loaded non-draining replica (lowest index
+//!    wins ties, so placement is deterministic under equal load).
+//!
+//! Live migration reuses the preemption checkpoint machinery
+//! ([`Coordinator::extract_migratable`] /
+//! [`Coordinator::admit_migrated`]): a draining or overloaded replica
+//! checkpoints a victim between rounds (committed tokens + stats + rng,
+//! KV released to the source), and the router resumes it on another
+//! replica, where decoding continues byte-identically under greedy.
+//! [`Fleet::drain`] empties a replica for a rolling restart without
+//! losing or double-counting a single request; [`Fleet::rebalance_once`]
+//! moves one request from the hottest to the coldest replica when the
+//! spread warrants it (`serve --migrate` runs it periodically).
+//!
+//! Accounting invariant: a migrated request's tokens are counted by the
+//! replica that *finishes* it (generated_tokens bumps only at response
+//! publication), its `migrations` stat rides the checkpoint, and the
+//! destination registry counts each live admission once — so the
+//! fleet-wide aggregate ([`Fleet::fleet_snapshot`]) obeys the same
+//! "registry == Σ per-response stats" equality the single-coordinator
+//! registry does.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{Coordinator, RegistrySnapshot, Response, SubmitOpts};
+use crate::kvcache::prefix_route_key;
+use crate::sampling::Token;
+use crate::util::json;
+use crate::util::sync::lock_or_recover;
+
+use super::Frontend;
+
+/// Virtual ring points per replica: enough that the key space splits
+/// evenly across small fleets without a measurable placement cost.
+const ROUTE_VNODES: u64 = 16;
+
+/// N replicated coordinators behind one protocol-v1/v2 frontend.
+pub struct Fleet {
+    replicas: Vec<Coordinator>,
+    /// In-flight count at which a replica spills new placements.
+    spill_inflight: u64,
+    /// Serializes drain/rebalance/cancel so a migration ticket in flight
+    /// between extraction and admission can never be missed by a cancel
+    /// (the mover holds this lock for the whole hop).
+    ops: Mutex<()>,
+}
+
+impl Fleet {
+    /// Wrap `replicas` (already started, each with a disjoint
+    /// [`Coordinator::with_id_namespace`] so ids stay globally unique and
+    /// stable across migration).
+    pub fn new(replicas: Vec<Coordinator>) -> Fleet {
+        debug_assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        Fleet { replicas, spill_inflight: u64::MAX, ops: Mutex::new(()) }
+    }
+
+    /// In-flight count past which placement spills off the affinity
+    /// replica to the least-loaded one (default: never).
+    pub fn with_spill_threshold(mut self, inflight: u64) -> Fleet {
+        self.spill_inflight = inflight;
+        self
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, i: usize) -> &Coordinator {
+        &self.replicas[i]
+    }
+
+    pub fn replicas(&self) -> &[Coordinator] {
+        &self.replicas
+    }
+
+    /// Pure consistent-hash placement: the replica owning the ring point
+    /// clockwise of the prompt's first-block chain key. A pure function
+    /// of the first [`crate::kvcache::BLOCK_TOKENS`] token *values* —
+    /// independent of load, request id, wall clock or replica state — so
+    /// two requests sharing a prompt template always route together.
+    pub fn route_index(prompt: &[Token], n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        let key = prefix_route_key(prompt);
+        // Smallest ring point >= key; wrap to the globally smallest.
+        let mut next: Option<(u64, usize)> = None;
+        let mut first: Option<(u64, usize)> = None;
+        for r in 0..n {
+            for v in 0..ROUTE_VNODES {
+                let point = mix64((r as u64) * ROUTE_VNODES + v);
+                if first.map_or(true, |f| (point, r) < f) {
+                    first = Some((point, r));
+                }
+                if point >= key && next.map_or(true, |b| (point, r) < b) {
+                    next = Some((point, r));
+                }
+            }
+        }
+        match next.or(first) {
+            Some((_, r)) => r,
+            None => 0,
+        }
+    }
+
+    /// Place a prompt on a replica: prefix affinity, then skip draining
+    /// replicas (walking up from the affinity point), then spill off a
+    /// replica past the in-flight threshold to the least-loaded
+    /// non-draining one. Deterministic under equal load: every tie-break
+    /// is lowest-index.
+    pub fn place(&self, prompt: &[Token]) -> usize {
+        let n = self.replicas.len();
+        let affinity = Self::route_index(prompt, n);
+        let mut idx = affinity;
+        for off in 0..n {
+            let cand = (affinity + off) % n;
+            if !self.replicas[cand].is_draining() {
+                idx = cand;
+                break;
+            }
+        }
+        if self.replicas[idx].pending() >= self.spill_inflight {
+            let mut best: Option<(u64, usize)> = None;
+            for (i, r) in self.replicas.iter().enumerate() {
+                if r.is_draining() {
+                    continue;
+                }
+                let p = r.pending();
+                if best.map_or(true, |b| (p, i) < b) {
+                    best = Some((p, i));
+                }
+            }
+            if let Some((_, i)) = best {
+                idx = i;
+            }
+        }
+        idx
+    }
+
+    /// Drain replica `idx` for a rolling restart: mark it draining (its
+    /// workers stop admitting and stop starting rounds, parking every
+    /// task between rounds) and migrate everything it holds to the other
+    /// replicas, least-loaded first. Returns the number of requests
+    /// moved. The replica stays draining afterwards — [`Fleet::undrain`]
+    /// returns it to rotation.
+    ///
+    /// No request is lost or double-counted: the destination is resolved
+    /// *before* each extraction (a ticket never ends up with nowhere to
+    /// land), and a cancel racing the hop retires the request exactly
+    /// once on the source.
+    pub fn drain(&self, idx: usize) -> u64 {
+        let _ops = lock_or_recover(&self.ops);
+        let src = match self.replicas.get(idx) {
+            Some(c) => c,
+            None => return 0,
+        };
+        src.set_draining(true);
+        let mut moved = 0u64;
+        loop {
+            let mut dst: Option<(u64, usize)> = None;
+            for (i, r) in self.replicas.iter().enumerate() {
+                if i == idx || r.is_draining() {
+                    continue;
+                }
+                let p = r.pending();
+                if dst.map_or(true, |b| (p, i) < b) {
+                    dst = Some((p, i));
+                }
+            }
+            let Some((_, d)) = dst else { break };
+            match src.extract_migratable() {
+                Some(ticket) => {
+                    self.replicas[d].admit_migrated(ticket);
+                    moved += 1;
+                }
+                None => {
+                    if src.pending() == 0 {
+                        break;
+                    }
+                    // Remaining tasks are mid-round; draining guarantees
+                    // they park between rounds, so retry after yielding.
+                    std::thread::yield_now();
+                }
+            }
+        }
+        moved
+    }
+
+    /// Return a drained replica to placement rotation.
+    pub fn undrain(&self, idx: usize) {
+        if let Some(c) = self.replicas.get(idx) {
+            c.set_draining(false);
+        }
+    }
+
+    /// Move one request from the most- to the least-loaded replica when
+    /// the in-flight spread is ≥ 2 (moving a request is only worth its
+    /// repeat-prefill cost if it actually levels the fleet). Returns
+    /// whether a request moved. `serve --migrate` calls this
+    /// periodically.
+    pub fn rebalance_once(&self) -> bool {
+        let _ops = lock_or_recover(&self.ops);
+        let mut hot: Option<(u64, usize)> = None;
+        let mut cold: Option<(u64, usize)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.is_draining() {
+                continue;
+            }
+            let p = r.pending();
+            if hot.map_or(true, |(hp, _)| p > hp) {
+                hot = Some((p, i));
+            }
+            if cold.map_or(true, |(cp, _)| p < cp) {
+                cold = Some((p, i));
+            }
+        }
+        let (Some((hp, hi)), Some((cp, ci))) = (hot, cold) else {
+            return false;
+        };
+        if hi == ci || hp.saturating_sub(cp) < 2 {
+            return false;
+        }
+        match self.replicas[hi].extract_migratable() {
+            Some(ticket) => {
+                self.replicas[ci].admit_migrated(ticket);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fleet-wide registry aggregate. Pure counters sum; the derived
+    /// means are re-derived from fleet totals (each replica snapshot
+    /// carries its mean plus the weight that produced it), so the
+    /// aggregate mean is the true fleet mean, not a mean of means.
+    /// `kv_projected_peak_bytes` and `inflight_peak` sum per-replica
+    /// peaks — a safe fleet-wide upper bound (the peaks need not have
+    /// been simultaneous).
+    pub fn fleet_snapshot(&self) -> RegistrySnapshot {
+        let mut t = RegistrySnapshot::default();
+        let mut queue_ms_total = 0.0;
+        let mut decode_ms_total = 0.0;
+        let mut round_gamma_sum = 0.0;
+        let mut round_k_sum = 0.0;
+        for r in &self.replicas {
+            let s = r.registry();
+            t.completed += s.completed;
+            t.cancelled += s.cancelled;
+            t.generated_tokens += s.generated_tokens;
+            t.rounds += s.rounds;
+            t.admission_deferrals += s.admission_deferrals;
+            t.kv_projected_peak_bytes += s.kv_projected_peak_bytes;
+            t.batched_rounds += s.batched_rounds;
+            t.fused_requests += s.fused_requests;
+            t.preemptions += s.preemptions;
+            t.resumed += s.resumed;
+            t.repeat_prefill_tokens += s.repeat_prefill_tokens;
+            t.kv_reclaimed_bytes += s.kv_reclaimed_bytes;
+            t.inflight_peak += s.inflight_peak;
+            t.adaptive_rounds += s.adaptive_rounds;
+            t.gamma_shrunk_by_pressure += s.gamma_shrunk_by_pressure;
+            t.prefix_hits += s.prefix_hits;
+            t.prefix_tokens_saved += s.prefix_tokens_saved;
+            t.migrations += s.migrations;
+            t.prefix_evictions += s.prefix_evictions;
+            let finished = (s.completed + s.cancelled) as f64;
+            queue_ms_total += s.mean_queue_ms * finished;
+            decode_ms_total += s.mean_decode_ms * finished;
+            round_gamma_sum += s.mean_round_gamma * s.adaptive_rounds as f64;
+            round_k_sum += s.mean_round_k * s.adaptive_rounds as f64;
+        }
+        let finished = (t.completed + t.cancelled) as f64;
+        if finished > 0.0 {
+            t.mean_queue_ms = queue_ms_total / finished;
+            t.mean_decode_ms = decode_ms_total / finished;
+        }
+        if t.resumed > 0 {
+            t.mean_repeat_prefill_tokens = t.repeat_prefill_tokens as f64 / t.resumed as f64;
+        }
+        if t.batched_rounds > 0 {
+            t.mean_fused_width = t.fused_requests as f64 / t.batched_rounds as f64;
+        }
+        if t.adaptive_rounds > 0 {
+            t.mean_round_gamma = round_gamma_sum / t.adaptive_rounds as f64;
+            t.mean_round_k = round_k_sum / t.adaptive_rounds as f64;
+        }
+        t
+    }
+
+    /// Shut every replica down (overrides any draining flag) and collect
+    /// the uncollected responses, in replica order.
+    pub fn shutdown(self) -> Vec<Response> {
+        let mut out = Vec::new();
+        for r in self.replicas {
+            out.extend(r.shutdown());
+        }
+        out
+    }
+}
+
+impl Frontend for Fleet {
+    fn submit_opts(&self, prompt: Vec<Token>, max_new: usize, seed: u64, opts: SubmitOpts) -> u64 {
+        let idx = self.place(&prompt);
+        self.replicas[idx].submit_opts(prompt, max_new, seed, opts)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        // Under the ops lock a migration hop is atomic with respect to
+        // this cancel: the request is on exactly one replica right now.
+        let _ops = lock_or_recover(&self.ops);
+        self.replicas.iter().any(|r| r.cancel(id))
+    }
+
+    fn metrics_json(&self) -> json::Value {
+        let snap = self.fleet_snapshot();
+        let mut v = snap.to_json();
+        if let json::Value::Obj(m) = &mut v {
+            m.insert("fleet_replicas".to_string(), json::num(self.replicas.len() as f64));
+            m.insert("fleet_migrations".to_string(), json::num(snap.migrations as f64));
+        }
+        v
+    }
+}
+
+/// SplitMix64 finalizer: places the virtual ring points. Fixed for the
+/// life of the protocol — placement must be reproducible across builds.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::{SimBackend, SimConfig};
+    use crate::backend::Backend;
+    use crate::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+    use crate::coordinator::SchedulerConfig;
+    use crate::kvcache::BLOCK_TOKENS;
+    use crate::server::{Client, Server};
+    use crate::util::clock::Clock;
+
+    fn sim_coord() -> Coordinator {
+        let backends: Vec<Box<dyn Backend + Send>> = vec![Box::new(SimBackend::new(
+            SimConfig::new(ModelPair::get(PairId::Vicuna68m13b), Task::get(TaskId::MtBench)),
+        ))];
+        Coordinator::start_with(
+            backends,
+            EngineId::SpecBranch,
+            EngineConfig { max_new_tokens: 96, ..Default::default() },
+            SchedulerConfig::default().with_clock(Clock::virtual_clock()),
+        )
+    }
+
+    #[test]
+    fn placement_is_a_pure_function_of_the_first_block() {
+        let base: Vec<Token> = (0..BLOCK_TOKENS as u32).map(|i| 1 + i).collect();
+        let mut tail_a = base.clone();
+        tail_a.extend([99, 98, 97]);
+        let mut tail_b = base.clone();
+        tail_b.extend(std::iter::repeat(7).take(40));
+        for n in 1..=5 {
+            let r = Fleet::route_index(&base, n);
+            assert!(r < n, "route index {r} out of range for {n} replicas");
+            // Same first block, different tails: same replica.
+            assert_eq!(r, Fleet::route_index(&tail_a, n));
+            assert_eq!(r, Fleet::route_index(&tail_b, n));
+            // Pure: repeated evaluation is identical.
+            assert_eq!(r, Fleet::route_index(&base, n));
+        }
+        // A change inside the first block may move the request...
+        let spread: std::collections::HashSet<usize> = (0..64u32)
+            .map(|s| {
+                let p: Vec<Token> = (0..BLOCK_TOKENS as u32).map(|i| s * 131 + i + 1).collect();
+                Fleet::route_index(&p, 4)
+            })
+            .collect();
+        // ...and across many distinct first blocks the hash must actually
+        // spread load (not degenerate to one replica).
+        assert!(spread.len() >= 2, "consistent hash put 64 distinct prefixes on one replica");
+    }
+
+    #[test]
+    fn draining_skip_and_load_tie_break_are_deterministic() {
+        let fleet = Fleet::new(vec![sim_coord(), sim_coord(), sim_coord()]);
+        let prompt: Vec<Token> = (1..=BLOCK_TOKENS as u32).collect();
+        let affinity = Fleet::route_index(&prompt, 3);
+        assert_eq!(fleet.place(&prompt), affinity);
+        // Drain the affinity replica: placement walks to the next
+        // non-draining index, deterministically.
+        fleet.replica(affinity).set_draining(true);
+        let expect = (affinity + 1) % 3;
+        assert_eq!(fleet.place(&prompt), expect);
+        assert_eq!(fleet.place(&prompt), expect, "placement must be stable");
+        fleet.undrain(affinity);
+        assert_eq!(fleet.place(&prompt), affinity);
+        // Spill threshold 0 marks every replica hot, so placement becomes
+        // the pure load argmin; with all loads equal (zero in-flight) the
+        // tie-break is the lowest index — deterministic, not arrival-order
+        // or clock dependent.
+        let fleet = fleet.with_spill_threshold(0);
+        assert_eq!(fleet.place(&prompt), 0);
+        fleet.replica(0).set_draining(true);
+        assert_eq!(fleet.place(&prompt), 1, "draining replicas never win the spill argmin");
+        fleet.undrain(0);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn v1_untagged_frames_round_trip_byte_identically() {
+        // Twin servers: a lone coordinator vs a 2-replica fleet, same
+        // engine and scheduler config. The v1 (untagged) client dialogue
+        // must be byte-identical — routing is invisible at the protocol
+        // layer, and greedy sim decoding makes the text deterministic.
+        let single = Server::bind("127.0.0.1:0", sim_coord()).expect("bind single server");
+        let fleet = Fleet::new(vec![
+            sim_coord().with_id_namespace(0, 2),
+            sim_coord().with_id_namespace(1, 2),
+        ]);
+        let twin = Server::bind_frontend("127.0.0.1:0", Arc::new(fleet)).expect("bind fleet");
+        let a1 = single.local_addr().to_string();
+        let a2 = twin.local_addr().to_string();
+        std::thread::spawn(move || single.serve(None));
+        std::thread::spawn(move || twin.serve(None));
+        let mut c1 = Client::connect(&a1).expect("connect single");
+        let mut c2 = Client::connect(&a2).expect("connect fleet");
+        for (i, prompt) in
+            ["the quick brown fox", "jumps over the", "lazy dog again"].iter().enumerate()
+        {
+            let r1 = c1.generate(prompt, 16 + 4 * i).expect("single v1 reply");
+            let r2 = c2.generate(prompt, 16 + 4 * i).expect("fleet v1 reply");
+            assert_eq!(r1.text, r2.text, "v1 text diverged for '{prompt}'");
+            assert_eq!(
+                r1.stats.get("generated").and_then(|v| v.as_i64()),
+                r2.stats.get("generated").and_then(|v| v.as_i64()),
+                "v1 STATS generated diverged for '{prompt}'"
+            );
+        }
+        let _ = c1.quit();
+        let _ = c2.quit();
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_and_tag_replica_count() {
+        let fleet = Fleet::new(vec![
+            sim_coord().with_id_namespace(0, 2),
+            sim_coord().with_id_namespace(1, 2),
+        ]);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut ids = Vec::new();
+        for s in 0..6u32 {
+            let prompt: Vec<Token> =
+                (0..BLOCK_TOKENS as u32).map(|i| 1 + s * 31 + i).collect();
+            ids.push(Frontend::submit_opts(
+                &fleet,
+                prompt,
+                8,
+                42,
+                SubmitOpts::new().on_complete(tx.clone()),
+            ));
+        }
+        let mut total = 0u64;
+        for _ in 0..ids.len() {
+            total += rx.recv().expect("fleet response").stats.generated_tokens;
+        }
+        // Namespaced ids are globally unique across replicas.
+        let unique: std::collections::HashSet<u64> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), ids.len());
+        let snap = fleet.fleet_snapshot();
+        assert_eq!(snap.completed, ids.len() as u64);
+        assert_eq!(snap.generated_tokens, total, "fleet registry equality");
+        let v = fleet.metrics_json();
+        assert_eq!(v.get("fleet_replicas").and_then(|x| x.as_i64()), Some(2));
+        assert_eq!(v.get("fleet_migrations").and_then(|x| x.as_i64()), Some(0));
+        assert_eq!(v.get("generated_tokens").and_then(|x| x.as_i64()), Some(total as i64));
+        fleet.shutdown();
+    }
+}

@@ -75,6 +75,10 @@ fn seed_clean(repo: &FixtureRepo) {
         "rust/src/server/mod.rs",
         "fn handle_conn() {}\nfn writer_loop() {}\nfn spawn_forwarder() {}\n",
     );
+    repo.write(
+        "rust/src/server/router.rs",
+        "fn place() {}\nfn drain() {}\nfn rebalance_once() {}\nfn fleet_snapshot() {}\n",
+    );
     repo.write("docs/PROTOCOL.md", "METRICS keys: | completed |\n");
     repo.write("docs/ARCHITECTURE.md", "counter table: | completed |\n");
 }
@@ -118,6 +122,40 @@ fn seeded_fixture_violations_fail_for_every_rule() {
             report.findings
         );
     }
+}
+
+/// The fleet router's placement/migration bodies sit under the
+/// panic-path rule: an unwrap seeded into `Fleet::drain` must surface,
+/// and a scope entry whose function vanished is itself an error — so the
+/// router scope rows can never silently go vacuous.
+#[test]
+fn router_thread_bodies_are_panic_path_scoped() {
+    let repo = FixtureRepo::new("router");
+    seed_clean(&repo);
+    repo.write(
+        "rust/src/server/router.rs",
+        "fn place() {}\nfn drain() { let t = extract().unwrap(); drop(t); }\n\
+         fn rebalance_once() {}\nfn fleet_snapshot() {}\n",
+    );
+    let report = analyze_repo(&repo.root).expect("fixture scannable");
+    assert!(
+        report.findings.iter().any(|f| f.rule == rules::RULE_PANIC_PATH
+            && f.file.ends_with("router.rs")
+            && !f.warning),
+        "unwrap in Fleet::drain must be flagged:\n{:#?}",
+        report.findings
+    );
+    repo.write(
+        "rust/src/server/router.rs",
+        "fn place() {}\nfn drain() {}\nfn rebalance_once() {}\n",
+    );
+    let report = analyze_repo(&repo.root).expect("fixture scannable");
+    assert!(
+        report.findings.iter().any(|f| f.rule == rules::RULE_PANIC_PATH
+            && f.message.contains("fleet_snapshot")),
+        "a renamed-away scoped fn must be reported:\n{:#?}",
+        report.findings
+    );
 }
 
 /// The acceptance case from the issue: a registry counter that never

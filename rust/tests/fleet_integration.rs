@@ -1,0 +1,291 @@
+//! Fleet-level integration tests: replicated coordinators behind the
+//! prefix-affine router with live request migration.
+//!
+//! Token streams are compared by submission order, not id: the fleet
+//! namespaces ids per replica (base r, stride N), so ids differ from a
+//! single-coordinator twin — but under greedy target verification the
+//! committed chain is a pure function of the prompt, which is exactly the
+//! invariant migration must preserve. Where full `DecodeStats` equality
+//! is asserted (the cycle property test), the reference coordinator is
+//! given the same id namespace the fleet replica would assign, so the
+//! per-request draft rng matches too.
+
+use specbranch::backend::sim::{SimBackend, SimConfig};
+use specbranch::backend::Backend;
+use specbranch::config::{EngineConfig, EngineId, ModelPair, PairId, Task, TaskId};
+use specbranch::coordinator::{Coordinator, ResponseStatus, SchedulerConfig, SubmitOpts};
+use specbranch::sampling::Token;
+use specbranch::server::router::Fleet;
+use specbranch::server::Frontend;
+use specbranch::util::clock::Clock;
+use specbranch::util::prng::Pcg32;
+
+fn backends(n: usize) -> Vec<Box<dyn Backend + Send>> {
+    (0..n)
+        .map(|_| {
+            let cfg = SimConfig::new(ModelPair::get(PairId::Vicuna68m13b), Task::get(TaskId::MtBench));
+            Box::new(SimBackend::new(cfg)) as Box<dyn Backend + Send>
+        })
+        .collect()
+}
+
+fn coord(base: u64, stride: u64) -> Coordinator {
+    Coordinator::start_with(
+        backends(1),
+        EngineId::SpecBranch,
+        EngineConfig { max_new_tokens: 1024, ..Default::default() },
+        SchedulerConfig::default().with_clock(Clock::virtual_clock()),
+    )
+    .with_id_namespace(base, stride)
+}
+
+fn fleet(n: usize) -> Fleet {
+    Fleet::new((0..n).map(|r| coord(r as u64, n as u64)).collect())
+}
+
+#[test]
+fn migration_byte_identity_under_greedy() {
+    // A victim drained off its replica mid-stream resumes on the other
+    // replica with a token stream byte-identical to a single-coordinator
+    // run of the same submissions — and the checkpoint carries the
+    // migration count to wherever the request finishes.
+    let victim_prompt: Vec<Token> = vec![1, 2, 3];
+    let rider_prompt = |j: usize| -> Vec<Token> { vec![10 + j as Token, 3, 4, 5] };
+    const RIDERS: usize = 3;
+
+    let reference: Vec<Vec<Token>> = {
+        let c = coord(0, 1);
+        let (stx, srx) = std::sync::mpsc::channel();
+        let mut rxs = Vec::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.submit_opts(victim_prompt.clone(), 400, 5, SubmitOpts::new().stream(stx).on_complete(tx));
+        rxs.push(rx);
+        let _ = srx.recv().expect("reference victim first chunk");
+        for j in 0..RIDERS {
+            let (tx, rx) = std::sync::mpsc::channel();
+            c.submit_opts(rider_prompt(j), 32, 9 + j as u64, SubmitOpts::new().on_complete(tx));
+            rxs.push(rx);
+        }
+        let out = rxs.iter().map(|rx| rx.recv().expect("reference response").tokens).collect();
+        c.shutdown();
+        out
+    };
+
+    let f = fleet(2);
+    let (stx, srx) = std::sync::mpsc::channel();
+    let mut rxs = Vec::new();
+    let (tx, rx) = std::sync::mpsc::channel();
+    f.submit_opts(victim_prompt.clone(), 400, 5, SubmitOpts::new().stream(stx).on_complete(tx));
+    rxs.push(rx);
+    // First committed round: the drain below catches the victim mid-flight.
+    let first = srx.recv().expect("fleet victim first chunk");
+    assert!(!first.done, "a 400-token request cannot finish in one round");
+    for j in 0..RIDERS {
+        let (tx, rx) = std::sync::mpsc::channel();
+        f.submit_opts(rider_prompt(j), 32, 9 + j as u64, SubmitOpts::new().on_complete(tx));
+        rxs.push(rx);
+    }
+    let src = f.place(&victim_prompt);
+    let moved = f.drain(src);
+    assert!(moved >= 1, "the drain must extract at least the mid-flight victim");
+    let responses: Vec<_> = rxs.iter().map(|rx| rx.recv().expect("fleet response")).collect();
+    for (i, (resp, want)) in responses.iter().zip(reference.iter()).enumerate() {
+        assert_eq!(resp.status, ResponseStatus::Completed);
+        assert_eq!(
+            &resp.tokens, want,
+            "submission {i}: stream must be byte-identical across the migration"
+        );
+    }
+    assert!(
+        responses[0].stats.migrations >= 1,
+        "the victim's checkpoint must carry its migration count"
+    );
+    let snap = f.fleet_snapshot();
+    let stats_migrations: u64 = responses.iter().map(|r| r.stats.migrations).sum();
+    assert!(snap.migrations >= 1);
+    assert_eq!(snap.migrations, stats_migrations, "each migration counted exactly once");
+    assert_eq!(
+        snap.generated_tokens,
+        responses.iter().map(|r| r.stats.generated_tokens).sum::<u64>()
+    );
+    f.shutdown();
+}
+
+#[test]
+fn rolling_restart_drain_completes_every_request() {
+    // Drain each replica in turn (rolling restart): every in-flight and
+    // queued request completes with its exact budget, none are lost or
+    // double-counted.
+    const N: usize = 12;
+    let f = fleet(3);
+    let mut rxs = Vec::new();
+    for i in 0..N {
+        let (tx, rx) = std::sync::mpsc::channel();
+        f.submit_opts(vec![1 + 2 * i as Token, 7, 8], 24, 40 + i as u64, SubmitOpts::new().on_complete(tx));
+        rxs.push(rx);
+    }
+    for idx in 0..3 {
+        f.drain(idx);
+        f.undrain(idx);
+    }
+    let responses: Vec<_> = rxs.iter().map(|rx| rx.recv().expect("response after rolling drain")).collect();
+    for r in &responses {
+        assert_eq!(r.status, ResponseStatus::Completed);
+        assert_eq!(r.tokens.len(), 24, "request {}: exact budget across drains", r.id);
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+    }
+    let ids: std::collections::HashSet<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), N, "fleet ids stay globally unique across migrations");
+    let snap = f.fleet_snapshot();
+    assert_eq!(snap.completed, N as u64);
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(snap.generated_tokens, (N * 24) as u64);
+    assert_eq!(
+        snap.migrations,
+        responses.iter().map(|r| r.stats.migrations).sum::<u64>(),
+        "fleet-summed migrations reconcile with the checkpoints that rode them"
+    );
+    f.shutdown();
+}
+
+#[test]
+fn cancel_during_migration_retires_partial_tokens_exactly_once() {
+    // A cancel landing right after the victim migrated retires it on the
+    // destination with its partial tokens — one response, one registry
+    // count, and a migration count that still reconciles.
+    let prompt: Vec<Token> = vec![2, 4, 6];
+    let f = fleet(2);
+    let (stx, srx) = std::sync::mpsc::channel();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let id = f.submit_opts(prompt.clone(), 512, 5, SubmitOpts::new().stream(stx).on_complete(tx));
+    let first = srx.recv().expect("victim first chunk");
+    assert!(!first.done);
+    let src = f.place(&prompt);
+    f.drain(src);
+    assert!(Frontend::cancel(&f, id), "the migrated request must be found on its new replica");
+    let resp = rx.recv().expect("exactly one final response");
+    assert_eq!(resp.id, id);
+    assert_eq!(resp.status, ResponseStatus::Cancelled);
+    assert!(resp.tokens.len() < 512, "cancel must land before the full budget");
+    assert_eq!(resp.tokens.len() as u64, resp.stats.generated_tokens);
+    assert!(
+        rx.try_recv().is_err(),
+        "the cancelled request must not be reported a second time"
+    );
+    let snap = f.fleet_snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(snap.generated_tokens, resp.stats.generated_tokens);
+    assert_eq!(
+        snap.migrations, resp.stats.migrations,
+        "a cancel after migration keeps the count reconciled"
+    );
+    f.shutdown();
+}
+
+#[test]
+fn fleet_registry_reconciles_under_mixed_complete_cancel_migrate() {
+    // The fleet-summed registry equals Σ per-response stats under a mix
+    // of completions, cancellations, and a drain — the aggregation
+    // invariant the METRICS reply reports.
+    const N: usize = 8;
+    let f = fleet(2);
+    let (stx, srx) = std::sync::mpsc::channel();
+    let mut rxs = Vec::new();
+    let mut ids = Vec::new();
+    for i in 0..N {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut opts = SubmitOpts::new().on_complete(tx);
+        if i == 0 {
+            opts = opts.stream(stx.clone());
+        }
+        ids.push(f.submit_opts(vec![20 + i as Token, 1, 2, 3], 64, 70 + i as u64, opts));
+        rxs.push(rx);
+    }
+    drop(stx);
+    let _ = srx.recv();
+    let cancel_hits =
+        [ids[1], ids[2]].iter().filter(|&&id| Frontend::cancel(&f, id)).count();
+    f.drain(0);
+    let responses: Vec<_> = rxs.iter().map(|rx| rx.recv().expect("mixed-run response")).collect();
+    let cancelled_n = responses.iter().filter(|r| r.is_cancelled()).count();
+    assert!(cancelled_n <= cancel_hits, "only hit cancels may retire as cancelled");
+    for r in &responses {
+        assert_eq!(r.tokens.len() as u64, r.stats.generated_tokens);
+    }
+    let snap = f.fleet_snapshot();
+    assert_eq!(snap.completed + snap.cancelled, N as u64, "every request retires exactly once");
+    assert_eq!(snap.cancelled, cancelled_n as u64);
+    assert_eq!(
+        snap.generated_tokens,
+        responses.iter().map(|r| r.stats.generated_tokens).sum::<u64>(),
+        "fleet generated_tokens == Σ per-response stats"
+    );
+    assert_eq!(
+        snap.migrations,
+        responses.iter().map(|r| r.stats.migrations).sum::<u64>(),
+        "fleet migrations == Σ per-response stats"
+    );
+    f.shutdown();
+}
+
+#[test]
+fn random_migrate_resume_cycles_match_single_cycle_reference() {
+    // Property: k seeded random migrate/resume cycles leave the request's
+    // stream AND its decode-path DecodeStats equal to an uninterrupted
+    // run. The reference coordinator borrows the id namespace of the
+    // replica the router would pick, so the per-request draft rng — and
+    // with it every decode-path counter, not just the greedy-committed
+    // chain — is identical by construction.
+    let mut rng = Pcg32::new(0xF1EE7);
+    for trial in 0..3u64 {
+        let k = 1 + rng.below(3) as usize;
+        let len = 3 + rng.below(6) as usize;
+        let prompt: Vec<Token> = (0..len).map(|_| 1 + rng.below(24) as Token).collect();
+        let budget = 320 + rng.below(64) as usize;
+        let seed = 7 + trial;
+        let home = Fleet::route_index(&prompt, 2);
+
+        let (ref_tokens, ref_stats) = {
+            let c = coord(home as u64, 2);
+            c.submit_opts(prompt.clone(), budget, seed, SubmitOpts::default());
+            let r = c.collect();
+            c.shutdown();
+            (r.tokens, r.stats)
+        };
+
+        let f = fleet(2);
+        let (stx, srx) = std::sync::mpsc::channel();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = f.submit_opts(prompt.clone(), budget, seed, SubmitOpts::new().stream(stx).on_complete(tx));
+        let mut src = f.place(&prompt);
+        assert_eq!(src, home, "placement is the pure routing function");
+        for cycle in 0..k {
+            let chunk = srx.recv().expect("stream chunk before each cycle");
+            assert!(!chunk.done, "trial {trial}: budget must outlast cycle {cycle}");
+            f.drain(src);
+            f.undrain(src);
+            src = 1 - src;
+        }
+        drop(srx);
+        let resp = rx.recv().expect("fleet response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.status, ResponseStatus::Completed);
+        assert_eq!(
+            resp.tokens, ref_tokens,
+            "trial {trial}: stream byte-identical across {k} migration cycles"
+        );
+        assert_eq!(resp.stats.generated_tokens, ref_stats.generated_tokens);
+        assert_eq!(resp.stats.rounds, ref_stats.rounds, "trial {trial}: round structure");
+        assert_eq!(resp.stats.proposed_tokens, ref_stats.proposed_tokens, "trial {trial}");
+        assert_eq!(resp.stats.rollback_tokens, ref_stats.rollback_tokens, "trial {trial}");
+        assert_eq!(
+            resp.stats.migrations, k as u64,
+            "trial {trial}: one migration per cycle, counted on the checkpoint"
+        );
+        let snap = f.fleet_snapshot();
+        assert_eq!(snap.migrations, k as u64);
+        assert_eq!(snap.generated_tokens, resp.stats.generated_tokens);
+        f.shutdown();
+    }
+}
